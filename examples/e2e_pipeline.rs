@@ -1,0 +1,128 @@
+//! End-to-end system validation — the full three-layer pipeline on a
+//! real (small) workload, proving every layer composes:
+//!
+//!   1. load the JAX-trained checkpoint (L2 build output, `.ptw`);
+//!   2. measure FP16 perplexity + task accuracy (Rust eval stack);
+//!   3. PTQTP-quantize the whole model (L3 native quantizer);
+//!   4. re-measure: perplexity near-FP16, math/cloze retention high;
+//!   5. serve batched requests through the coordinator and report
+//!      latency/throughput;
+//!   6. execute the AOT HLO artifacts through PJRT (L1/L2 → runtime).
+//!
+//! This is the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use ptqtp::coordinator::{Request, SamplingParams, ServeEngine};
+use ptqtp::data::{CorpusDomain, TaskSuite, Tokenizer};
+use ptqtp::eval::{eval_suite, perplexity};
+use ptqtp::model::Transformer;
+use ptqtp::quant::{Ptqtp, QuantCtx};
+use ptqtp::runtime::{ArtifactManifest, PjrtEngine};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. load trained checkpoint + data
+    let model = Transformer::load("artifacts/models/small.ptw")
+        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
+    let tok = Tokenizer::load("data/tokenizer.json")?;
+    println!(
+        "[1] loaded {} ({} params, vocab {})",
+        model.config.name,
+        model.config.param_count(),
+        model.config.vocab_size
+    );
+
+    // ---- 2. FP16 baseline metrics
+    let suite = TaskSuite::standard(1, 40, 40, 40);
+    let eval_model = |m: &Transformer, tag: &str| -> anyhow::Result<(f64, f64)> {
+        let mut ppl_sum = 0.0;
+        for d in CorpusDomain::all() {
+            let text = std::fs::read_to_string(format!("data/eval_{}.txt", d.name()))?;
+            let prefix: String = text.chars().take(2000).collect();
+            let p = perplexity(m, &tok, &prefix);
+            ppl_sum += p;
+            println!("    ppl[{}] = {p:.3}", d.name());
+        }
+        let s = eval_suite(m, &tok, &suite);
+        println!(
+            "    math {:.0}%  cloze {:.0}%  code {:.0}%   [{tag}]",
+            s.math_acc * 100.0,
+            s.cloze_acc * 100.0,
+            s.code_acc * 100.0
+        );
+        Ok((ppl_sum / 3.0, s.mean()))
+    };
+    println!("[2] FP16 baseline:");
+    let (ppl_fp, acc_fp) = eval_model(&model, "fp16")?;
+
+    // ---- 3. PTQTP quantization (whole model)
+    let mut qmodel = model.clone();
+    let t0 = Instant::now();
+    qmodel.quantize_with(&Ptqtp::default(), &QuantCtx::default());
+    println!(
+        "[3] PTQTP-quantized all linears in {:.2?} ({} -> {} KiB resident)",
+        t0.elapsed(),
+        model.resident_bytes() / 1024,
+        qmodel.resident_bytes() / 1024
+    );
+
+    // ---- 4. quantized metrics
+    println!("[4] PTQTP (1.58-bit) metrics:");
+    let (ppl_q, acc_q) = eval_model(&qmodel, "ptqtp")?;
+    println!(
+        "    ppl ratio {:.3} (→1 is lossless); mean-acc retention {:.1}%",
+        ppl_q / ppl_fp,
+        acc_q / acc_fp.max(1e-9) * 100.0
+    );
+
+    // ---- 5. serve a batched workload on the quantized model
+    let mut engine = ServeEngine::new(qmodel, Default::default());
+    let t0 = Instant::now();
+    for (i, task) in suite.math.iter().enumerate() {
+        engine.submit(Request::new(
+            i as u64,
+            tok.encode(&task.prompt),
+            SamplingParams {
+                max_new_tokens: 6,
+                ..Default::default()
+            },
+        ));
+    }
+    let responses = engine.run_to_completion();
+    let wall = t0.elapsed();
+    println!("[5] served {} batched requests:", responses.len());
+    for line in engine.metrics.render(wall).lines() {
+        println!("    {line}");
+    }
+
+    // ---- 6. PJRT: execute the AOT artifacts
+    match ArtifactManifest::load("artifacts") {
+        Ok(manifest) => {
+            let mut pjrt = PjrtEngine::cpu()?;
+            manifest.load_all(&mut pjrt)?;
+            println!(
+                "[6] PJRT {}: compiled artifacts {:?}",
+                pjrt.platform(),
+                pjrt.names()
+            );
+            let spec = manifest.get("ternary_matmul")?;
+            let inputs: Vec<Vec<f32>> = spec
+                .inputs
+                .iter()
+                .map(|s| vec![0.25f32; s.iter().product()])
+                .collect();
+            let borrowed: Vec<(&[usize], &[f32])> = spec
+                .inputs
+                .iter()
+                .zip(&inputs)
+                .map(|(s, d)| (s.as_slice(), d.as_slice()))
+                .collect();
+            let out = pjrt.run_f32("ternary_matmul", &borrowed)?;
+            println!("    ternary_matmul OK ({} outputs)", out.len());
+        }
+        Err(e) => println!("[6] PJRT artifacts skipped: {e}"),
+    }
+    println!("E2E pipeline complete.");
+    Ok(())
+}

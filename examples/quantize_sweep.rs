@@ -1,0 +1,41 @@
+//! Sweep every quantization method over one layer and print the
+//! quality/cost frontier — the "which method should I use" example.
+//!
+//! Run: `cargo run --release --example quantize_sweep`
+
+use ptqtp::quant::{self, QuantCtx};
+use ptqtp::report::Table;
+use ptqtp::rng::Rng;
+use ptqtp::tensor::Matrix;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let w = Matrix::rand_heavy(512, 1024, 0.03, &mut rng);
+    let calib = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let ctx = QuantCtx::with_calib(calib);
+
+    let mut table = Table::new(
+        "Quantization frontier (512x1024 heavy-tailed layer, G=128)",
+        &["Method", "#Bits", "rel err", "memory KiB", "compression", "time ms"],
+    );
+    for name in quant::paper_methods() {
+        let q = quant::by_name(name, 128)?;
+        let t0 = Instant::now();
+        let r = q.quantize(&w, &ctx);
+        let dur = t0.elapsed();
+        let m = r.metrics(&w);
+        table.row(vec![
+            q.name(),
+            format!("{:.2}", q.nominal_bits()),
+            format!("{:.4}", m.rel_err),
+            format!("{}", m.memory_bytes / 1024),
+            format!("{:.1}x", m.compression_vs_fp16),
+            format!("{:.1}", dur.as_secs_f64() * 1e3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("Expected shape: PTQTP's rel err beats every ≤1.7-bit method and");
+    println!("approaches 3-bit grids at a fraction of GPTQ/ARB quantization time.");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: quantize a weight matrix with PTQTP and inspect the
+//! result — the 60-second tour of the core API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ptqtp::quant::{Ptqtp, PtqtpOpts, QuantCtx, Quantizer};
+use ptqtp::rng::Rng;
+use ptqtp::tensor::Matrix;
+use ptqtp::ternary::gemv::gemv_packed_alloc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a weight matrix with LLM-like heavy-tailed statistics
+    let mut rng = Rng::new(42);
+    let w = Matrix::rand_heavy(256, 512, 0.03, &mut rng);
+    println!("weights: {}x{} ({} KiB fp32)", w.rows, w.cols, w.len() * 4 / 1024);
+
+    // 2. PTQTP: decompose into two trit-planes + group scales (paper §3)
+    let quantizer = Ptqtp::new(PtqtpOpts::default()); // G=128, T_max=50, ε=1e-4
+    let (lin, report) = quantizer.quantize_with_report(&w);
+    println!(
+        "quantized: rel err {:.4}, mean iters {:.1}, bits/weight {:.2}",
+        w.rel_err(&lin.reconstruct()),
+        report.mean_iters(),
+        lin.bits_per_weight()
+    );
+    println!(
+        "plane sparsity: T1 {:.1}%  T2 {:.1}%",
+        lin.t1.sparsity() * 100.0,
+        lin.t2.sparsity() * 100.0
+    );
+
+    // 3. pack to the 2-bit deployment format and run the multiply-free
+    //    GEMV — the serving hot path
+    let packed = lin.to_packed();
+    println!(
+        "packed: {} KiB ({}x smaller than fp32)",
+        packed.resident_bytes() / 1024,
+        w.len() * 4 / packed.resident_bytes()
+    );
+    let x: Vec<f32> = (0..w.cols).map(|_| rng.normal()).collect();
+    let y = gemv_packed_alloc(&packed, &x);
+    let y_dense = ptqtp::tensor::ops::matvec(&lin.reconstruct(), &x);
+    let max_diff = y
+        .iter()
+        .zip(&y_dense)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("multiply-free GEMV matches dense reconstruction (max diff {max_diff:.2e})");
+
+    // 4. compare against a binary baseline
+    let billm = ptqtp::quant::billm::BiLlm::new(128).quantize(&w, &QuantCtx::default());
+    println!(
+        "reconstruction error: PTQTP {:.4} vs BiLLM {:.4}",
+        w.rel_err(&lin.reconstruct()),
+        w.rel_err(&billm.w_hat)
+    );
+    Ok(())
+}

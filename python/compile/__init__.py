@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+
+Never imported at serving time — the Rust binary consumes only the
+artifacts this package emits (HLO text + .ptw checkpoints + manifest).
+"""

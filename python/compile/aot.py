@@ -1,0 +1,149 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) → HLO **text** →
+artifacts/ for the Rust PJRT runtime.
+
+HLO text — NOT `lowered.compiler_ir().serialize()` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). All modules lower with return_tuple=True.
+
+Emits:
+  * ternary_matmul.hlo.txt — the L1 kernel wrapped at a serving shape.
+  * ptqtp_step.hlo.txt     — one quantizer iteration (offload path).
+  * decode_logits.hlo.txt  — tiny-model single-window forward via the
+    ternary path (proves L2→L1 composition in one artifact).
+  * manifest.json          — names, files, input shapes for the Rust
+    ArtifactManifest loader.
+
+Usage: python -m compile.aot --out ../artifacts [--models ../artifacts/models]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels.ptqtp_step import ptqtp_step, BLOCK_G
+from .kernels.ternary_matmul import ternary_matmul
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ternary_matmul(m, n, d, group):
+    spec = jax.ShapeDtypeStruct
+
+    def fn(x, t1, t2, a1, a2):
+        return (ternary_matmul(x, t1, t2, a1, a2, group=group),)
+
+    lowered = jax.jit(fn).lower(
+        spec((m, d), jnp.float32),
+        spec((n, d), jnp.float32),
+        spec((n, d), jnp.float32),
+        spec((n, d // group), jnp.float32),
+        spec((n, d // group), jnp.float32),
+    )
+    return to_hlo_text(lowered), [[m, d], [n, d], [n, d], [n, d // group], [n, d // group]], 1
+
+
+def lower_ptqtp_step(g, G):
+    spec = jax.ShapeDtypeStruct
+
+    def fn(w, t1, t2, lam):
+        return ptqtp_step(w, t1, t2, lam)
+
+    lowered = jax.jit(fn).lower(
+        spec((g, G), jnp.float32),
+        spec((g, G), jnp.float32),
+        spec((g, G), jnp.float32),
+        spec((g, 1), jnp.float32),
+    )
+    return to_hlo_text(lowered), [[g, G], [g, G], [g, G], [g, 1]], 5
+
+
+def lower_decode_logits(cfg, window):
+    """Single fixed-window forward returning last-position logits.
+    Params are baked as constants (the artifact is model-specific, like
+    a compiled engine in TensorRT terms)."""
+    params = model_mod.init_params(cfg, seed=0)
+
+    def fn(tokens):
+        logits = model_mod.forward(params, tokens, cfg)
+        return (logits[:, -1, :],)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((1, window), jnp.int32))
+    return to_hlo_text(lowered), [[1, window]], 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--group", type=int, default=128)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+
+    # serving-shaped ternary matmul (small-family gate_proj shape)
+    m, n, d, group = 1, 352, 128, 32
+    # n must be a multiple of the kernel's BLOCK_N (16): 352 = 22*16
+    text, inputs, n_out = lower_ternary_matmul(m, n, d, group)
+    with open(os.path.join(args.out, "ternary_matmul.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append({"name": "ternary_matmul", "file": "ternary_matmul.hlo.txt",
+                     "inputs": inputs, "n_outputs": n_out})
+
+    # quantizer step at G=32 over a BLOCK_G-aligned batch
+    g, G = 4 * BLOCK_G, 32
+    text, inputs, n_out = lower_ptqtp_step(g, G)
+    with open(os.path.join(args.out, "ptqtp_step.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append({"name": "ptqtp_step", "file": "ptqtp_step.hlo.txt",
+                     "inputs": inputs, "n_outputs": n_out})
+
+    # tiny-model decode logits over an 8-token window
+    tok_path = os.path.join(os.path.dirname(args.out), "data", "tokenizer.json")
+    if os.path.exists(tok_path):
+        with open(tok_path) as f:
+            vocab_size = len(json.load(f)["chars"]) + 3
+    else:
+        vocab_size = 64
+    cfg = model_mod.make_config("tiny", vocab_size, max_seq=16)
+    window = 8
+    text, inputs, n_out = lower_decode_logits(cfg, window)
+    with open(os.path.join(args.out, "decode_logits.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append({"name": "decode_logits", "file": "decode_logits.hlo.txt",
+                     "inputs": inputs, "n_outputs": n_out,
+                     "dtype_note": "input is int32 token ids"})
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {args.out}", flush=True)
+
+    # self-check: numerics of the lowered ternary_matmul against the ref
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(m, d)), jnp.float32)
+    t1 = jnp.array(rng.integers(-1, 2, size=(n, d)), jnp.float32)
+    t2 = jnp.array(rng.integers(-1, 2, size=(n, d)), jnp.float32)
+    a1 = jnp.array(rng.normal(size=(n, d // group)), jnp.float32)
+    a2 = jnp.array(rng.normal(size=(n, d // group)), jnp.float32)
+    from .kernels.ref import ternary_matmul_ref
+    got = ternary_matmul(x, t1, t2, a1, a2, group=group)
+    want = ternary_matmul_ref(x, t1, t2, a1, a2, group)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 1e-4, f"ternary_matmul self-check failed: {err}"
+    print(f"self-check ok (max err {err:.2e})", flush=True)
+
+
+if __name__ == "__main__":
+    main()

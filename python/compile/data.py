@@ -1,0 +1,61 @@
+"""Build-time data loading: the corpus + tokenizer emitted by the Rust
+CLI (`ptqtp gen-corpus`). The tokenizer contract matches
+rust/src/data/tokenizer.rs exactly: ids 0/1/2 = pad/unk/eos, then the
+sorted character list starting at id 3."""
+
+import json
+import os
+
+import numpy as np
+
+PAD, UNK, EOS = 0, 1, 2
+
+
+class Tokenizer:
+    def __init__(self, chars: str):
+        self.chars = chars
+        self.map = {c: i + 3 for i, c in enumerate(chars)}
+
+    @classmethod
+    def load(cls, path):
+        with open(path) as f:
+            return cls(json.load(f)["chars"])
+
+    @property
+    def vocab_size(self):
+        return len(self.chars) + 3
+
+    def encode(self, text):
+        return [self.map.get(c, UNK) for c in text]
+
+    def decode(self, ids):
+        out = []
+        for i in ids:
+            if i >= 3:
+                out.append(self.chars[i - 3])
+            elif i == UNK:
+                out.append("�")
+        return "".join(out)
+
+
+def load_corpus(data_dir):
+    """Returns (tokenizer, train_ids np.int32). Lines are joined with
+    EOS separators so the model learns line boundaries."""
+    tok = Tokenizer.load(os.path.join(data_dir, "tokenizer.json"))
+    with open(os.path.join(data_dir, "corpus_train.txt")) as f:
+        lines = f.read().splitlines()
+    ids = []
+    for line in lines:
+        ids.extend(tok.encode(line))
+        ids.append(EOS)
+    return tok, np.array(ids, dtype=np.int32)
+
+
+def batches(ids, batch, seq, steps, seed=0):
+    """Yield `steps` random (batch, seq+1) windows for LM training."""
+    rng = np.random.default_rng(seed)
+    n = len(ids) - seq - 1
+    assert n > 0, "corpus too short for the requested sequence length"
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([ids[s : s + seq + 1] for s in starts])

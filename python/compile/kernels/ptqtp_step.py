@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: one PTQTP progressive-approximation step.
+
+Quantization-time hot-spot (paper Appendix A.2: O(nd) per iteration).
+Each grid step owns a tile of groups and performs, entirely in VMEM:
+
+  1. the adaptive 2x2 ridge solve (Eq. 1/3/4, adjugate inverse Eq. 7);
+  2. the exhaustive 9-way trit search (Eq. 5).
+
+The batched layout mirrors the paper's group-wise reshape: the caller
+flattens W (n, d) into (n*d/G, G) group rows; the kernel is oblivious to
+the original matrix shape, which is what makes PTQTP model-agnostic.
+
+interpret=True — see ternary_matmul.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# groups per grid step
+BLOCK_G = 32
+
+LAM_MAX = 1.0
+KAPPA_THRESHOLD = 1e12
+
+
+def _kernel(w_ref, t1_ref, t2_ref, lam_ref, t1o_ref, t2o_ref, a1o_ref, a2o_ref, lamo_ref):
+    w = w_ref[...]      # (bg, G)
+    t1 = t1_ref[...]
+    t2 = t2_ref[...]
+    lam = lam_ref[...]  # (bg, 1)
+
+    # ---- ridge solve (Eq. 1) with adaptive lambda (Eq. 3)
+    a11 = jnp.sum(t1 * t1, axis=1, keepdims=True)
+    a22 = jnp.sum(t2 * t2, axis=1, keepdims=True)
+    a12 = jnp.sum(t1 * t2, axis=1, keepdims=True)
+    b1 = jnp.sum(t1 * w, axis=1, keepdims=True)
+    b2 = jnp.sum(t2 * w, axis=1, keepdims=True)
+
+    d11 = a11 + lam
+    d22 = a22 + lam
+    det = d11 * d22 - a12 * a12
+    fro2 = d11 * d11 + d22 * d22 + 2.0 * a12 * a12
+    kappa = fro2 / jnp.maximum(jnp.abs(det), 1e-30)
+    grow = jnp.maximum(jnp.sqrt(kappa / KAPPA_THRESHOLD), 2.0)
+    lam_new = jnp.where(
+        kappa >= KAPPA_THRESHOLD,
+        jnp.minimum(jnp.maximum(lam * grow, lam * 2.0), LAM_MAX),
+        lam,
+    )
+    d11 = a11 + lam_new
+    d22 = a22 + lam_new
+    det = d11 * d22 - a12 * a12
+    safe = jnp.abs(det) > 1e-30
+    inv_det = jnp.where(safe, 1.0 / jnp.where(safe, det, 1.0), 0.0)
+    a1 = (d22 * b1 - a12 * b2) * inv_det  # (bg, 1)
+    a2 = (-a12 * b1 + d11 * b2) * inv_det
+
+    # ---- 9-way exhaustive trit search (Eq. 5)
+    # candidate index k in 0..9 encodes (c1, c2) = (k//3 - 1, k%3 - 1);
+    # built from iota because Pallas kernels cannot capture array consts
+    k = jax.lax.broadcasted_iota(jnp.float32, (1, 9), 1)   # (1, 9)
+    c1 = jnp.floor(k / 3.0) - 1.0                          # (1, 9)
+    c2 = jnp.mod(k, 3.0) - 1.0
+    levels = a1 * c1 + a2 * c2                             # (bg, 9)
+    err = (w[:, :, None] - levels[:, None, :]) ** 2        # (bg, G, 9)
+    best = jnp.argmin(err, axis=2).astype(jnp.float32)     # (bg, G)
+    t1o_ref[...] = jnp.floor(best / 3.0) - 1.0
+    t2o_ref[...] = jnp.mod(best, 3.0) - 1.0
+    a1o_ref[...] = a1
+    a2o_ref[...] = a2
+    lamo_ref[...] = lam_new
+
+
+@jax.jit
+def ptqtp_step(w, t1, t2, lam):
+    """One alternating PTQTP iteration over a batch of groups.
+
+    Args:
+      w:  (g, G) group rows (g must be a multiple of BLOCK_G).
+      t1, t2: (g, G) current planes (f32 trits).
+      lam: (g, 1) regularization state.
+    Returns (t1', t2', a1, a2, lam') with scales shaped (g, 1).
+    """
+    g, G = w.shape
+    assert g % BLOCK_G == 0, f"group batch must be a multiple of {BLOCK_G}"
+    grid = (g // BLOCK_G,)
+    spec_wg = pl.BlockSpec((BLOCK_G, G), lambda i: (i, 0))
+    spec_s = pl.BlockSpec((BLOCK_G, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec_wg, spec_wg, spec_wg, spec_s],
+        out_specs=[spec_wg, spec_wg, spec_s, spec_s, spec_s],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, G), jnp.float32),
+            jax.ShapeDtypeStruct((g, G), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(w, t1, t2, lam)
+
+
+def ptqtp_quantize(w, group, t_max=50, eps=1e-4, lam0=1e-8):
+    """Full PTQTP quantization of W (n, d) via the Pallas step kernel,
+    with lax.while_loop convergence on max ||alpha_t - alpha_{t-1}||.
+
+    Returns (t1, t2, a1, a2): planes (n, d), scales (n, d//group).
+    """
+    n, d = w.shape
+    assert d % group == 0
+    gpr = d // group
+    g = n * gpr
+    # pad the group batch to BLOCK_G
+    pad = (-g) % BLOCK_G
+    wg = w.reshape(g, group)
+    if pad:
+        wg = jnp.concatenate([wg, jnp.zeros((pad, group))], axis=0)
+    t1 = jnp.where(wg < 0, -1.0, 1.0)
+    t2 = t1
+    lam = jnp.full((wg.shape[0], 1), lam0)
+    a_prev = jnp.ones((wg.shape[0], 2))
+
+    def cond(state):
+        it, _, _, _, _, delta = state
+        return jnp.logical_and(it < t_max, delta >= eps)
+
+    def body(state):
+        it, t1, t2, lam, a_prev, _ = state
+        t1n, t2n, a1, a2, lamn = ptqtp_step(wg, t1, t2, lam)
+        a_now = jnp.concatenate([a1, a2], axis=1)
+        delta = jnp.max(jnp.sqrt(jnp.sum((a_now - a_prev) ** 2, axis=1)))
+        return it + 1, t1n, t2n, lamn, a_now, delta
+
+    state = (0, t1, t2, lam, a_prev, jnp.inf)
+    _, t1, t2, _, a_now, _ = jax.lax.while_loop(cond, body, state)
+    t1 = t1[:g].reshape(n, d)
+    t2 = t2[:g].reshape(n, d)
+    a1 = a_now[:g, 0].reshape(n, gpr)
+    a2 = a_now[:g, 1].reshape(n, gpr)
+    return t1, t2, a1, a2

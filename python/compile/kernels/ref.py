@@ -1,0 +1,130 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here
+written in straight-line jax.numpy; pytest (with hypothesis sweeps)
+asserts allclose between kernel and oracle. The oracles are also the
+ground truth the Rust unit tests were written against, so all three
+layers share one numerical contract.
+"""
+
+import jax.numpy as jnp
+
+
+def ternary_matmul_ref(x, t1, t2, a1, a2, group):
+    """y = x @ W_hat^T with W_hat = groupscale(a1)*t1 + groupscale(a2)*t2.
+
+    Args:
+      x:  (m, d) activations.
+      t1, t2: (n, d) trit planes with values in {-1, 0, 1} (stored f32).
+      a1, a2: (n, d // group) per-(row, group) scales.
+      group: group size G along d; must divide d.
+
+    Returns: (m, n) output.
+    """
+    n, d = t1.shape
+    assert d % group == 0, "ref kernel requires G | d"
+    gpr = d // group
+    # expand group scales to full width
+    a1_full = jnp.repeat(a1, group, axis=1)  # (n, d)
+    a2_full = jnp.repeat(a2, group, axis=1)
+    w_hat = a1_full * t1 + a2_full * t2
+    return x @ w_hat.T
+
+
+def reconstruct_ref(t1, t2, a1, a2, group):
+    """Dense reconstruction W_hat (n, d) from planes + group scales."""
+    a1_full = jnp.repeat(a1, group, axis=1)
+    a2_full = jnp.repeat(a2, group, axis=1)
+    return a1_full * t1 + a2_full * t2
+
+
+def ridge_step_ref(w, t1, t2, lam, lam_max=1.0, kappa_threshold=1e12):
+    """One adaptive-ridge solve (paper Eq. 1/3/4) for a batch of groups.
+
+    Args:
+      w:  (g, G) group values.
+      t1, t2: (g, G) current trit planes.
+      lam: (g,) regularization per group.
+
+    Returns: (a1, a2, lam_new) each (g,).
+    """
+    a11 = jnp.sum(t1 * t1, axis=1)
+    a22 = jnp.sum(t2 * t2, axis=1)
+    a12 = jnp.sum(t1 * t2, axis=1)
+    b1 = jnp.sum(t1 * w, axis=1)
+    b2 = jnp.sum(t2 * w, axis=1)
+
+    def solve(lam_v):
+        d11 = a11 + lam_v
+        d22 = a22 + lam_v
+        det = d11 * d22 - a12 * a12
+        fro2 = d11 * d11 + d22 * d22 + 2.0 * a12 * a12
+        kappa = fro2 / jnp.maximum(jnp.abs(det), 1e-300)
+        return d11, d22, det, kappa
+
+    _, _, det0, kappa0 = solve(lam)
+    # Eq. 3: grow lambda where kappa >= threshold (single adaptation,
+    # mirroring the loop's first trigger; growth factor sqrt(k/thr), min 2x)
+    grow = jnp.maximum(jnp.sqrt(kappa0 / kappa_threshold), 2.0)
+    lam_new = jnp.where(
+        kappa0 >= kappa_threshold,
+        jnp.minimum(jnp.maximum(lam * grow, lam * 2.0), lam_max),
+        lam,
+    )
+    d11, d22, det, _ = solve(lam_new)
+    safe_det = jnp.where(jnp.abs(det) < 1e-30, 1.0, det)
+    alpha1 = (d22 * b1 - a12 * b2) / safe_det
+    alpha2 = (-a12 * b1 + d11 * b2) / safe_det
+    alpha1 = jnp.where(jnp.abs(det) < 1e-30, 0.0, alpha1)
+    alpha2 = jnp.where(jnp.abs(det) < 1e-30, 0.0, alpha2)
+    return alpha1, alpha2, lam_new
+
+
+def trit_search_ref(w, a1, a2):
+    """Exhaustive 9-way trit search (paper Eq. 5) for a batch of groups.
+
+    Args:
+      w: (g, G); a1, a2: (g,).
+    Returns: (t1, t2) each (g, G) in {-1, 0, +1}.
+    """
+    cands = jnp.array(
+        [(c1, c2) for c1 in (-1.0, 0.0, 1.0) for c2 in (-1.0, 0.0, 1.0)]
+    )  # (9, 2)
+    # levels: (g, 9)
+    levels = a1[:, None] * cands[None, :, 0] + a2[:, None] * cands[None, :, 1]
+    # err: (g, G, 9)
+    err = (w[:, :, None] - levels[:, None, :]) ** 2
+    best = jnp.argmin(err, axis=2)  # (g, G)
+    t1 = cands[best, 0]
+    t2 = cands[best, 1]
+    return t1, t2
+
+
+def ptqtp_quantize_ref(w, group, t_max=50, eps=1e-4, lam0=1e-8):
+    """Full PTQTP on one weight matrix (n, d): the Algorithm 1 oracle.
+
+    Returns (t1, t2, a1, a2) with planes (n, d) and scales (n, d//group).
+    Pure-jnp, python loop over iterations (build path only).
+    """
+    n, d = w.shape
+    assert d % group == 0
+    gpr = d // group
+    wg = w.reshape(n * gpr, group)
+    t1 = jnp.where(wg < 0, -1.0, 1.0)
+    t2 = t1
+    lam = jnp.full((n * gpr,), lam0)
+    a1_prev = jnp.ones((n * gpr,))
+    a2_prev = jnp.ones((n * gpr,))
+    for _ in range(t_max):
+        a1, a2, lam = ridge_step_ref(wg, t1, t2, lam)
+        t1, t2 = trit_search_ref(wg, a1, a2)
+        delta = jnp.sqrt((a1 - a1_prev) ** 2 + (a2 - a2_prev) ** 2)
+        a1_prev, a2_prev = a1, a2
+        if float(jnp.max(delta)) < eps:
+            break
+    return (
+        t1.reshape(n, d),
+        t2.reshape(n, d),
+        a1_prev.reshape(n, gpr),
+        a2_prev.reshape(n, gpr),
+    )

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: two-trit-plane matmul (the inference hot-spot).
+
+Computes `y = x @ W_hat^T` where `W_hat = a1*T1 + a2*T2` with group-wise
+scales, WITHOUT materializing W_hat in HBM: each grid step streams one
+(bn x d) tile of the trit planes into VMEM, forms the plane
+contributions, and applies the two scales per group at the epilogue.
+
+TPU mapping of the paper's CUDA kernel (DESIGN.md §Hardware-Adaptation):
+  * trit planes live as (bn, d) VMEM tiles (i8 on real TPU; f32 here
+    because interpret=True runs on the CPU backend);
+  * the "multiplication-free" product is a select/sign-add on the VPU —
+    expressed below with `jnp.where` masks so no x*t multiply appears in
+    the kernel body;
+  * the HBM->VMEM schedule the CUDA version did with threadblocks is the
+    Pallas grid over output-column tiles with BlockSpec index maps.
+
+interpret=True is mandatory on this CPU image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# output-column tile (number of W rows per grid step)
+BLOCK_N = 16
+
+
+def _kernel(x_ref, t1_ref, t2_ref, a1_ref, a2_ref, o_ref, *, group):
+    """One grid step: all m rows of x against BLOCK_N output channels."""
+    x = x_ref[...]          # (m, d)
+    t1 = t1_ref[...]        # (bn, d)
+    t2 = t2_ref[...]        # (bn, d)
+    a1 = a1_ref[...]        # (bn, gpr)
+    a2 = a2_ref[...]        # (bn, gpr)
+    m, d = x.shape
+    bn = t1.shape[0]
+    gpr = d // group
+
+    # Select/sign-add formulation: for each output channel j and plane p,
+    #   s_p[i, j, g] = sum_{c in group g} select(t_p[j,c]) * x[i, c]
+    # expressed as masked adds (VPU), not an x*w multiply.
+    xg = x.reshape(m, gpr, group)                # (m, gpr, G)
+    t1g = t1.reshape(bn, gpr, group)             # (bn, gpr, G)
+    t2g = t2.reshape(bn, gpr, group)
+
+    def plane_sum(tg):
+        # (m, 1, gpr, G) with (1, bn, gpr, G) select -> (m, bn, gpr)
+        pos = jnp.where(tg[None] > 0.5, xg[:, None], 0.0)
+        neg = jnp.where(tg[None] < -0.5, xg[:, None], 0.0)
+        return jnp.sum(pos, axis=-1) - jnp.sum(neg, axis=-1)
+
+    s1 = plane_sum(t1g)                          # (m, bn, gpr)
+    s2 = plane_sum(t2g)
+    # epilogue: the only multiplies are the two scale applications
+    o_ref[...] = jnp.sum(s1 * a1[None] + s2 * a2[None], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def ternary_matmul(x, t1, t2, a1, a2, *, group=128):
+    """Pallas two-plane ternary matmul.
+
+    Args:
+      x: (m, d) f32; t1/t2: (n, d) f32 trits; a1/a2: (n, d//group) f32.
+    Returns (m, n) f32. `n` is padded to BLOCK_N internally.
+    """
+    m, d = x.shape
+    n = t1.shape[0]
+    gpr = d // group
+    assert d % group == 0, "G must divide d"
+    pad = (-n) % BLOCK_N
+    if pad:
+        zrow = jnp.zeros((pad, d), t1.dtype)
+        zsc = jnp.zeros((pad, gpr), a1.dtype)
+        out = ternary_matmul(
+            x,
+            jnp.concatenate([t1, zrow]),
+            jnp.concatenate([t2, zrow]),
+            jnp.concatenate([a1, zsc]),
+            jnp.concatenate([a2, zsc]),
+            group=group,
+        )
+        return out[:, :n]
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, gpr), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, gpr), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, BLOCK_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, t1, t2, a1, a2)
+
+
+def vmem_bytes_estimate(m, d, group):
+    """Per-grid-step VMEM footprint estimate (bytes) for DESIGN.md §Perf.
+
+    On real TPU the planes are int8 and x/out are bf16/f32; we count the
+    deployment dtypes, not the interpret-mode f32 stand-ins.
+    """
+    gpr = d // group
+    x_bytes = m * d * 4                  # f32 activations
+    plane_bytes = 2 * BLOCK_N * d * 1    # two i8 planes
+    scale_bytes = 2 * BLOCK_N * gpr * 2  # two bf16 scale tiles
+    out_bytes = m * BLOCK_N * 4
+    return x_bytes + plane_bytes + scale_bytes + out_bytes

@@ -1,0 +1,189 @@
+"""L2: the JAX transformer — forward/loss for training, decode-step for
+AOT export, and a ternary mode whose linear layers call the L1 Pallas
+kernel so the PTQTP data path lowers into the same HLO.
+
+Numerical contract matches rust/src/model exactly (RMSNorm, paired-RoPE,
+GQA, SwiGLU, tied LM head); pytest cross-checks checkpoint parity.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ternary_matmul import ternary_matmul
+
+
+# ---------------------------------------------------------------------
+# config & params
+# ---------------------------------------------------------------------
+
+FAMILIES = {
+    # name: (d_model, n_layers, n_heads, n_kv_heads, d_ff) — must mirror
+    # rust/src/model/config.rs ModelConfig::family
+    "tiny": (64, 2, 4, 2, 172),
+    "small": (128, 4, 4, 2, 344),
+    "medium": (192, 6, 6, 3, 512),
+    "large": (256, 8, 8, 4, 688),
+}
+
+
+def make_config(family, vocab_size, max_seq=256):
+    d, l, h, kv, ff = FAMILIES[family]
+    return dict(
+        name=family, vocab_size=vocab_size, d_model=d, n_layers=l,
+        n_heads=h, n_kv_heads=kv, d_ff=ff, max_seq=max_seq,
+        rope_theta=10_000.0, norm_eps=1e-5, tied_embeddings=True,
+    )
+
+
+def init_params(cfg, seed=0):
+    """Scaled-normal init; names match the .ptw checkpoint contract."""
+    rng = np.random.default_rng(seed)
+    d, ff = cfg["d_model"], cfg["d_ff"]
+    kv_dim = cfg["n_kv_heads"] * (d // cfg["n_heads"])
+    std = 0.6 / math.sqrt(d)
+
+    def mat(out_f, in_f):
+        return jnp.array(rng.normal(0, std, size=(out_f, in_f)), jnp.float32)
+
+    params = {
+        "tok_embed": jnp.array(rng.normal(0, 0.02, size=(cfg["vocab_size"], d)), jnp.float32),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    for i in range(cfg["n_layers"]):
+        params[f"L{i}.attn_norm"] = jnp.ones((d,), jnp.float32)
+        params[f"L{i}.mlp_norm"] = jnp.ones((d,), jnp.float32)
+        params[f"L{i}.wq"] = mat(d, d)
+        params[f"L{i}.wk"] = mat(kv_dim, d)
+        params[f"L{i}.wv"] = mat(kv_dim, d)
+        params[f"L{i}.wo"] = mat(d, d)
+        params[f"L{i}.w_gate"] = mat(ff, d)
+        params[f"L{i}.w_up"] = mat(ff, d)
+        params[f"L{i}.w_down"] = mat(d, ff)
+    return params
+
+
+# ---------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return w * x / jnp.sqrt(ms + eps)
+
+
+def rope_tables(head_dim, max_seq, theta):
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (2.0 * np.arange(half) / head_dim))
+    angles = np.arange(max_seq)[:, None] * freqs[None, :]
+    return jnp.array(np.cos(angles), jnp.float32), jnp.array(np.sin(angles), jnp.float32)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., T, H, head_dim) with pair layout (2i, 2i+1); cos/sin (T, half)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    out = jnp.stack([r1, r2], axis=-1)  # (..., half, 2)
+    return out.reshape(x.shape)
+
+
+def linear(params, name, x, ternary=None):
+    """y = x @ W^T; if `ternary` holds planes for this layer, route the
+    matmul through the L1 Pallas kernel instead of the dense weights."""
+    if ternary is not None and name in ternary:
+        t1, t2, a1, a2, group = ternary[name]
+        shape = x.shape
+        y = ternary_matmul(x.reshape(-1, shape[-1]), t1, t2, a1, a2, group=group)
+        return y.reshape(*shape[:-1], -1)
+    return x @ params[name].T
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_key",))
+def _forward_jit(params, tokens, cos, sin, cfg_key):
+    cfg = _CFG_CACHE[cfg_key]
+    return _forward(params, tokens, cos, sin, cfg, None)
+
+
+_CFG_CACHE = {}
+
+
+def _forward(params, tokens, cos, sin, cfg, ternary):
+    b, t = tokens.shape
+    d = cfg["d_model"]
+    h, kv = cfg["n_heads"], cfg["n_kv_heads"]
+    hd = d // h
+    x = params["tok_embed"][tokens]  # (B, T, d)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for i in range(cfg["n_layers"]):
+        xn = rmsnorm(x, params[f"L{i}.attn_norm"], cfg["norm_eps"])
+        q = linear(params, f"L{i}.wq", xn, ternary).reshape(b, t, h, hd)
+        k = linear(params, f"L{i}.wk", xn, ternary).reshape(b, t, kv, hd)
+        v = linear(params, f"L{i}.wv", xn, ternary).reshape(b, t, kv, hd)
+        q = apply_rope(q, cos[:t], sin[:t])
+        k = apply_rope(k, cos[:t], sin[:t])
+        # GQA: repeat kv heads
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, d)
+        x = x + linear(params, f"L{i}.wo", o, ternary)
+        xn = rmsnorm(x, params[f"L{i}.mlp_norm"], cfg["norm_eps"])
+        g = linear(params, f"L{i}.w_gate", xn, ternary)
+        u = linear(params, f"L{i}.w_up", xn, ternary)
+        x = x + linear(params, f"L{i}.w_down", jax.nn.silu(g) * u, ternary)
+    x = rmsnorm(x, params["final_norm"], cfg["norm_eps"])
+    return x @ params["tok_embed"].T  # tied head
+
+
+def forward(params, tokens, cfg, ternary=None):
+    """Logits (B, T, V). `ternary` maps layer name → (t1,t2,a1,a2,G)."""
+    hd = cfg["d_model"] // cfg["n_heads"]
+    cos, sin = rope_tables(hd, cfg["max_seq"], cfg["rope_theta"])
+    if ternary is None:
+        key = _cfg_key(cfg)
+        return _forward_jit(params, tokens, cos, sin, key)
+    return _forward(params, tokens, cos, sin, cfg, ternary)
+
+
+def _cfg_key(cfg):
+    key = tuple(sorted(cfg.items()))
+    _CFG_CACHE[key] = cfg
+    return key
+
+
+def loss_fn(params, batch, cfg):
+    """Next-token cross entropy. batch: (B, T+1) int32."""
+    inp, tgt = batch[:, :-1], batch[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------
+# decode step (exported AOT)
+# ---------------------------------------------------------------------
+
+def decode_step_fn(cfg):
+    """Returns f(params_flat..., hidden_state) suitable for AOT export:
+    a single-token forward over a *fixed-length* context window
+    (the Rust engine uses its native path for serving; this artifact
+    exists to prove the L2→L1→HLO→PJRT chain end to end and is
+    exercised by rust/tests/runtime_integration.rs)."""
+
+    def step(params, tokens):
+        # tokens: (1, T) fixed window; returns logits of the last position
+        logits = forward(params, tokens, cfg)
+        return (logits[:, -1, :],)
+
+    return step

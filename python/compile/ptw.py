@@ -1,0 +1,51 @@
+"""Python side of the `.ptw` tensor container (see
+rust/src/serialize/tensorfile.rs for the format spec). Checkpoints
+written here are loaded byte-for-byte by the Rust engine."""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"PTW1"
+DTYPES = {0: np.float32, 1: np.int8, 2: np.uint8, 3: np.int32}
+DTYPE_TAGS = {np.dtype(np.float32): 0, np.dtype(np.int8): 1,
+              np.dtype(np.uint8): 2, np.dtype(np.int32): 3}
+
+
+def save(path, tensors):
+    """Write a dict[str, np.ndarray] as .ptw (sorted by name, little-endian)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in DTYPE_TAGS:
+                arr = arr.astype(np.float32)
+            tag = DTYPE_TAGS[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", tag))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def load(path):
+    """Read a .ptw file into dict[str, np.ndarray]."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (tag,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            dtype = np.dtype(DTYPES[tag]).newbyteorder("<")
+            numel = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(numel * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).astype(DTYPES[tag])
+    return out

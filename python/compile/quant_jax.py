@@ -1,0 +1,54 @@
+"""L2 quantization graph: PTQTP over whole checkpoints in JAX.
+
+Wraps the L1 `ptqtp_step` Pallas kernel (python/compile/kernels/
+ptqtp_step.py) with checkpoint traversal, and provides the absmean
+(BitNet-style) ternary projector shared with the QAT trainer. The Rust
+native implementation (rust/src/quant/ptqtp.rs) is the serving-path
+twin; pytest cross-checks the two produce equivalent reconstruction
+quality on the same inputs.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.ptqtp_step import ptqtp_quantize
+from .kernels.ref import reconstruct_ref
+
+
+def quantize_checkpoint(params, group=128, t_max=50, eps=1e-4):
+    """PTQTP-quantize every linear weight in a checkpoint dict.
+
+    Linear weights are the 2-D tensors except the embedding; returns
+    (new_params_with_dense_reconstructions, planes) where planes maps
+    name -> (t1, t2, a1, a2, group) for the ternary forward path.
+    """
+    out = dict(params)
+    planes = {}
+    for name, w in params.items():
+        if w.ndim != 2 or name == "tok_embed":
+            continue
+        n, d = w.shape
+        g = group if d % group == 0 else d
+        t1, t2, a1, a2 = ptqtp_quantize(w, g, t_max=t_max, eps=eps)
+        planes[name] = (t1, t2, a1, a2, g)
+        out[name] = reconstruct_ref(t1, t2, a1, a2, g)
+    return out, planes
+
+
+def absmean_ternary(w, group=128):
+    """BitNet-b1.58 projection with LS-optimal rescale (the QAT
+    forward quantizer; mirrors rust/src/quant/absmean.rs)."""
+    n, d = w.shape
+    g = group if d % group == 0 else d
+    gpr = d // g
+    wg = w.reshape(n * gpr, g)
+    gamma = jnp.mean(jnp.abs(wg), axis=1, keepdims=True)
+    t = jnp.clip(jnp.round(wg / jnp.maximum(gamma, 1e-12)), -1, 1)
+    tt = jnp.sum(t * t, axis=1, keepdims=True)
+    tw = jnp.sum(t * wg, axis=1, keepdims=True)
+    alpha = jnp.where(tt > 0, tw / jnp.maximum(tt, 1.0), 0.0)
+    return (alpha * t).reshape(n, d)
+
+
+def quant_error(w, w_hat):
+    """Relative Frobenius error."""
+    return float(jnp.linalg.norm(w - w_hat) / jnp.maximum(jnp.linalg.norm(w), 1e-30))

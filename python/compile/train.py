@@ -1,0 +1,122 @@
+"""Build-time trainer: pretrains the tiny model families on the
+synthetic corpus (and a BitNet-style 1.58-bit QAT variant for the
+Table 3 comparator), then writes `.ptw` checkpoints + config sidecars
+the Rust engine loads directly.
+
+Hand-rolled Adam (no optax in this image). Runs once under
+`make artifacts`; every step is deterministic from the seed.
+
+Usage: python -m compile.train --data ../data --out ../artifacts/models \
+           [--families tiny,small,medium] [--steps 300] [--qat]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import ptw
+from .quant_jax import absmean_ternary
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+@jax.jit
+def adam_update(params, grads, m, v, t, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = t + 1
+    new_m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    new_v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    def upd(p, mm, vv):
+        mhat = mm / (1 - b1 ** t)
+        vhat = vv / (1 - b2 ** t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return jax.tree.map(upd, params, new_m, new_v), new_m, new_v, t
+
+
+def ste_quantize(params, group):
+    """Straight-through quantized view: linear weights projected to
+    absmean ternary; gradients flow to the latent fp weights."""
+    out = dict(params)
+    for name, w in params.items():
+        if w.ndim == 2 and name != "tok_embed":
+            q = absmean_ternary(w, group)
+            out[name] = w + jax.lax.stop_gradient(q - w)
+    return out
+
+
+def train_family(family, tok, ids, out_dir, steps, batch, seq, qat=False, seed=0):
+    cfg = model_mod.make_config(family, tok.vocab_size, max_seq=256)
+    params = model_mod.init_params(cfg, seed=seed)
+    state = adam_init(params)
+    m, v, t = state["m"], state["v"], state["t"]
+
+    def loss(p, b):
+        p_eff = ste_quantize(p, 128) if qat else p
+        return model_mod.loss_fn(p_eff, b, cfg)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    t0 = time.time()
+    first = last = None
+    for step, batch_np in enumerate(data_mod.batches(ids, batch, seq, steps, seed=seed + 1)):
+        lv, grads = grad_fn(params, jnp.array(batch_np))
+        params, m, v, t = adam_update(params, grads, m, v, t)
+        if first is None:
+            first = float(lv)
+        last = float(lv)
+        if step % 50 == 0:
+            print(f"  [{family}{'-qat' if qat else ''}] step {step:4d} loss {float(lv):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    name = f"{family}-qat" if qat else family
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.ptw")
+    save_params = params
+    if qat:
+        # persist the QUANTIZED weights: the deployed model is ternary
+        save_params = {k: np.array(v) for k, v in ste_quantize(params, 128).items()}
+    ptw.save(path, {k: np.array(v) for k, v in save_params.items()})
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(cfg, f, indent=2, sort_keys=True)
+    print(f"  [{name}] loss {first:.3f} -> {last:.3f}; saved {path}", flush=True)
+    return first, last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--out", default="../artifacts/models")
+    ap.add_argument("--families", default="tiny,small,medium")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--qat", action="store_true",
+                    help="additionally train the small family with 1.58-bit QAT")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    tok, ids = data_mod.load_corpus(args.data)
+    print(f"corpus: {len(ids)} tokens, vocab {tok.vocab_size}", flush=True)
+    log = {}
+    for fam in args.families.split(","):
+        fam = fam.strip()
+        first, last = train_family(fam, tok, ids, args.out, args.steps, args.batch,
+                                   args.seq, seed=args.seed)
+        log[fam] = {"first_loss": first, "last_loss": last}
+    if args.qat:
+        first, last = train_family("small", tok, ids, args.out, args.steps,
+                                   args.batch, args.seq, qat=True, seed=args.seed)
+        log["small-qat"] = {"first_loss": first, "last_loss": last}
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept
+over shapes — the core correctness signal of the compile path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ptqtp_step import BLOCK_G, ptqtp_quantize, ptqtp_step
+from compile.kernels.ternary_matmul import BLOCK_N, ternary_matmul, vmem_bytes_estimate
+
+
+def rand_planes(rng, n, d):
+    t1 = jnp.array(rng.integers(-1, 2, size=(n, d)), jnp.float32)
+    t2 = jnp.array(rng.integers(-1, 2, size=(n, d)), jnp.float32)
+    return t1, t2
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    nb=st.integers(1, 3),
+    gpr=st.integers(1, 4),
+    group=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ternary_matmul_matches_ref(m, nb, gpr, group, seed):
+    rng = np.random.default_rng(seed)
+    n, d = nb * BLOCK_N, gpr * group
+    x = jnp.array(rng.normal(size=(m, d)), jnp.float32)
+    t1, t2 = rand_planes(rng, n, d)
+    a1 = jnp.array(rng.normal(size=(n, gpr)), jnp.float32)
+    a2 = jnp.array(rng.normal(size=(n, gpr)), jnp.float32)
+    got = ternary_matmul(x, t1, t2, a1, a2, group=group)
+    want = ref.ternary_matmul_ref(x, t1, t2, a1, a2, group)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4, rtol=1e-4)
+
+
+def test_ternary_matmul_zero_planes():
+    x = jnp.ones((2, 32))
+    z = jnp.zeros((BLOCK_N, 32))
+    a = jnp.ones((BLOCK_N, 2))
+    out = ternary_matmul(x, z, z, a, a, group=16)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_vmem_estimate_reasonable():
+    # serving shape: must fit VMEM (~16 MiB/core on modern TPUs)
+    assert vmem_bytes_estimate(8, 4096, 128) < 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- quantizer
+
+@settings(max_examples=15, deadline=None)
+@given(
+    gb=st.integers(1, 3),
+    G=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ptqtp_step_matches_ref(gb, G, seed):
+    rng = np.random.default_rng(seed)
+    g = gb * BLOCK_G
+    w = jnp.array(rng.normal(size=(g, G)) * 0.05, jnp.float32)
+    t1 = jnp.where(w < 0, -1.0, 1.0)
+    t2 = t1
+    lam = jnp.full((g, 1), 1e-8)
+    t1k, t2k, a1k, a2k, _ = ptqtp_step(w, t1, t2, lam)
+    a1r, a2r, _ = ref.ridge_step_ref(w, t1, t2, lam[:, 0])
+    np.testing.assert_allclose(np.array(a1k[:, 0]), np.array(a1r), atol=1e-5)
+    np.testing.assert_allclose(np.array(a2k[:, 0]), np.array(a2r), atol=1e-5)
+    t1r, t2r = ref.trit_search_ref(w, a1r, a2r)
+    assert bool(jnp.all(t1k == t1r))
+    assert bool(jnp.all(t2k == t2r))
+
+
+def test_ptqtp_quantize_converges_and_matches_ref():
+    rng = np.random.default_rng(0)
+    w = jnp.array(rng.standard_t(4, size=(8, 64)) * 0.04, jnp.float32)
+    t1, t2, a1, a2 = ptqtp_quantize(w, 16)
+    wh = ref.reconstruct_ref(t1, t2, a1, a2, 16)
+    rel = float(jnp.linalg.norm(w - wh) / jnp.linalg.norm(w))
+    assert rel < 0.35, rel
+    # exact agreement with the python-loop oracle
+    t1r, t2r, a1r, a2r = ref.ptqtp_quantize_ref(w, 16)
+    whr = ref.reconstruct_ref(t1r, t2r, a1r, a2r, 16)
+    relr = float(jnp.linalg.norm(w - whr) / jnp.linalg.norm(w))
+    assert abs(rel - relr) < 1e-5
+
+
+def test_ptqtp_two_planes_beat_one():
+    rng = np.random.default_rng(1)
+    w = jnp.array(rng.standard_t(4, size=(8, 128)) * 0.04, jnp.float32)
+    t1, t2, a1, a2 = ptqtp_quantize(w, 32)
+    wh2 = ref.reconstruct_ref(t1, t2, a1, a2, 32)
+    from compile.quant_jax import absmean_ternary
+    wh1 = absmean_ternary(w, 32)
+    e2 = float(jnp.sum((w - wh2) ** 2))
+    e1 = float(jnp.sum((w - wh1) ** 2))
+    assert e2 < e1 * 0.7, (e2, e1)
+
+
+def test_trit_values_legal():
+    rng = np.random.default_rng(2)
+    w = jnp.array(rng.normal(size=(4, 64)) * 0.1, jnp.float32)
+    t1, t2, _, _ = ptqtp_quantize(w, 16)
+    for t in (t1, t2):
+        vals = set(np.unique(np.array(t)).tolist())
+        assert vals <= {-1.0, 0.0, 1.0}, vals
+
+
+def test_zero_matrix_stable():
+    w = jnp.zeros((4, 32))
+    t1, t2, a1, a2 = ptqtp_quantize(w, 16)
+    wh = ref.reconstruct_ref(t1, t2, a1, a2, 16)
+    assert float(jnp.max(jnp.abs(wh))) < 1e-6

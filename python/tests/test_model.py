@@ -1,0 +1,113 @@
+"""L2 model tests: shapes, loss behaviour, ternary-path composition,
+and .ptw checkpoint parity with the Rust loader's contract."""
+
+import json
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile import ptw
+from compile.quant_jax import quantize_checkpoint
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model_mod.make_config("tiny", vocab_size=32, max_seq=32)
+    params = model_mod.init_params(cfg, seed=0)
+    return cfg, params
+
+
+def test_forward_shapes(tiny):
+    cfg, params = tiny
+    tokens = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    logits = model_mod.forward(params, tokens, cfg)
+    assert logits.shape == (1, 4, 32)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(tiny):
+    """Changing a later token must not affect earlier logits."""
+    cfg, params = tiny
+    a = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    b = jnp.array([[1, 2, 3, 9]], jnp.int32)
+    la = model_mod.forward(params, a, cfg)
+    lb = model_mod.forward(params, b, cfg)
+    np.testing.assert_allclose(np.array(la[:, :3]), np.array(lb[:, :3]), atol=1e-5)
+    assert not np.allclose(np.array(la[:, 3]), np.array(lb[:, 3]))
+
+
+def test_loss_decreases_with_training_steps(tiny):
+    import jax
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    # learnable pattern: repeated sequence
+    batch = jnp.array(np.tile(rng.integers(3, 32, size=(1, 9)), (4, 1)), jnp.int32)
+    loss0 = model_mod.loss_fn(params, batch, cfg)
+    grad_fn = jax.jit(jax.value_and_grad(lambda p: model_mod.loss_fn(p, batch, cfg)))
+    p = params
+    for _ in range(20):
+        _, g = grad_fn(p)
+        p = jax.tree.map(lambda x, gg: x - 0.05 * gg, p, g)
+    loss1 = model_mod.loss_fn(p, batch, cfg)
+    assert float(loss1) < float(loss0) * 0.8, (float(loss0), float(loss1))
+
+
+def test_ternary_path_close_to_dense_reconstruction(tiny):
+    cfg, params = tiny
+    qparams, planes = quantize_checkpoint(params, group=16)
+    tokens = jnp.array([[1, 5, 9]], jnp.int32)
+    # dense forward on reconstructed weights == ternary kernel forward
+    dense = model_mod.forward(qparams, tokens, cfg)
+    tern = model_mod.forward(params, tokens, cfg, ternary=planes)
+    np.testing.assert_allclose(np.array(dense), np.array(tern), atol=1e-3, rtol=1e-3)
+
+
+def test_quantized_model_correlates_with_fp(tiny):
+    cfg, params = tiny
+    qparams, _ = quantize_checkpoint(params, group=16)
+    tokens = jnp.array([[2, 7, 11, 3]], jnp.int32)
+    lf = np.array(model_mod.forward(params, tokens, cfg))[:, -1].ravel()
+    lq = np.array(model_mod.forward(qparams, tokens, cfg))[:, -1].ravel()
+    cos = float(np.dot(lf, lq) / (np.linalg.norm(lf) * np.linalg.norm(lq)))
+    assert cos > 0.8, cos
+
+
+def test_ptw_roundtrip(tiny):
+    _, params = tiny
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.ptw")
+        arrs = {k: np.array(v) for k, v in params.items()}
+        # norms are 1-D in jax; rust expects (1, d) — reshape as train.py's
+        # checkpoint contract does for real saves
+        ptw.save(path, arrs)
+        back = ptw.load(path)
+        assert set(back) == set(arrs)
+        for k in arrs:
+            np.testing.assert_array_equal(back[k], arrs[k])
+
+
+def test_ptw_dtypes():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.ptw")
+        ptw.save(path, {
+            "f": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "i8": np.array([-1, 0, 1], dtype=np.int8),
+            "u8": np.array([0, 255], dtype=np.uint8),
+        })
+        back = ptw.load(path)
+        assert back["f"].dtype == np.float32
+        assert back["i8"].dtype == np.int8
+        assert back["u8"][1] == 255
+
+
+def test_family_grid_matches_rust():
+    """The family table must mirror rust/src/model/config.rs."""
+    rust_src = open(os.path.join(os.path.dirname(__file__), "..", "..",
+                                 "rust", "src", "model", "config.rs")).read()
+    for name, (d, l, h, kv, ff) in model_mod.FAMILIES.items():
+        needle = f'"{name}" => base("{name}", {d}, {l}, {h}, {kv}, {ff})'
+        assert needle in rust_src, f"family {name} diverged from Rust: {needle}"

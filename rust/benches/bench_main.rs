@@ -1,0 +1,81 @@
+//! `cargo bench` entrypoint (custom harness; criterion is unavailable
+//! offline). Runs the kernel micro-benches plus the per-table
+//! end-to-end reproductions in quick mode.
+//!
+//! Filters: `cargo bench -- kernels` / `-- tables` / `-- figs`.
+
+use ptqtp::bench::harness::bench_fn;
+use ptqtp::bench::workload::bench_weight;
+use ptqtp::cli::Args;
+use ptqtp::quant::ptqtp::Ptqtp;
+use ptqtp::quant::{self, QuantCtx};
+use ptqtp::tensor::{ops, Matrix};
+use ptqtp::ternary::int4::{Aqlm2x2Linear, Int4Linear};
+use std::time::Duration;
+
+fn main() {
+    let filter: String = std::env::args().skip(1).collect::<Vec<_>>().join(" ");
+    let run_all = filter.is_empty() || filter == "--bench";
+    let budget = Duration::from_millis(800);
+
+    if run_all || filter.contains("kernel") {
+        println!("== kernel micro-benches ==");
+        let (n, d) = (512, 1024);
+        let w = bench_weight(n, d, 1);
+        let mut rng = ptqtp::rng::Rng::new(2);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let wt = w.transpose();
+
+        let (lin, _) = Ptqtp::default().quantize_with_report(&w);
+        let packed = lin.to_packed();
+        let int4 = Int4Linear::quantize(&w, 128);
+        let aqlm = Aqlm2x2Linear::quantize(&w, 128);
+
+        let mut y = vec![0.0f32; n];
+        println!("{}", bench_fn("gemv/dense-f32", 3, 400, budget, || ops::matvec_into(&w, &x, &mut y)).summary());
+        println!("{}", bench_fn("gemv/ptqtp-unpacked", 3, 400, budget, || ptqtp::ternary::gemv::gemv_fused(&lin, &x, &mut y)).summary());
+        println!("{}", bench_fn("gemv/ptqtp-packed", 3, 400, budget, || ptqtp::ternary::gemv::gemv_packed(&packed, &x, &mut y)).summary());
+        println!("{}", bench_fn("gemv/int4", 3, 400, budget, || int4.gemv(&x, &mut y)).summary());
+        println!("{}", bench_fn("gemv/aqlm-2x2", 3, 400, budget, || aqlm.gemv(&x, &mut y)).summary());
+        let xb = Matrix::from_vec(64, d, (0..64 * d).map(|i| (i % 17) as f32 * 0.1).collect());
+        println!("{}", bench_fn("gemm/dense-f32 m=64", 2, 50, budget, || ops::matmul(&xb, &wt)).summary());
+        println!("{}", bench_fn("gemm/ptqtp-decoded m=64", 2, 50, budget, || ptqtp::ternary::gemm::gemm_decoded(&packed, &xb)).summary());
+
+        println!("\n== quantizer micro-benches (512x1024 layer) ==");
+        let calib = Matrix::randn(32, d, 1.0, &mut ptqtp::rng::Rng::new(3));
+        let ctx = QuantCtx::with_calib(calib);
+        for method in ["rtn3", "absmean", "ptqtp", "awq3", "billm", "arb", "gptq3"] {
+            let q = quant::by_name(method, 128).unwrap();
+            let r = bench_fn(
+                &format!("quant/{method}"),
+                0,
+                8,
+                Duration::from_secs(5),
+                || q.quantize(&w, &ctx),
+            );
+            println!("{}", r.summary());
+        }
+    }
+
+    if run_all || filter.contains("table") {
+        println!("\n== paper tables (quick mode) ==");
+        let args = Args::parse("bench", std::iter::empty(), &[]);
+        for t in ["1", "2", "3", "4", "5", "6", "7", "8", "10", "11", "12"] {
+            println!("\n---- table {t} ----");
+            if let Err(e) = ptqtp::bench::run_table(t, true, &args) {
+                println!("table {t} failed: {e}");
+            }
+        }
+    }
+
+    if run_all || filter.contains("fig") {
+        println!("\n== paper figures (quick mode) ==");
+        let args = Args::parse("bench", std::iter::empty(), &[]);
+        for f in ["1", "3", "4", "5"] {
+            println!("\n---- fig {f} ----");
+            if let Err(e) = ptqtp::bench::run_fig(f, true, &args) {
+                println!("fig {f} failed: {e}");
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig. 1 reproduction — the paper's headline四panel:
+//!   (a) PPL vs method at matched storage;
+//!   (b) quantization runtime: PTQTP ≫ faster than ARB, ~1.5× vs AWQ;
+//!   (c) PPL across model scales vs 4-bit / FP16;
+//!   (d) per-benchmark retention of PTQTP on the largest model.
+
+use super::workload::{ppl_quick, quantized, Zoo};
+use crate::cli::Args;
+use crate::data::TaskSuite;
+use crate::eval::eval_suite;
+use crate::report::Table;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let fams: Vec<&str> = if quick { vec!["tiny", "small"] } else { vec!["tiny", "small", "medium"] };
+    let zoo = Zoo::load(&fams);
+    println!("{}", zoo.banner());
+    let budget = if quick { 800 } else { 2000 };
+    let group = args.usize_or("group-size", 128);
+    let text = zoo.eval_texts["wiki-syn"].clone();
+
+    // ---- (a) PPL vs method on the mid model
+    let mid = &zoo.models[zoo.models.len() / 2];
+    let mut ta = Table::new(
+        &format!("Fig 1(a) — wiki-syn PPL by method, {}", mid.0),
+        &["Method", "#Bits", "PPL"],
+    );
+    for m in ["fp16", "gptq3", "gptq2", "billm", "arb", "ptqtp"] {
+        let q = crate::quant::by_name(m, group)?;
+        let (qm, _) = quantized(&mid.1, m, group);
+        ta.row(vec![
+            q.name(),
+            format!("{:.2}", q.nominal_bits()),
+            crate::report::fmt_metric(ppl_quick(&qm, &zoo.tok, &text, budget)),
+        ]);
+    }
+    println!("{}", ta.render());
+
+    // ---- (b) quantization runtime by method on the largest model
+    let big = zoo.models.last().unwrap();
+    let mut tb = Table::new(
+        &format!("Fig 1(b) — quantization wall-clock, {}", big.0),
+        &["Method", "time (ms)", "speedup vs ARB"],
+    );
+    let mut times = Vec::new();
+    for m in ["rtn3", "awq3", "gptq3", "billm", "arb", "ptqtp"] {
+        let (_, dur) = quantized(&big.1, m, group);
+        times.push((m, dur));
+    }
+    let arb_time = times.iter().find(|(m, _)| *m == "arb").unwrap().1;
+    for (m, dur) in &times {
+        tb.row(vec![
+            crate::quant::by_name(m, group)?.name(),
+            format!("{:.1}", dur.as_secs_f64() * 1e3),
+            format!("{:.2}x", arb_time.as_secs_f64() / dur.as_secs_f64().max(1e-9)),
+        ]);
+    }
+    println!("{}", tb.render());
+
+    // ---- (c) PPL across scales: FP16 vs 4-bit vs PTQTP
+    let mut tc = Table::new(
+        "Fig 1(c) — wiki-syn PPL across model scales",
+        &{
+            let mut h = vec!["Method"];
+            h.extend(zoo.models.iter().map(|(n, _)| n.as_str()));
+            h
+        },
+    );
+    for m in ["fp16", "gptq4", "ptqtp"] {
+        let mut cells = vec![crate::quant::by_name(m, group)?.name()];
+        for (_, model) in &zoo.models {
+            let (qm, _) = quantized(model, m, group);
+            cells.push(crate::report::fmt_metric(ppl_quick(&qm, &zoo.tok, &text, budget)));
+        }
+        tc.row(cells);
+    }
+    println!("{}", tc.render());
+
+    // ---- (d) per-benchmark degradation on the largest model
+    let n = if quick { 20 } else { 40 };
+    let suite = TaskSuite::standard(args.u64_or("seed", 1), n, n, n);
+    let fp = eval_suite(&big.1, &zoo.tok, &suite);
+    let (qm, _) = quantized(&big.1, "ptqtp", group);
+    let qs = eval_suite(&qm, &zoo.tok, &suite);
+    let mut td = Table::new(
+        &format!("Fig 1(d) — PTQTP retention on {}", big.0),
+        &["Benchmark", "FP16 %", "PTQTP %", "retention %"],
+    );
+    for (name, f, q) in [
+        ("Math*", fp.math_acc, qs.math_acc),
+        ("Cloze*", fp.cloze_acc, qs.cloze_acc),
+        ("Code*", fp.code_acc, qs.code_acc),
+    ] {
+        td.row(vec![
+            name.into(),
+            format!("{:.1}", f * 100.0),
+            format!("{:.1}", q * 100.0),
+            if f > 0.0 { format!("{:.1}", q / f * 100.0) } else { "-".into() },
+        ]);
+    }
+    println!("{}", td.render());
+    Ok(())
+}

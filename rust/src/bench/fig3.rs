@@ -1,0 +1,70 @@
+//! Fig. 3 reproduction: progressive-search iterations ablation —
+//! quantization time and perplexity vs T_max.
+//!
+//! Paper shape: PPL collapses from the catastrophic sign-init within
+//! the first ~10 iterations, converges by ~30, while quantization time
+//! grows linearly in T_max.
+
+use super::workload::{ppl_quick, Zoo};
+use crate::cli::Args;
+use crate::quant::{Ptqtp, PtqtpOpts, QuantCtx};
+use crate::report::{ascii_plot, Table};
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let fams: Vec<&str> = if quick { vec!["small"] } else { vec!["small", "medium"] };
+    let zoo = Zoo::load(&fams);
+    println!("{}", zoo.banner());
+    let budget = if quick { 1000 } else { 2000 };
+    let group = args.usize_or("group-size", 128);
+    let iter_grid: Vec<usize> = if quick {
+        vec![1, 5, 30]
+    } else {
+        vec![1, 2, 5, 10, 20, 30, 50]
+    };
+
+    for (name, model) in &zoo.models {
+        let mut table = Table::new(
+            &format!("Fig 3 — iterations ablation, {name}"),
+            &["T_max", "quant time (ms)", "wiki-syn PPL"],
+        );
+        let mut xs = Vec::new();
+        let mut ppls = Vec::new();
+        let mut times = Vec::new();
+        for &t_max in &iter_grid {
+            let q = Ptqtp::new(PtqtpOpts {
+                group,
+                t_max,
+                // disable the α-delta early exit so T_max is binding
+                eps: 0.0,
+                ..Default::default()
+            });
+            let mut m = model.clone();
+            let t0 = std::time::Instant::now();
+            m.quantize_with(&q, &QuantCtx::default());
+            let dur = t0.elapsed();
+            let ppl = ppl_quick(&m, &zoo.tok, &zoo.eval_texts["wiki-syn"], budget);
+            table.row(vec![
+                format!("{t_max}"),
+                format!("{:.1}", dur.as_secs_f64() * 1e3),
+                crate::report::fmt_metric(ppl),
+            ]);
+            xs.push(t_max as f64);
+            ppls.push(ppl.ln()); // log-scale like the paper's axis
+            times.push(dur.as_secs_f64() * 1e3);
+        }
+        println!("{}", table.render());
+        println!("{}", ascii_plot(
+            &format!("log-PPL vs T_max ({name})"),
+            &xs,
+            &[("log ppl", ppls)],
+            10,
+        ));
+        println!("{}", ascii_plot(
+            &format!("quant time (ms) vs T_max ({name})"),
+            &xs,
+            &[("ms", times)],
+            8,
+        ));
+    }
+    Ok(())
+}

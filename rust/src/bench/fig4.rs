@@ -1,0 +1,68 @@
+//! Fig. 4 reproduction: tolerance-bound (ε) ablation — quantization
+//! time vs perplexity trade-off.
+//!
+//! Paper shape: tightening ε improves PPL at super-linear time cost;
+//! returns diminish past ε ≈ 1e-2, giving the recommended
+//! ε ∈ [1e-3, 1e-2] operating range.
+
+use super::workload::{ppl_quick, Zoo};
+use crate::cli::Args;
+use crate::quant::{Ptqtp, PtqtpOpts, QuantCtx};
+use crate::report::{ascii_plot, Table};
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let fams: Vec<&str> = if quick { vec!["small"] } else { vec!["small", "medium"] };
+    let zoo = Zoo::load(&fams);
+    println!("{}", zoo.banner());
+    let budget = if quick { 1000 } else { 2000 };
+    let group = args.usize_or("group-size", 128);
+    let eps_grid: Vec<f32> = if quick {
+        vec![1e-1, 1e-3]
+    } else {
+        vec![0.5, 1e-1, 1e-2, 1e-3, 1e-4, 1e-5]
+    };
+
+    for (name, model) in &zoo.models {
+        let mut table = Table::new(
+            &format!("Fig 4 — tolerance ε ablation, {name}"),
+            &["eps", "quant time (ms)", "wiki-syn PPL"],
+        );
+        let mut xs = Vec::new();
+        let mut ppls = Vec::new();
+        let mut times = Vec::new();
+        for &eps in &eps_grid {
+            let q = Ptqtp::new(PtqtpOpts {
+                group,
+                eps,
+                ..Default::default()
+            });
+            let mut m = model.clone();
+            let t0 = std::time::Instant::now();
+            m.quantize_with(&q, &QuantCtx::default());
+            let dur = t0.elapsed();
+            let ppl = ppl_quick(&m, &zoo.tok, &zoo.eval_texts["wiki-syn"], budget);
+            table.row(vec![
+                format!("{eps:.0e}"),
+                format!("{:.1}", dur.as_secs_f64() * 1e3),
+                crate::report::fmt_metric(ppl),
+            ]);
+            xs.push(-(eps as f64).log10());
+            ppls.push(ppl);
+            times.push(dur.as_secs_f64() * 1e3);
+        }
+        println!("{}", table.render());
+        println!("{}", ascii_plot(
+            &format!("PPL vs -log10(eps) ({name})"),
+            &xs,
+            &[("ppl", ppls)],
+            8,
+        ));
+        println!("{}", ascii_plot(
+            &format!("quant time (ms) vs -log10(eps) ({name})"),
+            &xs,
+            &[("ms", times)],
+            8,
+        ));
+    }
+    Ok(())
+}

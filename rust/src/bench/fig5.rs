@@ -1,0 +1,66 @@
+//! Fig. 5 reproduction: the single trit-plane update process across
+//! optimization iterations — per-sweep flip counts, reconstruction
+//! error, and the evolving trit-value distribution of both planes.
+
+use super::workload::{bench_weight, Zoo};
+use crate::cli::Args;
+use crate::quant::{Ptqtp, PtqtpOpts};
+use crate::report::Table;
+use crate::tensor::stats::sparkline;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let group = args.usize_or("group-size", 128);
+    // one representative layer: the trained small model's first gate
+    // projection if available, else a synthetic heavy-tailed layer
+    let zoo = Zoo::load(&["small"]);
+    let w = if zoo.trained {
+        zoo.models[0].1.blocks[0].w_gate.dense_weights()
+    } else {
+        bench_weight(344, 128, 9)
+    };
+    println!("{} (layer L0.w_gate {}x{})", zoo.banner(), w.rows, w.cols);
+
+    let q = Ptqtp::new(PtqtpOpts {
+        group,
+        t_max: if quick { 10 } else { 30 },
+        eps: 0.0, // run all sweeps so the full trajectory is visible
+        track_history: true,
+        ..Default::default()
+    });
+    let (lin, rep) = q.quantize_with_report(&w);
+
+    let mut table = Table::new(
+        "Fig 5 — trit-plane update process (per sweep)",
+        &["sweep", "flips", "flip %", "||W-What||_F^2"],
+    );
+    let total = (w.rows * w.cols) as f64;
+    for (i, (&flips, &err)) in rep.flip_history.iter().zip(&rep.err_history).enumerate() {
+        table.row(vec![
+            format!("{}", i + 1),
+            format!("{flips}"),
+            format!("{:.2}", flips as f64 / total * 100.0),
+            format!("{err:.5}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // final plane statistics (the paper's plane visualizations)
+    let c1 = lin.t1.value_counts();
+    let c2 = lin.t2.value_counts();
+    println!("plane T1 counts [-1,0,+1] = {c1:?}  sparsity {:.1}%", lin.t1.sparsity() * 100.0);
+    println!("plane T2 counts [-1,0,+1] = {c2:?}  sparsity {:.1}%", lin.t2.sparsity() * 100.0);
+
+    // weight-vs-reconstruction histograms as sparklines
+    let hist_w = crate::tensor::stats::histogram(&w.data, 48, 3.0 * w.abs_max().max(1e-6));
+    let recon = lin.reconstruct();
+    let hist_r = crate::tensor::stats::histogram(&recon.data, 48, 3.0 * w.abs_max().max(1e-6));
+    println!("W     |{}|", sparkline(&hist_w));
+    println!("What  |{}|", sparkline(&hist_r));
+    println!(
+        "final sq err {:.6}, rel err {:.4}, mean iters {:.1}",
+        rep.final_sq_err,
+        w.rel_err(&recon),
+        rep.mean_iters()
+    );
+    Ok(())
+}

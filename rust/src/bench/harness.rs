@@ -1,0 +1,144 @@
+//! Timing harness: warmup, calibrated iteration counts, robust stats.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+
+    /// Throughput in ops/s given `work` units per iteration.
+    pub fn throughput(&self, work: f64) -> f64 {
+        work / self.median.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<32} {:>10.3} ms median  {:>10.3} ms p95  ({} iters)",
+            self.name,
+            self.median_ms(),
+            self.p95.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup` iterations, then run either
+/// `max_iters` iterations or until `budget` elapses, whichever first.
+/// The closure's return value is consumed through `std::hint::black_box`
+/// so the optimizer cannot elide the work.
+pub fn bench_fn<T>(name: &str, warmup: usize, max_iters: usize, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(max_iters.min(4096));
+    let start = Instant::now();
+    for _ in 0..max_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+/// Quick preset: 3 warmups, ≤200 iters, 2 s budget.
+pub fn quick<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    bench_fn(name, 3, 200, Duration::from_secs(2), f)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    assert!(!samples.is_empty(), "no samples for bench '{name}'");
+    samples.sort_unstable();
+    let iters = samples.len();
+    let median = samples[iters / 2];
+    let p95 = samples[((iters as f64 * 0.95) as usize).min(iters - 1)];
+    let min = samples[0];
+    let mean_ns = samples.iter().map(|d| d.as_nanos()).sum::<u128>() / iters as u128;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median,
+        mean: Duration::from_nanos(mean_ns as u64),
+        p95,
+        min,
+    }
+}
+
+/// Measure one invocation (used for long quantization runs where
+/// repeating is impractical; paper Fig 1b style wall-clock).
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchResult) {
+    let t0 = Instant::now();
+    let out = std::hint::black_box(f());
+    let d = t0.elapsed();
+    (
+        out,
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median: d,
+            mean: d,
+            p95: d,
+            min: d,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench_fn("noop", 1, 50, Duration::from_millis(200), || 1 + 1);
+        assert!(r.iters >= 1);
+        assert!(r.median <= r.p95);
+        assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn budget_caps_runtime() {
+        let t0 = Instant::now();
+        let _ = bench_fn("sleepy", 0, 1_000_000, Duration::from_millis(50), || {
+            std::thread::sleep(Duration::from_millis(1))
+        });
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, r) = once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_secs(2),
+            mean: Duration::from_secs(2),
+            p95: Duration::from_secs(2),
+            min: Duration::from_secs(2),
+        };
+        assert!((r.throughput(10.0) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,59 @@
+//! Benchmark substrate (criterion is unavailable offline) and the
+//! per-table/figure reproduction harness.
+//!
+//! [`harness`] provides warmup + timed iterations with median/p95
+//! reporting; the `table*` / `fig*` submodules regenerate every exhibit
+//! in the paper's evaluation (see DESIGN.md §5 for the index) and are
+//! invoked through `ptqtp bench --table N` / `--fig N` or `cargo bench`.
+
+pub mod harness;
+pub mod workload;
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod table10;
+pub mod table11;
+pub mod table12;
+
+pub use harness::{bench_fn, BenchResult};
+
+use crate::cli::Args;
+
+/// Dispatch a paper-table reproduction by number.
+pub fn run_table(table: &str, quick: bool, args: &Args) -> anyhow::Result<()> {
+    match table {
+        "1" | "9" => table1::run(quick, args),
+        "2" => table2::run(quick, args),
+        "3" => table3::run(quick, args),
+        "4" => table4::run(quick, args),
+        "5" => table5::run(quick, args),
+        "6" => table6::run(quick, args),
+        "7" => table7::run(quick, args),
+        "8" => table8::run(quick, args),
+        "10" => table10::run(quick, args),
+        "11" => table11::run(quick, args),
+        "12" => table12::run(quick, args),
+        other => anyhow::bail!("unknown table '{other}' (valid: 1-12; 9 aliases 1)"),
+    }
+}
+
+/// Dispatch a paper-figure reproduction by number.
+pub fn run_fig(fig: &str, quick: bool, args: &Args) -> anyhow::Result<()> {
+    match fig {
+        "1" => fig1::run(quick, args),
+        "3" => fig3::run(quick, args),
+        "4" => fig4::run(quick, args),
+        "5" => fig5::run(quick, args),
+        other => anyhow::bail!("unknown figure '{other}' (valid: 1, 3, 4, 5)"),
+    }
+}

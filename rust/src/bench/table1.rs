@@ -1,0 +1,44 @@
+//! Table 1 / Table 9 reproduction: perplexity across model sizes ×
+//! quantization methods × corpora.
+//!
+//! Paper shape to reproduce: FP16 best; AWQ/GPTQ at 2-bit explode;
+//! binary PTQ (PB-LLM/BiLLM) catastrophic, ARB better but still far;
+//! PTQTP closest to FP16 of all ≤3-bit methods, especially on the
+//! smallest models.
+
+use super::workload::{ppl_quick, quantized, table1_methods, Zoo};
+use crate::cli::Args;
+use crate::report::Table;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let families: Vec<&str> = if quick { vec!["tiny", "small"] } else { vec!["tiny", "small", "medium"] };
+    let zoo = Zoo::load(&families);
+    println!("{}", zoo.banner());
+    let budget = if quick { 1200 } else { 2500 };
+    let group = args.usize_or("group-size", 128);
+    let domains = ["wiki-syn", "ptb-syn", "c4-syn"];
+
+    for domain in domains {
+        let text = zoo.eval_texts[domain].clone();
+        let mut table = Table::new(
+            &format!("Table 1 — Perplexity on {domain} (G={group})"),
+            &{
+                let mut h = vec!["Method", "#Bits"];
+                h.extend(zoo.models.iter().map(|(n, _)| n.as_str()));
+                h
+            },
+        );
+        for method in table1_methods(quick) {
+            let q = crate::quant::by_name(method, group)?;
+            let mut cells = vec![q.name(), format!("{:.2}", q.nominal_bits())];
+            for (_, model) in &zoo.models {
+                let (qm, _) = quantized(model, method, group);
+                let ppl = ppl_quick(&qm, &zoo.tok, &text, budget);
+                cells.push(crate::report::fmt_metric(ppl));
+            }
+            table.row(cells);
+        }
+        println!("{}", table.render());
+    }
+    Ok(())
+}

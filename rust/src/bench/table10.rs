@@ -1,0 +1,59 @@
+//! Table 10 reproduction: MMLU-style accuracy vs bit-width across
+//! sizes, with retention percentages against FP16.
+//!
+//! Paper shape: 8-bit ≈ lossless, 4-bit minor loss, 2-bit collapses to
+//! chance, binary (BiLLM) at/near chance, PTQTP recovers most of FP16 —
+//! with retention improving on larger models.
+
+use super::workload::{quantized, Zoo};
+use crate::cli::Args;
+use crate::data::TaskSuite;
+use crate::eval::suite::eval_choices;
+use crate::report::Table;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let fams: Vec<&str> = if quick { vec!["tiny", "small"] } else { vec!["tiny", "small", "medium"] };
+    let zoo = Zoo::load(&fams);
+    println!("{}", zoo.banner());
+    let n = if quick { 30 } else { 60 };
+    let suite = TaskSuite::standard(args.u64_or("seed", 1), 0, n, 0);
+
+    let methods: Vec<(&str, &str)> = if quick {
+        vec![("fp16", "16"), ("rtn4", "4"), ("rtn2", "2"), ("billm", "1.06"), ("ptqtp", "1.58")]
+    } else {
+        vec![
+            ("fp16", "16"), ("rtn8", "8"), ("gptq4", "4"), ("awq4", "4"),
+            ("gptq2", "2"), ("awq2", "2"), ("billm", "1.06"), ("ptqtp", "1.58"),
+        ]
+    };
+
+    let mut table = Table::new(
+        "Table 10 — cloze (MMLU stand-in) accuracy / retention (%)",
+        &{
+            let mut h = vec!["Method", "#W bits"];
+            h.extend(zoo.models.iter().map(|(n, _)| n.as_str()));
+            h
+        },
+    );
+    // FP16 reference per model
+    let fp_acc: Vec<f64> = zoo
+        .models
+        .iter()
+        .map(|(_, m)| eval_choices(m, &zoo.tok, &suite.cloze))
+        .collect();
+    for (method, bits) in methods {
+        let mut cells = vec![
+            crate::quant::by_name(method, 128)?.name(),
+            bits.to_string(),
+        ];
+        for (i, (_, model)) in zoo.models.iter().enumerate() {
+            let (qm, _) = quantized(model, method, 128);
+            let acc = eval_choices(&qm, &zoo.tok, &suite.cloze);
+            let retention = if fp_acc[i] > 0.0 { acc / fp_acc[i] * 100.0 } else { 0.0 };
+            cells.push(format!("{:.1}/{:.1}", acc * 100.0, retention));
+        }
+        table.row(cells);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

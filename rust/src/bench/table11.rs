@@ -1,0 +1,61 @@
+//! Table 11 reproduction: per-task retention (PTQTP/FP16, %) across
+//! all model sizes — the "retention grows with scale" matrix.
+
+use super::workload::{quantized, Zoo};
+use crate::cli::Args;
+use crate::data::TaskSuite;
+use crate::eval::eval_suite;
+use crate::report::Table;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let fams: Vec<&str> = if quick { vec!["tiny", "small"] } else { vec!["tiny", "small", "medium"] };
+    let zoo = Zoo::load(&fams);
+    println!("{}", zoo.banner());
+    let n = if quick { 20 } else { 50 };
+    let suite = TaskSuite::standard(args.u64_or("seed", 1), n, n, n);
+
+    let mut table = Table::new(
+        "Table 11 — FP16 vs PTQTP per task (acc %, retention %)",
+        &{
+            let mut h = vec!["Task", "Row"];
+            h.extend(zoo.models.iter().map(|(n, _)| n.as_str()));
+            h
+        },
+    );
+
+    let mut fp_scores = Vec::new();
+    let mut q_scores = Vec::new();
+    for (_, model) in &zoo.models {
+        fp_scores.push(eval_suite(model, &zoo.tok, &suite));
+        let (qm, _) = quantized(model, "ptqtp", 128);
+        q_scores.push(eval_suite(&qm, &zoo.tok, &suite));
+    }
+
+    let tasks: [(&str, fn(&crate::eval::SuiteScores) -> f64); 3] = [
+        ("Math*", |s| s.math_acc),
+        ("Cloze*", |s| s.cloze_acc),
+        ("Code*", |s| s.code_acc),
+    ];
+    for (task, get) in tasks {
+        let mut fp_cells = vec![task.to_string(), "FP16".to_string()];
+        let mut q_cells = vec![task.to_string(), "PTQTP-b1.58".to_string()];
+        let mut r_cells = vec![task.to_string(), "retention %".to_string()];
+        for i in 0..zoo.models.len() {
+            let f = get(&fp_scores[i]);
+            let q = get(&q_scores[i]);
+            fp_cells.push(format!("{:.1}", f * 100.0));
+            q_cells.push(format!("{:.1}", q * 100.0));
+            r_cells.push(if f > 0.0 {
+                format!("{:.1}", q / f * 100.0)
+            } else {
+                "-".into()
+            });
+        }
+        table.row(fp_cells);
+        table.row(q_cells);
+        table.row(r_cells);
+    }
+    println!("{}", table.render());
+    println!("(*synthetic stand-ins; see DESIGN.md §2 substitutions)");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Table 3 reproduction: PTQTP-quantized models vs FP16 baselines and
+//! the 1.58-bit QAT (BitNet-style) comparator trained by
+//! `python/compile/train.py --qat`.
+//!
+//! Paper shape: PTQTP on a larger model rivals the QAT model of similar
+//! size without any retraining.
+
+use super::workload::{quantized, Zoo};
+use crate::cli::Args;
+use crate::data::TaskSuite;
+use crate::eval::eval_suite;
+use crate::report::Table;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let zoo = Zoo::load(&["tiny", "small", "medium"]);
+    println!("{}", zoo.banner());
+    let n = if quick { 20 } else { 50 };
+    let suite = TaskSuite::standard(args.u64_or("seed", 1), n, n, n);
+    let group = args.usize_or("group-size", 128);
+
+    let mut table = Table::new(
+        "Table 3 — PTQTP vs FP16 vs 1.58-bit QAT (accuracy %)",
+        &["Model", "Math*", "Cloze*", "Code*", "Mean"],
+    );
+
+    for (name, model) in &zoo.models {
+        let s = eval_suite(model, &zoo.tok, &suite);
+        table.metric_row(
+            &format!("{name} (FP16)"),
+            &[s.math_acc * 100.0, s.cloze_acc * 100.0, s.code_acc * 100.0, s.mean() * 100.0],
+        );
+    }
+    if let Some(qat) = zoo.qat_model() {
+        let s = eval_suite(&qat, &zoo.tok, &suite);
+        table.metric_row(
+            "small (BitNet-QAT b1.58)",
+            &[s.math_acc * 100.0, s.cloze_acc * 100.0, s.code_acc * 100.0, s.mean() * 100.0],
+        );
+    } else {
+        println!("(QAT checkpoint missing — run `make artifacts`)");
+    }
+    for (name, model) in &zoo.models {
+        let (qm, _) = quantized(model, "ptqtp", group);
+        let s = eval_suite(&qm, &zoo.tok, &suite);
+        table.metric_row(
+            &format!("{name}-PTQTP (b1.58)"),
+            &[s.math_acc * 100.0, s.cloze_acc * 100.0, s.code_acc * 100.0, s.mean() * 100.0],
+        );
+    }
+    println!("{}", table.render());
+    println!("(*synthetic stand-ins; see DESIGN.md §2 substitutions)");
+    Ok(())
+}

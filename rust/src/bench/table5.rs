@@ -1,0 +1,66 @@
+//! Table 5 reproduction: linear-layer (gate_proj) inference latency
+//! across kernels × sequence lengths — FP16(dense f32 here), GPTQ-4bit
+//! (packed int4), AQLM 2×2bit (additive codebooks), PTQTP trit-planes.
+//!
+//! Paper shape to reproduce: at seq=1 all are close; as sequence grows,
+//! AQLM's per-element gather blows up, int4 stays nearest dense, PTQTP
+//! sits between int4 and dense with a modest prefill penalty.
+
+use super::harness::bench_fn;
+use super::workload::bench_weight;
+use crate::cli::Args;
+use crate::report::Table;
+use crate::tensor::{ops, Matrix};
+use crate::ternary::int4::{Aqlm2x2Linear, Int4Linear};
+use crate::quant::ptqtp::Ptqtp;
+use std::time::Duration;
+
+pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
+    // gate_proj-like shapes scaled to this testbed: (ff, d)
+    let shapes: Vec<(&str, usize, usize)> = if quick {
+        vec![("small-ff", 344, 128)]
+    } else {
+        vec![("small-ff", 344, 128), ("medium-ff", 512, 192), ("large-ff", 688, 256)]
+    };
+    let seqs: Vec<usize> = if quick { vec![1, 32] } else { vec![1, 32, 256] };
+    let budget = Duration::from_millis(if quick { 300 } else { 1200 });
+
+    for (name, n, d) in shapes {
+        let w = bench_weight(n, d, 42);
+        let int4 = Int4Linear::quantize(&w, 128.min(d));
+        let aqlm = Aqlm2x2Linear::quantize(&w, 128.min(d));
+        let ptqtp = {
+            let (lin, _) = Ptqtp::default().quantize_with_report(&w);
+            lin.to_packed()
+        };
+        let wt = w.transpose();
+
+        let mut table = Table::new(
+            &format!("Table 5 — gate_proj latency (ms), {name} ({n}x{d})"),
+            &["seq", "FP32-dense", "GPTQ-4bit", "AQLM-2x2bit", "PTQTP-1.58bit"],
+        );
+        for &seq in &seqs {
+            let mut rng = crate::rng::Rng::new(7 + seq as u64);
+            let x = Matrix::randn(seq, d, 1.0, &mut rng);
+            let dense = bench_fn("dense", 2, 60, budget, || ops::matmul(&x, &wt));
+            let i4 = bench_fn("int4", 2, 60, budget, || int4.gemm(&x));
+            let aq = bench_fn("aqlm", 2, 60, budget, || aqlm.gemm(&x));
+            let tp = bench_fn("ptqtp", 2, 60, budget, || {
+                if seq >= 8 {
+                    crate::ternary::gemm::gemm_decoded(&ptqtp, &x)
+                } else {
+                    crate::ternary::gemm::gemm_packed(&ptqtp, &x)
+                }
+            });
+            table.row(vec![
+                format!("{seq}"),
+                format!("{:.3}", dense.median_ms()),
+                format!("{:.3}", i4.median_ms()),
+                format!("{:.3}", aq.median_ms()),
+                format!("{:.3}", tp.median_ms()),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    Ok(())
+}

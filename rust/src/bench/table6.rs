@@ -1,0 +1,88 @@
+//! Table 6 reproduction: full attention-layer decode latency, FP vs
+//! PTQTP, across model scales — reporting the speedup ratio.
+//!
+//! Paper shape: PTQTP attention decode is slightly *faster* than FP16
+//! (weight-memory-bound decode benefits from 4× smaller weights),
+//! with the ratio growing with model size (1.14×–1.16× on 7B–70B).
+
+use super::harness::bench_fn;
+use super::workload::Zoo;
+use crate::cli::Args;
+use crate::model::KvCache;
+use crate::report::Table;
+use crate::quant::{ptqtp::Ptqtp, QuantCtx};
+use std::time::Duration;
+
+pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
+    let families: Vec<&str> = if quick {
+        vec!["small", "medium"]
+    } else {
+        vec!["tiny", "small", "medium", "large"]
+    };
+    let zoo = Zoo::load(&families);
+    println!("{}", zoo.banner());
+    let budget = Duration::from_millis(if quick { 300 } else { 1500 });
+    let ctx_len = 64usize;
+
+    let mut table = Table::new(
+        "Table 6 — attention decode latency (us) and speedup",
+        &["Model", "FP32", "PTQTP-1.58bit", "Speedup"],
+    );
+    for (name, model) in &zoo.models {
+        let block = &model.blocks[0];
+        let attn_fp = block.attn.clone();
+        let mut attn_q = block.attn.clone();
+        let q = Ptqtp::default();
+        let ctx = QuantCtx::default();
+        attn_q.wq.quantize_with(&q, &ctx);
+        attn_q.wk.quantize_with(&q, &ctx);
+        attn_q.wv.quantize_with(&q, &ctx);
+        attn_q.wo.quantize_with(&q, &ctx);
+
+        let d = model.config.d_model;
+        let kv_dim = model.config.kv_dim();
+        let mut rng = crate::rng::Rng::new(3);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let rope = &model.rope;
+
+        // pre-warm a cache to ctx_len, then measure one decode step
+        fn mk_cache(
+            attn: &crate::model::attention::Attention,
+            rope: &crate::model::rope::Rope,
+            x: &[f32],
+            kv_dim: usize,
+            ctx_len: usize,
+        ) -> KvCache {
+            let mut c = KvCache::new(1, kv_dim, ctx_len + 8);
+            let mut out = vec![0.0; x.len()];
+            for pos in 0..ctx_len {
+                attn.decode(x, rope, &mut c, 0, pos, &mut out);
+                c.commit();
+            }
+            c
+        }
+        let mut cache_fp = mk_cache(&attn_fp, rope, &x, kv_dim, ctx_len);
+        let mut cache_q = mk_cache(&attn_q, rope, &x, kv_dim, ctx_len);
+        let mut out = vec![0.0f32; d];
+        let fp = bench_fn("fp", 3, 200, budget, || {
+            cache_fp.truncate(ctx_len);
+            attn_fp.decode(&x, rope, &mut cache_fp, 0, ctx_len, &mut out);
+            cache_fp.commit();
+            out[0]
+        });
+        let qn = bench_fn("ptqtp", 3, 200, budget, || {
+            cache_q.truncate(ctx_len);
+            attn_q.decode(&x, rope, &mut cache_q, 0, ctx_len, &mut out);
+            cache_q.commit();
+            out[0]
+        });
+        table.row(vec![
+            name.clone(),
+            format!("{:.1}", fp.median_us()),
+            format!("{:.1}", qn.median_us()),
+            format!("{:.3}x", fp.median.as_secs_f64() / qn.median.as_secs_f64()),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table 8 reproduction: group-wise vs whole-row quantization ablation.
+//!
+//! Paper shape: G=128 grouping improves every method; the gap is
+//! largest for the grid methods (AWQ/GPTQ) and modest for PTQTP, whose
+//! local trit search already adapts to group statistics.
+
+use super::workload::{ppl_quick, quantized, Zoo};
+use crate::cli::Args;
+use crate::report::Table;
+
+pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
+    let fams: Vec<&str> = if quick { vec!["small"] } else { vec!["small", "medium"] };
+    let zoo = Zoo::load(&fams);
+    println!("{}", zoo.banner());
+    let budget = if quick { 1000 } else { 2000 };
+    let methods: Vec<&str> = if quick {
+        vec!["gptq3", "ptqtp"]
+    } else {
+        vec!["awq3", "gptq3", "rtn3", "ptqtp"]
+    };
+
+    for (name, model) in &zoo.models {
+        let text = zoo.eval_texts["wiki-syn"].clone();
+        let mut table = Table::new(
+            &format!("Table 8 — w/o group-wise (G=128) PPL on wiki-syn, {name}"),
+            &["Method", "no group", "G=128"],
+        );
+        for method in &methods {
+            let q = crate::quant::by_name(method, 128)?;
+            let (m_nog, _) = quantized(model, method, 0);
+            let (m_g, _) = quantized(model, method, 128);
+            table.row(vec![
+                q.name(),
+                crate::report::fmt_metric(ppl_quick(&m_nog, &zoo.tok, &text, budget)),
+                crate::report::fmt_metric(ppl_quick(&m_g, &zoo.tok, &text, budget)),
+            ]);
+        }
+        let fp = ppl_quick(model, &zoo.tok, &text, budget);
+        table.row(vec!["FP16".into(), crate::report::fmt_metric(fp), crate::report::fmt_metric(fp)]);
+        println!("{}", table.render());
+    }
+    Ok(())
+}

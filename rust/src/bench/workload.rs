@@ -1,0 +1,180 @@
+//! Shared bench fixtures: the model zoo, eval corpora, quantization
+//! helpers, and the quick-perplexity protocol every table uses.
+//!
+//! Benches prefer the checkpoints trained by `make artifacts`
+//! (`artifacts/models/*.ptw`); when absent (e.g. CI unit runs) they fall
+//! back to deterministic heavy-tailed random models and mark the output
+//! accordingly — the *shape* claims still hold because they are driven
+//! by weight statistics, but absolute PPLs are then meaningless.
+
+use crate::data::{CorpusDomain, CorpusGen, Tokenizer};
+use crate::model::{ModelConfig, Transformer};
+use crate::quant::{self, QuantCtx};
+use crate::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Fixture bundle for the bench suite.
+pub struct Zoo {
+    /// (family name, model), ordered small → large.
+    pub models: Vec<(String, Transformer)>,
+    pub tok: Tokenizer,
+    /// domain name → held-out text.
+    pub eval_texts: BTreeMap<&'static str, String>,
+    /// True when real trained checkpoints were found.
+    pub trained: bool,
+}
+
+impl Zoo {
+    /// Load the fixture set. `families` trims the grid (quick mode).
+    pub fn load(families: &[&str]) -> Zoo {
+        let model_dir = std::path::Path::new("artifacts/models");
+        let data_dir = std::path::Path::new("data");
+
+        // tokenizer + eval texts: from data/ if present, else generated
+        let (tok, eval_texts) = if data_dir.join("tokenizer.json").exists() {
+            let tok = Tokenizer::load(data_dir.join("tokenizer.json")).expect("tokenizer");
+            let mut texts = BTreeMap::new();
+            for d in CorpusDomain::all() {
+                let t = std::fs::read_to_string(data_dir.join(format!("eval_{}.txt", d.name())))
+                    .unwrap_or_default();
+                texts.insert(d.name(), t);
+            }
+            (tok, texts)
+        } else {
+            let mut gen = CorpusGen::new(0xBEAC4);
+            let mut texts = BTreeMap::new();
+            let mut all = String::new();
+            for d in CorpusDomain::all() {
+                let t = gen.domain_text(d, 200);
+                all.push_str(&t);
+                texts.insert(d.name(), t);
+            }
+            (Tokenizer::from_text(&all), texts)
+        };
+
+        let mut models = Vec::new();
+        let mut trained = true;
+        for fam in families {
+            let path = model_dir.join(format!("{fam}.ptw"));
+            let model = if path.exists() {
+                Transformer::load(&path).expect("load checkpoint")
+            } else {
+                trained = false;
+                let mut cfg = ModelConfig::family(fam).expect("family");
+                cfg.vocab_size = tok.vocab_size();
+                let mut rng = Rng::new(0xF0 + fam.len() as u64);
+                Transformer::random(cfg, &mut rng)
+            };
+            models.push((fam.to_string(), model));
+        }
+        Zoo {
+            models,
+            tok,
+            eval_texts,
+            trained,
+        }
+    }
+
+    /// Load the QAT comparator checkpoint if trained.
+    pub fn qat_model(&self) -> Option<Transformer> {
+        let path = std::path::Path::new("artifacts/models/small-qat.ptw");
+        if path.exists() {
+            Some(Transformer::load(path).expect("load qat"))
+        } else {
+            None
+        }
+    }
+
+    pub fn banner(&self) -> String {
+        if self.trained {
+            "models: trained checkpoints (make artifacts)".into()
+        } else {
+            "models: RANDOM-INIT fallback (run `make artifacts` for trained PPLs)".into()
+        }
+    }
+}
+
+/// Quantize a copy of `model` with `method` and return it with the
+/// quantization wall-clock.
+pub fn quantized(
+    model: &Transformer,
+    method: &str,
+    group: usize,
+) -> (Transformer, std::time::Duration) {
+    let mut m = model.clone();
+    if method == "fp16" || method == "fp" {
+        return (m, std::time::Duration::ZERO);
+    }
+    let q = quant::by_name(method, group).expect("method");
+    let ctx = calib_ctx(model.config.d_model, 7);
+    let t0 = std::time::Instant::now();
+    m.quantize_with(q.as_ref(), &ctx);
+    (m, t0.elapsed())
+}
+
+/// Synthetic calibration context (per-layer widths are fixed up inside
+/// `QuantLinear::quantize_with`).
+pub fn calib_ctx(d: usize, seed: u64) -> QuantCtx {
+    let mut rng = Rng::new(seed);
+    QuantCtx {
+        calib: Some(crate::tensor::Matrix::randn(32, d, 1.0, &mut rng)),
+        seed,
+    }
+}
+
+/// Perplexity on a budgeted prefix (keeps the full table grid tractable
+/// on one core; protocol otherwise identical to eval::perplexity).
+pub fn ppl_quick(model: &Transformer, tok: &Tokenizer, text: &str, char_budget: usize) -> f64 {
+    let prefix: String = text.chars().take(char_budget).collect();
+    crate::eval::perplexity(model, tok, &prefix)
+}
+
+/// The method grid of Table 1 (ordered as in the paper).
+pub fn table1_methods(quick: bool) -> Vec<&'static str> {
+    if quick {
+        vec!["fp16", "gptq3", "billm", "arb", "ptqtp"]
+    } else {
+        vec![
+            "fp16", "awq3", "awq2", "gptq3", "gptq2", "pbllm", "billm", "arb", "ptqtp",
+        ]
+    }
+}
+
+/// A synthetic "layer" with trained-LLM-like statistics, for kernel and
+/// quantizer micro-benches that don't need a whole model.
+pub fn bench_weight(n: usize, d: usize, seed: u64) -> crate::tensor::Matrix {
+    let mut rng = Rng::new(seed);
+    crate::tensor::Matrix::rand_heavy(n, d, 0.03, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_loads_with_fallback() {
+        let zoo = Zoo::load(&["tiny"]);
+        assert_eq!(zoo.models.len(), 1);
+        assert_eq!(zoo.eval_texts.len(), 3);
+        assert!(!zoo.banner().is_empty());
+    }
+
+    #[test]
+    fn quantized_returns_modified_model() {
+        let zoo = Zoo::load(&["tiny"]);
+        let (m, dur) = quantized(&zoo.models[0].1, "ptqtp", 128);
+        assert!(m.blocks[0].attn.wq.is_ternary());
+        assert!(dur.as_nanos() > 0);
+        let (m2, d2) = quantized(&zoo.models[0].1, "fp16", 128);
+        assert!(!m2.blocks[0].attn.wq.is_ternary());
+        assert_eq!(d2.as_nanos(), 0);
+    }
+
+    #[test]
+    fn ppl_quick_budget_respected() {
+        let zoo = Zoo::load(&["tiny"]);
+        let text = zoo.eval_texts["wiki-syn"].clone();
+        let p = ppl_quick(&zoo.models[0].1, &zoo.tok, &text, 300);
+        assert!(p.is_finite() && p > 1.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Argument-parsing substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for usage rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding the program name if
+    /// you pass `std::env::args().skip(1)`, or including it via
+    /// [`Args::from_env`]).
+    pub fn parse<I: IntoIterator<Item = String>>(program: &str, raw: I, subcommands: &[&str]) -> Args {
+        let mut args = Args {
+            program: program.to_string(),
+            ..Default::default()
+        };
+        let mut iter = raw.into_iter().peekable();
+        // subcommand = first non-dash token if it matches the table
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') && subcommands.contains(&first.as_str()) {
+                args.subcommand = Some(iter.next().unwrap());
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-taking if next token exists and is not --opt
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(stripped.to_string(), v);
+                        }
+                        _ => args.flags.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Args {
+        let mut raw = std::env::args();
+        let program = raw.next().unwrap_or_else(|| "ptqtp".into());
+        Args::parse(&program, raw, subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.f64_or(name, default as f64) as f32
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Required string option with a helpful error.
+    pub fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Render usage text from a spec table.
+pub fn usage(program: &str, about: &str, subcommands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut out = format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n");
+    if !subcommands.is_empty() {
+        out.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            out.push_str(&format!("  {name:<14} {help}\n"));
+        }
+    }
+    if !opts.is_empty() {
+        out.push_str("\nOPTIONS:\n");
+        for o in opts {
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<16} {}{}\n", o.name, o.help, default));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(
+            "ptqtp",
+            tokens.iter().map(|s| s.to_string()),
+            &["quantize", "serve", "bench"],
+        )
+    }
+
+    #[test]
+    fn subcommand_detected() {
+        let a = parse(&["quantize", "--g", "128"]);
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.usize_or("g", 0), 128);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["bench", "--table=5", "--eps=1e-4"]);
+        assert_eq!(a.usize_or("table", 0), 5);
+        assert!((a.f64_or("eps", 0.0) - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["serve", "--verbose", "--port", "8080", "--dry-run"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["quantize", "model.ptw", "out.ptw"]);
+        assert_eq!(a.positional, vec!["model.ptw", "out.ptw"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["bench", "--offset", "-3"]);
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn unknown_first_token_is_positional() {
+        let a = parse(&["nonsense", "--x", "1"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["nonsense"]);
+    }
+
+    #[test]
+    fn require_errors_helpfully() {
+        let a = parse(&["serve"]);
+        let e = a.require("model").unwrap_err().to_string();
+        assert!(e.contains("--model"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["bench", "--methods", "ptqtp, gptq ,awq"]);
+        assert_eq!(a.list_or("methods", &[]), vec!["ptqtp", "gptq", "awq"]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "ptqtp",
+            "trit-plane quantization",
+            &[("quantize", "quantize a checkpoint")],
+            &[OptSpec {
+                name: "group-size",
+                help: "group size G",
+                default: Some("128"),
+            }],
+        );
+        assert!(u.contains("quantize"));
+        assert!(u.contains("group-size"));
+        assert!(u.contains("default: 128"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Continuous batcher: per-step admission and work composition.
+//!
+//! Orca-style iteration-level scheduling: every engine step serves one
+//! decode token for each running sequence, plus up to
+//! `prefill_token_budget` prompt tokens from sequences still in
+//! prefill — so long prompts never stall decode latency (the paper's
+//! Table 5 prefill/decode split motivates exactly this policy).
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max running sequences (bounded by the KV pool anyway).
+    pub max_running: usize,
+    /// Prompt tokens admitted per step across all prefilling sequences.
+    pub prefill_token_budget: usize,
+    /// Prefer finishing prefill of one sequence before starting another.
+    pub fcfs_prefill: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_running: 16,
+            prefill_token_budget: 64,
+            fcfs_prefill: true,
+        }
+    }
+}
+
+/// What one engine step should do: `(sequence index, tokens to prefill)`
+/// for prefill work; decode is implicit for all non-prefill sequences.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepPlan {
+    /// (slot index, number of prompt tokens to consume this step)
+    pub prefill: Vec<(usize, usize)>,
+    /// Slot indices to decode one token for.
+    pub decode: Vec<usize>,
+}
+
+/// Plan one step given per-slot state snapshots.
+/// `slots[i] = (in_prefill, remaining_prompt, has_pending_logits)`.
+pub fn plan_step(policy: &BatchPolicy, slots: &[(bool, usize, bool)]) -> StepPlan {
+    let mut plan = StepPlan::default();
+    let mut budget = policy.prefill_token_budget;
+    for (i, &(in_prefill, remaining, has_logits)) in slots.iter().enumerate() {
+        if in_prefill {
+            if budget == 0 {
+                continue;
+            }
+            let take = remaining.min(budget);
+            if take > 0 {
+                plan.prefill.push((i, take));
+                budget -= take;
+                if policy.fcfs_prefill && budget == 0 {
+                    // stop scanning; later sequences wait their turn
+                    continue;
+                }
+            }
+        } else if has_logits {
+            plan.decode.push(i);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_all_running() {
+        let policy = BatchPolicy::default();
+        let slots = vec![(false, 0, true), (false, 0, true), (false, 0, true)];
+        let plan = plan_step(&policy, &slots);
+        assert_eq!(plan.decode, vec![0, 1, 2]);
+        assert!(plan.prefill.is_empty());
+    }
+
+    #[test]
+    fn prefill_budget_split() {
+        let policy = BatchPolicy {
+            prefill_token_budget: 10,
+            ..Default::default()
+        };
+        let slots = vec![(true, 6, false), (true, 8, false)];
+        let plan = plan_step(&policy, &slots);
+        assert_eq!(plan.prefill, vec![(0, 6), (1, 4)]);
+    }
+
+    #[test]
+    fn budget_exhaustion_starves_later_prefills_only() {
+        let policy = BatchPolicy {
+            prefill_token_budget: 4,
+            ..Default::default()
+        };
+        let slots = vec![(true, 9, false), (false, 0, true), (true, 3, false)];
+        let plan = plan_step(&policy, &slots);
+        assert_eq!(plan.prefill, vec![(0, 4)]);
+        assert_eq!(plan.decode, vec![1], "decode never starved by prefill");
+    }
+
+    #[test]
+    fn mixed_interleaving() {
+        let policy = BatchPolicy {
+            prefill_token_budget: 100,
+            ..Default::default()
+        };
+        let slots = vec![(false, 0, true), (true, 5, false), (false, 0, true)];
+        let plan = plan_step(&policy, &slots);
+        assert_eq!(plan.decode, vec![0, 2]);
+        assert_eq!(plan.prefill, vec![(1, 5)]);
+    }
+
+    #[test]
+    fn sequences_without_logits_skip_decode() {
+        // freshly admitted but zero-length prompt edge case
+        let policy = BatchPolicy::default();
+        let slots = vec![(false, 0, false)];
+        let plan = plan_step(&policy, &slots);
+        assert!(plan.decode.is_empty());
+    }
+}

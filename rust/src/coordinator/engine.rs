@@ -1,0 +1,326 @@
+//! The serving engine: owns one model replica, a KV pool, and the set
+//! of in-flight sequences; advances them with continuous batching.
+
+use super::batcher::{plan_step, BatchPolicy};
+use super::kv_pool::KvPool;
+use super::metrics::Metrics;
+use super::request::{FinishReason, Request, Response, SequenceState};
+use crate::model::Transformer;
+use crate::rng::Rng;
+use std::collections::VecDeque;
+
+/// One model replica + its scheduling state.
+pub struct ServeEngine {
+    pub model: Transformer,
+    pub policy: BatchPolicy,
+    pool: KvPool,
+    waiting: VecDeque<Request>,
+    running: Vec<SequenceState>,
+    pub metrics: Metrics,
+}
+
+impl ServeEngine {
+    pub fn new(model: Transformer, policy: BatchPolicy) -> ServeEngine {
+        let pool = KvPool::for_model(&model.config, policy.max_running);
+        ServeEngine {
+            model,
+            policy,
+            pool,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Enqueue a request (admission happens during [`ServeEngine::step`]).
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.submitted += 1;
+        self.waiting.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Admit from the waiting queue while KV caches are available.
+    /// Returns immediate rejections (e.g. over-long prompts).
+    fn admit(&mut self) -> Vec<Response> {
+        let mut rejected = Vec::new();
+        while self.running.len() < self.policy.max_running {
+            let Some(req) = self.waiting.front() else { break };
+            // reject over-long prompts outright
+            if req.prompt.len() + 1 >= self.model.config.max_seq {
+                let req = self.waiting.pop_front().unwrap();
+                self.metrics.rejected += 1;
+                rejected.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::PromptTooLong,
+                    ttft: req.submitted_at.elapsed(),
+                    total: req.submitted_at.elapsed(),
+                    prompt_len: req.prompt.len(),
+                });
+                continue;
+            }
+            let Some(cache) = self.pool.acquire() else { break };
+            let req = self.waiting.pop_front().unwrap();
+            self.running.push(SequenceState::new(req, cache));
+        }
+        rejected
+    }
+
+    /// One engine iteration: admit, plan, execute prefill + decode,
+    /// retire finished sequences. Returns completed responses.
+    pub fn step(&mut self) -> Vec<Response> {
+        let mut done = self.admit();
+        let slots: Vec<(bool, usize, bool)> = self
+            .running
+            .iter()
+            .map(|s| (s.in_prefill(), s.remaining_prompt(), s.pending_logits.is_some()))
+            .collect();
+        let plan = plan_step(&self.policy, &slots);
+
+        // --- prefill work
+        for &(slot, take) in &plan.prefill {
+            let seq = &mut self.running[slot];
+            for _ in 0..take {
+                let tok = seq.request.prompt[seq.prefill_cursor];
+                let logits = self.model.decode_step(tok, &mut seq.cache);
+                seq.prefill_cursor += 1;
+                if !seq.in_prefill() {
+                    // prompt fully consumed: these logits predict token 1
+                    seq.pending_logits = Some(logits);
+                }
+            }
+            self.metrics.prefill_tokens += take as u64;
+        }
+
+        // --- decode work
+        for &slot in &plan.decode {
+            let seq = &mut self.running[slot];
+            let logits = seq.pending_logits.take().expect("planned decode without logits");
+            let next = sample(&logits, &seq.request.params, seq.generated.len());
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(std::time::Instant::now());
+            }
+            seq.generated.push(next);
+            self.metrics.decode_tokens += 1;
+            let stop = Some(next) == seq.request.params.stop_token;
+            let out_of_budget = seq.budget_left() == 0;
+            let cache_full = seq.cache.len() + 1 >= seq.cache.max_seq;
+            if !(stop || out_of_budget || cache_full) {
+                seq.pending_logits = Some(self.model.decode_step(next, &mut seq.cache));
+            } else {
+                seq.pending_logits = None; // finished; retired below
+            }
+        }
+
+        // --- retire finished
+        let mut i = 0;
+        while i < self.running.len() {
+            let finished = {
+                let s = &self.running[i];
+                !s.in_prefill() && s.pending_logits.is_none()
+            };
+            if finished {
+                let s = self.running.swap_remove(i);
+                self.pool.release(s.cache);
+                let last = s.generated.last().copied();
+                let stop_hit = last.is_some() && last == s.request.params.stop_token;
+                let mut tokens = s.generated;
+                if stop_hit {
+                    tokens.pop();
+                }
+                let finish = if stop_hit {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                };
+                let resp = Response {
+                    id: s.request.id,
+                    ttft: s
+                        .first_token_at
+                        .map(|t| t - s.request.submitted_at)
+                        .unwrap_or_default(),
+                    total: s.request.submitted_at.elapsed(),
+                    prompt_len: s.request.prompt.len(),
+                    tokens,
+                    finish,
+                };
+                self.metrics.record_response(&resp);
+                done.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Drive until every submitted request completes (test/batch mode).
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        let mut guard = 0usize;
+        while self.pending() > 0 {
+            out.extend(self.step());
+            guard += 1;
+            assert!(guard < 1_000_000, "engine livelock");
+        }
+        out
+    }
+}
+
+/// Greedy or temperature sampling.
+fn sample(logits: &[f32], params: &super::request::SamplingParams, step: usize) -> u32 {
+    if params.temperature <= 0.0 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        return best as u32;
+    }
+    let mut rng = Rng::new(params.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let inv_t = 1.0 / params.temperature;
+    let mut probs: Vec<f32> = logits.iter().map(|&x| x * inv_t).collect();
+    crate::tensor::ops::softmax_inplace(&mut probs);
+    rng.weighted(&probs) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+    use crate::model::ModelConfig;
+
+    fn engine(max_running: usize) -> ServeEngine {
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(11);
+        let model = Transformer::random(cfg, &mut rng);
+        ServeEngine::new(
+            model,
+            BatchPolicy {
+                max_running,
+                prefill_token_budget: 8,
+                fcfs_prefill: true,
+            },
+        )
+    }
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request::new(
+            id,
+            prompt,
+            SamplingParams {
+                max_new_tokens: max_new,
+                stop_token: None,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(4);
+        e.submit(req(1, vec![1, 2, 3], 5));
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 5);
+        assert_eq!(out[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn batched_requests_all_complete() {
+        let mut e = engine(4);
+        for i in 0..10 {
+            e.submit(req(i, vec![1 + (i as u32 % 5), 2, 3], 4));
+        }
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 10);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batched_output_matches_sequential() {
+        // continuous batching must not change per-sequence results
+        let mut e1 = engine(4);
+        e1.submit(req(1, vec![3, 4], 6));
+        e1.submit(req(2, vec![7, 8, 9], 6));
+        let mut out_batched = e1.run_to_completion();
+        out_batched.sort_by_key(|r| r.id);
+
+        let mut e2 = engine(1); // forces sequential
+        e2.submit(req(1, vec![3, 4], 6));
+        e2.submit(req(2, vec![7, 8, 9], 6));
+        let mut out_seq = e2.run_to_completion();
+        out_seq.sort_by_key(|r| r.id);
+
+        for (a, b) in out_batched.iter().zip(&out_seq) {
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn over_long_prompt_rejected() {
+        let mut e = engine(2);
+        e.submit(req(5, vec![1; 64], 4)); // max_seq = 48
+        let out = e.run_to_completion();
+        assert_eq!(out[0].finish, FinishReason::PromptTooLong);
+        assert!(out[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut e = engine(2);
+        for i in 0..6 {
+            e.submit(req(i, vec![1, 2], 3));
+        }
+        e.step();
+        assert!(e.running() <= 2);
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 6);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut e = engine(4);
+        e.submit(req(1, vec![1, 2, 3, 4], 3));
+        let _ = e.run_to_completion();
+        assert_eq!(e.metrics.submitted, 1);
+        assert_eq!(e.metrics.prefill_tokens, 4);
+        assert_eq!(e.metrics.decode_tokens, 3);
+        assert_eq!(e.metrics.completed, 1);
+    }
+
+    #[test]
+    fn stop_token_ends_generation() {
+        let mut e = engine(2);
+        // find what the model emits first, then set it as stop token
+        let probe = {
+            let mut cache = e.model.new_cache();
+            let logits = e.model.decode_step(1, &mut cache);
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u32
+        };
+        let mut r = req(9, vec![1], 10);
+        r.params.stop_token = Some(probe);
+        e.submit(r);
+        let out = e.run_to_completion();
+        assert_eq!(out[0].finish, FinishReason::Stop);
+        assert!(out[0].tokens.is_empty(), "stop on first token");
+    }
+}

@@ -1,0 +1,124 @@
+//! KV-cache pool: bounded, recycling allocator for per-sequence caches.
+//!
+//! Serving engines live or die on cache memory management; this pool
+//! bounds the number of resident caches (= max concurrent sequences),
+//! recycles freed caches without reallocation, and tracks watermarks
+//! for the metrics endpoint.
+
+use crate::model::KvCache;
+
+/// Bounded pool of KV caches.
+#[derive(Debug)]
+pub struct KvPool {
+    n_layers: usize,
+    kv_dim: usize,
+    max_seq: usize,
+    capacity: usize,
+    free: Vec<KvCache>,
+    outstanding: usize,
+    /// High-water mark of simultaneously outstanding caches.
+    pub peak_outstanding: usize,
+}
+
+impl KvPool {
+    pub fn new(n_layers: usize, kv_dim: usize, max_seq: usize, capacity: usize) -> KvPool {
+        KvPool {
+            n_layers,
+            kv_dim,
+            max_seq,
+            capacity,
+            free: Vec::with_capacity(capacity),
+            outstanding: 0,
+            peak_outstanding: 0,
+        }
+    }
+
+    /// For a model configuration.
+    pub fn for_model(config: &crate::model::ModelConfig, capacity: usize) -> KvPool {
+        KvPool::new(config.n_layers, config.kv_dim(), config.max_seq, capacity)
+    }
+
+    /// Try to acquire a cache; `None` when the pool is exhausted
+    /// (admission control backpressure).
+    pub fn acquire(&mut self) -> Option<KvCache> {
+        if self.outstanding >= self.capacity {
+            return None;
+        }
+        self.outstanding += 1;
+        self.peak_outstanding = self.peak_outstanding.max(self.outstanding);
+        Some(match self.free.pop() {
+            Some(mut c) => {
+                c.reset();
+                c
+            }
+            None => KvCache::new(self.n_layers, self.kv_dim, self.max_seq),
+        })
+    }
+
+    /// Return a cache to the pool.
+    pub fn release(&mut self, cache: KvCache) {
+        debug_assert!(self.outstanding > 0, "release without acquire");
+        self.outstanding = self.outstanding.saturating_sub(1);
+        if self.free.len() < self.capacity {
+            self.free.push(cache);
+        }
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    pub fn available(&self) -> usize {
+        self.capacity - self.outstanding
+    }
+
+    /// Total bytes held by pooled (free) caches.
+    pub fn pooled_bytes(&self) -> usize {
+        self.free.iter().map(KvCache::bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut p = KvPool::new(2, 8, 16, 2);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert!(p.acquire().is_none(), "capacity enforced");
+        assert_eq!(p.outstanding(), 2);
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        let c = p.acquire().unwrap();
+        assert!(c.is_empty(), "recycled cache must be reset");
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.outstanding(), 0);
+    }
+
+    #[test]
+    fn recycling_reuses_buffers() {
+        let mut p = KvPool::new(1, 4, 8, 1);
+        let mut a = p.acquire().unwrap();
+        a.append(0, &[1.0; 4], &[2.0; 4]);
+        a.commit();
+        p.release(a);
+        assert!(p.pooled_bytes() > 0);
+        let b = p.acquire().unwrap();
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn peak_watermark() {
+        let mut p = KvPool::new(1, 4, 8, 3);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        p.release(a);
+        let c = p.acquire().unwrap();
+        assert_eq!(p.peak_outstanding, 2);
+        p.release(b);
+        p.release(c);
+    }
+}

@@ -1,0 +1,121 @@
+//! Serving metrics: counters + latency reservoirs, rendered for the
+//! `ptqtp serve --report` output and the Table 5/6-style benches.
+
+use super::request::Response;
+use std::time::Duration;
+
+/// Engine-level metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    /// Completed responses retained for percentile queries (bounded).
+    pub finished: Vec<Response>,
+    ttft_samples: Vec<Duration>,
+    total_samples: Vec<Duration>,
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Metrics {
+    pub fn record_response(&mut self, r: &Response) {
+        self.completed += 1;
+        if self.ttft_samples.len() < RESERVOIR {
+            self.ttft_samples.push(r.ttft);
+            self.total_samples.push(r.total);
+        }
+        if self.finished.len() < RESERVOIR {
+            self.finished.push(r.clone());
+        }
+    }
+
+    pub fn ttft_percentile(&self, p: f64) -> Option<Duration> {
+        percentile(&self.ttft_samples, p)
+    }
+
+    pub fn total_percentile(&self, p: f64) -> Option<Duration> {
+        percentile(&self.total_samples, p)
+    }
+
+    /// Tokens/second over a wall-clock window.
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        self.decode_tokens as f64 / wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn render(&self, wall: Duration) -> String {
+        format!(
+            "requests: {} submitted, {} completed, {} rejected\n\
+             tokens:   {} prefill, {} decode ({:.1} tok/s decode)\n\
+             ttft:     p50 {:?}  p95 {:?}\n\
+             e2e:      p50 {:?}  p95 {:?}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.throughput(wall),
+            self.ttft_percentile(0.50).unwrap_or_default(),
+            self.ttft_percentile(0.95).unwrap_or_default(),
+            self.total_percentile(0.50).unwrap_or_default(),
+            self.total_percentile(0.95).unwrap_or_default(),
+        )
+    }
+}
+
+fn percentile(samples: &[Duration], p: f64) -> Option<Duration> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v: Vec<Duration> = samples.to_vec();
+    v.sort_unstable();
+    let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+    Some(v[idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    fn resp(ms: u64) -> Response {
+        Response {
+            id: 0,
+            tokens: vec![1],
+            finish: FinishReason::Length,
+            ttft: Duration::from_millis(ms),
+            total: Duration::from_millis(ms * 2),
+            prompt_len: 1,
+        }
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for ms in [10u64, 20, 30, 40, 100] {
+            m.record_response(&resp(ms));
+        }
+        let p50 = m.ttft_percentile(0.5).unwrap();
+        let p95 = m.ttft_percentile(0.95).unwrap();
+        assert!(p50 <= p95);
+        assert_eq!(m.completed, 5);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert!(m.ttft_percentile(0.5).is_none());
+        assert_eq!(m.throughput(Duration::from_secs(1)), 0.0);
+        let s = m.render(Duration::from_secs(1));
+        assert!(s.contains("0 submitted"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut m = Metrics::default();
+        m.decode_tokens = 100;
+        assert!((m.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+}

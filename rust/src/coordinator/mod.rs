@@ -1,0 +1,33 @@
+//! The L3 serving coordinator — a vLLM-router-style engine around the
+//! quantized model: request router, continuous batcher, KV-cache pool,
+//! prefill/decode scheduler, metrics, and a threaded server front-end.
+//!
+//! The offline crate cache has no tokio, so the event loop is built on
+//! `std::thread` + `mpsc` (documented substitution, DESIGN.md §2); the
+//! architecture — admission control by token budget, interleaved
+//! prefill/decode, per-request streaming state — matches the async
+//! original move-for-move.
+//!
+//! Data flow:
+//!
+//! ```text
+//! submit() ─→ Router ─→ per-worker queue ─→ Scheduler/Batcher
+//!                                          │   admit prefills (budget)
+//!                                          ▼
+//!                                     Engine.step(): decode all active
+//!                                          │   + prefill admitted
+//!                                          ▼
+//!                                  responses (finished sequences)
+//! ```
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_pool;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use engine::ServeEngine;
+pub use request::{Request, RequestId, Response, SamplingParams};
+pub use server::Server;

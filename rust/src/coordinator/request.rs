@@ -1,0 +1,137 @@
+//! Request/response types and per-sequence lifecycle state.
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// Sampling configuration (greedy when `temperature == 0`).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    pub max_new_tokens: usize,
+    /// Stop at this token id (usually EOS).
+    pub stop_token: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 32,
+            stop_token: Some(crate::data::tokenizer::EOS),
+            seed: 0,
+        }
+    }
+}
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+    /// Session key for router affinity (0 = none).
+    pub session: u64,
+    pub submitted_at: std::time::Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<u32>, params: SamplingParams) -> Request {
+        Request {
+            id,
+            prompt,
+            params,
+            session: 0,
+            submitted_at: std::time::Instant::now(),
+        }
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Stop,
+    Length,
+    /// Prompt longer than the model context.
+    PromptTooLong,
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Time from submit to first generated token.
+    pub ttft: std::time::Duration,
+    /// Time from submit to completion.
+    pub total: std::time::Duration,
+    pub prompt_len: usize,
+}
+
+/// Lifecycle of an admitted sequence inside the engine.
+#[derive(Debug)]
+pub struct SequenceState {
+    pub request: Request,
+    pub cache: crate::model::KvCache,
+    /// Prompt tokens not yet prefilled.
+    pub prefill_cursor: usize,
+    pub generated: Vec<u32>,
+    /// Logits from the last step (None until the prompt is consumed).
+    pub pending_logits: Option<Vec<f32>>,
+    pub first_token_at: Option<std::time::Instant>,
+}
+
+impl SequenceState {
+    pub fn new(request: Request, cache: crate::model::KvCache) -> SequenceState {
+        SequenceState {
+            request,
+            cache,
+            prefill_cursor: 0,
+            generated: Vec::new(),
+            pending_logits: None,
+            first_token_at: None,
+        }
+    }
+
+    pub fn in_prefill(&self) -> bool {
+        self.prefill_cursor < self.request.prompt.len()
+    }
+
+    pub fn remaining_prompt(&self) -> usize {
+        self.request.prompt.len() - self.prefill_cursor
+    }
+
+    pub fn budget_left(&self) -> usize {
+        self.request
+            .params
+            .max_new_tokens
+            .saturating_sub(self.generated.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::KvCache;
+
+    #[test]
+    fn lifecycle_flags() {
+        let req = Request::new(1, vec![1, 2, 3], SamplingParams::default());
+        let mut s = SequenceState::new(req, KvCache::new(1, 4, 16));
+        assert!(s.in_prefill());
+        assert_eq!(s.remaining_prompt(), 3);
+        s.prefill_cursor = 3;
+        assert!(!s.in_prefill());
+        assert_eq!(s.budget_left(), 32);
+        s.generated = vec![9; 30];
+        assert_eq!(s.budget_left(), 2);
+    }
+
+    #[test]
+    fn default_sampling_greedy() {
+        let p = SamplingParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert!(p.stop_token.is_some());
+    }
+}

@@ -1,0 +1,132 @@
+//! Request router: spreads requests across engine replicas.
+//!
+//! Policies (vllm-project/router-inspired): least-loaded by default,
+//! with session affinity — requests carrying the same session key pin
+//! to one replica so its KV/prefix locality is preserved.
+
+use super::request::Request;
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Router over `n` replicas. The router tracks in-flight counts that the
+/// server updates on completion; it holds no engine references so it can
+/// live on the intake thread.
+#[derive(Debug)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    inflight: Vec<usize>,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(n_replicas: usize, policy: RoutePolicy) -> Router {
+        assert!(n_replicas > 0);
+        Router {
+            policy,
+            inflight: vec![0; n_replicas],
+            rr_next: 0,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Pick the replica for a request and record the assignment.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let n = self.inflight.len();
+        let pick = if req.session != 0 {
+            // session affinity: stable hash → replica
+            (req.session.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % n
+        } else {
+            match self.policy {
+                RoutePolicy::RoundRobin => {
+                    let p = self.rr_next;
+                    self.rr_next = (self.rr_next + 1) % n;
+                    p
+                }
+                RoutePolicy::LeastLoaded => {
+                    let mut best = 0usize;
+                    for i in 1..n {
+                        if self.inflight[i] < self.inflight[best] {
+                            best = i;
+                        }
+                    }
+                    best
+                }
+            }
+        };
+        self.inflight[pick] += 1;
+        pick
+    }
+
+    /// Mark a request complete on its replica.
+    pub fn complete(&mut self, replica: usize) {
+        self.inflight[replica] = self.inflight[replica].saturating_sub(1);
+    }
+
+    pub fn load(&self, replica: usize) -> usize {
+        self.inflight[replica]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(id: u64, session: u64) -> Request {
+        let mut r = Request::new(id, vec![1], SamplingParams::default());
+        r.session = session;
+        r
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 0))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        let a = r.route(&req(1, 0));
+        let b = r.route(&req(2, 0));
+        assert_ne!(a, b, "second request goes to the idle replica");
+        r.complete(a);
+        let c = r.route(&req(3, 0));
+        assert_eq!(c, a, "freed replica is least loaded again");
+    }
+
+    #[test]
+    fn session_affinity_stable() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let first = r.route(&req(1, 42));
+        for i in 2..10 {
+            assert_eq!(r.route(&req(i, 42)), first);
+        }
+    }
+
+    #[test]
+    fn sessions_spread_across_replicas() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let mut seen = [false; 4];
+        for s in 1..64u64 {
+            seen[r.route(&req(s, s))] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "{seen:?}");
+    }
+
+    #[test]
+    fn complete_underflow_safe() {
+        let mut r = Router::new(1, RoutePolicy::RoundRobin);
+        r.complete(0);
+        assert_eq!(r.load(0), 0);
+    }
+}

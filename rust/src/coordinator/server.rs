@@ -1,0 +1,217 @@
+//! Threaded server front-end: intake channel → router → per-replica
+//! worker threads → response channel.
+//!
+//! tokio is unavailable offline (DESIGN.md §2), so concurrency is
+//! std::thread + mpsc: one worker thread per engine replica runs the
+//! continuous-batching loop; the handle submits requests and collects
+//! responses without blocking workers.
+
+use super::engine::ServeEngine;
+use super::request::{Request, RequestId, Response, SamplingParams};
+use super::router::{RoutePolicy, Router};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+enum WorkerMsg {
+    Submit(Request),
+    Shutdown,
+}
+
+/// A running multi-replica server.
+pub struct Server {
+    router: Router,
+    workers: Vec<Sender<WorkerMsg>>,
+    responses: Receiver<(usize, Response)>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Spawn one worker thread per engine replica.
+    pub fn start(engines: Vec<ServeEngine>, policy: RoutePolicy) -> Server {
+        assert!(!engines.is_empty());
+        let n = engines.len();
+        let (resp_tx, resp_rx) = channel::<(usize, Response)>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (replica, mut engine) in engines.into_iter().enumerate() {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let resp_tx = resp_tx.clone();
+            let stop = shutdown.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(replica, &mut engine, rx, resp_tx, stop);
+            }));
+            workers.push(tx);
+        }
+        Server {
+            router: Router::new(n, policy),
+            workers,
+            responses: resp_rx,
+            handles,
+            next_id: AtomicU64::new(1),
+            shutdown,
+        }
+    }
+
+    /// Submit a prompt; returns the assigned request id.
+    pub fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams, session: u64) -> RequestId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = Request::new(id, prompt, params);
+        req.session = session;
+        let replica = self.router.route(&req);
+        // worker thread gone ⇒ server shut down; drop silently
+        let _ = self.workers[replica].send(WorkerMsg::Submit(req));
+        id
+    }
+
+    /// Non-blocking poll for finished responses.
+    pub fn poll(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        loop {
+            match self.responses.try_recv() {
+                Ok((replica, resp)) => {
+                    self.router.complete(replica);
+                    out.push(resp);
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Block until `n` responses arrive or `timeout` elapses.
+    pub fn wait_for(&mut self, n: usize, timeout: Duration) -> Vec<Response> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut out = Vec::new();
+        while out.len() < n && std::time::Instant::now() < deadline {
+            match self.responses.recv_timeout(Duration::from_millis(10)) {
+                Ok((replica, resp)) => {
+                    self.router.complete(replica);
+                    out.push(resp);
+                }
+                Err(_) => {}
+            }
+        }
+        out
+    }
+
+    /// Graceful shutdown: drain workers and join threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for w in &self.workers {
+            let _ = w.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    replica: usize,
+    engine: &mut ServeEngine,
+    rx: Receiver<WorkerMsg>,
+    resp_tx: Sender<(usize, Response)>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        // drain intake without blocking while work is pending
+        loop {
+            match rx.try_recv() {
+                Ok(WorkerMsg::Submit(req)) => engine.submit(req),
+                Ok(WorkerMsg::Shutdown) => return,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if engine.pending() == 0 {
+            // idle: block briefly for new work
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(WorkerMsg::Submit(req)) => engine.submit(req),
+                Ok(WorkerMsg::Shutdown) => return,
+                Err(_) => continue,
+            }
+        }
+        for resp in engine.step() {
+            if resp_tx.send((replica, resp)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::model::{ModelConfig, Transformer};
+    use crate::rng::Rng;
+
+    fn mk_engine(seed: u64) -> ServeEngine {
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(seed);
+        ServeEngine::new(Transformer::random(cfg, &mut rng), BatchPolicy::default())
+    }
+
+    fn params(n: usize) -> SamplingParams {
+        SamplingParams {
+            max_new_tokens: n,
+            stop_token: None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_replica_end_to_end() {
+        let mut server = Server::start(vec![mk_engine(1)], RoutePolicy::LeastLoaded);
+        let id = server.submit(vec![1, 2, 3], params(4), 0);
+        let out = server.wait_for(1, Duration::from_secs(10));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, id);
+        assert_eq!(out[0].tokens.len(), 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_replica_all_requests_served() {
+        let engines = vec![mk_engine(1), mk_engine(1)];
+        let mut server = Server::start(engines, RoutePolicy::LeastLoaded);
+        let mut ids = Vec::new();
+        for i in 0..8 {
+            ids.push(server.submit(vec![1 + i % 5, 2], params(3), 0));
+        }
+        let out = server.wait_for(8, Duration::from_secs(20));
+        assert_eq!(out.len(), 8);
+        let mut got: Vec<u64> = out.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        ids.sort_unstable();
+        assert_eq!(got, ids);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let server = Server::start(vec![mk_engine(2)], RoutePolicy::RoundRobin);
+        server.shutdown(); // no hang
+    }
+
+    #[test]
+    fn poll_nonblocking_when_empty() {
+        let mut server = Server::start(vec![mk_engine(3)], RoutePolicy::RoundRobin);
+        let t0 = std::time::Instant::now();
+        let out = server.poll();
+        assert!(out.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,317 @@
+//! Deterministic synthetic corpora.
+//!
+//! Three text domains with distinct statistics stand in for the paper's
+//! WikiText2 / PTB / C4 (perplexity datasets), plus the arithmetic and
+//! fact corpora that give the tiny models the math / knowledge skills
+//! whose post-quantization *retention* the paper measures (Table 2).
+//!
+//! Generation is a template grammar over fixed word banks driven by the
+//! deterministic RNG, so `make artifacts` always produces byte-identical
+//! data for a given seed.
+
+use crate::rng::Rng;
+
+/// The three perplexity domains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusDomain {
+    /// Encyclopedic, longer sentences — WikiText2 stand-in.
+    WikiSyn,
+    /// Telegraphic newswire — PTB stand-in.
+    PtbSyn,
+    /// Noisy web text — C4 stand-in.
+    C4Syn,
+}
+
+impl CorpusDomain {
+    pub fn all() -> [CorpusDomain; 3] {
+        [CorpusDomain::WikiSyn, CorpusDomain::PtbSyn, CorpusDomain::C4Syn]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusDomain::WikiSyn => "wiki-syn",
+            CorpusDomain::PtbSyn => "ptb-syn",
+            CorpusDomain::C4Syn => "c4-syn",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<CorpusDomain> {
+        Ok(match name {
+            "wiki-syn" | "wikitext2" | "wiki" => CorpusDomain::WikiSyn,
+            "ptb-syn" | "ptb" => CorpusDomain::PtbSyn,
+            "c4-syn" | "c4" => CorpusDomain::C4Syn,
+            other => anyhow::bail!("unknown corpus domain '{other}'"),
+        })
+    }
+}
+
+// word banks — small, lowercase, shared char alphabet across domains
+const SUBJECTS: &[&str] = &[
+    "the river", "a mountain", "the ancient city", "this region", "the empire",
+    "the species", "a traveler", "the scientist", "the library", "an island",
+    "the festival", "a glacier", "the harbor", "the observatory", "the valley",
+];
+const VERBS: &[&str] = &[
+    "contains", "borders", "produces", "describes", "influences", "preserves",
+    "supports", "surrounds", "predates", "resembles", "supplies", "attracts",
+];
+const OBJECTS: &[&str] = &[
+    "many villages", "rare minerals", "old manuscripts", "several lakes",
+    "trade routes", "stone bridges", "vast forests", "local legends",
+    "migratory birds", "deep canyons", "small farms", "historic walls",
+];
+const MODIFIERS: &[&str] = &[
+    "in the north", "during winter", "for centuries", "near the coast",
+    "under the stars", "after the flood", "despite the drought", "by tradition",
+];
+const PTB_HEADS: &[&str] = &[
+    "prices rose", "shares fell", "the index gained", "traders said",
+    "the company reported", "analysts expect", "output slipped", "demand grew",
+];
+const PTB_TAILS: &[&str] = &[
+    "amid light trading", "on strong earnings", "despite the forecast",
+    "in early trading", "for the third month", "as rates climbed",
+];
+const C4_BITS: &[&str] = &[
+    "click here to learn more", "best tips and tricks", "we love this recipe",
+    "sign up for our newsletter", "read the full story", "top ten reasons",
+    "you wont believe what happened", "free shipping on all orders",
+];
+
+/// The fixed fact bank: the knowledge the models are trained on and the
+/// cloze suite quizzes (so quantization-induced forgetting is
+/// measurable). (subject, relation, correct, distractors)
+pub const FACTS: &[(&str, &str, &str, [&str; 3])] = &[
+    ("grass", "color", "green", ["blue", "red", "violet"]),
+    ("snow", "color", "white", ["black", "green", "orange"]),
+    ("the sun rises in the", "direction", "east", ["west", "north", "south"]),
+    ("ice feels", "property", "cold", ["hot", "loud", "soft"]),
+    ("fire feels", "property", "hot", ["cold", "quiet", "wet"]),
+    ("a week has", "count", "seven days", ["three days", "ten days", "two days"]),
+    ("a triangle has", "count", "three sides", ["four sides", "five sides", "six sides"]),
+    ("fish live in", "habitat", "water", ["sand", "clouds", "trees"]),
+    ("birds can", "ability", "fly", ["swim only", "dig only", "melt"]),
+    ("night is", "property", "dark", ["bright", "loud", "dry"]),
+];
+
+/// Corpus generator.
+pub struct CorpusGen {
+    rng: Rng,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64) -> CorpusGen {
+        CorpusGen { rng: Rng::new(seed) }
+    }
+
+    fn wiki_sentence(&mut self) -> String {
+        let s = self.rng.choose(SUBJECTS);
+        let v = self.rng.choose(VERBS);
+        let o = self.rng.choose(OBJECTS);
+        if self.rng.chance(0.5) {
+            let m = self.rng.choose(MODIFIERS);
+            format!("{s} {v} {o} {m}.")
+        } else {
+            format!("{s} {v} {o}.")
+        }
+    }
+
+    fn ptb_sentence(&mut self) -> String {
+        let h = self.rng.choose(PTB_HEADS);
+        let t = self.rng.choose(PTB_TAILS);
+        let n = self.rng.range(1, 99);
+        if self.rng.chance(0.4) {
+            format!("{h} {n} percent {t}.")
+        } else {
+            format!("{h} {t}.")
+        }
+    }
+
+    fn c4_sentence(&mut self) -> String {
+        let a = self.rng.choose(C4_BITS);
+        if self.rng.chance(0.3) {
+            let b = self.rng.choose(C4_BITS);
+            format!("{a}! {b}...")
+        } else if self.rng.chance(0.3) {
+            format!("{a} >> page {}", self.rng.range(1, 40))
+        } else {
+            format!("{a}.")
+        }
+    }
+
+    /// A fact sentence (training phrasing).
+    fn fact_sentence(&mut self) -> String {
+        let &(subj, _, correct, _) = self.rng.choose(FACTS);
+        format!("{subj} {correct}.")
+    }
+
+    /// One arithmetic QA line. The task space is deliberately finite
+    /// (single-digit operands, three ops ⇒ ~200 distinct facts) so the
+    /// tiny models can *master* it during pretraining — the paper's
+    /// math experiment measures quantization-induced *forgetting* of a
+    /// learned capability, which requires the FP16 baseline to be
+    /// strong in the first place.
+    pub fn math_line(&mut self) -> (String, String) {
+        let a = self.rng.range(2, 10);
+        let b = self.rng.range(2, 10);
+        let (expr, ans) = match self.rng.below(3) {
+            0 => (format!("{a}+{b}"), (a + b) as i64),
+            1 => {
+                let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+                (format!("{hi}-{lo}"), (hi - lo) as i64)
+            }
+            _ => (format!("{a}*{b}"), (a * b) as i64),
+        };
+        (format!("Q:{expr}=? A:"), format!("{ans}."))
+    }
+
+    /// One bracket-completion "code" line: prefix + the closing suffix.
+    pub fn code_line(&mut self) -> (String, String) {
+        const OPEN: [char; 3] = ['(', '[', '{'];
+        const CLOSE: [char; 3] = [')', ']', '}'];
+        let depth = self.rng.range(1, 5);
+        let mut prefix = String::from("code:");
+        let mut stack = Vec::new();
+        for _ in 0..depth {
+            let k = self.rng.below(3);
+            prefix.push(OPEN[k]);
+            stack.push(k);
+        }
+        let mut suffix = String::new();
+        while let Some(k) = stack.pop() {
+            suffix.push(CLOSE[k]);
+        }
+        suffix.push('.');
+        (prefix, suffix)
+    }
+
+    /// Generate `n_sentences` of one perplexity domain.
+    pub fn domain_text(&mut self, domain: CorpusDomain, n_sentences: usize) -> String {
+        let mut out = String::new();
+        for _ in 0..n_sentences {
+            let s = match domain {
+                CorpusDomain::WikiSyn => self.wiki_sentence(),
+                CorpusDomain::PtbSyn => self.ptb_sentence(),
+                CorpusDomain::C4Syn => self.c4_sentence(),
+            };
+            out.push_str(&s);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The full training mixture: all three domains + facts + math +
+    /// code, interleaved. This is what `python/compile/train.py`
+    /// consumes.
+    pub fn training_mixture(&mut self, n_lines: usize) -> String {
+        let mut out = String::new();
+        for _ in 0..n_lines {
+            let line = match self.rng.below(10) {
+                0 => self.wiki_sentence(),
+                1 => self.ptb_sentence(),
+                2 => self.c4_sentence(),
+                3..=7 => {
+                    // math-heavy mixture: the Table 2 retention experiment
+                    // needs the FP16 baseline to *master* arithmetic
+                    let (q, a) = self.math_line();
+                    format!("{q}{a}")
+                }
+                8 => {
+                    let (p, s) = self.code_line();
+                    format!("{p}{s}")
+                }
+                _ => self.fact_sentence(),
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = CorpusGen::new(7).training_mixture(50);
+        let b = CorpusGen::new(7).training_mixture(50);
+        assert_eq!(a, b);
+        let c = CorpusGen::new(8).training_mixture(50);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn domains_have_distinct_statistics() {
+        let mut g = CorpusGen::new(1);
+        let wiki = g.domain_text(CorpusDomain::WikiSyn, 200);
+        let ptb = g.domain_text(CorpusDomain::PtbSyn, 200);
+        let c4 = g.domain_text(CorpusDomain::C4Syn, 200);
+        let avg_line = |s: &str| {
+            let lines: Vec<&str> = s.lines().collect();
+            lines.iter().map(|l| l.len()).sum::<usize>() as f64 / lines.len() as f64
+        };
+        // distinct mean lengths (stable under the fixed banks)
+        let (w, p, c) = (avg_line(&wiki), avg_line(&ptb), avg_line(&c4));
+        assert!((w - p).abs() > 2.0, "wiki {w} vs ptb {p}");
+        assert!((w - c).abs() > 2.0 || (p - c).abs() > 2.0);
+    }
+
+    #[test]
+    fn math_lines_are_correct() {
+        let mut g = CorpusGen::new(2);
+        for _ in 0..200 {
+            let (q, a) = g.math_line();
+            let expr = q.strip_prefix("Q:").unwrap().strip_suffix("=? A:").unwrap();
+            let ans: i64 = a.strip_suffix('.').unwrap().parse().unwrap();
+            let eval = if let Some((x, y)) = expr.split_once('+') {
+                x.parse::<i64>().unwrap() + y.parse::<i64>().unwrap()
+            } else if let Some((x, y)) = expr.split_once('-') {
+                x.parse::<i64>().unwrap() - y.parse::<i64>().unwrap()
+            } else {
+                let (x, y) = expr.split_once('*').unwrap();
+                x.parse::<i64>().unwrap() * y.parse::<i64>().unwrap()
+            };
+            assert_eq!(eval, ans, "{q}{a}");
+        }
+    }
+
+    #[test]
+    fn code_lines_balanced() {
+        let mut g = CorpusGen::new(3);
+        for _ in 0..100 {
+            let (p, s) = g.code_line();
+            let text = format!("{}{}", p.strip_prefix("code:").unwrap(), s.strip_suffix('.').unwrap());
+            let mut stack = Vec::new();
+            for ch in text.chars() {
+                match ch {
+                    '(' | '[' | '{' => stack.push(ch),
+                    ')' => assert_eq!(stack.pop(), Some('(')),
+                    ']' => assert_eq!(stack.pop(), Some('[')),
+                    '}' => assert_eq!(stack.pop(), Some('{')),
+                    _ => panic!("unexpected char {ch}"),
+                }
+            }
+            assert!(stack.is_empty());
+        }
+    }
+
+    #[test]
+    fn mixture_contains_all_kinds() {
+        let text = CorpusGen::new(4).training_mixture(400);
+        assert!(text.contains("Q:"), "math lines present");
+        assert!(text.contains("code:"), "code lines present");
+        assert!(text.contains('.'), "sentences present");
+        // at least one fact phrasing
+        assert!(FACTS.iter().any(|(s, _, c, _)| text.contains(&format!("{s} {c}"))));
+    }
+
+    #[test]
+    fn domain_names_roundtrip() {
+        for d in CorpusDomain::all() {
+            assert_eq!(CorpusDomain::from_name(d.name()).unwrap(), d);
+        }
+        assert!(CorpusDomain::from_name("nope").is_err());
+    }
+}

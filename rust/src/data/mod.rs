@@ -1,0 +1,24 @@
+//! Synthetic data substrate (see DESIGN.md §2 substitution table).
+//!
+//! The paper evaluates on WikiText2/PTB/C4 perplexity plus reasoning,
+//! math, and code suites. None of those are reachable offline, so this
+//! module generates deterministic synthetic equivalents that exercise
+//! the same evaluation code paths:
+//!
+//! * [`corpus`] — three text domains with distinct statistics
+//!   (`wiki-syn`, `ptb-syn`, `c4-syn`) from a seeded grammar+Markov
+//!   generator, plus the arithmetic-QA corpus the models are trained on
+//!   so the math-retention experiment (Table 2) is meaningful.
+//! * [`tokenizer`] — character-level tokenizer with persisted vocab,
+//!   shared byte-for-byte with the Python training path.
+//! * [`tasks`] — evaluation task generators: math QA (exact match),
+//!   cloze multiple choice (logprob ranking), bracket-completion "code"
+//!   tasks (Table 12 analogue).
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{CorpusDomain, CorpusGen};
+pub use tasks::{ChoiceTask, MathTask, TaskSuite};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,137 @@
+//! Evaluation task generators — the downstream suites of Tables 2/3/11/12.
+//!
+//! * [`MathTask`] — arithmetic QA scored by exact match on greedy
+//!   decode (GSM8K / Math-500 stand-in; the paper's headline retention
+//!   experiment).
+//! * [`ChoiceTask`] — cloze multiple choice scored by per-token
+//!   logprob ranking (ARC / BoolQ / HellaSwag / MMLU stand-in).
+//! * code tasks — bracket completion, exact match (HumanEval / MBPP
+//!   stand-in, Table 12).
+
+use super::corpus::{CorpusGen, FACTS};
+use crate::rng::Rng;
+
+/// Exact-match generation task.
+#[derive(Clone, Debug)]
+pub struct MathTask {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Multiple-choice ranking task.
+#[derive(Clone, Debug)]
+pub struct ChoiceTask {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+/// A bundle of evaluation tasks (one per paper benchmark family).
+#[derive(Clone, Debug, Default)]
+pub struct TaskSuite {
+    pub math: Vec<MathTask>,
+    pub cloze: Vec<ChoiceTask>,
+    pub code: Vec<MathTask>,
+}
+
+impl TaskSuite {
+    /// Build the standard evaluation suite. `seed` controls the held-out
+    /// sampling; use a seed disjoint from training generation.
+    pub fn standard(seed: u64, n_math: usize, n_cloze: usize, n_code: usize) -> TaskSuite {
+        let mut gen = CorpusGen::new(seed ^ EVAL_SEED);
+        let math = (0..n_math)
+            .map(|_| {
+                let (prompt, answer) = gen.math_line();
+                MathTask { prompt, answer }
+            })
+            .collect();
+        let code = (0..n_code)
+            .map(|_| {
+                let (prompt, answer) = gen.code_line();
+                MathTask { prompt, answer }
+            })
+            .collect();
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let cloze = (0..n_cloze)
+            .map(|_| {
+                let &(subj, _rel, correct, distractors) = rng.choose(FACTS);
+                // shuffle answer positions deterministically
+                let mut options: Vec<String> = vec![
+                    correct.to_string(),
+                    distractors[0].to_string(),
+                    distractors[1].to_string(),
+                    distractors[2].to_string(),
+                ];
+                let mut order: Vec<usize> = (0..4).collect();
+                rng.shuffle(&mut order);
+                let correct_pos = order.iter().position(|&i| i == 0).unwrap();
+                options = order.iter().map(|&i| options[i].clone()).collect();
+                ChoiceTask {
+                    prompt: format!("{subj} "),
+                    choices: options,
+                    correct: correct_pos,
+                }
+            })
+            .collect();
+        TaskSuite { math, cloze, code }
+    }
+}
+
+/// XOR'd into the user seed so evaluation sampling is disjoint from the
+/// training-corpus stream even when both use the same base seed.
+const EVAL_SEED: u64 = 0x0E7A_15EE_D000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_sizes() {
+        let s = TaskSuite::standard(1, 20, 30, 10);
+        assert_eq!(s.math.len(), 20);
+        assert_eq!(s.cloze.len(), 30);
+        assert_eq!(s.code.len(), 10);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = TaskSuite::standard(5, 5, 5, 5);
+        let b = TaskSuite::standard(5, 5, 5, 5);
+        assert_eq!(a.math[0].prompt, b.math[0].prompt);
+        assert_eq!(a.cloze[3].correct, b.cloze[3].correct);
+    }
+
+    #[test]
+    fn cloze_correct_is_valid_index() {
+        let s = TaskSuite::standard(2, 0, 50, 0);
+        for t in &s.cloze {
+            assert!(t.correct < t.choices.len());
+            // the correct choice must be one of the fact bank's truths
+            let c = &t.choices[t.correct];
+            assert!(
+                FACTS.iter().any(|(_, _, truth, _)| truth == c),
+                "choice '{c}' not a known truth"
+            );
+        }
+    }
+
+    #[test]
+    fn cloze_positions_vary() {
+        let s = TaskSuite::standard(3, 0, 60, 0);
+        let mut seen = [false; 4];
+        for t in &s.cloze {
+            seen[t.correct] = true;
+        }
+        assert!(seen.iter().filter(|&&x| x).count() >= 3, "positions {seen:?}");
+    }
+
+    #[test]
+    fn math_prompts_well_formed() {
+        let s = TaskSuite::standard(4, 30, 0, 0);
+        for t in &s.math {
+            assert!(t.prompt.starts_with("Q:"));
+            assert!(t.prompt.ends_with("A:"));
+            assert!(t.answer.ends_with('.'));
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Character-level tokenizer with persisted vocabulary.
+//!
+//! Shared contract with `python/compile/data.py`: the vocab JSON lists
+//! characters in id order; id 0 is reserved for `<pad>`, id 1 for
+//! `<unk>`, id 2 for `<eos>` (also used as the generation stop token).
+
+use crate::serialize::Json;
+use std::collections::BTreeMap;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const EOS: u32 = 2;
+
+/// Character tokenizer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tokenizer {
+    /// id → char (ids 0..3 are specials, not in this list's chars).
+    chars: Vec<char>,
+    /// char → id
+    map: BTreeMap<char, u32>,
+}
+
+impl Tokenizer {
+    /// Build from the set of characters appearing in `text` (sorted for
+    /// determinism).
+    pub fn from_text(text: &str) -> Tokenizer {
+        let mut set: Vec<char> = {
+            let mut s: Vec<char> = text.chars().collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        set.retain(|c| *c != '\u{0}');
+        let mut map = BTreeMap::new();
+        for (i, &c) in set.iter().enumerate() {
+            map.insert(c, i as u32 + 3);
+        }
+        Tokenizer { chars: set, map }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.chars.len() + 3
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.chars()
+            .map(|c| self.map.get(&c).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    /// Encode and append EOS.
+    pub fn encode_with_eos(&self, text: &str) -> Vec<u32> {
+        let mut v = self.encode(text);
+        v.push(EOS);
+        v
+    }
+
+    /// Encode multi-line text with EOS separating lines — the training
+    /// contract (`python/compile/data.py` joins corpus lines with EOS,
+    /// so evaluation must do the same; raw `\n` is never trained on).
+    pub fn encode_lines(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len());
+        for line in text.lines() {
+            out.extend(self.encode(line));
+            out.push(EOS);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter_map(|&id| match id {
+                PAD | EOS => None,
+                UNK => Some('\u{fffd}'),
+                i => self.chars.get(i as usize - 3).copied(),
+            })
+            .collect()
+    }
+
+    // ---------- io (shared with python) ----------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set(
+            "chars",
+            Json::Str(self.chars.iter().collect::<String>()),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Tokenizer> {
+        let chars = j.req_str("chars")?;
+        let mut t = Tokenizer {
+            chars: chars.chars().collect(),
+            map: BTreeMap::new(),
+        };
+        for (i, c) in t.chars.clone().into_iter().enumerate() {
+            t.map.insert(c, i as u32 + 3);
+        }
+        Ok(t)
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Tokenizer> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {:?}: {e}", path.as_ref()))?;
+        Tokenizer::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_text() {
+        let t = Tokenizer::from_text("hello world 123+=?");
+        let ids = t.encode("wold 31+");
+        assert_eq!(t.decode(&ids), "wold 31+");
+    }
+
+    #[test]
+    fn unknown_chars_map_to_unk() {
+        let t = Tokenizer::from_text("abc");
+        let ids = t.encode("abz");
+        assert_eq!(ids[2], UNK);
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let t = Tokenizer::from_text("ab");
+        let ids = t.encode("ab");
+        assert!(ids.iter().all(|&i| i >= 3));
+        assert_eq!(t.vocab_size(), 5);
+    }
+
+    #[test]
+    fn deterministic_ordering() {
+        let a = Tokenizer::from_text("cba");
+        let b = Tokenizer::from_text("abcabc");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn eos_terminates_decode() {
+        let t = Tokenizer::from_text("xy");
+        let mut ids = t.encode("xy");
+        ids.push(EOS);
+        ids.extend(t.encode("x"));
+        // decode skips EOS but keeps following chars (caller splits)
+        assert_eq!(t.decode(&ids), "xyx");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Tokenizer::from_text("abc déf!");
+        let j = t.to_json();
+        let back = Tokenizer::from_json(&j).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.encode("déf"), t.encode("déf"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = Tokenizer::from_text("0123456789+-*= QA:?");
+        let p = std::env::temp_dir().join("ptqtp_tok_test.json");
+        t.save(&p).unwrap();
+        assert_eq!(Tokenizer::load(&p).unwrap(), t);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation suites: perplexity (Table 1/9 metric) and downstream task
+//! accuracy (Tables 2/3/11/12 metrics).
+
+pub mod ppl;
+pub mod suite;
+
+pub use ppl::perplexity;
+pub use suite::{eval_suite, SuiteScores};

@@ -1,0 +1,106 @@
+//! Perplexity evaluation — the metric of Tables 1, 7, 8, 9.
+//!
+//! Identical protocol to the paper's WikiText2/PTB/C4 measurement:
+//! tokenize the held-out text, run teacher-forced next-token prediction
+//! in chunks of the model's context length, and report
+//! `exp(mean NLL)` in nats.
+
+use crate::data::Tokenizer;
+use crate::model::Transformer;
+
+/// Perplexity of `model` on `text`. Chunks of `max_seq` tokens are
+/// evaluated independently (fresh cache per chunk), matching the
+/// standard lm-eval sliding protocol with stride = context. Lines are
+/// joined with EOS, matching the training tokenization contract.
+pub fn perplexity(model: &Transformer, tok: &Tokenizer, text: &str) -> f64 {
+    let ids = tok.encode_lines(text);
+    perplexity_ids(model, &ids)
+}
+
+/// Perplexity over pre-tokenized ids.
+pub fn perplexity_ids(model: &Transformer, ids: &[u32]) -> f64 {
+    let ctx = model.config.max_seq;
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for chunk in ids.chunks(ctx) {
+        if chunk.len() < 2 {
+            continue;
+        }
+        let nll = model.sequence_nll(chunk);
+        total_nll += nll.iter().sum::<f64>();
+        total_tok += nll.len();
+    }
+    if total_tok == 0 {
+        return f64::NAN;
+    }
+    (total_nll / total_tok as f64).exp()
+}
+
+/// Mean NLL (nats/token) — used where a linear-scale metric is easier
+/// to compare (Fig 3 convergence curves).
+pub fn mean_nll(model: &Transformer, tok: &Tokenizer, text: &str) -> f64 {
+    let ids = tok.encode_lines(text);
+    let ctx = model.config.max_seq;
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for chunk in ids.chunks(ctx) {
+        if chunk.len() < 2 {
+            continue;
+        }
+        let nll = model.sequence_nll(chunk);
+        total += nll.iter().sum::<f64>();
+        count += nll.len();
+    }
+    total / count.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::rng::Rng;
+
+    fn setup() -> (Transformer, Tokenizer) {
+        let tok = Tokenizer::from_text("abcdefghij .:");
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = tok.vocab_size();
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(1);
+        (Transformer::random(cfg, &mut rng), tok)
+    }
+
+    #[test]
+    fn random_model_ppl_near_uniform() {
+        let (m, tok) = setup();
+        let text = "abc def ghij abc def ghij abc def";
+        let ppl = perplexity(&m, &tok, text);
+        // random logits ⇒ ppl in the vicinity of vocab size
+        assert!(ppl.is_finite());
+        assert!(ppl > 2.0 && ppl < 100.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn ppl_consistent_with_mean_nll() {
+        let (m, tok) = setup();
+        let text = "abcd abcd abcd abcd";
+        let ppl = perplexity(&m, &tok, text);
+        let nll = mean_nll(&m, &tok, text);
+        assert!((ppl - nll.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_text_is_nan() {
+        let (m, tok) = setup();
+        assert!(perplexity(&m, &tok, "").is_nan());
+        // a single char still yields one transition (char -> EOS)
+        assert!(perplexity(&m, &tok, "a").is_finite());
+    }
+
+    #[test]
+    fn long_text_chunks() {
+        let (m, tok) = setup();
+        let text: String = std::iter::repeat("abc def. ").take(20).collect();
+        let ppl = perplexity(&m, &tok, &text);
+        assert!(ppl.is_finite());
+    }
+}

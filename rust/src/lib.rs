@@ -1,0 +1,75 @@
+//! # PTQTP — Post-Training Quantization to Trit-Planes for LLMs
+//!
+//! Full-system reproduction of the PTQTP paper as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the deployable coordinator: quantization
+//!   pipeline, serving engine (router / continuous batcher / KV-cache /
+//!   scheduler), native implementations of PTQTP and every baseline
+//!   quantizer, a complete inference transformer, evaluation suites, and
+//!   the benchmark harness that regenerates every table and figure in the
+//!   paper.
+//! * **L2 (python/compile)** — the JAX model + quantization graphs,
+//!   AOT-lowered to HLO text at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels (trit-plane matmul,
+//!   PTQTP iteration step) called from L2, verified against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs on the request path: `rust/src/runtime` loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and everything else
+//! is native Rust.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | dense f32 matrix/vector substrate |
+//! | [`rng`] | deterministic xoshiro256** PRNG substrate |
+//! | [`serialize`] | JSON + binary tensor/checkpoint formats |
+//! | [`cli`] | argument-parsing substrate |
+//! | [`ternary`] | trit-plane storage, bit-packing, multiply-free kernels |
+//! | [`quant`] | PTQTP (paper §3) + RTN/GPTQ/AWQ/PB-LLM/BiLLM/ARB-LLM baselines |
+//! | [`model`] | decoder-only transformer (RMSNorm/RoPE/GQA/SwiGLU) |
+//! | [`data`] | synthetic corpora, tasks, tokenizer |
+//! | [`eval`] | perplexity + task-accuracy evaluators |
+//! | [`runtime`] | PJRT engine for AOT HLO artifacts |
+//! | [`coordinator`] | serving engine: router, batcher, kv-cache, scheduler |
+//! | [`bench`] | timing harness + per-table/figure reproductions |
+//! | [`report`] | table rendering for paper-style output |
+//! | [`proptest`] | mini property-testing substrate |
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod proptest;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod serialize;
+pub mod tensor;
+pub mod ternary;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Paper constants (§3, §4.1) collected in one place.
+pub mod consts {
+    /// Default group size G (paper §3.2, "we set G=128").
+    pub const GROUP_SIZE: usize = 128;
+    /// Default maximum progressive-search iterations T_max (paper §4.1).
+    pub const T_MAX: usize = 50;
+    /// Default convergence tolerance ε (paper §4.1).
+    pub const EPSILON: f32 = 1e-4;
+    /// Initial ridge regularization λ₀ (paper Appendix B).
+    pub const LAMBDA_INIT: f32 = 1e-8;
+    /// Maximum ridge regularization λ_max (paper Eq. 3).
+    pub const LAMBDA_MAX: f32 = 1.0;
+    /// Condition-number threshold triggering λ adaptation (paper Eq. 3).
+    pub const KAPPA_THRESHOLD: f64 = 1e12;
+    /// Effective bits per weight for the 2-trit-plane format:
+    /// two planes at log2(3) ≈ 1.58 bits each, stored as 2-bit fields.
+    pub const PTQTP_BITS: f64 = 2.0 * 1.58;
+}

@@ -1,0 +1,237 @@
+//! `ptqtp` — the PTQTP system CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   gen-corpus   write the synthetic corpora + tokenizer (build path)
+//!   quantize     quantize a checkpoint with any method, save + report
+//!   eval         perplexity + task suites for a (quantized) checkpoint
+//!   serve        run the batching server on a workload and report
+//!   bench        regenerate a paper table/figure (--table N | --fig N)
+//!   runtime      smoke-run the AOT artifacts through PJRT
+
+use ptqtp::bench;
+use ptqtp::cli::{usage, Args, OptSpec};
+use ptqtp::coordinator::{SamplingParams, ServeEngine};
+use ptqtp::data::{CorpusDomain, CorpusGen, TaskSuite, Tokenizer};
+use ptqtp::eval;
+use ptqtp::model::Transformer;
+use ptqtp::quant::{self, QuantCtx};
+use ptqtp::runtime::{ArtifactManifest, PjrtEngine};
+
+const SUBCOMMANDS: &[&str] = &["gen-corpus", "quantize", "eval", "serve", "bench", "runtime"];
+
+fn main() {
+    let args = Args::from_env(SUBCOMMANDS);
+    let result = match args.subcommand.as_deref() {
+        Some("gen-corpus") => cmd_gen_corpus(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("runtime") => cmd_runtime(&args),
+        _ => {
+            print!("{}", help());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn help() -> String {
+    usage(
+        "ptqtp",
+        "Post-Training Quantization to Trit-Planes — full-system reproduction",
+        &[
+            ("gen-corpus", "generate synthetic corpora + tokenizer into --out"),
+            ("quantize", "quantize --model X.ptw --method ptqtp --out Y.ptw"),
+            ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]"),
+            ("serve", "serve --model X.ptw [--method ptqtp] --requests N"),
+            ("bench", "bench --table N | --fig N  (regenerates a paper exhibit)"),
+            ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
+        ],
+        &[
+            OptSpec { name: "out", help: "output path/dir", default: None },
+            OptSpec { name: "seed", help: "RNG seed", default: Some("0") },
+            OptSpec { name: "group-size", help: "quantization group size G", default: Some("128") },
+            OptSpec { name: "method", help: "fp16|rtn*|gptq*|awq*|pbllm|billm|arb|absmean|ptqtp", default: Some("ptqtp") },
+        ],
+    )
+}
+
+/// `gen-corpus --out data/ [--train-lines N] [--eval-sentences N]`
+fn cmd_gen_corpus(args: &Args) -> anyhow::Result<()> {
+    let out = args.str_or("out", "data");
+    let seed = args.u64_or("seed", 0);
+    let train_lines = args.usize_or("train-lines", 20_000);
+    let eval_sentences = args.usize_or("eval-sentences", 400);
+    std::fs::create_dir_all(out)?;
+
+    let mut gen = CorpusGen::new(seed);
+    let train = gen.training_mixture(train_lines);
+    std::fs::write(format!("{out}/corpus_train.txt"), &train)?;
+
+    // held-out eval texts per domain (disjoint RNG stream)
+    let mut eval_gen = CorpusGen::new(seed ^ 0xE7A1);
+    let mut all_text = train;
+    for domain in CorpusDomain::all() {
+        let text = eval_gen.domain_text(domain, eval_sentences);
+        std::fs::write(format!("{out}/eval_{}.txt", domain.name()), &text)?;
+        all_text.push_str(&text);
+    }
+    let tok = Tokenizer::from_text(&all_text);
+    tok.save(format!("{out}/tokenizer.json"))?;
+    println!(
+        "corpus written to {out}/ (train {} bytes, vocab {})",
+        std::fs::metadata(format!("{out}/corpus_train.txt"))?.len(),
+        tok.vocab_size()
+    );
+    Ok(())
+}
+
+/// Shared: load model, optionally quantize with --method.
+fn load_and_quantize(args: &Args) -> anyhow::Result<(Transformer, String)> {
+    let model_path = args.require("model")?;
+    let mut model = Transformer::load(model_path)?;
+    let method = args.str_or("method", "fp16").to_string();
+    let group = args.usize_or("group-size", 128);
+    if method != "fp16" && method != "fp" {
+        let q = quant::by_name(&method, group)?;
+        let t0 = std::time::Instant::now();
+        model.quantize_with(q.as_ref(), &QuantCtx::default());
+        eprintln!("quantized with {} in {:.2?}", q.name(), t0.elapsed());
+    }
+    Ok((model, method))
+}
+
+/// `quantize --model in.ptw --method ptqtp --out out.ptw`
+fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
+    let (model, method) = load_and_quantize(args)?;
+    let out = args.require("out")?;
+    model.save(out)?;
+    println!(
+        "saved {method}-quantized model to {out} ({} resident bytes)",
+        model.resident_bytes()
+    );
+    Ok(())
+}
+
+/// `eval --model X.ptw [--method M] [--data data/]`
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let (model, method) = load_and_quantize(args)?;
+    let data_dir = args.str_or("data", "data");
+    let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
+    println!("model: {} ({} params)", model.config.name, model.config.param_count());
+    println!("method: {method}");
+    for domain in CorpusDomain::all() {
+        let text = std::fs::read_to_string(format!("{data_dir}/eval_{}.txt", domain.name()))?;
+        let ppl = eval::perplexity(&model, &tok, &text);
+        println!("  ppl[{}] = {:.3}", domain.name(), ppl);
+    }
+    let suite = TaskSuite::standard(args.u64_or("seed", 1), 50, 60, 30);
+    let scores = eval::eval_suite(&model, &tok, &suite);
+    println!(
+        "  math = {:.1}%  cloze = {:.1}%  code = {:.1}%",
+        scores.math_acc * 100.0,
+        scores.cloze_acc * 100.0,
+        scores.code_acc * 100.0
+    );
+    Ok(())
+}
+
+/// `serve --model X.ptw [--method M] [--requests N] [--data data/]`
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let (model, method) = load_and_quantize(args)?;
+    let n_requests = args.usize_or("requests", 32);
+    let data_dir = args.str_or("data", "data");
+    let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
+    let mut engine = ServeEngine::new(model, Default::default());
+
+    // workload: math prompts (realistic mixed lengths)
+    let suite = TaskSuite::standard(args.u64_or("seed", 2), n_requests, 0, 0);
+    let t0 = std::time::Instant::now();
+    for (i, task) in suite.math.iter().enumerate() {
+        engine.submit(ptqtp::coordinator::Request::new(
+            i as u64,
+            tok.encode(&task.prompt),
+            SamplingParams {
+                max_new_tokens: 8,
+                ..Default::default()
+            },
+        ));
+    }
+    let responses = engine.run_to_completion();
+    let wall = t0.elapsed();
+    println!("served {} requests with method {method}", responses.len());
+    println!("{}", engine.metrics.render(wall));
+    Ok(())
+}
+
+/// `bench --table N | --fig N [--quick]`
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    if let Some(t) = args.get("table") {
+        return bench::run_table(t, quick, args);
+    }
+    if let Some(f) = args.get("fig") {
+        return bench::run_fig(f, quick, args);
+    }
+    if args.flag("all") {
+        for t in ["1", "2", "3", "4", "5", "6", "7", "8", "10", "11", "12"] {
+            bench::run_table(t, true, args)?;
+        }
+        for f in ["1", "3", "4", "5"] {
+            bench::run_fig(f, true, args)?;
+        }
+        return Ok(());
+    }
+    anyhow::bail!("bench requires --table N, --fig N, or --all")
+}
+
+/// `runtime --artifacts artifacts/` — PJRT smoke test of the AOT chain.
+fn cmd_runtime(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = ArtifactManifest::load(dir)?;
+    let mut engine = PjrtEngine::cpu()?;
+    manifest.load_all(&mut engine)?;
+    println!("platform: {}", engine.platform());
+    for spec in &manifest.specs {
+        println!("  loaded {} ({} inputs)", spec.name, spec.inputs.len());
+    }
+    // execute ternary_matmul with deterministic inputs
+    let spec = manifest.get("ternary_matmul")?;
+    let mut rng = ptqtp::rng::Rng::new(7);
+    let inputs: Vec<Vec<f32>> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let n: usize = shape.iter().product();
+            (0..n)
+                .map(|_| {
+                    if i == 1 || i == 2 {
+                        (rng.below(3) as f32) - 1.0 // trits
+                    } else {
+                        rng.normal()
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let borrowed: Vec<(&[usize], &[f32])> = spec
+        .inputs
+        .iter()
+        .zip(&inputs)
+        .map(|(s, d)| (s.as_slice(), d.as_slice()))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = engine.run_f32("ternary_matmul", &borrowed)?;
+    println!(
+        "ternary_matmul executed in {:.2?}: {} outputs, first = {:?}",
+        t0.elapsed(),
+        out.len(),
+        &out[0][..4.min(out[0].len())]
+    );
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Model configuration + the synthetic "family sizes" standing in for
+//! the paper's 0.6B–70B evaluation grid (see DESIGN.md §2).
+
+use crate::serialize::Json;
+
+/// Transformer hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// KV heads for GQA; must divide `n_heads`.
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+    /// Tie lm_head to tok_embed (saves params on tiny models).
+    pub tied_embeddings: bool,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let embed = self.vocab_size * d;
+        let head = if self.tied_embeddings { 0 } else { self.vocab_size * d };
+        let attn = d * d + 2 * d * self.kv_dim() + d * d; // wq wk wv wo
+        let mlp = 3 * d * self.d_ff; // gate, up, down
+        let norms = 2 * d;
+        embed + head + self.n_layers * (attn + mlp + norms) + d
+    }
+
+    /// The size grid used by the benches, mirroring the paper's model
+    /// families (scaled to this testbed: see DESIGN.md substitutions).
+    pub fn family(name: &str) -> anyhow::Result<ModelConfig> {
+        let base = |name: &str, d, l, h, kv, ff| ModelConfig {
+            name: name.to_string(),
+            vocab_size: 0, // filled from tokenizer at train/load time
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            n_kv_heads: kv,
+            d_ff: ff,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            norm_eps: 1e-5,
+            tied_embeddings: true,
+        };
+        Ok(match name {
+            // "0.6B-class" stand-in
+            "tiny" => base("tiny", 64, 2, 4, 2, 172),
+            // "1.7B-class" stand-in
+            "small" => base("small", 128, 4, 4, 2, 344),
+            // "4B-class" stand-in
+            "medium" => base("medium", 192, 6, 6, 3, 512),
+            // "8B-class" stand-in (used by ablations only by default)
+            "large" => base("large", 256, 8, 8, 4, 688),
+            other => anyhow::bail!("unknown model family '{other}'"),
+        })
+    }
+
+    pub fn families() -> Vec<&'static str> {
+        vec!["tiny", "small", "medium", "large"]
+    }
+
+    // ---------- json ----------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("vocab_size", self.vocab_size)
+            .set("d_model", self.d_model)
+            .set("n_layers", self.n_layers)
+            .set("n_heads", self.n_heads)
+            .set("n_kv_heads", self.n_kv_heads)
+            .set("d_ff", self.d_ff)
+            .set("max_seq", self.max_seq)
+            .set("rope_theta", self.rope_theta as f64)
+            .set("norm_eps", self.norm_eps as f64)
+            .set("tied_embeddings", self.tied_embeddings)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            vocab_size: j.req_usize("vocab_size")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            n_kv_heads: j.req_usize("n_kv_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            max_seq: j.req_usize("max_seq")?,
+            rope_theta: j.req_f64("rope_theta")? as f32,
+            norm_eps: j.req_f64("norm_eps")? as f32,
+            tied_embeddings: j
+                .get("tied_embeddings")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<ModelConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {:?}: {e}", path.as_ref()))?;
+        ModelConfig::from_json(&Json::parse(&text)?)
+    }
+
+    /// Validate internal consistency; call after construction/load.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.d_model % self.n_heads == 0, "d_model % n_heads != 0");
+        anyhow::ensure!(self.n_heads % self.n_kv_heads == 0, "n_heads % n_kv_heads != 0");
+        anyhow::ensure!(self.vocab_size > 0, "vocab_size unset");
+        anyhow::ensure!(self.max_seq > 0, "max_seq must be positive");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_resolve_and_scale() {
+        let mut prev = 0usize;
+        for f in ModelConfig::families() {
+            let mut c = ModelConfig::family(f).unwrap();
+            c.vocab_size = 96;
+            c.validate().unwrap();
+            let p = c.param_count();
+            assert!(p > prev, "{f} should be bigger than previous");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ModelConfig::family("small").unwrap();
+        c.vocab_size = 101;
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn gqa_dims() {
+        let mut c = ModelConfig::family("medium").unwrap();
+        c.vocab_size = 96;
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.kv_dim(), 96);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ModelConfig::family("tiny").unwrap();
+        c.vocab_size = 96;
+        c.n_kv_heads = 3; // 4 % 3 != 0
+        assert!(c.validate().is_err());
+        let mut c2 = ModelConfig::family("tiny").unwrap();
+        c2.vocab_size = 0;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_family_errors() {
+        assert!(ModelConfig::family("70b").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut c = ModelConfig::family("tiny").unwrap();
+        c.vocab_size = 77;
+        let p = std::env::temp_dir().join("ptqtp_cfg_test.json");
+        c.save(&p).unwrap();
+        assert_eq!(ModelConfig::load(&p).unwrap(), c);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,154 @@
+//! KV cache for one sequence: per layer, append-only K/V buffers.
+//!
+//! The serving engine pools these (see `coordinator::kv_cache` for the
+//! paged pool with ref-counting); this type is the per-sequence view
+//! the attention kernel consumes.
+
+/// Append-only cache for all layers of one sequence.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub kv_dim: usize,
+    pub max_seq: usize,
+    /// k[layer] is a flat (len · kv_dim) buffer.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, kv_dim: usize, max_seq: usize) -> KvCache {
+        KvCache {
+            n_layers,
+            kv_dim,
+            max_seq,
+            k: (0..n_layers).map(|_| Vec::with_capacity(max_seq * kv_dim)).collect(),
+            v: (0..n_layers).map(|_| Vec::with_capacity(max_seq * kv_dim)).collect(),
+            len: 0,
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.max_seq
+    }
+
+    /// Append one position's K/V for layer `layer`. All layers must be
+    /// appended exactly once per step, then [`KvCache::commit`] called.
+    pub fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.kv_dim);
+        debug_assert_eq!(v.len(), self.kv_dim);
+        assert!(!self.is_full(), "KV cache overflow (max_seq={})", self.max_seq);
+        self.k[layer].extend_from_slice(k);
+        self.v[layer].extend_from_slice(v);
+    }
+
+    /// Advance the position counter after all layers appended.
+    pub fn commit(&mut self) {
+        self.len += 1;
+        for layer in 0..self.n_layers {
+            debug_assert_eq!(self.k[layer].len(), self.len * self.kv_dim);
+            debug_assert_eq!(self.v[layer].len(), self.len * self.kv_dim);
+        }
+    }
+
+    /// K buffer for a layer: `len · kv_dim` values.
+    pub fn keys(&self, layer: usize) -> &[f32] {
+        &self.k[layer]
+    }
+
+    pub fn values(&self, layer: usize) -> &[f32] {
+        &self.v[layer]
+    }
+
+    /// Drop all cached state but keep capacity (sequence reuse).
+    pub fn reset(&mut self) {
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            buf.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Truncate to the first `keep` positions (speculative rollback).
+    pub fn truncate(&mut self, keep: usize) {
+        let keep = keep.min(self.len);
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            buf.truncate(keep * self.kv_dim);
+        }
+        self.len = keep;
+    }
+
+    /// Resident bytes.
+    pub fn bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|b| b.capacity() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_commit_cycle() {
+        let mut c = KvCache::new(2, 4, 8);
+        for step in 0..3 {
+            for layer in 0..2 {
+                let k = vec![step as f32; 4];
+                let v = vec![-(step as f32); 4];
+                c.append(layer, &k, &v);
+            }
+            c.commit();
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.keys(0).len(), 12);
+        assert_eq!(c.keys(1)[8], 2.0);
+        assert_eq!(c.values(1)[8], -2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 2, 1);
+        c.append(0, &[0.0, 0.0], &[0.0, 0.0]);
+        c.commit();
+        c.append(0, &[1.0, 1.0], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn truncate_rolls_back() {
+        let mut c = KvCache::new(1, 2, 8);
+        for i in 0..4 {
+            c.append(0, &[i as f32, 0.0], &[0.0, 0.0]);
+            c.commit();
+        }
+        c.truncate(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.keys(0).len(), 4);
+        // can append again
+        c.append(0, &[9.0, 9.0], &[0.0, 0.0]);
+        c.commit();
+        assert_eq!(c.keys(0)[4], 9.0);
+    }
+
+    #[test]
+    fn reset_reuses() {
+        let mut c = KvCache::new(1, 2, 4);
+        c.append(0, &[1.0, 1.0], &[1.0, 1.0]);
+        c.commit();
+        c.reset();
+        assert!(c.is_empty());
+        assert!(!c.is_full());
+    }
+}

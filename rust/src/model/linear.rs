@@ -1,0 +1,186 @@
+//! Quantization-aware linear layer: dense f32 or packed trit-planes.
+//!
+//! This is the switch point that makes the whole model servable in
+//! PTQTP form — `Transformer::quantize` swaps every [`QuantLinear`]'s
+//! backend in place, and the forward paths dispatch to the dense BLAS
+//! substrate or the multiply-free ternary kernels.
+
+use crate::quant::{QuantCtx, QuantRepr, Quantizer};
+use crate::tensor::{ops, Matrix};
+use crate::ternary::gemm::{gemm_decoded, gemm_packed};
+use crate::ternary::gemv::gemv_packed;
+use crate::ternary::linear::PackedTernaryLinear;
+
+/// Weight backend.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    Dense(Matrix),
+    Ternary(PackedTernaryLinear),
+}
+
+/// A linear layer `y = W·x` (no bias, LLaMA-style).
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    pub backend: Backend,
+    /// (out_features, in_features)
+    pub shape: (usize, usize),
+}
+
+impl QuantLinear {
+    pub fn dense(w: Matrix) -> QuantLinear {
+        let shape = (w.rows, w.cols);
+        QuantLinear {
+            backend: Backend::Dense(w),
+            shape,
+        }
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.shape.0
+    }
+
+    pub fn in_features(&self) -> usize {
+        self.shape.1
+    }
+
+    /// Decode-path forward: y = W·x for a single activation vector.
+    pub fn forward_vec(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.shape.1);
+        debug_assert_eq!(y.len(), self.shape.0);
+        match &self.backend {
+            Backend::Dense(w) => ops::matvec_into(w, x, y),
+            Backend::Ternary(t) => gemv_packed(t, x, y),
+        }
+    }
+
+    /// Prefill-path forward: Y = X·Wᵀ for a batch of rows.
+    pub fn forward_mat(&self, x: &Matrix) -> Matrix {
+        match &self.backend {
+            Backend::Dense(w) => ops::matmul(x, &w.transpose()),
+            Backend::Ternary(t) => {
+                if x.rows >= 8 {
+                    gemm_decoded(t, x)
+                } else {
+                    gemm_packed(t, x)
+                }
+            }
+        }
+    }
+
+    /// Dense view of the weights (reconstructs if ternary).
+    pub fn dense_weights(&self) -> Matrix {
+        match &self.backend {
+            Backend::Dense(w) => w.clone(),
+            Backend::Ternary(t) => t.unpack().reconstruct(),
+        }
+    }
+
+    /// Replace the backend by quantizing with `q`. PTQTP/absmean results
+    /// keep their structured form (served multiply-free); grid methods
+    /// store the dense reconstruction (fair: they'd be int-packed on
+    /// real HW, but numerics are identical).
+    ///
+    /// Calibration handling: activation-aware methods need calibration
+    /// whose width matches *this layer's* input dim; when the supplied
+    /// ctx doesn't match (one ctx is shared across heterogeneous
+    /// layers), a synthetic normal calibration of the right width is
+    /// substituted so GPTQ/AWQ still exercise their activation paths.
+    pub fn quantize_with(&mut self, q: &dyn Quantizer, ctx: &QuantCtx) {
+        let w = self.dense_weights();
+        let ctx_local;
+        let ctx = match &ctx.calib {
+            Some(c) if c.cols != self.shape.1 => {
+                let mut rng = crate::rng::Rng::new(ctx.seed ^ self.shape.1 as u64);
+                ctx_local = QuantCtx {
+                    calib: Some(Matrix::randn(c.rows.max(16), self.shape.1, 1.0, &mut rng)),
+                    seed: ctx.seed,
+                };
+                &ctx_local
+            }
+            _ => ctx,
+        };
+        let r = q.quantize(&w, ctx);
+        self.backend = match r.repr {
+            QuantRepr::TritPlanes(lin) | QuantRepr::SinglePlane(lin) => {
+                Backend::Ternary(lin.to_packed())
+            }
+            QuantRepr::Dense => Backend::Dense(r.w_hat),
+        };
+    }
+
+    /// Resident weight bytes in the current backend.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.backend {
+            Backend::Dense(w) => w.len() * 4,
+            Backend::Ternary(t) => t.resident_bytes(),
+        }
+    }
+
+    pub fn is_ternary(&self) -> bool {
+        matches!(self.backend, Backend::Ternary(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ptqtp::Ptqtp;
+    use crate::rng::Rng;
+
+    #[test]
+    fn dense_forward_matches_matvec() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(16, 32, 0.1, &mut rng);
+        let lin = QuantLinear::dense(w.clone());
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 16];
+        lin.forward_vec(&x, &mut y);
+        assert_eq!(y, ops::matvec(&w, &x));
+    }
+
+    #[test]
+    fn quantize_with_ptqtp_switches_backend() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::rand_heavy(16, 128, 0.03, &mut rng);
+        let mut lin = QuantLinear::dense(w.clone());
+        assert!(!lin.is_ternary());
+        lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
+        assert!(lin.is_ternary());
+        // forward close to dense forward of reconstruction
+        let x: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        let mut y_q = vec![0.0; 16];
+        lin.forward_vec(&x, &mut y_q);
+        let y_rec = ops::matvec(&lin.dense_weights(), &x);
+        for (a, b) in y_q.iter().zip(&y_rec) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn ternary_resident_smaller_than_dense() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(64, 256, 0.05, &mut rng);
+        let mut lin = QuantLinear::dense(w);
+        let before = lin.resident_bytes();
+        lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
+        let after = lin.resident_bytes();
+        assert!(after * 3 < before, "{after} vs {before}");
+    }
+
+    #[test]
+    fn mat_and_vec_paths_agree() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::rand_heavy(12, 64, 0.05, &mut rng);
+        let mut lin = QuantLinear::dense(w);
+        lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
+        let x = Matrix::randn(10, 64, 1.0, &mut rng);
+        let ym = lin.forward_mat(&x);
+        for r in 0..10 {
+            let mut yv = vec![0.0; 12];
+            lin.forward_vec(x.row(r), &mut yv);
+            for (a, b) in ym.row(r).iter().zip(&yv) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Decoder-only transformer for the Rust serving path.
+//!
+//! Architecture follows the LLaMA/Qwen recipe the paper evaluates on:
+//! RMSNorm (pre-norm), rotary position embeddings, grouped-query
+//! attention, SwiGLU MLP, tied or untied LM head. Every linear layer is
+//! a [`linear::QuantLinear`] that can run dense f32 **or** packed
+//! trit-planes, so an entire checkpoint can be PTQTP-quantized in place
+//! and served through the multiply-free kernels.
+//!
+//! Checkpoints are `.ptw` tensor files written by
+//! `python/compile/train.py` (trained in JAX) with a `model.json`
+//! config sidecar; [`transformer::Transformer::load`] reads both.
+
+pub mod attention;
+pub mod config;
+pub mod kv;
+pub mod linear;
+pub mod norm;
+pub mod rope;
+pub mod transformer;
+
+pub use config::ModelConfig;
+pub use kv::KvCache;
+pub use linear::QuantLinear;
+pub use transformer::Transformer;

@@ -1,0 +1,83 @@
+//! RMSNorm (Zhang & Sennrich) — the LLaMA-family pre-norm.
+
+/// RMS normalization with learned gain.
+#[derive(Clone, Debug)]
+pub struct RmsNorm {
+    pub weight: Vec<f32>,
+    pub eps: f32,
+}
+
+impl RmsNorm {
+    pub fn new(weight: Vec<f32>, eps: f32) -> RmsNorm {
+        RmsNorm { weight, eps }
+    }
+
+    pub fn ones(dim: usize, eps: f32) -> RmsNorm {
+        RmsNorm {
+            weight: vec![1.0; dim],
+            eps,
+        }
+    }
+
+    /// out[i] = w[i] · x[i] / rms(x)
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.weight.len());
+        let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+        let inv = 1.0 / (ms + self.eps as f64).sqrt() as f32;
+        for i in 0..x.len() {
+            out[i] = self.weight[i] * x[i] * inv;
+        }
+    }
+
+    /// In-place variant.
+    pub fn forward_inplace(&self, x: &mut [f32]) {
+        let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+        let inv = 1.0 / (ms + self.eps as f64).sqrt() as f32;
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = self.weight[i] * *v * inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_rms_output() {
+        let n = RmsNorm::ones(4, 1e-6);
+        let x = [2.0f32, -2.0, 2.0, -2.0];
+        let mut out = [0.0f32; 4];
+        n.forward(&x, &mut out);
+        let rms: f32 = (out.iter().map(|v| v * v).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gain_applied() {
+        let n = RmsNorm::new(vec![2.0, 0.0], 1e-6);
+        let mut out = [0.0f32; 2];
+        n.forward(&[1.0, 1.0], &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-5);
+        assert_eq!(out[1], 0.0);
+    }
+
+    #[test]
+    fn eps_guards_zero_input() {
+        let n = RmsNorm::ones(3, 1e-6);
+        let mut out = [0.0f32; 3];
+        n.forward(&[0.0, 0.0, 0.0], &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn inplace_matches() {
+        let n = RmsNorm::new(vec![1.5, -0.5, 2.0], 1e-5);
+        let x = [0.3f32, -1.2, 0.7];
+        let mut a = [0.0f32; 3];
+        n.forward(&x, &mut a);
+        let mut b = x;
+        n.forward_inplace(&mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,119 @@
+//! Rotary position embeddings (RoPE, Su et al.) with precomputed tables.
+
+/// Precomputed cos/sin tables for all positions up to `max_seq`.
+#[derive(Clone, Debug)]
+pub struct Rope {
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// cos[pos * half + i], half = head_dim/2
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl Rope {
+    pub fn new(head_dim: usize, max_seq: usize, theta: f32) -> Rope {
+        assert!(head_dim % 2 == 0, "RoPE needs even head_dim");
+        let half = head_dim / 2;
+        let mut cos = Vec::with_capacity(max_seq * half);
+        let mut sin = Vec::with_capacity(max_seq * half);
+        for pos in 0..max_seq {
+            for i in 0..half {
+                let freq = 1.0 / (theta as f64).powf(2.0 * i as f64 / head_dim as f64);
+                let angle = pos as f64 * freq;
+                cos.push(angle.cos() as f32);
+                sin.push(angle.sin() as f32);
+            }
+        }
+        Rope {
+            head_dim,
+            max_seq,
+            cos,
+            sin,
+        }
+    }
+
+    /// Rotate one head vector in place for position `pos`.
+    /// Pairs (x[2i], x[2i+1]) rotate by the i-th frequency.
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        debug_assert!(pos < self.max_seq, "position {pos} >= max_seq {}", self.max_seq);
+        let half = self.head_dim / 2;
+        let base = pos * half;
+        for i in 0..half {
+            let c = self.cos[base + i];
+            let s = self.sin[base + i];
+            let a = x[2 * i];
+            let b = x[2 * i + 1];
+            x[2 * i] = a * c - b * s;
+            x[2 * i + 1] = a * s + b * c;
+        }
+    }
+
+    /// Apply to a multi-head vector laid out `[head0 | head1 | ...]`.
+    pub fn apply_heads(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len() % self.head_dim, 0);
+        for head in x.chunks_mut(self.head_dim) {
+            self.apply(head, pos);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let rope = Rope::new(8, 16, 10_000.0);
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let orig = x.clone();
+        rope.apply(&mut x, 0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let rope = Rope::new(16, 64, 10_000.0);
+        let mut x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope.apply(&mut x, 37);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn relative_property_dot_depends_on_distance() {
+        // <R(p)q, R(p+k)v> should equal <R(0)q, R(k)v> (relative encoding)
+        let rope = Rope::new(8, 64, 10_000.0);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 + 1.0).cos()).collect();
+        let v: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).sin()).collect();
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        for k in [1usize, 5] {
+            let mut q0 = q.clone();
+            let mut vk = v.clone();
+            rope.apply(&mut q0, 0);
+            rope.apply(&mut vk, k);
+            let d_ref = dot(&q0, &vk);
+            for p in [3usize, 20] {
+                let mut qp = q.clone();
+                let mut vpk = v.clone();
+                rope.apply(&mut qp, p);
+                rope.apply(&mut vpk, p + k);
+                assert!((dot(&qp, &vpk) - d_ref).abs() < 1e-3, "p={p} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_heads_rotates_each() {
+        let rope = Rope::new(4, 8, 10_000.0);
+        let mut x = vec![1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]; // 2 heads
+        rope.apply_heads(&mut x, 3);
+        // both heads transformed identically
+        assert_eq!(x[0], x[4]);
+        assert_eq!(x[1], x[5]);
+        assert!(x[0] != 1.0);
+    }
+}

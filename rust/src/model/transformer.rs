@@ -1,0 +1,441 @@
+//! The full decoder-only transformer: embedding → N blocks → norm →
+//! LM head, with checkpoint IO and whole-model quantization.
+
+use super::attention::Attention;
+use super::config::ModelConfig;
+use super::kv::KvCache;
+use super::linear::QuantLinear;
+use super::norm::RmsNorm;
+use super::rope::Rope;
+use crate::quant::{QuantCtx, Quantizer};
+use crate::serialize::{TensorFile, TensorEntry};
+use crate::tensor::Matrix;
+
+/// One transformer block: pre-norm attention + pre-norm SwiGLU MLP.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub attn_norm: RmsNorm,
+    pub attn: Attention,
+    pub mlp_norm: RmsNorm,
+    pub w_gate: QuantLinear,
+    pub w_up: QuantLinear,
+    pub w_down: QuantLinear,
+}
+
+impl Block {
+    /// SwiGLU MLP: down( silu(gate(x)) * up(x) ).
+    fn mlp(&self, x: &[f32], out: &mut [f32]) {
+        let ff = self.w_gate.out_features();
+        let mut g = vec![0.0f32; ff];
+        let mut u = vec![0.0f32; ff];
+        self.w_gate.forward_vec(x, &mut g);
+        self.w_up.forward_vec(x, &mut u);
+        for i in 0..ff {
+            let s = g[i];
+            let silu = s / (1.0 + (-s).exp());
+            g[i] = silu * u[i];
+        }
+        self.w_down.forward_vec(&g, out);
+    }
+
+    /// Decode one token through this block (residual stream in `x`).
+    pub fn decode(
+        &self,
+        x: &mut [f32],
+        rope: &Rope,
+        cache: &mut KvCache,
+        layer: usize,
+        pos: usize,
+    ) {
+        let d = x.len();
+        let mut normed = vec![0.0f32; d];
+        let mut delta = vec![0.0f32; d];
+        self.attn_norm.forward(x, &mut normed);
+        self.attn.decode(&normed, rope, cache, layer, pos, &mut delta);
+        for i in 0..d {
+            x[i] += delta[i];
+        }
+        self.mlp_norm.forward(x, &mut normed);
+        self.mlp(&normed, &mut delta);
+        for i in 0..d {
+            x[i] += delta[i];
+        }
+    }
+}
+
+/// The full model.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub config: ModelConfig,
+    pub tok_embed: Matrix, // vocab × d (kept dense: lookup table)
+    pub blocks: Vec<Block>,
+    pub final_norm: RmsNorm,
+    /// None when tied to `tok_embed`.
+    pub lm_head: Option<QuantLinear>,
+    pub rope: Rope,
+}
+
+impl Transformer {
+    /// Fresh KV cache sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(
+            self.config.n_layers,
+            self.config.kv_dim(),
+            self.config.max_seq,
+        )
+    }
+
+    /// Decode one token id at position `cache.len()`; returns logits.
+    /// The caller owns the cache (enables continuous batching upstream).
+    pub fn decode_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        let pos = cache.len();
+        let d = self.config.d_model;
+        let mut x = self.tok_embed.row(token as usize).to_vec();
+        debug_assert_eq!(x.len(), d);
+        for (layer, block) in self.blocks.iter().enumerate() {
+            block.decode(&mut x, &self.rope, cache, layer, pos);
+        }
+        cache.commit();
+        self.final_norm.forward_inplace(&mut x);
+        self.logits(&x)
+    }
+
+    fn logits(&self, h: &[f32]) -> Vec<f32> {
+        match &self.lm_head {
+            Some(head) => {
+                let mut out = vec![0.0f32; self.config.vocab_size];
+                head.forward_vec(h, &mut out);
+                out
+            }
+            None => {
+                // tied: logits = E·h
+                let mut out = vec![0.0f32; self.config.vocab_size];
+                crate::tensor::ops::matvec_into(&self.tok_embed, h, &mut out);
+                out
+            }
+        }
+    }
+
+    /// Teacher-forced negative log-likelihoods: nll[i] = −log p(t[i+1] | t[..=i]).
+    pub fn sequence_nll(&self, tokens: &[u32]) -> Vec<f64> {
+        let mut cache = self.new_cache();
+        let mut nll = Vec::with_capacity(tokens.len().saturating_sub(1));
+        for i in 0..tokens.len().saturating_sub(1) {
+            let logits = self.decode_step(tokens[i], &mut cache);
+            let logp = crate::tensor::ops::log_softmax(&logits);
+            nll.push(-(logp[tokens[i + 1] as usize] as f64));
+        }
+        nll
+    }
+
+    /// Greedy generation from a prompt; returns generated ids (prompt
+    /// excluded). Stops at `stop_token` or `max_new`.
+    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize, stop_token: Option<u32>) -> Vec<u32> {
+        let mut cache = self.new_cache();
+        let mut logits = vec![0.0f32; self.config.vocab_size];
+        for &t in prompt {
+            logits = self.decode_step(t, &mut cache);
+            if cache.is_full() {
+                return Vec::new();
+            }
+        }
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let next = argmax(&logits) as u32;
+            if Some(next) == stop_token {
+                break;
+            }
+            out.push(next);
+            if cache.is_full() {
+                break;
+            }
+            logits = self.decode_step(next, &mut cache);
+        }
+        out
+    }
+
+    /// Quantize every linear layer in place with `q`. Embeddings and
+    /// norms stay FP (the paper quantizes "all linear layers").
+    pub fn quantize_with(&mut self, q: &dyn Quantizer, ctx: &QuantCtx) {
+        for b in self.blocks.iter_mut() {
+            b.attn.wq.quantize_with(q, ctx);
+            b.attn.wk.quantize_with(q, ctx);
+            b.attn.wv.quantize_with(q, ctx);
+            b.attn.wo.quantize_with(q, ctx);
+            b.w_gate.quantize_with(q, ctx);
+            b.w_up.quantize_with(q, ctx);
+            b.w_down.quantize_with(q, ctx);
+        }
+        if let Some(head) = self.lm_head.as_mut() {
+            head.quantize_with(q, ctx);
+        }
+    }
+
+    /// All quantizable weight matrices (name, reference) — used by the
+    /// quantization pipeline scheduler and the benches.
+    pub fn linear_layers(&self) -> Vec<(String, &QuantLinear)> {
+        let mut out = Vec::new();
+        for (i, b) in self.blocks.iter().enumerate() {
+            out.push((format!("L{i}.wq"), &b.attn.wq));
+            out.push((format!("L{i}.wk"), &b.attn.wk));
+            out.push((format!("L{i}.wv"), &b.attn.wv));
+            out.push((format!("L{i}.wo"), &b.attn.wo));
+            out.push((format!("L{i}.w_gate"), &b.w_gate));
+            out.push((format!("L{i}.w_up"), &b.w_up));
+            out.push((format!("L{i}.w_down"), &b.w_down));
+        }
+        if let Some(h) = &self.lm_head {
+            out.push(("lm_head".into(), h));
+        }
+        out
+    }
+
+    /// Total resident weight bytes (embeddings + linears).
+    pub fn resident_bytes(&self) -> usize {
+        let mut total = self.tok_embed.len() * 4;
+        for (_, l) in self.linear_layers() {
+            total += l.resident_bytes();
+        }
+        total
+    }
+
+    // ---------------- init & io ----------------
+
+    /// Random init (for tests and the synthetic-weight benches).
+    pub fn random(config: ModelConfig, rng: &mut crate::rng::Rng) -> Transformer {
+        config.validate().expect("invalid config");
+        let d = config.d_model;
+        let std = 0.6 / (d as f32).sqrt();
+        let blocks = (0..config.n_layers)
+            .map(|_| Block {
+                attn_norm: RmsNorm::ones(d, config.norm_eps),
+                attn: Attention {
+                    wq: QuantLinear::dense(Matrix::rand_heavy(d, d, std, rng)),
+                    wk: QuantLinear::dense(Matrix::rand_heavy(config.kv_dim(), d, std, rng)),
+                    wv: QuantLinear::dense(Matrix::rand_heavy(config.kv_dim(), d, std, rng)),
+                    wo: QuantLinear::dense(Matrix::rand_heavy(d, d, std, rng)),
+                    n_heads: config.n_heads,
+                    n_kv_heads: config.n_kv_heads,
+                    head_dim: config.head_dim(),
+                },
+                mlp_norm: RmsNorm::ones(d, config.norm_eps),
+                w_gate: QuantLinear::dense(Matrix::rand_heavy(config.d_ff, d, std, rng)),
+                w_up: QuantLinear::dense(Matrix::rand_heavy(config.d_ff, d, std, rng)),
+                w_down: QuantLinear::dense(Matrix::rand_heavy(d, config.d_ff, std, rng)),
+            })
+            .collect();
+        Transformer {
+            rope: Rope::new(config.head_dim(), config.max_seq, config.rope_theta),
+            tok_embed: Matrix::randn(config.vocab_size, d, 0.02, rng),
+            blocks,
+            final_norm: RmsNorm::ones(d, config.norm_eps),
+            lm_head: None,
+            config,
+        }
+    }
+
+    /// Save checkpoint (`.ptw`) + config (`.json`, same stem).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        let mut tf = TensorFile::new();
+        tf.insert_matrix("tok_embed", &self.tok_embed);
+        tf.insert(
+            "final_norm",
+            TensorEntry::from_f32(vec![1, self.config.d_model], &self.final_norm.weight),
+        );
+        for (i, b) in self.blocks.iter().enumerate() {
+            tf.insert(
+                &format!("L{i}.attn_norm"),
+                TensorEntry::from_f32(vec![1, self.config.d_model], &b.attn_norm.weight),
+            );
+            tf.insert(
+                &format!("L{i}.mlp_norm"),
+                TensorEntry::from_f32(vec![1, self.config.d_model], &b.mlp_norm.weight),
+            );
+            tf.insert_matrix(&format!("L{i}.wq"), &b.attn.wq.dense_weights());
+            tf.insert_matrix(&format!("L{i}.wk"), &b.attn.wk.dense_weights());
+            tf.insert_matrix(&format!("L{i}.wv"), &b.attn.wv.dense_weights());
+            tf.insert_matrix(&format!("L{i}.wo"), &b.attn.wo.dense_weights());
+            tf.insert_matrix(&format!("L{i}.w_gate"), &b.w_gate.dense_weights());
+            tf.insert_matrix(&format!("L{i}.w_up"), &b.w_up.dense_weights());
+            tf.insert_matrix(&format!("L{i}.w_down"), &b.w_down.dense_weights());
+        }
+        if let Some(h) = &self.lm_head {
+            tf.insert_matrix("lm_head", &h.dense_weights());
+        }
+        tf.save(path)?;
+        self.config.save(path.with_extension("json"))?;
+        Ok(())
+    }
+
+    /// Load checkpoint + config sidecar.
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Transformer> {
+        let path = path.as_ref();
+        let config = ModelConfig::load(path.with_extension("json"))?;
+        config.validate()?;
+        let tf = TensorFile::load(path)?;
+        let d = config.d_model;
+        let mut blocks = Vec::with_capacity(config.n_layers);
+        for i in 0..config.n_layers {
+            blocks.push(Block {
+                attn_norm: RmsNorm::new(tf.vec_f32(&format!("L{i}.attn_norm"))?, config.norm_eps),
+                mlp_norm: RmsNorm::new(tf.vec_f32(&format!("L{i}.mlp_norm"))?, config.norm_eps),
+                attn: Attention {
+                    wq: QuantLinear::dense(tf.matrix(&format!("L{i}.wq"))?),
+                    wk: QuantLinear::dense(tf.matrix(&format!("L{i}.wk"))?),
+                    wv: QuantLinear::dense(tf.matrix(&format!("L{i}.wv"))?),
+                    wo: QuantLinear::dense(tf.matrix(&format!("L{i}.wo"))?),
+                    n_heads: config.n_heads,
+                    n_kv_heads: config.n_kv_heads,
+                    head_dim: config.head_dim(),
+                },
+                w_gate: QuantLinear::dense(tf.matrix(&format!("L{i}.w_gate"))?),
+                w_up: QuantLinear::dense(tf.matrix(&format!("L{i}.w_up"))?),
+                w_down: QuantLinear::dense(tf.matrix(&format!("L{i}.w_down"))?),
+            });
+        }
+        let tok_embed = tf.matrix("tok_embed")?;
+        anyhow::ensure!(
+            tok_embed.rows == config.vocab_size && tok_embed.cols == d,
+            "tok_embed shape {:?} vs config ({}, {d})",
+            (tok_embed.rows, tok_embed.cols),
+            config.vocab_size
+        );
+        let lm_head = if tf.tensors.contains_key("lm_head") {
+            Some(QuantLinear::dense(tf.matrix("lm_head")?))
+        } else {
+            None
+        };
+        Ok(Transformer {
+            rope: Rope::new(config.head_dim(), config.max_seq, config.rope_theta),
+            tok_embed,
+            blocks,
+            final_norm: RmsNorm::new(tf.vec_f32("final_norm")?, config.norm_eps),
+            lm_head,
+            config,
+        })
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ptqtp::Ptqtp;
+    use crate::rng::Rng;
+
+    fn tiny_model(seed: u64) -> Transformer {
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(seed);
+        Transformer::random(cfg, &mut rng)
+    }
+
+    #[test]
+    fn decode_step_produces_logits() {
+        let m = tiny_model(1);
+        let mut cache = m.new_cache();
+        let logits = m.decode_step(3, &mut cache);
+        assert_eq!(logits.len(), 32);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn decode_deterministic() {
+        let m = tiny_model(2);
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        for t in [1u32, 5, 9] {
+            let a = m.decode_step(t, &mut c1);
+            let b = m.decode_step(t, &mut c2);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn context_changes_prediction() {
+        let m = tiny_model(3);
+        let mut c1 = m.new_cache();
+        m.decode_step(1, &mut c1);
+        let with_ctx = m.decode_step(7, &mut c1);
+        let mut c2 = m.new_cache();
+        m.decode_step(2, &mut c2);
+        let with_other = m.decode_step(7, &mut c2);
+        assert!(with_ctx != with_other, "attention must see history");
+    }
+
+    #[test]
+    fn sequence_nll_length() {
+        let m = tiny_model(4);
+        let nll = m.sequence_nll(&[1, 2, 3, 4, 5]);
+        assert_eq!(nll.len(), 4);
+        assert!(nll.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn generate_respects_budgets() {
+        let m = tiny_model(5);
+        let out = m.generate_greedy(&[1, 2], 6, None);
+        assert!(out.len() <= 6);
+        for &t in &out {
+            assert!((t as usize) < 32);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_exact_logits() {
+        let m = tiny_model(6);
+        let dir = std::env::temp_dir().join("ptqtp_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ptw");
+        m.save(&path).unwrap();
+        let m2 = Transformer::load(&path).unwrap();
+        let mut c1 = m.new_cache();
+        let mut c2 = m2.new_cache();
+        for t in [0u32, 3, 7] {
+            assert_eq!(m.decode_step(t, &mut c1), m2.decode_step(t, &mut c2));
+        }
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(dir.join("m.json")).ok();
+    }
+
+    #[test]
+    fn quantize_whole_model_stays_close() {
+        let m = tiny_model(7);
+        let mut mq = m.clone();
+        mq.quantize_with(&Ptqtp::default(), &crate::quant::QuantCtx::default());
+        assert!(mq.blocks[0].attn.wq.is_ternary());
+        // logits correlated with FP model (tiny random model: loose check)
+        let mut c1 = m.new_cache();
+        let mut c2 = mq.new_cache();
+        let a = m.decode_step(1, &mut c1);
+        let b = mq.decode_step(1, &mut c2);
+        let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let cos = dot / (na * nb).max(1e-9);
+        assert!(cos > 0.8, "cosine {cos}");
+        // memory shrank
+        assert!(mq.resident_bytes() < m.resident_bytes());
+    }
+
+    #[test]
+    fn layer_listing_complete() {
+        let m = tiny_model(8);
+        let layers = m.linear_layers();
+        assert_eq!(layers.len(), m.config.n_layers * 7);
+    }
+}

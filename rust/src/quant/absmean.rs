@@ -1,0 +1,140 @@
+//! Single-plane ternary "absmean" quantizer — the BitNet-b1.58
+//! projection (Ma et al., 2024) applied post-training.
+//!
+//! Serves two roles in the reproduction: (a) the 1-plane ablation that
+//! shows why PTQTP's second plane matters, and (b) the projection the
+//! JAX QAT trainer (`python/compile/train.py`) uses for the Table 3
+//! BitNet comparator, so the two sides share exact semantics.
+//!
+//! Per group: `γ = mean|w|`, `T = clamp(round(w/γ), -1, 1)`, `Ŵ = γ·T`,
+//! with a closed-form least-squares rescale of γ afterwards (keeps the
+//! comparison honest — it strictly helps the baseline).
+
+use super::{QuantCtx, QuantRepr, QuantResult, Quantizer};
+use crate::tensor::Matrix;
+use crate::ternary::TernaryLinear;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AbsMean {
+    pub group: usize,
+}
+
+impl AbsMean {
+    pub fn new(group: usize) -> AbsMean {
+        AbsMean { group }
+    }
+}
+
+impl Quantizer for AbsMean {
+    fn name(&self) -> String {
+        "AbsMean-1.58".into()
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        1.58
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &QuantCtx) -> QuantResult {
+        let group = if self.group == 0 { w.cols } else { self.group };
+        let mut lin = TernaryLinear::new(w.rows, w.cols, group);
+        let gpr = lin.groups_per_row();
+        for r in 0..w.rows {
+            for g in 0..gpr {
+                let (s, e) = lin.group_span(g);
+                let wg = &w.row(r)[s..e];
+                let gamma = wg.iter().map(|x| x.abs()).sum::<f32>() / (e - s).max(1) as f32;
+                let gi = r * gpr + g;
+                if gamma <= 0.0 {
+                    lin.alpha1[gi] = 0.0;
+                    continue;
+                }
+                // project
+                let base = r * w.cols;
+                let mut tt = 0i64; // Σ t²
+                let mut tw = 0.0f64; // Σ t·w
+                for (j, &x) in wg.iter().enumerate() {
+                    let t = (x / gamma).round().clamp(-1.0, 1.0) as i8;
+                    lin.t1.trits[base + s + j] = t;
+                    tt += (t as i64) * (t as i64);
+                    tw += t as f64 * x as f64;
+                }
+                // optimal rescale: argmin_γ Σ(w − γt)² = Σtw / Σt²
+                lin.alpha1[gi] = if tt > 0 { (tw / tt as f64) as f32 } else { 0.0 };
+                lin.alpha2[gi] = 0.0;
+            }
+        }
+        // plane 2 stays zero: reconstruction is α1·T1
+        QuantResult {
+            w_hat: lin.reconstruct(),
+            bits_per_weight: 2.0 + 16.0 / group as f64,
+            memory_bytes: crate::ternary::pack::bytes_2bit(w.len()) + lin.alpha1.len() * 2,
+            repr: QuantRepr::SinglePlane(lin),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn reconstruction_bounded_error_on_gaussian() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(8, 256, 0.02, &mut rng);
+        let q = AbsMean::new(64).quantize(&w, &QuantCtx::default());
+        let rel = w.rel_err(&q.w_hat);
+        // single ternary plane on gaussian: ~0.4–0.6 relative error
+        assert!(rel < 0.7, "rel {rel}");
+        assert!(rel > 0.1, "suspiciously good for 1 plane: {rel}");
+    }
+
+    #[test]
+    fn plane_values_ternary() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::rand_heavy(4, 64, 0.05, &mut rng);
+        let q = AbsMean::new(32).quantize(&w, &QuantCtx::default());
+        if let QuantRepr::SinglePlane(lin) = &q.repr {
+            assert!(lin.t1.trits.iter().all(|&t| (-1..=1).contains(&t)));
+            assert!(lin.t2.trits.iter().all(|&t| t == 0));
+        } else {
+            panic!("expected single plane repr");
+        }
+    }
+
+    #[test]
+    fn rescale_is_least_squares_optimal() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(1, 64, 0.1, &mut rng);
+        let q = AbsMean::new(64).quantize(&w, &QuantCtx::default());
+        if let QuantRepr::SinglePlane(lin) = &q.repr {
+            let a = lin.alpha1[0];
+            // perturbing α must not reduce error
+            let err = |alpha: f32| -> f64 {
+                w.row(0)
+                    .iter()
+                    .zip(lin.t1.row(0))
+                    .map(|(&x, &t)| ((x - alpha * t as f32) as f64).powi(2))
+                    .sum()
+            };
+            assert!(err(a) <= err(a * 1.01) + 1e-12);
+            assert!(err(a) <= err(a * 0.99) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_input() {
+        let w = Matrix::zeros(2, 32);
+        let q = AbsMean::new(16).quantize(&w, &QuantCtx::default());
+        assert!(q.w_hat.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn constant_sign_input_saturates() {
+        let w = Matrix::from_vec(1, 4, vec![0.5, 0.5, 0.5, 0.5]);
+        let q = AbsMean::new(4).quantize(&w, &QuantCtx::default());
+        for &x in &q.w_hat.data {
+            assert!((x - 0.5).abs() < 1e-6);
+        }
+    }
+}

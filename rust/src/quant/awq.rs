@@ -1,0 +1,193 @@
+//! AWQ (Lin et al., 2024) — activation-aware weight quantization.
+//!
+//! Observation: quantization error on the channels that see large
+//! activations hurts most. AWQ scales each input channel by
+//! `s_j = mean|x_j|^α` before RTN grid quantization and folds `1/s`
+//! back after, grid-searching `α ∈ [0,1]` against the calibration
+//! output MSE. No retraining, no mixed precision.
+
+use super::{grid_memory_bytes, grid_quant_slice, QuantCtx, QuantRepr, QuantResult, Quantizer};
+use crate::tensor::ops::matmul;
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Awq {
+    pub bits: u32,
+    pub group: usize,
+    /// Number of α grid points in [0, 1].
+    pub grid_points: usize,
+}
+
+impl Awq {
+    pub fn new(bits: u32, group: usize) -> Awq {
+        Awq {
+            bits,
+            group,
+            grid_points: 11,
+        }
+    }
+
+    /// RTN-quantize a scaled copy of `w` (columns pre-multiplied by `s`),
+    /// then fold the scales back.
+    fn quant_scaled(&self, w: &Matrix, s: &[f32], group: usize) -> Matrix {
+        let mut scaled = w.clone();
+        for r in 0..w.rows {
+            let row = scaled.row_mut(r);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= s[j];
+            }
+        }
+        for r in 0..w.rows {
+            let row = scaled.row_mut(r);
+            for chunk in row.chunks_mut(group) {
+                grid_quant_slice(chunk, self.bits);
+            }
+        }
+        for r in 0..w.rows {
+            let row = scaled.row_mut(r);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x /= s[j];
+            }
+        }
+        scaled
+    }
+}
+
+impl Quantizer for Awq {
+    fn name(&self) -> String {
+        format!("AWQ-b{}", self.bits)
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &QuantCtx) -> QuantResult {
+        let group = if self.group == 0 { w.cols } else { self.group };
+        let d = w.cols;
+
+        let result = match ctx.calib.as_ref() {
+            None => self.quant_scaled(w, &vec![1.0; d], group), // plain RTN
+            Some(x) => {
+                assert_eq!(x.cols, d, "calibration dim mismatch");
+                // per-channel mean |activation|
+                let mut amean = vec![0.0f32; d];
+                for r in 0..x.rows {
+                    for (j, &v) in x.row(r).iter().enumerate() {
+                        amean[j] += v.abs();
+                    }
+                }
+                let inv_n = 1.0 / x.rows.max(1) as f32;
+                for a in amean.iter_mut() {
+                    *a = (*a * inv_n).max(1e-8);
+                }
+                // grid search α
+                let y_ref = matmul(x, &w.transpose());
+                let mut best: Option<(f64, Matrix)> = None;
+                for gi in 0..self.grid_points {
+                    let alpha = gi as f32 / (self.grid_points - 1).max(1) as f32;
+                    let s: Vec<f32> = amean.iter().map(|&a| a.powf(alpha).max(1e-6)).collect();
+                    // normalize scales to mean 1 for numerical sanity
+                    let mean_s: f32 = s.iter().sum::<f32>() / d as f32;
+                    let s: Vec<f32> = s.iter().map(|&v| v / mean_s).collect();
+                    let w_hat = self.quant_scaled(w, &s, group);
+                    let y = matmul(x, &w_hat.transpose());
+                    let err: f64 = y
+                        .data
+                        .iter()
+                        .zip(&y_ref.data)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum();
+                    if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+                        best = Some((err, w_hat));
+                    }
+                }
+                best.unwrap().1
+            }
+        };
+
+        QuantResult {
+            w_hat: result,
+            repr: QuantRepr::Dense,
+            // weights + group grids + per-channel fp16 scale vector
+            bits_per_weight: self.bits as f64 + 32.0 / group as f64 + 16.0 / w.rows as f64,
+            memory_bytes: grid_memory_bytes(w.rows, w.cols, self.bits, group) + d * 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::rng::Rng;
+
+    /// Calibration with strongly non-uniform channel magnitudes — the
+    /// regime AWQ is designed for.
+    fn skewed_calib(samples: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(samples, d, |_, j| {
+            let channel_scale = 1.0 + 9.0 * (j as f32 / d as f32);
+            rng.normal() * channel_scale
+        })
+    }
+
+    fn output_err(w: &Matrix, w_hat: &Matrix, x: &Matrix) -> f64 {
+        let ya = matmul(x, &w.transpose());
+        let yb = matmul(x, &w_hat.transpose());
+        ya.data
+            .iter()
+            .zip(&yb.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    #[test]
+    fn beats_rtn_on_skewed_activations() {
+        let mut rng = Rng::new(1);
+        let d = 64;
+        let w = Matrix::rand_heavy(16, d, 0.05, &mut rng);
+        let x = skewed_calib(64, d, 2);
+        let a = Awq::new(3, 32).quantize(&w, &QuantCtx::with_calib(x.clone()));
+        let r = Rtn::new(3, 32).quantize(&w, &QuantCtx::default());
+        let ea = output_err(&w, &a.w_hat, &x);
+        let er = output_err(&w, &r.w_hat, &x);
+        assert!(ea < er, "awq {ea} !< rtn {er}");
+    }
+
+    #[test]
+    fn no_calib_degenerates_to_rtn() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(8, 32, 0.05, &mut rng);
+        let a = Awq::new(4, 16).quantize(&w, &QuantCtx::default());
+        let r = Rtn::new(4, 16).quantize(&w, &QuantCtx::default());
+        for (x, y) in a.w_hat.data.iter().zip(&r.w_hat.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn two_bit_awq_collapses() {
+        // Table 1 shape: AWQ-2bit perplexity explodes
+        let mut rng = Rng::new(4);
+        let d = 64;
+        let w = Matrix::rand_heavy(16, d, 0.05, &mut rng);
+        let x = skewed_calib(64, d, 5);
+        let ctx = QuantCtx::with_calib(x);
+        let a2 = Awq::new(2, 32).quantize(&w, &ctx);
+        let a4 = Awq::new(4, 32).quantize(&w, &ctx);
+        assert!(w.sq_err(&a2.w_hat) > 5.0 * w.sq_err(&a4.w_hat));
+    }
+
+    #[test]
+    fn alpha_search_explores_grid() {
+        // with a single grid point the search must still return something
+        let mut rng = Rng::new(6);
+        let w = Matrix::randn(4, 32, 0.05, &mut rng);
+        let x = skewed_calib(16, 32, 7);
+        let mut awq = Awq::new(3, 16);
+        awq.grid_points = 1;
+        let q = awq.quantize(&w, &QuantCtx::with_calib(x));
+        assert_eq!(q.w_hat.rows, 4);
+    }
+}

@@ -1,0 +1,207 @@
+//! BiLLM (Huang et al., 2024) — structured salient/non-salient split
+//! with residual binarization.
+//!
+//! Salient weights (top fraction by second-order saliency `w²·h_j`,
+//! where `h_j` is the Hessian diagonal from calibration, or `w²` without
+//! calibration) receive **residual binarization** — two binary planes,
+//! `α₁·sign(w)` then `α₂·sign(residual)`. Non-salient weights follow the
+//! "bell-shaped distribution splitting": each group's remainder is split
+//! at an optimal magnitude break into two sub-sets, each binarized with
+//! its own scale. Effective bits ≈ 1.06–1.1 (1 bit + masks + scales).
+
+use super::{QuantCtx, QuantRepr, QuantResult, Quantizer};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BiLlm {
+    pub group: usize,
+    pub salient_frac: f64,
+}
+
+impl BiLlm {
+    pub fn new(group: usize) -> BiLlm {
+        BiLlm {
+            group,
+            salient_frac: 0.05,
+        }
+    }
+}
+
+/// Least-squares binarization of an index subset: α = mean|w|, b=sign.
+/// Writes `α·sign(w)` into `out` and returns the squared error.
+fn binarize_subset(w: &[f32], idx: &[usize], out: &mut [f32]) -> f64 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    let alpha = idx.iter().map(|&j| w[j].abs()).sum::<f32>() / idx.len() as f32;
+    let mut err = 0.0f64;
+    for &j in idx {
+        let v = alpha * w[j].signum();
+        out[j] = v;
+        err += ((w[j] - v) as f64).powi(2);
+    }
+    err
+}
+
+/// Residual (second-order) binarization of a subset.
+fn residual_binarize_subset(w: &[f32], idx: &[usize], out: &mut [f32]) {
+    if idx.is_empty() {
+        return;
+    }
+    let a1 = idx.iter().map(|&j| w[j].abs()).sum::<f32>() / idx.len() as f32;
+    let a2 = idx
+        .iter()
+        .map(|&j| (w[j] - a1 * w[j].signum()).abs())
+        .sum::<f32>()
+        / idx.len() as f32;
+    for &j in idx {
+        let b1 = w[j].signum();
+        let r = w[j] - a1 * b1;
+        let b2 = if r < 0.0 { -1.0 } else { 1.0 };
+        out[j] = a1 * b1 + a2 * b2;
+    }
+}
+
+impl Quantizer for BiLlm {
+    fn name(&self) -> String {
+        "BiLLM-b1.06".into()
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        1.06
+    }
+
+    fn quantize(&self, w: &Matrix, ctx: &QuantCtx) -> QuantResult {
+        let group = if self.group == 0 { w.cols } else { self.group };
+        // Hessian diagonal proxy for saliency
+        let hdiag: Vec<f32> = match ctx.calib.as_ref() {
+            Some(x) => {
+                let mut h = vec![0.0f32; w.cols];
+                for r in 0..x.rows {
+                    for (j, &v) in x.row(r).iter().enumerate() {
+                        h[j] += v * v;
+                    }
+                }
+                h
+            }
+            None => vec![1.0; w.cols],
+        };
+
+        let mut w_hat = Matrix::zeros(w.rows, w.cols);
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for (gs, chunk) in row.chunks(group).enumerate() {
+                let start = gs * group;
+                let g = chunk.len();
+                // saliency ranking within the group
+                let mut order: Vec<usize> = (0..g).collect();
+                order.sort_by(|&a, &b| {
+                    let sa = chunk[a] * chunk[a] * hdiag[start + a];
+                    let sb = chunk[b] * chunk[b] * hdiag[start + b];
+                    sb.partial_cmp(&sa).unwrap()
+                });
+                let n_sal = ((g as f64) * self.salient_frac).ceil() as usize;
+                let salient: Vec<usize> = order[..n_sal.min(g)].to_vec();
+                let rest: Vec<usize> = order[n_sal.min(g)..].to_vec();
+
+                let out = &mut w_hat.data[r * w.cols + start..r * w.cols + start + g];
+                // salient: residual binarization
+                residual_binarize_subset(chunk, &salient, out);
+
+                // non-salient: bell-shape split — search the magnitude
+                // break that minimizes total binarization error
+                if !rest.is_empty() {
+                    let mut by_mag = rest.clone();
+                    by_mag.sort_by(|&a, &b| chunk[a].abs().partial_cmp(&chunk[b].abs()).unwrap());
+                    let mut best_err = f64::INFINITY;
+                    let mut best_split = by_mag.len();
+                    // coarse search over 8 candidate breaks
+                    let candidates: Vec<usize> = (1..8)
+                        .map(|i| i * by_mag.len() / 8)
+                        .chain([by_mag.len()])
+                        .collect();
+                    let mut tmp = vec![0.0f32; g];
+                    for &split in &candidates {
+                        let (lowidx, highidx) = by_mag.split_at(split);
+                        let e = binarize_subset(chunk, lowidx, &mut tmp)
+                            + binarize_subset(chunk, highidx, &mut tmp);
+                        if e < best_err {
+                            best_err = e;
+                            best_split = split;
+                        }
+                    }
+                    let (lowidx, highidx) = by_mag.split_at(best_split);
+                    binarize_subset(chunk, lowidx, out);
+                    binarize_subset(chunk, highidx, out);
+                }
+            }
+        }
+
+        // memory model (Eq. 10): binary planes + salient residual plane +
+        // group bitmap + scales
+        let n = w.rows;
+        let d = w.cols;
+        let c = ((d as f64) * self.salient_frac) as usize;
+        let bytes = (2 * n * c) / 8 + d.div_ceil(group) * 3 * n * 2 + n * d / 8 + d / 8 + 1;
+        QuantResult {
+            w_hat,
+            repr: QuantRepr::Dense,
+            bits_per_weight: 1.06 + 32.0 / group as f64,
+            memory_bytes: bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn better_than_naive_sign_binarization() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::rand_heavy(8, 256, 0.04, &mut rng);
+        let q = BiLlm::new(128).quantize(&w, &QuantCtx::default());
+        // naive: one α per row, sign
+        let mut naive = Matrix::zeros(8, 256);
+        for r in 0..8 {
+            let alpha = w.row(r).iter().map(|x| x.abs()).sum::<f32>() / 256.0;
+            for (j, &x) in w.row(r).iter().enumerate() {
+                *naive.at_mut(r, j) = alpha * x.signum();
+            }
+        }
+        assert!(w.sq_err(&q.w_hat) < w.sq_err(&naive));
+    }
+
+    #[test]
+    fn worse_than_ptqtp_reconstruction() {
+        // the paper's headline ordering
+        let mut rng = Rng::new(2);
+        let w = Matrix::rand_heavy(8, 256, 0.04, &mut rng);
+        let bi = BiLlm::new(128).quantize(&w, &QuantCtx::default());
+        let tp = crate::quant::ptqtp::Ptqtp::default().quantize(&w, &QuantCtx::default());
+        let eb = w.sq_err(&bi.w_hat);
+        let et = w.sq_err(&tp.w_hat);
+        assert!(et < eb * 0.8, "ptqtp {et} vs billm {eb}");
+    }
+
+    #[test]
+    fn calibration_changes_saliency() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(4, 64, 0.03, &mut rng);
+        let x = Matrix::from_fn(32, 64, |_, j| if j < 8 { rng.normal() * 10.0 } else { rng.normal() });
+        let with = BiLlm::new(64).quantize(&w, &QuantCtx::with_calib(x));
+        let without = BiLlm::new(64).quantize(&w, &QuantCtx::default());
+        // reconstructions should differ (different salient sets)
+        assert!(with.w_hat != without.w_hat);
+    }
+
+    #[test]
+    fn handles_tiny_groups() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(2, 5, 0.05, &mut rng);
+        let q = BiLlm::new(3).quantize(&w, &QuantCtx::default());
+        assert_eq!(q.w_hat.cols, 5);
+        assert!(q.w_hat.data.iter().all(|x| x.is_finite()));
+    }
+}

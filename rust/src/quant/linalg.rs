@@ -1,0 +1,139 @@
+//! Small dense linear algebra needed by GPTQ: symmetric positive
+//! definite Cholesky factorization and inversion.
+
+use crate::tensor::Matrix;
+
+/// Cholesky factorization A = L·Lᵀ (lower triangular). Returns `None`
+/// if A is not positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Invert L (lower triangular) by forward substitution per column.
+    let mut linv = Matrix::zeros(n, n);
+    for col in 0..n {
+        // solve L x = e_col
+        for i in col..n {
+            let mut sum = if i == col { 1.0f64 } else { 0.0 };
+            for k in col..i {
+                sum -= l.at(i, k) as f64 * linv.at(k, col) as f64;
+            }
+            *linv.at_mut(i, col) = (sum / l.at(i, i) as f64) as f32;
+        }
+    }
+    // A⁻¹ = Lᵀ⁻¹ L⁻¹ = linvᵀ · linv
+    let mut inv = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            // linvᵀ[i,k] = linv[k,i]; only k ≥ max(i,j) contribute
+            for k in i.max(j)..n {
+                s += linv.at(k, i) as f64 * linv.at(k, j) as f64;
+            }
+            *inv.at_mut(i, j) = s as f32;
+        }
+    }
+    Some(inv)
+}
+
+/// Upper Cholesky of the *inverse*: the factor GPTQ streams. Computes
+/// `U` with `A⁻¹ = Uᵀ·U`... concretely we return `chol(A⁻¹)ᵀ` (upper
+/// triangular), matching the reference GPTQ implementation's
+/// `cholesky(inv(H), upper=True)`.
+pub fn cholesky_inv_upper(a: &Matrix) -> Option<Matrix> {
+    let inv = spd_inverse(a)?;
+    let l = cholesky(&inv)?;
+    Some(l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::ops::matmul;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut a = matmul(&b, &b.transpose());
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f32 * 0.1; // ensure well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 1);
+        let l = cholesky(&a).expect("spd");
+        let rec = matmul(&l, &l.transpose());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::zeros(2, 2);
+        *a.at_mut(0, 0) = 1.0;
+        *a.at_mut(1, 1) = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let a = random_spd(8, 2);
+        let inv = spd_inverse(&a).expect("spd");
+        let prod = matmul(&a, &inv);
+        for i in 0..8 {
+            for j in 0..8 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod.at(i, j) - expect).abs() < 1e-3,
+                    "({i},{j}) = {}",
+                    prod.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_inv_upper_is_upper_triangular() {
+        let a = random_spd(6, 3);
+        let u = cholesky_inv_upper(&a).expect("spd");
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0, "({i},{j}) below diagonal");
+            }
+        }
+        // Uᵀ·U == A⁻¹
+        let inv = spd_inverse(&a).unwrap();
+        let rec = matmul(&u.transpose(), &u);
+        for (x, y) in rec.data.iter().zip(&inv.data) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+    }
+}

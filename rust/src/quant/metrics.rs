@@ -1,0 +1,144 @@
+//! Quantization quality metrics and the analytic memory models of the
+//! paper's Appendix A.3 (Eqs. 9–13, Table 4).
+
+use super::QuantResult;
+use crate::tensor::Matrix;
+
+/// Per-layer quantization metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantMetrics {
+    pub sq_err: f64,
+    pub rel_err: f64,
+    pub bits_per_weight: f64,
+    pub memory_bytes: usize,
+    pub compression_vs_fp16: f64,
+}
+
+impl QuantMetrics {
+    pub fn compute(w: &Matrix, r: &QuantResult) -> QuantMetrics {
+        let sq = w.sq_err(&r.w_hat);
+        QuantMetrics {
+            sq_err: sq,
+            rel_err: w.rel_err(&r.w_hat),
+            bits_per_weight: r.bits_per_weight,
+            memory_bytes: r.memory_bytes,
+            compression_vs_fp16: (w.len() * 2) as f64 / r.memory_bytes.max(1) as f64,
+        }
+    }
+}
+
+/// Analytic memory models (bytes) for an `n×d` layer, group size `k`,
+/// salient column count `c`. These regenerate Table 4 exactly from the
+/// paper's formulas (which count bits; we divide by 8).
+
+/// FP16 baseline.
+pub fn mem_fp16(n: usize, d: usize) -> usize {
+    2 * n * d
+}
+
+/// Eq. 9 — standard m-bit grid quantization with per-group FP16 scale.
+pub fn mem_grid(n: usize, d: usize, m: usize, k: usize) -> usize {
+    (n * d * m + d.div_ceil(k) * n * 16) / 8
+}
+
+/// PB-LLM: 1-bit plane + salient fp16 + bitmap + group scales.
+pub fn mem_pbllm(n: usize, d: usize, k: usize, salient_frac: f64) -> usize {
+    let salient = ((n * d) as f64 * salient_frac) as usize;
+    (n * d        // 1-bit plane
+        + salient * 16 // fp16 salient values
+        + n * d        // salient bitmap
+        + d.div_ceil(k) * n * 16)
+        / 8
+}
+
+/// Eq. 10 — BiLLM: second-order binarization for c salient columns,
+/// first-order + split for the rest, group bitmap + salient bitmap.
+pub fn mem_billm(n: usize, d: usize, k: usize, c: usize) -> usize {
+    (2 * n * c                      // second-order planes on salient cols
+        + d.div_ceil(k) * 3 * n * 16 // 3 group scales (fp16)
+        + n * d                      // first-order plane / group bitmap
+        + d)                         // salient column bitmap
+        / 8
+}
+
+/// Eq. 11 — ARB-LLM_RC.
+pub fn mem_arb_rc(n: usize, d: usize, k: usize, c: usize) -> usize {
+    (2 * n * c + (d.div_ceil(k) * 2 * n + 2 * c) * 16          // 2nd order
+        + n * (d - c) + (d.div_ceil(k) * n + (d - c)) * 16 * 2 // 1st order
+        + n * d                                                 // group bitmap
+        + d)                                                    // salient bitmap
+        / 8
+}
+
+/// Eq. 12 — ARB-LLM_RC + column-group bitmap (CGB).
+pub fn mem_arb_rc_cgb(n: usize, d: usize, k: usize, c: usize) -> usize {
+    (2 * n * c + (d.div_ceil(k) * 2 * n + 2 * c) * 16 * 2
+        + n * (d - c) + (d.div_ceil(k) * n + (d - c)) * 16 * 2
+        + n * d
+        + d)
+        / 8
+}
+
+/// Eq. 13 — PTQTP: two 2-bit trit-planes + 2 FP16 α per group-row.
+pub fn mem_ptqtp(n: usize, d: usize, k: usize) -> usize {
+    (2 * n * d * 2 + d.div_ceil(k) * 2 * n * 16) / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{QuantCtx, Quantizer};
+    use crate::rng::Rng;
+
+    #[test]
+    fn appendix_a3_example() {
+        // n=1024, d=4096: paper says trit-planes 0.5 MB + α ≈ 0.5 MB ≈ 1 MB
+        let m = mem_ptqtp(1024, 4096, 128);
+        let planes = 2 * 1024 * 4096 * 2 / 8; // 2 MiB? No: 2 planes × 2 bits
+        assert_eq!(planes, 2 * 1024 * 1024);
+        // the paper's "0.5 MB for trit-planes" counts per plane at 1 bit
+        // effective... we follow Eq. 13 exactly:
+        assert_eq!(m, planes + 32 * 1024 * 2 * 16 / 8);
+    }
+
+    #[test]
+    fn ordering_matches_table4() {
+        // Table 4 (LLaMA-7B): PB ≈ BiLLM < ARB_RC < PTQTP < FP16
+        let (n, d, k) = (4096, 4096, 128);
+        let c = d / 10;
+        let fp = mem_fp16(n, d);
+        let pb = mem_pbllm(n, d, k, 0.1);
+        let bi = mem_billm(n, d, k, c);
+        let arb = mem_arb_rc(n, d, k, c);
+        let tp = mem_ptqtp(n, d, k);
+        assert!(pb < tp, "pb {pb} < ptqtp {tp}");
+        assert!(bi < tp, "billm {bi} < ptqtp {tp}");
+        assert!(tp < fp / 3, "ptqtp {tp} ≪ fp16 {fp}");
+        assert!(arb < tp, "arb {arb} < ptqtp {tp}");
+    }
+
+    #[test]
+    fn ptqtp_compression_ratio_near_4x_for_planes() {
+        // trit planes alone compress 4× vs fp16 (2×2bit vs 16bit)
+        let (n, d) = (1024, 4096);
+        let planes_only = 2 * n * d * 2 / 8;
+        assert_eq!(mem_fp16(n, d) / planes_only, 4);
+    }
+
+    #[test]
+    fn metrics_compute_consistency() {
+        let mut rng = Rng::new(1);
+        let w = crate::tensor::Matrix::rand_heavy(8, 128, 0.04, &mut rng);
+        let q = crate::quant::ptqtp::Ptqtp::default().quantize(&w, &QuantCtx::default());
+        let m = q.metrics(&w);
+        assert!(m.rel_err > 0.0 && m.rel_err < 1.0);
+        assert!((m.rel_err * m.rel_err * (w.fro_norm() * w.fro_norm()) - m.sq_err).abs() / m.sq_err < 1e-6);
+        assert!(m.compression_vs_fp16 > 2.0);
+    }
+
+    #[test]
+    fn cgb_variant_larger_than_rc() {
+        let (n, d, k, c) = (4096, 4096, 128, 409);
+        assert!(mem_arb_rc_cgb(n, d, k, c) > mem_arb_rc(n, d, k, c));
+    }
+}

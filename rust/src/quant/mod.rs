@@ -1,0 +1,293 @@
+//! Post-training quantizers: PTQTP (the paper, §3) and every baseline it
+//! is evaluated against (§4.1): RTN, GPTQ, AWQ, PB-LLM, BiLLM,
+//! ARB-LLM(RC), plus the BitNet-style `absmean` ternary projector used
+//! both as a 1-plane ablation and as the QAT comparator's PTQ twin.
+//!
+//! All methods implement [`Quantizer`] and return a [`QuantResult`]
+//! carrying (a) the dense reconstruction Ŵ for evaluation, (b) the
+//! structured representation when one exists (trit-planes for PTQTP /
+//! absmean) so the serving engine can run the multiply-free kernels, and
+//! (c) storage accounting for the Table 4 memory model.
+
+pub mod absmean;
+pub mod arbllm;
+pub mod awq;
+pub mod billm;
+pub mod gptq;
+pub mod linalg;
+pub mod metrics;
+pub mod pbllm;
+pub mod ptqtp;
+pub mod rtn;
+
+pub use metrics::QuantMetrics;
+pub use ptqtp::{Ptqtp, PtqtpOpts, PtqtpReport};
+
+use crate::tensor::Matrix;
+use crate::ternary::TernaryLinear;
+
+/// Quantization context: optional calibration activations (rows =
+/// samples, cols = layer input dim) for activation-aware methods, and a
+/// seed for any stochastic choices.
+#[derive(Clone, Debug, Default)]
+pub struct QuantCtx {
+    pub calib: Option<Matrix>,
+    pub seed: u64,
+}
+
+impl QuantCtx {
+    pub fn with_calib(calib: Matrix) -> QuantCtx {
+        QuantCtx {
+            calib: Some(calib),
+            seed: 0,
+        }
+    }
+}
+
+/// Structured representation of the quantized weights, when the format
+/// admits one beyond a dense reconstruction.
+#[derive(Clone, Debug)]
+pub enum QuantRepr {
+    /// Dense reconstruction only (grid methods).
+    Dense,
+    /// Two trit-planes + group scales (PTQTP).
+    TritPlanes(TernaryLinear),
+    /// Single ternary plane + group scales (absmean / BitNet-style).
+    SinglePlane(TernaryLinear),
+}
+
+/// Output of a quantizer on one weight matrix.
+#[derive(Clone, Debug)]
+pub struct QuantResult {
+    /// Dense reconstruction Ŵ (always present; what evaluation uses).
+    pub w_hat: Matrix,
+    pub repr: QuantRepr,
+    /// Effective stored bits per weight including scale overhead.
+    pub bits_per_weight: f64,
+    /// Total bytes in the method's deployment format.
+    pub memory_bytes: usize,
+}
+
+impl QuantResult {
+    pub fn metrics(&self, w: &Matrix) -> QuantMetrics {
+        QuantMetrics::compute(w, self)
+    }
+}
+
+/// A post-training weight quantizer.
+pub trait Quantizer {
+    /// Short method name as used in the paper's tables ("PTQTP", "GPTQ").
+    fn name(&self) -> String;
+    /// Nominal weight bit-width as reported in the paper's "#Bits" column.
+    fn nominal_bits(&self) -> f64;
+    /// Quantize one weight matrix.
+    fn quantize(&self, w: &Matrix, ctx: &QuantCtx) -> QuantResult;
+}
+
+/// Look up a quantizer by its table name, e.g. `"ptqtp"`, `"gptq3"`,
+/// `"awq2"`, `"billm"`, `"arb"`, `"rtn4"`, `"absmean"`.
+pub fn by_name(name: &str, group: usize) -> anyhow::Result<Box<dyn Quantizer>> {
+    let lower = name.to_ascii_lowercase();
+    // trailing digit = bit-width for grid methods
+    let (base, bits) = match lower.trim_end_matches(|c: char| c.is_ascii_digit()) {
+        b if b.len() < lower.len() => {
+            let digits = &lower[b.len()..];
+            (b.to_string(), digits.parse::<u32>().ok())
+        }
+        b => (b.to_string(), None),
+    };
+    Ok(match base.as_str() {
+        "ptqtp" => Box::new(ptqtp::Ptqtp::new(PtqtpOpts {
+            group,
+            ..PtqtpOpts::default()
+        })),
+        "rtn" => Box::new(rtn::Rtn::new(bits.unwrap_or(4), group)),
+        "gptq" => Box::new(gptq::Gptq::new(bits.unwrap_or(3), group)),
+        "awq" => Box::new(awq::Awq::new(bits.unwrap_or(3), group)),
+        "pbllm" => Box::new(pbllm::PbLlm::new(group)),
+        "billm" => Box::new(billm::BiLlm::new(group)),
+        "arb" | "arbllm" | "arbllmrc" => Box::new(arbllm::ArbLlmRc::new(group)),
+        "absmean" | "bitnet" => Box::new(absmean::AbsMean::new(group)),
+        "fp" | "fp16" | "fp32" => Box::new(Identity),
+        other => anyhow::bail!("unknown quantizer '{other}'"),
+    })
+}
+
+/// All method names used by the comparison benches, in paper order.
+pub fn paper_methods() -> Vec<&'static str> {
+    vec![
+        "fp16", "awq4", "awq3", "awq2", "gptq4", "gptq3", "gptq2", "rtn3", "pbllm", "billm",
+        "arb", "absmean", "ptqtp",
+    ]
+}
+
+/// FP16 passthrough baseline.
+pub struct Identity;
+
+impl Quantizer for Identity {
+    fn name(&self) -> String {
+        "FP16".into()
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        16.0
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &QuantCtx) -> QuantResult {
+        QuantResult {
+            w_hat: w.clone(),
+            repr: QuantRepr::Dense,
+            bits_per_weight: 16.0,
+            memory_bytes: w.len() * 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared uniform-grid helpers (used by RTN / GPTQ / AWQ)
+// ---------------------------------------------------------------------
+
+/// Asymmetric min–max uniform quantization of a slice to `bits` levels;
+/// quantizes in place and returns the (scale, zero) used.
+pub fn grid_quant_slice(w: &mut [f32], bits: u32) -> (f32, f32) {
+    let levels = (1u32 << bits) as f32 - 1.0;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in w.iter() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || hi <= lo {
+        // constant group: represent exactly
+        let v = if lo.is_finite() { lo } else { 0.0 };
+        for x in w.iter_mut() {
+            *x = v;
+        }
+        return (1.0, 0.0);
+    }
+    let scale = (hi - lo) / levels;
+    let zero = (-lo / scale).round();
+    for x in w.iter_mut() {
+        let q = (*x / scale + zero).round().clamp(0.0, levels);
+        *x = (q - zero) * scale;
+    }
+    (scale, zero)
+}
+
+/// Quantize a single value against a precomputed (scale, zero, bits) grid.
+#[inline]
+pub fn grid_quant_value(x: f32, scale: f32, zero: f32, bits: u32) -> f32 {
+    let levels = (1u32 << bits) as f32 - 1.0;
+    let q = (x / scale + zero).round().clamp(0.0, levels);
+    (q - zero) * scale
+}
+
+/// Compute the min–max grid for a slice without quantizing.
+pub fn grid_params(w: &[f32], bits: u32) -> (f32, f32) {
+    let levels = (1u32 << bits) as f32 - 1.0;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in w.iter() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || hi <= lo {
+        return (1.0, 0.0);
+    }
+    let scale = (hi - lo) / levels;
+    let zero = (-lo / scale).round();
+    (scale, zero)
+}
+
+/// Grid-method storage model (Eq. 9): `n·d·m` bits + per-group FP16
+/// scale+zero.
+pub fn grid_memory_bytes(n: usize, d: usize, bits: u32, group: usize) -> usize {
+    let weight_bits = n * d * bits as usize;
+    let groups = n * d.div_ceil(group);
+    weight_bits / 8 + groups * 2 * 2 // fp16 scale + fp16 zero
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn registry_resolves_paper_methods() {
+        for m in paper_methods() {
+            let q = by_name(m, 128).unwrap_or_else(|_| panic!("method {m}"));
+            assert!(!q.name().is_empty());
+        }
+        assert!(by_name("nonsense", 128).is_err());
+    }
+
+    #[test]
+    fn registry_parses_bits_suffix() {
+        assert_eq!(by_name("gptq2", 64).unwrap().nominal_bits(), 2.0);
+        assert_eq!(by_name("awq4", 64).unwrap().nominal_bits(), 4.0);
+    }
+
+    #[test]
+    fn identity_exact() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(4, 8, 1.0, &mut rng);
+        let r = Identity.quantize(&w, &QuantCtx::default());
+        assert_eq!(r.w_hat, w);
+        assert_eq!(r.bits_per_weight, 16.0);
+    }
+
+    #[test]
+    fn grid_quant_error_shrinks_with_bits() {
+        let mut rng = Rng::new(2);
+        let orig: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+        let mut err = f64::INFINITY;
+        for bits in [2u32, 3, 4, 8] {
+            let mut w = orig.clone();
+            grid_quant_slice(&mut w, bits);
+            let e: f64 = orig
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!(e < err, "bits={bits}: {e} !< {err}");
+            err = e;
+        }
+    }
+
+    #[test]
+    fn grid_quant_idempotent() {
+        let mut rng = Rng::new(3);
+        let mut w: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        grid_quant_slice(&mut w, 4);
+        let once = w.clone();
+        grid_quant_slice(&mut w, 4);
+        for (a, b) in once.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn grid_quant_constant_group() {
+        let mut w = vec![0.7f32; 16];
+        grid_quant_slice(&mut w, 2);
+        assert!(w.iter().all(|&x| (x - 0.7).abs() < 1e-6));
+    }
+
+    #[test]
+    fn grid_value_matches_slice() {
+        let mut rng = Rng::new(4);
+        let orig: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let (scale, zero) = grid_params(&orig, 3);
+        let mut sliced = orig.clone();
+        grid_quant_slice(&mut sliced, 3);
+        for (i, &x) in orig.iter().enumerate() {
+            let v = grid_quant_value(x, scale, zero, 3);
+            assert!((v - sliced[i]).abs() < 1e-5, "i={i}");
+        }
+    }
+
+    #[test]
+    fn grid_memory_eq9() {
+        // n=1024, d=4096, 4-bit, G=128: 2 MiB weights + 32 groups/row FP16×2
+        let m = grid_memory_bytes(1024, 4096, 4, 128);
+        assert_eq!(m, 1024 * 4096 / 2 + 1024 * 32 * 4);
+    }
+}

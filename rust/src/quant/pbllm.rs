@@ -1,0 +1,144 @@
+//! PB-LLM (Shang et al., 2023) — partially binarized LLM quantization.
+//!
+//! Keeps a small salient fraction (default 10%, by magnitude) of weights
+//! in high precision and binarizes the rest group-wise with an
+//! `α·sign(w)` codebook. Effective ~1.7 bits/weight with the salient
+//! overhead (the paper's Table 9 lists PB-LLM at 1.70 bits).
+
+use super::{QuantCtx, QuantRepr, QuantResult, Quantizer};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PbLlm {
+    pub group: usize,
+    /// Fraction of weights kept in fp16.
+    pub salient_frac: f64,
+}
+
+impl PbLlm {
+    pub fn new(group: usize) -> PbLlm {
+        PbLlm {
+            group,
+            salient_frac: 0.10,
+        }
+    }
+}
+
+impl Quantizer for PbLlm {
+    fn name(&self) -> String {
+        "PB-LLM-b1.7".into()
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        1.7
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &QuantCtx) -> QuantResult {
+        let group = if self.group == 0 { w.cols } else { self.group };
+        // global magnitude threshold for saliency
+        let mut mags: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+        let k = ((w.len() as f64) * self.salient_frac) as usize;
+        let thresh = if k == 0 {
+            f32::INFINITY
+        } else {
+            let idx = w.len() - k;
+            mags.select_nth_unstable_by(idx.min(w.len() - 1), |a, b| a.partial_cmp(b).unwrap());
+            mags[idx.min(w.len() - 1)]
+        };
+
+        let mut w_hat = Matrix::zeros(w.rows, w.cols);
+        for r in 0..w.rows {
+            let row = w.row(r);
+            for (gs, chunk) in row.chunks(group).enumerate() {
+                let start = gs * group;
+                // α over non-salient entries only (reference behaviour)
+                let mut sum = 0.0f32;
+                let mut cnt = 0usize;
+                for &x in chunk {
+                    if x.abs() < thresh {
+                        sum += x.abs();
+                        cnt += 1;
+                    }
+                }
+                let alpha = if cnt > 0 { sum / cnt as f32 } else { 0.0 };
+                for (j, &x) in chunk.iter().enumerate() {
+                    let v = if x.abs() >= thresh {
+                        x // salient: fp16 passthrough
+                    } else {
+                        alpha * x.signum()
+                    };
+                    *w_hat.at_mut(r, start + j) = v;
+                }
+            }
+        }
+        // memory: 1 bit/weight + salient fp16 + bitmap + group scales
+        let n = w.rows;
+        let d = w.cols;
+        let bytes = n * d / 8 + k * 2 + n * d / 8 + n * d.div_ceil(group) * 2;
+        QuantResult {
+            w_hat,
+            repr: QuantRepr::Dense,
+            bits_per_weight: 1.0 + 16.0 * self.salient_frac + 1.0 + 16.0 / group as f64,
+            memory_bytes: bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn salient_weights_exact() {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::randn(8, 64, 0.02, &mut rng);
+        // plant unmistakable outliers
+        w.data[5] = 3.0;
+        w.data[100] = -2.5;
+        let q = PbLlm::new(32).quantize(&w, &QuantCtx::default());
+        assert_eq!(q.w_hat.data[5], 3.0);
+        assert_eq!(q.w_hat.data[100], -2.5);
+    }
+
+    #[test]
+    fn nonsalient_are_binary_levels() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(4, 32, 0.02, &mut rng);
+        let q = PbLlm {
+            group: 32,
+            salient_frac: 0.0,
+        }
+        .quantize(&w, &QuantCtx::default());
+        // with no salient weights each group has ≤2 levels (±α)
+        for r in 0..4 {
+            let mut vals: Vec<i64> = q.w_hat.row(r).iter().map(|&x| (x * 1e7).round() as i64).collect();
+            vals.sort_unstable();
+            vals.dedup();
+            assert!(vals.len() <= 2, "row {r}: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn better_than_pure_binary_on_outliers() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::rand_heavy(8, 128, 0.05, &mut rng);
+        let pb = PbLlm::new(64).quantize(&w, &QuantCtx::default());
+        let pure = PbLlm {
+            group: 64,
+            salient_frac: 0.0,
+        }
+        .quantize(&w, &QuantCtx::default());
+        assert!(w.sq_err(&pb.w_hat) < w.sq_err(&pure.w_hat));
+    }
+
+    #[test]
+    fn worse_than_ptqtp() {
+        // the paper's central comparison
+        let mut rng = Rng::new(4);
+        let w = Matrix::rand_heavy(8, 256, 0.04, &mut rng);
+        let pb = PbLlm::new(128).quantize(&w, &QuantCtx::default());
+        let tp = crate::quant::ptqtp::Ptqtp::default().quantize(&w, &QuantCtx::default());
+        assert!(w.sq_err(&tp.w_hat) < w.sq_err(&pb.w_hat));
+    }
+}

@@ -1,0 +1,95 @@
+//! RTN — round-to-nearest uniform grid quantization, group-wise.
+//!
+//! The simplest PTQ baseline: every group is min–max quantized to
+//! `2^b` levels independently, no calibration, no error compensation.
+
+use super::{grid_memory_bytes, grid_quant_slice, QuantCtx, QuantRepr, QuantResult, Quantizer};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Rtn {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl Rtn {
+    pub fn new(bits: u32, group: usize) -> Rtn {
+        assert!(bits >= 1 && bits <= 8, "unsupported bit width {bits}");
+        Rtn { bits, group }
+    }
+}
+
+impl Quantizer for Rtn {
+    fn name(&self) -> String {
+        format!("RTN-b{}", self.bits)
+    }
+
+    fn nominal_bits(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn quantize(&self, w: &Matrix, _ctx: &QuantCtx) -> QuantResult {
+        let group = if self.group == 0 { w.cols } else { self.group };
+        let mut w_hat = w.clone();
+        for r in 0..w.rows {
+            let row = w_hat.row_mut(r);
+            for chunk in row.chunks_mut(group) {
+                grid_quant_slice(chunk, self.bits);
+            }
+        }
+        QuantResult {
+            w_hat,
+            repr: QuantRepr::Dense,
+            bits_per_weight: self.bits as f64 + 32.0 / group as f64,
+            memory_bytes: grid_memory_bytes(w.rows, w.cols, self.bits, group),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::rand_heavy(8, 256, 0.03, &mut rng);
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 3, 4, 8] {
+            let q = Rtn::new(bits, 64).quantize(&w, &QuantCtx::default());
+            let e = w.sq_err(&q.w_hat);
+            assert!(e < prev, "bits={bits}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn grouping_helps_with_outliers() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::rand_heavy(4, 512, 0.03, &mut rng);
+        let grouped = Rtn::new(3, 64).quantize(&w, &QuantCtx::default());
+        let whole_row = Rtn::new(3, 0).quantize(&w, &QuantCtx::default());
+        assert!(w.sq_err(&grouped.w_hat) < w.sq_err(&whole_row.w_hat));
+    }
+
+    #[test]
+    fn eight_bit_nearly_exact() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(4, 128, 0.02, &mut rng);
+        let q = Rtn::new(8, 128).quantize(&w, &QuantCtx::default());
+        assert!(w.rel_err(&q.w_hat) < 0.01);
+    }
+
+    #[test]
+    fn values_on_grid() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(1, 16, 1.0, &mut rng);
+        let q = Rtn::new(2, 16).quantize(&w, &QuantCtx::default());
+        // 2-bit → at most 4 distinct values per group
+        let mut vals: Vec<i64> = q.w_hat.data.iter().map(|&x| (x * 1e6).round() as i64).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() <= 4, "{vals:?}");
+    }
+}

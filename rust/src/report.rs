@@ -1,0 +1,257 @@
+//! Table rendering for paper-style benchmark output.
+//!
+//! Every bench binary prints its rows through [`Table`], so all paper
+//! exhibits share one look and can be diffed run-to-run; tables also
+//! serialize to TSV and JSON for EXPERIMENTS.md tooling.
+
+use crate::serialize::Json;
+
+/// Cell formatting for floats: mimic the paper's mixed notation —
+/// plain decimals for small values, scientific (`1.2E5`) for blown-up
+/// perplexities.
+pub fn fmt_metric(x: f64) -> String {
+    if !x.is_finite() {
+        return "NAN".into();
+    }
+    if x == 0.0 {
+        return "0.00".into();
+    }
+    let a = x.abs();
+    if a >= 1e4 {
+        format!("{:.2E}", x)
+    } else if a >= 100.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Convenience: leading label + metric-formatted numbers.
+    pub fn metric_row(&mut self, label: &str, values: &[f64]) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|&v| fmt_metric(v)));
+        self.row(cells)
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                // left-align first col, right-align the rest
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    s.push_str(&format!("{:>w$}", c, w = widths[i]));
+                }
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1))));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    /// Tab-separated dump (machine-readable).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join("\t"));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON dump: {title, headers, rows}.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("title", self.title.as_str())
+            .set(
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            )
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md embedding).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("**{}**\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// ASCII line plot for figure reproductions (Fig 3/4 series).
+pub fn ascii_plot(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)], height: usize) -> String {
+    let mut out = format!("-- {title} --\n");
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .filter(|y| y.is_finite())
+        .collect();
+    if all.is_empty() || xs.is_empty() {
+        return out + "(no data)\n";
+    }
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &y| {
+            (lo.min(y), hi.max(y))
+        });
+    let span = (ymax - ymin).max(1e-12);
+    let width = xs.len();
+    let marks = ['*', '+', 'o', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &y) in ys.iter().enumerate().take(width) {
+            if !y.is_finite() {
+                continue;
+            }
+            let level = ((y - ymin) / span * (height - 1) as f64).round() as usize;
+            let row = height - 1 - level.min(height - 1);
+            grid[row][xi] = marks[si % marks.len()];
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax - span * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>10.3} |{}\n", yval, row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n", "", "-".repeat(width)
+    ));
+    out.push_str(&format!(
+        "{:>12}x: {:.3} .. {:.3}   ", "", xs[0], xs[xs.len() - 1]
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("[{}]={} ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_metric_matches_paper_style() {
+        assert_eq!(fmt_metric(9.75), "9.75");
+        assert_eq!(fmt_metric(164.3), "164.3");
+        assert_eq!(fmt_metric(164000.0), "1.64E5");
+        assert_eq!(fmt_metric(f64::NAN), "NAN");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "PPL"]);
+        t.metric_row("PTQTP", &[17.15]);
+        t.metric_row("AWQ-2bit", &[164000.0]);
+        let s = t.render();
+        assert!(s.contains("PTQTP"));
+        assert!(s.contains("1.64E5"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines.len() >= 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn tsv_and_markdown() {
+        let mut t = Table::new("T", &["m", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        assert_eq!(t.to_tsv(), "m\tv\na\t1\n");
+        assert!(t.to_markdown().contains("| a | 1 |"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("T", &["m"]);
+        t.row(vec!["a".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("T"));
+    }
+
+    #[test]
+    fn plot_handles_series() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let p = ascii_plot(
+            "ppl vs iters",
+            &xs,
+            &[("ptqtp", vec![100.0, 20.0, 10.0, 9.0])],
+            8,
+        );
+        assert!(p.contains("ppl vs iters"));
+        assert!(p.contains("[*]=ptqtp"));
+    }
+
+    #[test]
+    fn plot_empty_safe() {
+        let p = ascii_plot("empty", &[], &[], 5);
+        assert!(p.contains("(no data)"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py` describing every lowered HLO module (name,
+//! file, input shapes, outputs), so the Rust engine can validate calls
+//! before handing them to PJRT.
+
+use crate::serialize::Json;
+use std::path::{Path, PathBuf};
+
+/// One lowered module's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Input shapes in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of tuple outputs.
+    pub n_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read {:?}/manifest.json: {e} (run `make artifacts`)", dir))?;
+        let j = Json::parse(&text)?;
+        let arr = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
+        let mut specs = Vec::new();
+        for a in arr {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow::anyhow!("bad shape entry"))
+                })
+                .collect::<anyhow::Result<Vec<Vec<usize>>>>()?;
+            specs.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                inputs,
+                n_outputs: a.req_usize("n_outputs")?,
+            });
+        }
+        Ok(ArtifactManifest { dir, specs })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn path_of(&self, name: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Load every artifact listed in the manifest into `engine`.
+    pub fn load_all(&self, engine: &mut super::PjrtEngine) -> anyhow::Result<()> {
+        for s in &self.specs {
+            engine.load_hlo_text(&s.name, self.dir.join(&s.file))?;
+        }
+        Ok(())
+    }
+
+    /// Validate input shapes against the spec before an execute call.
+    pub fn check_inputs(&self, name: &str, shapes: &[&[usize]]) -> anyhow::Result<()> {
+        let spec = self.get(name)?;
+        anyhow::ensure!(
+            spec.inputs.len() == shapes.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            spec.inputs.len(),
+            shapes.len()
+        );
+        for (i, (want, got)) in spec.inputs.iter().zip(shapes).enumerate() {
+            anyhow::ensure!(
+                want.as_slice() == *got,
+                "artifact '{name}' input {i}: expected shape {want:?}, got {got:?}"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"name": "ternary_matmul", "file": "ternary_matmul.hlo.txt",
+                 "inputs": [[4, 64], [16, 64], [16, 64], [16, 1], [16, 1]], "n_outputs": 1},
+                {"name": "decode_step", "file": "decode_step.hlo.txt",
+                 "inputs": [[1, 128]], "n_outputs": 2}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("ptqtp_manifest_test");
+        write_manifest(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.specs.len(), 2);
+        let spec = m.get("ternary_matmul").unwrap();
+        assert_eq!(spec.inputs.len(), 5);
+        assert_eq!(spec.inputs[0], vec![4, 64]);
+        assert!(m.path_of("decode_step").unwrap().ends_with("decode_step.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_validation() {
+        let dir = std::env::temp_dir().join("ptqtp_manifest_test2");
+        write_manifest(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.check_inputs("decode_step", &[&[1, 128]]).is_ok());
+        assert!(m.check_inputs("decode_step", &[&[2, 128]]).is_err());
+        assert!(m.check_inputs("decode_step", &[]).is_err());
+        assert!(m.check_inputs("unknown", &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let err = ArtifactManifest::load("/nonexistent/dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime — loads and executes the AOT HLO artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`).
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md). All
+//! modules are lowered with `return_tuple=True`, so results unwrap via
+//! `to_tuple1` for single outputs.
+//!
+//! Python never runs at serving time: the artifacts are compiled once at
+//! engine start and executed natively through the PJRT C API.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::ArtifactManifest;
+pub use engine::PjrtEngine;

@@ -1,0 +1,18 @@
+//! Serialization substrates.
+//!
+//! The offline crate cache has no `serde`, so this module provides the
+//! two formats the system needs, implemented from scratch:
+//!
+//! * [`json`] — a complete JSON parser/writer (configs, metadata,
+//!   benchmark reports, checkpoint manifests shared with the Python
+//!   build path).
+//! * [`tensorfile`] — `.ptw`, a little-endian binary tensor container
+//!   (magic + named f32/i8/u8 tensors) used for model checkpoints
+//!   written by `python/compile/train.py` and read by the Rust engine,
+//!   and for persisted quantized models.
+
+pub mod json;
+pub mod tensorfile;
+
+pub use json::Json;
+pub use tensorfile::{TensorEntry, TensorFile};

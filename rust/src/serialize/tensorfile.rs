@@ -1,0 +1,282 @@
+//! `.ptw` — PTQTP tensor-file container.
+//!
+//! Little-endian binary format shared between the Python build path
+//! (`python/compile/ptw.py` writes checkpoints) and the Rust engine:
+//!
+//! ```text
+//! magic   : 4 bytes  = "PTW1"
+//! count   : u32      = number of tensors
+//! repeat count times:
+//!   name_len : u32
+//!   name     : utf-8 bytes
+//!   dtype    : u8   (0=f32, 1=i8, 2=u8, 3=i32)
+//!   ndim     : u32
+//!   dims     : ndim × u64
+//!   payload  : product(dims) × sizeof(dtype) bytes
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PTW1";
+
+/// Supported element types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I8 = 1,
+    U8 = 2,
+    I32 = 3,
+}
+
+impl DType {
+    fn from_u8(x: u8) -> anyhow::Result<DType> {
+        Ok(match x {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::U8,
+            3 => DType::I32,
+            other => anyhow::bail!("unknown dtype tag {other}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+/// One named tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorEntry {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian payload.
+    pub bytes: Vec<u8>,
+}
+
+impl TensorEntry {
+    pub fn from_f32(dims: Vec<usize>, data: &[f32]) -> TensorEntry {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for &x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        TensorEntry {
+            dtype: DType::F32,
+            dims,
+            bytes,
+        }
+    }
+
+    pub fn from_i8(dims: Vec<usize>, data: &[i8]) -> TensorEntry {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorEntry {
+            dtype: DType::I8,
+            dims,
+            bytes: data.iter().map(|&x| x as u8).collect(),
+        }
+    }
+
+    pub fn from_u8(dims: Vec<usize>, data: Vec<u8>) -> TensorEntry {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorEntry {
+            dtype: DType::U8,
+            dims,
+            bytes: data,
+        }
+    }
+
+    pub fn to_f32(&self) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == DType::F32, "tensor is not f32");
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn to_i8(&self) -> anyhow::Result<Vec<i8>> {
+        anyhow::ensure!(self.dtype == DType::I8, "tensor is not i8");
+        Ok(self.bytes.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// View as a [`crate::tensor::Matrix`]; requires 2-D f32.
+    pub fn to_matrix(&self) -> anyhow::Result<crate::tensor::Matrix> {
+        anyhow::ensure!(self.dims.len() == 2, "tensor is not 2-D: {:?}", self.dims);
+        Ok(crate::tensor::Matrix::from_vec(
+            self.dims[0],
+            self.dims[1],
+            self.to_f32()?,
+        ))
+    }
+}
+
+/// Ordered collection of named tensors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, TensorEntry>,
+}
+
+impl TensorFile {
+    pub fn new() -> TensorFile {
+        TensorFile::default()
+    }
+
+    pub fn insert(&mut self, name: &str, entry: TensorEntry) {
+        self.tensors.insert(name.to_string(), entry);
+    }
+
+    pub fn insert_matrix(&mut self, name: &str, m: &crate::tensor::Matrix) {
+        self.insert(name, TensorEntry::from_f32(vec![m.rows, m.cols], &m.data));
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&TensorEntry> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not found in checkpoint"))
+    }
+
+    pub fn matrix(&self, name: &str) -> anyhow::Result<crate::tensor::Matrix> {
+        self.get(name)?.to_matrix()
+    }
+
+    pub fn vec_f32(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        self.get(name)?.to_f32()
+    }
+
+    // ---------- io ----------
+
+    pub fn write_to(&self, w: &mut impl Write) -> anyhow::Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[t.dtype as u8])?;
+            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            anyhow::ensure!(
+                t.bytes.len() == t.numel() * t.dtype.size(),
+                "payload size mismatch for '{name}'"
+            );
+            w.write_all(&t.bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        self.write_to(&mut f)
+    }
+
+    pub fn read_from(r: &mut impl Read) -> anyhow::Result<TensorFile> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad magic: {magic:?}");
+        let count = read_u32(r)? as usize;
+        let mut tf = TensorFile::new();
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            anyhow::ensure!(name_len < 4096, "unreasonable name length {name_len}");
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let dtype = DType::from_u8(tag[0])?;
+            let ndim = read_u32(r)? as usize;
+            anyhow::ensure!(ndim <= 8, "unreasonable rank {ndim}");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                dims.push(u64::from_le_bytes(b) as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let mut bytes = vec![0u8; numel * dtype.size()];
+            r.read_exact(&mut bytes)?;
+            tf.insert(&name, TensorEntry { dtype, dims, bytes });
+        }
+        Ok(tf)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<TensorFile> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .map_err(|e| anyhow::anyhow!("open {:?}: {e}", path.as_ref()))?,
+        );
+        TensorFile::read_from(&mut f)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(5, 7, 1.0, &mut rng);
+        let mut tf = TensorFile::new();
+        tf.insert_matrix("w.0", &m);
+        tf.insert("trits", TensorEntry::from_i8(vec![3, 2], &[-1, 0, 1, 1, 0, -1]));
+        tf.insert("packed", TensorEntry::from_u8(vec![4], vec![0xde, 0xad, 0xbe, 0xef]));
+
+        let mut buf = Vec::new();
+        tf.write_to(&mut buf).unwrap();
+        let tf2 = TensorFile::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(tf, tf2);
+        assert_eq!(tf2.matrix("w.0").unwrap(), m);
+        assert_eq!(tf2.get("trits").unwrap().to_i8().unwrap(), vec![-1, 0, 1, 1, 0, -1]);
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("ptqtp_test_tf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.ptw");
+        let mut tf = TensorFile::new();
+        tf.insert("alpha", TensorEntry::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]));
+        tf.save(&path).unwrap();
+        let tf2 = TensorFile::load(&path).unwrap();
+        assert_eq!(tf2.vec_f32("alpha").unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        assert!(TensorFile::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_names_key() {
+        let tf = TensorFile::new();
+        let err = tf.get("absent").unwrap_err().to_string();
+        assert!(err.contains("absent"));
+    }
+
+    #[test]
+    fn non_2d_matrix_rejected() {
+        let e = TensorEntry::from_f32(vec![8], &[0.0; 8]);
+        assert!(e.to_matrix().is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! Dense tensor substrate: row-major f32 matrices and helpers.
+//!
+//! Deliberately small — just what the quantizers, model, and serving
+//! engine need. Heavy lifting (blocked matmul, transposes, stats) lives
+//! in [`ops`]; the [`Matrix`] type owns storage and shape.
+
+pub mod ops;
+pub mod stats;
+
+pub use ops::{matmul, matmul_into, matvec, softmax_rows};
+pub use stats::MatrixStats;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from an existing buffer; panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// iid normal(0, std) entries from a deterministic RNG.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut crate::rng::Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Heavy-tailed (student-t df=4) entries scaled to `std` — mimics
+    /// trained-LLM weight outlier structure for synthetic benchmarks.
+    pub fn rand_heavy(rows: usize, cols: usize, std: f32, rng: &mut crate::rng::Rng) -> Self {
+        // var of t(df) is df/(df-2) => scale to unit variance then by std
+        let df = 4.0f32;
+        let unit = (df / (df - 2.0)).sqrt();
+        Matrix::from_fn(rows, cols, |_, _| rng.student_t(df) / unit * std)
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Reshape in place (row-major reinterpretation). Panics on size
+    /// mismatch. This is how group-wise quantization views `n×d` as
+    /// `(n·d/G)×G` (paper §3.2).
+    pub fn reshape(mut self, rows: usize, cols: usize) -> Matrix {
+        assert_eq!(rows * cols, self.data.len(), "reshape size mismatch");
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// ‖self − other‖_F² (the paper's reconstruction objective).
+    pub fn sq_err(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Relative Frobenius error ‖A−B‖_F / ‖A‖_F.
+    pub fn rel_err(&self, approx: &Matrix) -> f64 {
+        let denom = self.fro_norm().max(1e-30);
+        self.sq_err(approx).sqrt() / denom
+    }
+
+    /// Elementwise scale.
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// self += other
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean |x|.
+    pub fn abs_mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn index_roundtrip() {
+        let m = Matrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::randn(7, 11, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(0, 1), 4.0);
+        assert_eq!(t.at(2, 0), 3.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let m = Matrix::from_vec(2, 6, (0..12).map(|i| i as f32).collect());
+        let g = m.clone().reshape(4, 3);
+        assert_eq!(g.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(g.data, m.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_mismatch_panics() {
+        Matrix::zeros(2, 3).reshape(4, 2);
+    }
+
+    #[test]
+    fn fro_and_sq_err() {
+        let a = Matrix::from_vec(1, 3, vec![3.0, 0.0, 4.0]);
+        let b = Matrix::zeros(1, 3);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-9);
+        assert!((a.sq_err(&b) - 25.0).abs() < 1e-9);
+        assert!((a.rel_err(&b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heavy_tailed_has_outliers() {
+        let mut rng = Rng::new(77);
+        let m = Matrix::rand_heavy(64, 64, 0.02, &mut rng);
+        // abs_max should exceed what a pure normal with same std would
+        // essentially always produce over 4096 draws (~4 sigma)
+        assert!(m.abs_max() > 0.02 * 4.5, "max {}", m.abs_max());
+    }
+}

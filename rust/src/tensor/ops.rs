@@ -1,0 +1,217 @@
+//! Matrix/vector operations: blocked matmul, matvec, softmax.
+//!
+//! These back the FP16/FP32 baselines in the latency benches (Table 5/6)
+//! and the Rust inference path; they are written cache-blocked so the
+//! dense baseline is a fair comparator for the ternary kernels.
+
+use super::Matrix;
+
+/// Cache-block edge for the blocked matmul (elements).
+const BLOCK: usize = 64;
+
+/// C = A(m×k) · B(k×n), blocked over k for cache reuse.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C += nothing; C is overwritten. Panics on shape mismatch.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul inner dim mismatch");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.iter_mut().for_each(|x| *x = 0.0);
+    // i-k-j loop order with k blocking: streams B rows, accumulates C rows.
+    for kb in (0..k).step_by(BLOCK) {
+        let ke = (kb + BLOCK).min(k);
+        for i in 0..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            for kk in kb..ke {
+                let av = a_row[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    c_row[j] += av * b_row[j];
+                }
+            }
+        }
+    }
+}
+
+/// y = W(n×d) · x(d): the decode-path linear primitive.
+pub fn matvec(w: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(w.cols, x.len(), "matvec dim mismatch");
+    let mut y = vec![0.0f32; w.rows];
+    matvec_into(w, x, &mut y);
+    y
+}
+
+/// y (len n) = W(n×d) · x(d), unrolled 4-wide accumulators.
+pub fn matvec_into(w: &Matrix, x: &[f32], y: &mut [f32]) {
+    let d = w.cols;
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &w.data[i * d..(i + 1) * d];
+        let mut s0 = 0.0f32;
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        let mut s3 = 0.0f32;
+        let chunks = d / 4;
+        for c in 0..chunks {
+            let b = c * 4;
+            s0 += row[b] * x[b];
+            s1 += row[b + 1] * x[b + 1];
+            s2 += row[b + 2] * x[b + 2];
+            s3 += row[b + 3] * x[b + 3];
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for b in chunks * 4..d {
+            s += row[b] * x[b];
+        }
+        *yi = s;
+    }
+}
+
+/// Numerically-stable row-wise softmax in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        softmax_inplace(row);
+    }
+}
+
+/// Stable softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// log-softmax over a slice (returns new vec) — used by the perplexity
+/// evaluator where we need log-probabilities.
+pub fn log_softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = xs.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+    xs.iter().map(|&x| x - lse).collect()
+}
+
+/// Dot product with 4-wide accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(3);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 128, 65)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let c_ref = naive_matmul(&a, &b);
+            for (x, y) in c.data.iter().zip(&c_ref.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(19, 37, 1.0, &mut rng);
+        let x: Vec<f32> = (0..37).map(|_| rng.normal()).collect();
+        let y = matvec(&w, &x);
+        let xm = Matrix::from_vec(37, 1, x);
+        let y2 = matmul(&w, &xm);
+        for (a, b) in y.iter().zip(&y2.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(8);
+        let mut m = Matrix::randn(5, 12, 3.0, &mut rng);
+        softmax_rows(&mut m);
+        for r in 0..5 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_stable_under_shift() {
+        let mut a = vec![1000.0f32, 1001.0, 1002.0];
+        softmax_inplace(&mut a);
+        let mut b = vec![0.0f32, 1.0, 2.0];
+        softmax_inplace(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let xs = vec![0.3f32, -1.2, 2.0, 0.0];
+        let ls = log_softmax(&xs);
+        let total: f64 = ls.iter().map(|&x| (x as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(10);
+        let a: Vec<f32> = (0..103).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..103).map(|_| rng.normal()).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - expect).abs() < 1e-4);
+    }
+}

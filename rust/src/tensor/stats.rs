@@ -1,0 +1,136 @@
+//! Distribution statistics over matrices — used by the quantizer
+//! diagnostics (Fig 5 analogue) and the synthetic-weight validators.
+
+use super::Matrix;
+
+/// Summary statistics of a weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MatrixStats {
+    pub mean: f64,
+    pub std: f64,
+    pub abs_mean: f64,
+    pub abs_max: f64,
+    pub kurtosis: f64,
+    /// Fraction of entries with |x| > 4·std (outlier mass).
+    pub outlier_frac: f64,
+    /// Fraction of exact zeros.
+    pub zero_frac: f64,
+}
+
+impl MatrixStats {
+    pub fn of(m: &Matrix) -> MatrixStats {
+        let n = m.data.len().max(1) as f64;
+        let mean = m.data.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = m
+            .data
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        let std = var.sqrt();
+        let m4 = m
+            .data
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mean;
+                d * d * d * d
+            })
+            .sum::<f64>()
+            / n;
+        let kurtosis = if var > 0.0 { m4 / (var * var) } else { 0.0 };
+        let thresh = 4.0 * std;
+        let outliers = m.data.iter().filter(|&&x| (x as f64 - mean).abs() > thresh).count();
+        let zeros = m.data.iter().filter(|&&x| x == 0.0).count();
+        MatrixStats {
+            mean,
+            std,
+            abs_mean: m.data.iter().map(|&x| x.abs() as f64).sum::<f64>() / n,
+            abs_max: m.data.iter().fold(0.0f64, |a, &x| a.max(x.abs() as f64)),
+            kurtosis,
+            outlier_frac: outliers as f64 / n,
+            zero_frac: zeros as f64 / n,
+        }
+    }
+}
+
+/// Histogram over fixed bins in [-range, range]; the Fig-5 style
+/// trit-plane visualizations reuse this.
+pub fn histogram(data: &[f32], bins: usize, range: f32) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let scale = bins as f32 / (2.0 * range);
+    for &x in data {
+        let idx = ((x + range) * scale).floor();
+        let idx = idx.clamp(0.0, bins as f32 - 1.0) as usize;
+        h[idx] += 1;
+    }
+    h
+}
+
+/// Render a histogram as a compact ASCII sparkline (for `--fig 5` dumps).
+pub fn sparkline(h: &[usize]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = *h.iter().max().unwrap_or(&1) as f64;
+    h.iter()
+        .map(|&c| {
+            if max == 0.0 {
+                BARS[0]
+            } else {
+                let lvl = ((c as f64 / max) * 7.0).round() as usize;
+                BARS[lvl.min(7)]
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn normal_stats_sane() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(128, 128, 0.05, &mut rng);
+        let s = MatrixStats::of(&m);
+        assert!(s.mean.abs() < 0.002);
+        assert!((s.std - 0.05).abs() < 0.005);
+        assert!((s.kurtosis - 3.0).abs() < 0.3, "kurtosis {}", s.kurtosis);
+    }
+
+    #[test]
+    fn heavy_tail_has_higher_kurtosis() {
+        let mut rng = Rng::new(2);
+        let n = Matrix::randn(128, 128, 0.05, &mut rng);
+        let h = Matrix::rand_heavy(128, 128, 0.05, &mut rng);
+        assert!(MatrixStats::of(&h).kurtosis > MatrixStats::of(&n).kurtosis + 0.5);
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let data = vec![-1.0f32, -0.5, 0.0, 0.5, 0.99, 5.0, -5.0];
+        let h = histogram(&data, 4, 1.0);
+        assert_eq!(h.iter().sum::<usize>(), data.len());
+        // clamped extremes land in edge bins
+        assert!(h[0] >= 2);
+        assert!(h[3] >= 2);
+    }
+
+    #[test]
+    fn sparkline_length_matches() {
+        let h = vec![0usize, 1, 5, 10];
+        let s = sparkline(&h);
+        assert_eq!(s.chars().count(), 4);
+    }
+
+    #[test]
+    fn zero_frac_detects_sparsity() {
+        let mut m = Matrix::zeros(4, 4);
+        m.data[3] = 1.0;
+        let s = MatrixStats::of(&m);
+        assert!((s.zero_frac - 15.0 / 16.0).abs() < 1e-9);
+    }
+}

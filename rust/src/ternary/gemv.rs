@@ -1,0 +1,289 @@
+//! Multiply-free matrix–vector kernels (the decode hot path).
+//!
+//! The paper's Appendix A.1 observation: a ternary weight contributes
+//! `+x`, `-x`, or nothing — so the inner loop needs only adds.
+//! CPU mapping of the paper's CUDA kernel (see DESIGN.md
+//! §Hardware-Adaptation): we stream the 2-bit packed planes, decode 4
+//! trits per byte via a 256-entry LUT, accumulate each plane in its own
+//! register, and apply the two group scales once per group at the
+//! epilogue — weights are never multiplied inside the loop.
+//!
+//! Three implementations, cross-checked by tests and raced in Table 5:
+//! * [`gemv_unpacked`] — i8 planes, branch on trit (reference).
+//! * [`gemv_fused`]    — i8 planes, branchless select-add, both planes in
+//!   one pass.
+//! * [`gemv_packed`]   — 2-bit packed planes + LUT decode (deployment).
+
+use super::linear::{PackedTernaryLinear, TernaryLinear};
+use super::pack::dec2;
+
+/// Reference kernel: explicit branches, reads the unpacked planes.
+pub fn gemv_unpacked(lin: &TernaryLinear, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    let gpr = lin.groups_per_row();
+    for r in 0..lin.rows {
+        let t1 = lin.t1.row(r);
+        let t2 = lin.t2.row(r);
+        let mut acc = 0.0f32;
+        for g in 0..gpr {
+            let (s, e) = lin.group_span(g);
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            for c in s..e {
+                match t1[c] {
+                    1 => s1 += x[c],
+                    -1 => s1 -= x[c],
+                    _ => {}
+                }
+                match t2[c] {
+                    1 => s2 += x[c],
+                    -1 => s2 -= x[c],
+                    _ => {}
+                }
+            }
+            let ai = lin.alpha_idx(r, g);
+            acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
+        }
+        y[r] = acc;
+    }
+}
+
+/// Branchless fused kernel: trit used as an f32 factor in {-1,0,1}; the
+/// compiler vectorizes the select-add. Both planes accumulate in one
+/// pass over x.
+pub fn gemv_fused(lin: &TernaryLinear, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    let gpr = lin.groups_per_row();
+    for r in 0..lin.rows {
+        let t1 = lin.t1.row(r);
+        let t2 = lin.t2.row(r);
+        let mut acc = 0.0f32;
+        for g in 0..gpr {
+            let (s, e) = lin.group_span(g);
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            for c in s..e {
+                let xv = x[c];
+                s1 += t1[c] as f32 * xv;
+                s2 += t2[c] as f32 * xv;
+            }
+            let ai = lin.alpha_idx(r, g);
+            acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
+        }
+        y[r] = acc;
+    }
+}
+
+/// Deployment kernel over the 2-bit packed planes.
+///
+/// Decodes four trits per byte and fuses both planes; group boundaries
+/// are byte-aligned whenever `G % 4 == 0` (G=128 default), which the
+/// fast path exploits.
+pub fn gemv_packed(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    let gpr = lin.groups_per_row();
+    let stride = lin.row_stride;
+    let aligned = lin.group % 4 == 0 && lin.cols % 4 == 0;
+    for r in 0..lin.rows {
+        let p1 = &lin.p1[r * stride..(r + 1) * stride];
+        let p2 = &lin.p2[r * stride..(r + 1) * stride];
+        let mut acc = 0.0f32;
+        for g in 0..gpr {
+            let start = g * lin.group;
+            let end = (start + lin.group).min(lin.cols);
+            let (s1, s2) = if aligned {
+                plane_pair_sum_aligned(p1, p2, x, start, end)
+            } else {
+                plane_pair_sum_scalar(p1, p2, x, start, end)
+            };
+            let ai = r * gpr + g;
+            acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
+        }
+        y[r] = acc;
+    }
+}
+
+/// 256-entry byte → 4×f32 decode LUT (4 KiB, stays L1-resident). Built
+/// once per process; the hot loop replaces 8 shift/mask chains per byte
+/// pair with two table loads + fused multiply-adds.
+fn lut_f32() -> &'static [[f32; 4]; 256] {
+    use std::sync::OnceLock;
+    static LUT: OnceLock<Box<[[f32; 4]; 256]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = Box::new([[0.0f32; 4]; 256]);
+        for b in 0..256usize {
+            let byte = b as u8;
+            t[b] = [
+                dec2(byte) as f32,
+                dec2(byte >> 2) as f32,
+                dec2(byte >> 4) as f32,
+                dec2(byte >> 6) as f32,
+            ];
+        }
+        t
+    })
+}
+
+/// Byte-aligned group: process 4 trits per byte per plane via the LUT.
+#[inline]
+fn plane_pair_sum_aligned(p1: &[u8], p2: &[u8], x: &[f32], start: usize, end: usize) -> (f32, f32) {
+    let lut = lut_f32();
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let b0 = start / 4;
+    let b1 = end / 4;
+    for b in b0..b1 {
+        let d1 = &lut[p1[b] as usize];
+        let d2 = &lut[p2[b] as usize];
+        let xb = &x[b * 4..b * 4 + 4];
+        s1 += d1[0] * xb[0] + d1[1] * xb[1] + d1[2] * xb[2] + d1[3] * xb[3];
+        s2 += d2[0] * xb[0] + d2[1] * xb[1] + d2[2] * xb[2] + d2[3] * xb[3];
+    }
+    (s1, s2)
+}
+
+/// Ragged fallback: per-trit decode.
+#[inline]
+fn plane_pair_sum_scalar(p1: &[u8], p2: &[u8], x: &[f32], start: usize, end: usize) -> (f32, f32) {
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    for c in start..end {
+        let sh = (c % 4) * 2;
+        let t1 = dec2(p1[c / 4] >> sh);
+        let t2 = dec2(p2[c / 4] >> sh);
+        s1 += t1 as f32 * x[c];
+        s2 += t2 as f32 * x[c];
+    }
+    (s1, s2)
+}
+
+/// Convenience allocating wrappers.
+pub fn gemv(lin: &TernaryLinear, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0; lin.rows];
+    gemv_fused(lin, x, &mut y);
+    y
+}
+
+pub fn gemv_packed_alloc(lin: &PackedTernaryLinear, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0; lin.rows];
+    gemv_packed(lin, x, &mut y);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, prop_assert, Gen};
+    use crate::rng::Rng;
+    use crate::tensor::ops::matvec;
+
+    fn random_linear(rows: usize, cols: usize, group: usize, seed: u64) -> TernaryLinear {
+        let mut rng = Rng::new(seed);
+        let mut lin = TernaryLinear::new(rows, cols, group);
+        for t in lin.t1.trits.iter_mut().chain(lin.t2.trits.iter_mut()) {
+            *t = rng.below(3) as i8 - 1;
+        }
+        for a in lin.alpha1.iter_mut().chain(lin.alpha2.iter_mut()) {
+            *a = rng.normal() * 0.2;
+        }
+        lin
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() < tol * (1.0 + x.abs()),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn unpacked_matches_dense_reconstruction() {
+        let mut rng = Rng::new(10);
+        let lin = random_linear(13, 40, 8, 11);
+        let x: Vec<f32> = (0..40).map(|_| rng.normal()).collect();
+        let dense = matvec(&lin.reconstruct(), &x);
+        let mut y = vec![0.0; 13];
+        gemv_unpacked(&lin, &x, &mut y);
+        assert_close(&y, &dense, 1e-4);
+    }
+
+    #[test]
+    fn fused_matches_unpacked() {
+        let mut rng = Rng::new(20);
+        let lin = random_linear(7, 64, 16, 21);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; 7];
+        let mut b = vec![0.0; 7];
+        gemv_unpacked(&lin, &x, &mut a);
+        gemv_fused(&lin, &x, &mut b);
+        assert_close(&a, &b, 1e-5);
+    }
+
+    #[test]
+    fn packed_matches_fused_aligned() {
+        let mut rng = Rng::new(30);
+        let lin = random_linear(9, 128, 32, 31);
+        let packed = lin.to_packed();
+        let x: Vec<f32> = (0..128).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; 9];
+        let mut b = vec![0.0; 9];
+        gemv_fused(&lin, &x, &mut a);
+        gemv_packed(&packed, &x, &mut b);
+        assert_close(&a, &b, 1e-5);
+    }
+
+    #[test]
+    fn packed_matches_fused_ragged() {
+        let mut rng = Rng::new(40);
+        // cols=37, group=10 → ragged groups and tail bits in the packing
+        let lin = random_linear(5, 37, 10, 41);
+        let packed = lin.to_packed();
+        let x: Vec<f32> = (0..37).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; 5];
+        let mut b = vec![0.0; 5];
+        gemv_fused(&lin, &x, &mut a);
+        gemv_packed(&packed, &x, &mut b);
+        assert_close(&a, &b, 1e-5);
+    }
+
+    #[test]
+    fn zero_planes_give_zero_output() {
+        let lin = TernaryLinear::new(4, 16, 4);
+        let x = vec![1.0; 16];
+        let y = gemv(&lin, &x);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_all_kernels_agree() {
+        check(60, |g: &mut Gen| {
+            let rows = g.usize_in(1, 12);
+            let cols = g.usize_in(1, 70);
+            let group = *g.pick(&[4usize, 8, 10, 16, 128]);
+            let seed = g.rng.next_u64();
+            let lin = random_linear(rows, cols, group, seed);
+            let x = g.vec_normal(cols, 1.0);
+            let mut a = vec![0.0; rows];
+            let mut b = vec![0.0; rows];
+            let mut c = vec![0.0; rows];
+            gemv_unpacked(&lin, &x, &mut a);
+            gemv_fused(&lin, &x, &mut b);
+            gemv_packed(&lin.to_packed(), &x, &mut c);
+            for i in 0..rows {
+                let tol = 1e-4 * (1.0 + a[i].abs());
+                if (a[i] - b[i]).abs() > tol || (a[i] - c[i]).abs() > tol {
+                    return Err(format!(
+                        "kernel disagreement at row {i}: {} {} {} (rows={rows} cols={cols} G={group})",
+                        a[i], b[i], c[i]
+                    ));
+                }
+            }
+            prop_assert(true, "")
+        });
+    }
+}

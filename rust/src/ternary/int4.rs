@@ -1,0 +1,302 @@
+//! 4-bit grouped-uniform packed linear — the GPTQ/AWQ *kernel* stand-in
+//! for the Table 5 latency comparison (numerics are RTN-4; what's
+//! benchmarked is the packed int4 decode + multiply inner loop).
+
+use crate::tensor::Matrix;
+
+/// 4-bit packed weights: codes 2-per-byte, per-(row, group) scale+zero.
+#[derive(Clone, Debug)]
+pub struct Int4Linear {
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+    /// Packed codes, row-major, row stride = ceil(cols/2).
+    pub codes: Vec<u8>,
+    pub row_stride: usize,
+    /// scale[row * gpr + g], zero likewise (dequant: (q - zero) * scale).
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+}
+
+impl Int4Linear {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Quantize a dense matrix to grouped int4.
+    pub fn quantize(w: &Matrix, group: usize) -> Int4Linear {
+        let group = if group == 0 { w.cols } else { group };
+        let gpr = w.cols.div_ceil(group);
+        let row_stride = w.cols.div_ceil(2);
+        let mut lin = Int4Linear {
+            rows: w.rows,
+            cols: w.cols,
+            group,
+            codes: vec![0u8; w.rows * row_stride],
+            row_stride,
+            scales: vec![1.0; w.rows * gpr],
+            zeros: vec![0.0; w.rows * gpr],
+        };
+        for r in 0..w.rows {
+            for g in 0..gpr {
+                let s = g * group;
+                let e = (s + group).min(w.cols);
+                let chunk = &w.row(r)[s..e];
+                let (scale, zero) = crate::quant::grid_params(chunk, 4);
+                lin.scales[r * gpr + g] = scale;
+                lin.zeros[r * gpr + g] = zero;
+                for (j, &x) in chunk.iter().enumerate() {
+                    let q = ((x / scale + zero).round().clamp(0.0, 15.0)) as u8;
+                    let c = s + j;
+                    lin.codes[r * row_stride + c / 2] |= q << ((c % 2) * 4);
+                }
+            }
+        }
+        lin
+    }
+
+    /// Dense reconstruction (for correctness tests).
+    pub fn reconstruct(&self) -> Matrix {
+        let gpr = self.groups_per_row();
+        Matrix::from_fn(self.rows, self.cols, |r, c| {
+            let q = (self.codes[r * self.row_stride + c / 2] >> ((c % 2) * 4)) & 0xF;
+            let gi = r * gpr + c / self.group;
+            (q as f32 - self.zeros[gi]) * self.scales[gi]
+        })
+    }
+
+    /// Packed int4 GEMV: y = W·x.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let gpr = self.groups_per_row();
+        for r in 0..self.rows {
+            let codes = &self.codes[r * self.row_stride..(r + 1) * self.row_stride];
+            let mut acc = 0.0f32;
+            for g in 0..gpr {
+                let s = g * self.group;
+                let e = (s + self.group).min(self.cols);
+                let scale = self.scales[r * gpr + g];
+                let zero = self.zeros[r * gpr + g];
+                // Σ (q - z)·s·x = s·(Σ q·x) − s·z·(Σ x)
+                let mut qx = 0.0f32;
+                let mut xs = 0.0f32;
+                for c in s..e {
+                    let q = (codes[c / 2] >> ((c % 2) * 4)) & 0xF;
+                    qx += q as f32 * x[c];
+                    xs += x[c];
+                }
+                acc += scale * (qx - zero * xs);
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Packed GEMM via per-row gemv.
+    pub fn gemm(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.rows);
+        for r in 0..x.rows {
+            let row = &mut y.data[r * self.rows..(r + 1) * self.rows];
+            self.gemv(x.row(r), row);
+        }
+        y
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + 4 * (self.scales.len() + self.zeros.len())
+    }
+}
+
+/// AQLM-style 2×2-bit additive-codebook linear (Table 5's AQLM column).
+/// Each weight is the sum of two codebook entries selected by 2-bit
+/// codes; codebooks are per-(row, group). The gather-per-element inner
+/// loop is what makes real AQLM kernels slow at prefill — preserved.
+#[derive(Clone, Debug)]
+pub struct Aqlm2x2Linear {
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+    /// Two 2-bit code streams (packed 4/byte), each row-major.
+    pub c1: Vec<u8>,
+    pub c2: Vec<u8>,
+    pub row_stride: usize,
+    /// Codebooks: per-(row, group) 4 entries each.
+    pub cb1: Vec<[f32; 4]>,
+    pub cb2: Vec<[f32; 4]>,
+}
+
+impl Aqlm2x2Linear {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Greedy additive quantization: codebooks from quartile residuals.
+    pub fn quantize(w: &Matrix, group: usize) -> Aqlm2x2Linear {
+        let group = if group == 0 { w.cols } else { group };
+        let gpr = w.cols.div_ceil(group);
+        let row_stride = w.cols.div_ceil(4);
+        let mut lin = Aqlm2x2Linear {
+            rows: w.rows,
+            cols: w.cols,
+            group,
+            c1: vec![0; w.rows * row_stride],
+            c2: vec![0; w.rows * row_stride],
+            row_stride,
+            cb1: vec![[0.0; 4]; w.rows * gpr],
+            cb2: vec![[0.0; 4]; w.rows * gpr],
+        };
+        for r in 0..w.rows {
+            for g in 0..gpr {
+                let s = g * group;
+                let e = (s + group).min(w.cols);
+                let chunk = &w.row(r)[s..e];
+                let gi = r * gpr + g;
+                // codebook 1: 4 quantile levels of the values
+                let mut sorted: Vec<f32> = chunk.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let q = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+                lin.cb1[gi] = [q(0.125), q(0.375), q(0.625), q(0.875)];
+                // assign codes 1, compute residuals
+                let mut resid = vec![0.0f32; chunk.len()];
+                for (j, &x) in chunk.iter().enumerate() {
+                    let (code, val) = nearest(&lin.cb1[gi], x);
+                    let c = s + j;
+                    lin.c1[r * row_stride + c / 4] |= code << ((c % 4) * 2);
+                    resid[j] = x - val;
+                }
+                // codebook 2 on residuals
+                let mut rs = resid.clone();
+                rs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let q2 = |p: f64| rs[((rs.len() - 1) as f64 * p) as usize];
+                lin.cb2[gi] = [q2(0.125), q2(0.375), q2(0.625), q2(0.875)];
+                for (j, &x) in resid.iter().enumerate() {
+                    let (code, _) = nearest(&lin.cb2[gi], x);
+                    let c = s + j;
+                    lin.c2[r * row_stride + c / 4] |= code << ((c % 4) * 2);
+                }
+            }
+        }
+        lin
+    }
+
+    pub fn reconstruct(&self) -> Matrix {
+        let gpr = self.groups_per_row();
+        Matrix::from_fn(self.rows, self.cols, |r, c| {
+            let gi = r * gpr + c / self.group;
+            let k1 = (self.c1[r * self.row_stride + c / 4] >> ((c % 4) * 2)) & 0b11;
+            let k2 = (self.c2[r * self.row_stride + c / 4] >> ((c % 4) * 2)) & 0b11;
+            self.cb1[gi][k1 as usize] + self.cb2[gi][k2 as usize]
+        })
+    }
+
+    /// GEMV with per-element double codebook gather (the AQLM cost model).
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        let gpr = self.groups_per_row();
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for c in 0..self.cols {
+                let gi = r * gpr + c / self.group;
+                let byte = r * self.row_stride + c / 4;
+                let sh = (c % 4) * 2;
+                let k1 = (self.c1[byte] >> sh) & 0b11;
+                let k2 = (self.c2[byte] >> sh) & 0b11;
+                acc += (self.cb1[gi][k1 as usize] + self.cb2[gi][k2 as usize]) * x[c];
+            }
+            y[r] = acc;
+        }
+    }
+
+    pub fn gemm(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.rows);
+        for r in 0..x.rows {
+            let row = &mut y.data[r * self.rows..(r + 1) * self.rows];
+            self.gemv(x.row(r), row);
+        }
+        y
+    }
+}
+
+#[inline]
+fn nearest(cb: &[f32; 4], x: f32) -> (u8, f32) {
+    let mut best = 0u8;
+    let mut bv = f32::INFINITY;
+    for (i, &v) in cb.iter().enumerate() {
+        let d = (x - v).abs();
+        if d < bv {
+            bv = d;
+            best = i as u8;
+        }
+    }
+    (best, cb[best as usize])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::ops::matvec;
+
+    #[test]
+    fn int4_gemv_matches_reconstruction() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::rand_heavy(12, 64, 0.05, &mut rng);
+        let lin = Int4Linear::quantize(&w, 32);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 12];
+        lin.gemv(&x, &mut y);
+        let dense = matvec(&lin.reconstruct(), &x);
+        for (a, b) in y.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int4_reconstruction_close_to_original() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(8, 128, 0.05, &mut rng);
+        let lin = Int4Linear::quantize(&w, 64);
+        assert!(w.rel_err(&lin.reconstruct()) < 0.1);
+    }
+
+    #[test]
+    fn int4_smaller_than_f32() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(64, 256, 0.05, &mut rng);
+        let lin = Int4Linear::quantize(&w, 128);
+        assert!(lin.resident_bytes() * 6 < w.len() * 4);
+    }
+
+    #[test]
+    fn aqlm_gemv_matches_reconstruction() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::rand_heavy(10, 64, 0.05, &mut rng);
+        let lin = Aqlm2x2Linear::quantize(&w, 32);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 10];
+        lin.gemv(&x, &mut y);
+        let dense = matvec(&lin.reconstruct(), &x);
+        for (a, b) in y.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn aqlm_reconstruction_reasonable() {
+        let mut rng = Rng::new(5);
+        let w = Matrix::randn(8, 128, 0.05, &mut rng);
+        let lin = Aqlm2x2Linear::quantize(&w, 64);
+        let rel = w.rel_err(&lin.reconstruct());
+        assert!(rel < 0.5, "rel {rel}");
+    }
+
+    #[test]
+    fn ragged_cols_handled() {
+        let mut rng = Rng::new(6);
+        let w = Matrix::randn(4, 37, 0.05, &mut rng);
+        let i4 = Int4Linear::quantize(&w, 16);
+        let aq = Aqlm2x2Linear::quantize(&w, 16);
+        assert_eq!(i4.reconstruct().cols, 37);
+        assert_eq!(aq.reconstruct().cols, 37);
+    }
+}

@@ -1,0 +1,264 @@
+//! The deployable two-trit-plane linear layer (paper §3.1–§3.2).
+//!
+//! Stores `T⁽¹⁾, T⁽²⁾` and group-wise scales `α⁽¹⁾, α⁽²⁾` for a weight
+//! matrix `W (n×d)` divided into groups of `G` consecutive columns
+//! (paper §3.2 reshapes `n×d → (nd/G)×G`; for the kernels we keep the
+//! equivalent `(row, group)` indexing so inference never reshapes).
+
+use super::pack::{bytes_2bit, pack2bit, unpack2bit};
+use super::plane::TritPlane;
+use crate::tensor::Matrix;
+
+/// Two-plane ternary factorization of one linear layer.
+#[derive(Clone, Debug)]
+pub struct TernaryLinear {
+    /// Output features (rows of W).
+    pub rows: usize,
+    /// Input features (cols of W).
+    pub cols: usize,
+    /// Group size G along the column dimension.
+    pub group: usize,
+    pub t1: TritPlane,
+    pub t2: TritPlane,
+    /// α⁽¹⁾ indexed `[row * groups_per_row + g]`.
+    pub alpha1: Vec<f32>,
+    /// α⁽²⁾ indexed the same way.
+    pub alpha2: Vec<f32>,
+}
+
+impl TernaryLinear {
+    /// Groups per weight row. The final group may be ragged when
+    /// `G ∤ cols`.
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Column span of group `g`.
+    #[inline]
+    pub fn group_span(&self, g: usize) -> (usize, usize) {
+        let start = g * self.group;
+        (start, (start + self.group).min(self.cols))
+    }
+
+    pub fn new(rows: usize, cols: usize, group: usize) -> TernaryLinear {
+        assert!(group > 0, "group size must be positive");
+        let gpr = cols.div_ceil(group);
+        TernaryLinear {
+            rows,
+            cols,
+            group,
+            t1: TritPlane::zeros(rows, cols),
+            t2: TritPlane::zeros(rows, cols),
+            alpha1: vec![0.0; rows * gpr],
+            alpha2: vec![0.0; rows * gpr],
+        }
+    }
+
+    #[inline]
+    pub fn alpha_idx(&self, row: usize, g: usize) -> usize {
+        row * self.groups_per_row() + g
+    }
+
+    /// Dense reconstruction Ŵ = diag(α⁽¹⁾)T⁽¹⁾ + diag(α⁽²⁾)T⁽²⁾
+    /// (group-wise scales).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut w = Matrix::zeros(self.rows, self.cols);
+        let gpr = self.groups_per_row();
+        for r in 0..self.rows {
+            for g in 0..gpr {
+                let (s, e) = self.group_span(g);
+                let a1 = self.alpha1[self.alpha_idx(r, g)];
+                let a2 = self.alpha2[self.alpha_idx(r, g)];
+                for c in s..e {
+                    w.data[r * self.cols + c] =
+                        a1 * self.t1.at(r, c) as f32 + a2 * self.t2.at(r, c) as f32;
+                }
+            }
+        }
+        w
+    }
+
+    /// ‖W − Ŵ‖²_F against a reference weight matrix.
+    pub fn sq_err(&self, w: &Matrix) -> f64 {
+        w.sq_err(&self.reconstruct())
+    }
+
+    /// Effective stored bits per weight: 2 planes × 2 bits + amortized
+    /// FP16 scales (Eq. 13).
+    pub fn bits_per_weight(&self) -> f64 {
+        let trit_bits = 2.0 * 2.0; // two planes, 2-bit codes
+        let scale_bits = 2.0 * 16.0 / self.group as f64; // two α per group
+        trit_bits + scale_bits
+    }
+
+    /// Total storage bytes in the deployment format (Eq. 13):
+    /// `2 planes × 2bit × n·d + 2 α-vectors × FP16 × n·(d/G)`.
+    pub fn memory_bytes(&self) -> usize {
+        let plane_bytes = 2 * bytes_2bit(self.rows * self.cols);
+        let alpha_bytes = 2 * self.rows * self.groups_per_row() * 2; // fp16
+        plane_bytes + alpha_bytes
+    }
+
+    /// Pack both planes into the 2-bit deployment format (row-major,
+    /// per-plane streams).
+    pub fn to_packed(&self) -> PackedTernaryLinear {
+        PackedTernaryLinear {
+            rows: self.rows,
+            cols: self.cols,
+            group: self.group,
+            row_stride: bytes_2bit(self.cols),
+            p1: pack_rows(&self.t1),
+            p2: pack_rows(&self.t2),
+            alpha1: self.alpha1.clone(),
+            alpha2: self.alpha2.clone(),
+        }
+    }
+
+    /// Mean |α| over both planes (diagnostic; bounded per Appendix C.2).
+    pub fn mean_abs_alpha(&self) -> f64 {
+        let n = (self.alpha1.len() + self.alpha2.len()).max(1) as f64;
+        (self.alpha1.iter().chain(&self.alpha2).map(|a| a.abs() as f64).sum::<f64>()) / n
+    }
+}
+
+/// Pack every row independently so rows start byte-aligned (needed for
+/// row-parallel kernels).
+fn pack_rows(t: &TritPlane) -> Vec<u8> {
+    let stride = bytes_2bit(t.cols);
+    let mut out = vec![0u8; t.rows * stride];
+    for r in 0..t.rows {
+        let packed = pack2bit(t.row(r));
+        out[r * stride..r * stride + packed.len()].copy_from_slice(&packed);
+    }
+    out
+}
+
+/// 2-bit packed deployment form — what the serving engine keeps resident.
+#[derive(Clone, Debug)]
+pub struct PackedTernaryLinear {
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+    /// Bytes per packed row.
+    pub row_stride: usize,
+    pub p1: Vec<u8>,
+    pub p2: Vec<u8>,
+    pub alpha1: Vec<f32>,
+    pub alpha2: Vec<f32>,
+}
+
+impl PackedTernaryLinear {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group)
+    }
+
+    /// Unpack back to the i8 working form (tests / cross-checks).
+    pub fn unpack(&self) -> TernaryLinear {
+        let mut t1 = TritPlane::zeros(self.rows, self.cols);
+        let mut t2 = TritPlane::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row1 = unpack2bit(
+                &self.p1[r * self.row_stride..(r + 1) * self.row_stride],
+                self.cols,
+            );
+            let row2 = unpack2bit(
+                &self.p2[r * self.row_stride..(r + 1) * self.row_stride],
+                self.cols,
+            );
+            t1.row_mut(r).copy_from_slice(&row1);
+            t2.row_mut(r).copy_from_slice(&row2);
+        }
+        TernaryLinear {
+            rows: self.rows,
+            cols: self.cols,
+            group: self.group,
+            t1,
+            t2,
+            alpha1: self.alpha1.clone(),
+            alpha2: self.alpha2.clone(),
+        }
+    }
+
+    /// Resident bytes (planes + f32 scales as stored here).
+    pub fn resident_bytes(&self) -> usize {
+        self.p1.len() + self.p2.len() + 4 * (self.alpha1.len() + self.alpha2.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_linear(rows: usize, cols: usize, group: usize, seed: u64) -> TernaryLinear {
+        let mut rng = Rng::new(seed);
+        let mut lin = TernaryLinear::new(rows, cols, group);
+        for t in lin.t1.trits.iter_mut().chain(lin.t2.trits.iter_mut()) {
+            *t = rng.below(3) as i8 - 1;
+        }
+        for a in lin.alpha1.iter_mut().chain(lin.alpha2.iter_mut()) {
+            *a = rng.normal() * 0.1;
+        }
+        lin
+    }
+
+    #[test]
+    fn reconstruct_shapes() {
+        let lin = random_linear(6, 10, 4, 1);
+        let w = lin.reconstruct();
+        assert_eq!((w.rows, w.cols), (6, 10));
+        assert_eq!(lin.groups_per_row(), 3); // 4+4+2 ragged tail
+    }
+
+    #[test]
+    fn reconstruct_values_groupwise() {
+        let mut lin = TernaryLinear::new(1, 4, 2);
+        lin.t1.trits = vec![1, -1, 0, 1];
+        lin.t2.trits = vec![0, 1, 1, -1];
+        lin.alpha1 = vec![2.0, 10.0];
+        lin.alpha2 = vec![0.5, 1.0];
+        let w = lin.reconstruct();
+        // col0: 2*1 + 0.5*0 = 2 ; col1: 2*-1 + 0.5*1 = -1.5
+        // col2: 10*0 + 1*1 = 1 ; col3: 10*1 + 1*-1 = 9
+        assert_eq!(w.data, vec![2.0, -1.5, 1.0, 9.0]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let lin = random_linear(9, 37, 8, 2);
+        let packed = lin.to_packed();
+        let back = packed.unpack();
+        assert_eq!(back.t1, lin.t1);
+        assert_eq!(back.t2, lin.t2);
+        assert_eq!(back.alpha1, lin.alpha1);
+    }
+
+    #[test]
+    fn bits_per_weight_near_paper_value() {
+        // G=128: 4 bits of trits + 32/128 bits of scales = 4.25
+        let lin = TernaryLinear::new(4, 256, 128);
+        assert!((lin.bits_per_weight() - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_model_eq13() {
+        // n=1024, d=4096, G=128 → paper Appendix A.3 example:
+        // planes = 2 * (1024*4096)/4 bytes = 2 MiB, α = 2*1024*32*2 B
+        let lin = TernaryLinear::new(1024, 4096, 128);
+        let m = lin.memory_bytes();
+        assert_eq!(m, 2 * 1024 * 4096 / 4 + 2 * 1024 * 32 * 2);
+    }
+
+    #[test]
+    fn ragged_group_span() {
+        let lin = TernaryLinear::new(2, 10, 4);
+        assert_eq!(lin.group_span(2), (8, 10));
+    }
+
+    #[test]
+    fn sq_err_zero_for_own_reconstruction() {
+        let lin = random_linear(5, 16, 4, 3);
+        let w = lin.reconstruct();
+        assert!(lin.sq_err(&w) < 1e-12);
+    }
+}

@@ -1,0 +1,29 @@
+//! Trit-plane storage and multiply-free compute (paper §3, Appendix A).
+//!
+//! PTQTP represents a weight matrix `W (n×d)` as two ternary planes
+//! `T⁽¹⁾,T⁽²⁾ ∈ {-1,0,1}^{n×d}` plus per-group scales, reconstructing
+//!
+//! ```text
+//! Ŵ = diag(α⁽¹⁾)·T⁽¹⁾ + diag(α⁽²⁾)·T⁽²⁾
+//! ```
+//!
+//! Modules:
+//! * [`plane`]  — [`TritPlane`]: unpacked i8 trits with shape.
+//! * [`pack`]   — 2-bit packing (hardware format, Eq. 13) and base-3
+//!   packing (5 trits/byte, the Appendix G "future work" layout — we
+//!   implement it as an extension).
+//! * [`linear`] — [`TernaryLinear`]: the deployable two-plane layer with
+//!   group-wise scales, reconstruction and quality metrics.
+//! * [`gemv`]   — multiply-free matrix–vector kernels (decode path).
+//! * [`gemm`]   — multiply-free matrix–matrix kernels (prefill path).
+
+pub mod gemm;
+pub mod gemv;
+pub mod int4;
+pub mod linear;
+pub mod pack;
+pub mod plane;
+
+pub use linear::TernaryLinear;
+pub use pack::{pack2bit, pack_base3, unpack2bit, unpack_base3};
+pub use plane::TritPlane;

@@ -1,0 +1,198 @@
+//! Trit packing formats.
+//!
+//! * **2-bit** (paper Eq. 13, "each trit-plane containing 3 states has to
+//!   be stored as a 2-bit datatype"): 4 trits per byte, encoding
+//!   `{-1→0b10, 0→0b00, +1→0b01}` (0b11 unused). This is the hardware
+//!   format and the one the multiply-free kernels stream.
+//! * **base-3** (paper Appendix G future work: "8 ternary elements ...
+//!   bit-packing" density direction): 5 trits per byte (3⁵ = 243 ≤ 256),
+//!   1.6 bits/trit — the dense archival format.
+
+/// Encode one trit into its 2-bit code.
+#[inline]
+fn enc2(t: i8) -> u8 {
+    match t {
+        0 => 0b00,
+        1 => 0b01,
+        -1 => 0b10,
+        _ => panic!("invalid trit {t}"),
+    }
+}
+
+/// Decode a 2-bit code into a trit. 0b11 decodes to 0 (defensive).
+#[inline]
+pub fn dec2(code: u8) -> i8 {
+    match code & 0b11 {
+        0b01 => 1,
+        0b10 => -1,
+        _ => 0,
+    }
+}
+
+/// Pack trits 4-per-byte, little-endian within the byte (trit i occupies
+/// bits 2i..2i+2). Trailing slots are zero-filled.
+pub fn pack2bit(trits: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; trits.len().div_ceil(4)];
+    for (i, &t) in trits.iter().enumerate() {
+        out[i / 4] |= enc2(t) << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Unpack `n` trits from a 2-bit stream.
+pub fn unpack2bit(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert!(bytes.len() * 4 >= n, "packed buffer too short");
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(dec2(bytes[i / 4] >> ((i % 4) * 2)));
+    }
+    out
+}
+
+/// 256-entry decode LUT: byte → 4 trits. Built once; the hot GEMV uses it
+/// to decode 4 trits per table lookup instead of 4 shift/mask chains.
+pub fn build_lut2() -> Vec<[i8; 4]> {
+    (0u16..256)
+        .map(|b| {
+            let b = b as u8;
+            [
+                dec2(b),
+                dec2(b >> 2),
+                dec2(b >> 4),
+                dec2(b >> 6),
+            ]
+        })
+        .collect()
+}
+
+/// Pack trits 5-per-byte in base 3 (digit value = trit + 1).
+pub fn pack_base3(trits: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(trits.len().div_ceil(5));
+    for chunk in trits.chunks(5) {
+        let mut v: u16 = 0;
+        // little-endian digits: first trit = least-significant digit
+        for &t in chunk.iter().rev() {
+            debug_assert!((-1..=1).contains(&t));
+            v = v * 3 + (t + 1) as u16;
+        }
+        debug_assert!(v < 243);
+        out.push(v as u8);
+    }
+    out
+}
+
+/// Unpack `n` trits from a base-3 stream.
+pub fn unpack_base3(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert!(bytes.len() * 5 >= n, "packed buffer too short");
+    let mut out = Vec::with_capacity(n);
+    'outer: for &b in bytes {
+        let mut v = b as u16;
+        for _ in 0..5 {
+            out.push((v % 3) as i8 - 1);
+            v /= 3;
+            if out.len() == n {
+                break 'outer;
+            }
+        }
+    }
+    out
+}
+
+/// Bytes needed to store `n` trits in each format — the Table 4 memory
+/// model uses these.
+pub fn bytes_2bit(n: usize) -> usize {
+    n.div_ceil(4)
+}
+
+pub fn bytes_base3(n: usize) -> usize {
+    n.div_ceil(5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, prop_assert, Gen};
+
+    #[test]
+    fn pack2_roundtrip_exact() {
+        let trits = vec![-1i8, 0, 1, 1, -1, 0, 0, 1, -1];
+        let packed = pack2bit(&trits);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack2bit(&packed, trits.len()), trits);
+    }
+
+    #[test]
+    fn pack2_density() {
+        assert_eq!(bytes_2bit(128), 32);
+        assert_eq!(bytes_2bit(129), 33);
+        assert_eq!(pack2bit(&vec![1i8; 128]).len(), 32);
+    }
+
+    #[test]
+    fn base3_roundtrip_exact() {
+        let trits = vec![-1i8, -1, 0, 1, 1, 0, -1, 1, 0, 0, 1];
+        let packed = pack_base3(&trits);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack_base3(&packed, trits.len()), trits);
+    }
+
+    #[test]
+    fn base3_denser_than_2bit() {
+        assert!(bytes_base3(1000) < bytes_2bit(1000));
+        assert_eq!(bytes_base3(1000), 200);
+        assert_eq!(bytes_2bit(1000), 250);
+    }
+
+    #[test]
+    fn lut_matches_scalar_decode() {
+        let lut = build_lut2();
+        for b in 0u16..256 {
+            let b = b as u8;
+            let expect = [dec2(b), dec2(b >> 2), dec2(b >> 4), dec2(b >> 6)];
+            assert_eq!(lut[b as usize], expect);
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(pack2bit(&[]).is_empty());
+        assert!(unpack2bit(&[], 0).is_empty());
+        assert!(pack_base3(&[]).is_empty());
+        assert!(unpack_base3(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn prop_pack2_roundtrip() {
+        check(200, |g: &mut Gen| {
+            let n = g.usize_in(0, 300);
+            let trits = g.vec_trits(n);
+            prop_assert(
+                unpack2bit(&pack2bit(&trits), n) == trits,
+                "2-bit roundtrip mismatch",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_base3_roundtrip() {
+        check(200, |g: &mut Gen| {
+            let n = g.usize_in(0, 300);
+            let trits = g.vec_trits(n);
+            prop_assert(
+                unpack_base3(&pack_base3(&trits), n) == trits,
+                "base-3 roundtrip mismatch",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_formats_agree() {
+        check(100, |g: &mut Gen| {
+            let n = g.usize_in(1, 200);
+            let trits = g.vec_trits(n);
+            let a = unpack2bit(&pack2bit(&trits), n);
+            let b = unpack_base3(&pack_base3(&trits), n);
+            prop_assert(a == b, "format decode disagreement")
+        });
+    }
+}

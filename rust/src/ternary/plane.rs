@@ -1,0 +1,153 @@
+//! Unpacked trit-plane: a shape-carrying matrix over {-1, 0, 1}.
+
+use crate::tensor::Matrix;
+
+/// A ternary matrix stored as i8 (debug/compute-friendly layout; the
+/// storage formats live in [`super::pack`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TritPlane {
+    pub rows: usize,
+    pub cols: usize,
+    pub trits: Vec<i8>,
+}
+
+impl TritPlane {
+    pub fn zeros(rows: usize, cols: usize) -> TritPlane {
+        TritPlane {
+            rows,
+            cols,
+            trits: vec![0; rows * cols],
+        }
+    }
+
+    /// Sign-initialization used by PTQTP (Algorithm 2 line 2):
+    /// `T = sign(W)` with `0 → 1` replacement so every trit starts active.
+    pub fn sign_init(w: &Matrix) -> TritPlane {
+        TritPlane {
+            rows: w.rows,
+            cols: w.cols,
+            trits: w
+                .data
+                .iter()
+                .map(|&x| if x < 0.0 { -1 } else { 1 })
+                .collect(),
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, trits: Vec<i8>) -> TritPlane {
+        assert_eq!(trits.len(), rows * cols);
+        debug_assert!(trits.iter().all(|&t| (-1..=1).contains(&t)));
+        TritPlane { rows, cols, trits }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i8 {
+        self.trits[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.trits[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i8] {
+        &mut self.trits[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn len(&self) -> usize {
+        self.trits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trits.is_empty()
+    }
+
+    /// Fraction of zero trits — drives the sparsity-aware kernels and the
+    /// Appendix-A sparsity discussion.
+    pub fn sparsity(&self) -> f64 {
+        if self.trits.is_empty() {
+            return 0.0;
+        }
+        self.trits.iter().filter(|&&t| t == 0).count() as f64 / self.trits.len() as f64
+    }
+
+    /// Count positions where two planes differ (Fig 5: per-iteration
+    /// plane-update visualization).
+    pub fn diff_count(&self, other: &TritPlane) -> usize {
+        assert_eq!(self.trits.len(), other.trits.len());
+        self.trits
+            .iter()
+            .zip(&other.trits)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
+    /// Dense f32 copy (for reconstruction/debug).
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.trits.iter().map(|&t| t as f32).collect(),
+        )
+    }
+
+    /// Histogram over {-1, 0, +1}.
+    pub fn value_counts(&self) -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for &t in &self.trits {
+            c[(t + 1) as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn sign_init_never_zero() {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::randn(8, 8, 1.0, &mut rng);
+        w.data[5] = 0.0;
+        let t = TritPlane::sign_init(&w);
+        assert!(t.trits.iter().all(|&x| x == 1 || x == -1));
+        assert_eq!(t.trits[5], 1, "zero maps to +1 per Appendix B");
+    }
+
+    #[test]
+    fn sign_init_matches_signs() {
+        let w = Matrix::from_vec(1, 4, vec![-2.0, 3.0, -0.5, 0.0]);
+        let t = TritPlane::sign_init(&w);
+        assert_eq!(t.trits, vec![-1, 1, -1, 1]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = TritPlane::from_vec(2, 2, vec![0, 1, -1, 0]);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_counts_sums() {
+        let t = TritPlane::from_vec(1, 6, vec![-1, -1, 0, 1, 1, 1]);
+        assert_eq!(t.value_counts(), [2, 1, 3]);
+    }
+
+    #[test]
+    fn diff_count_symmetric() {
+        let a = TritPlane::from_vec(1, 4, vec![-1, 0, 1, 1]);
+        let b = TritPlane::from_vec(1, 4, vec![-1, 1, 1, 0]);
+        assert_eq!(a.diff_count(&b), 2);
+        assert_eq!(b.diff_count(&a), 2);
+    }
+
+    #[test]
+    fn to_matrix_roundtrip_values() {
+        let t = TritPlane::from_vec(2, 2, vec![-1, 0, 1, -1]);
+        let m = t.to_matrix();
+        assert_eq!(m.data, vec![-1.0, 0.0, 1.0, -1.0]);
+    }
+}

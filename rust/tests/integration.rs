@@ -1,0 +1,213 @@
+//! Cross-module integration tests: quantize → model → eval → serve,
+//! plus PJRT artifact execution when `make artifacts` has run.
+
+use ptqtp::coordinator::{Request, SamplingParams, ServeEngine};
+use ptqtp::data::{CorpusGen, TaskSuite, Tokenizer};
+use ptqtp::eval::{eval_suite, perplexity};
+use ptqtp::model::{ModelConfig, Transformer};
+use ptqtp::quant::{self, QuantCtx, Quantizer};
+use ptqtp::rng::Rng;
+
+fn test_model(vocab: usize, seed: u64) -> Transformer {
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = vocab;
+    cfg.max_seq = 64;
+    let mut rng = Rng::new(seed);
+    Transformer::random(cfg, &mut rng)
+}
+
+#[test]
+fn quantize_then_eval_pipeline() {
+    let tok = Tokenizer::from_text("abcdefghij 0123456789+-*=?.:QA");
+    let model = test_model(tok.vocab_size(), 1);
+    let text = CorpusGen::new(5).domain_text(ptqtp::data::CorpusDomain::WikiSyn, 20);
+    let ppl_fp = perplexity(&model, &tok, &text);
+
+    for method in ["ptqtp", "rtn4", "billm"] {
+        let q = quant::by_name(method, 64).unwrap();
+        let mut m = model.clone();
+        m.quantize_with(q.as_ref(), &QuantCtx::default());
+        let ppl_q = perplexity(&m, &tok, &text);
+        assert!(ppl_q.is_finite(), "{method} ppl finite");
+        // random-weight models have near-uniform predictions; quantized
+        // ppl must stay in a sane band around the fp ppl
+        assert!(
+            ppl_q < ppl_fp * 50.0,
+            "{method}: ppl exploded {ppl_q} vs {ppl_fp}"
+        );
+    }
+}
+
+#[test]
+fn ptqtp_preserves_more_than_binary_on_trained_like_weights() {
+    // reconstruction ordering on every layer of a model
+    let model = test_model(32, 2);
+    let mut err_ptqtp = 0.0f64;
+    let mut err_billm = 0.0f64;
+    let ptq = quant::by_name("ptqtp", 128).unwrap();
+    let bil = quant::by_name("billm", 128).unwrap();
+    for (_, lin) in model.linear_layers() {
+        let w = lin.dense_weights();
+        err_ptqtp += w.sq_err(&ptq.quantize(&w, &QuantCtx::default()).w_hat);
+        err_billm += w.sq_err(&bil.quantize(&w, &QuantCtx::default()).w_hat);
+    }
+    assert!(err_ptqtp < err_billm, "{err_ptqtp} !< {err_billm}");
+}
+
+#[test]
+fn serve_quantized_model_end_to_end() {
+    let tok = Tokenizer::from_text("abcdefgh 0123456789+-*=?.:QA");
+    let mut model = test_model(tok.vocab_size(), 3);
+    model.quantize_with(
+        quant::by_name("ptqtp", 128).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    let mut engine = ServeEngine::new(model, Default::default());
+    for i in 0..6 {
+        engine.submit(Request::new(
+            i,
+            tok.encode("Q:2+2=? A:"),
+            SamplingParams {
+                max_new_tokens: 4,
+                stop_token: None,
+                ..Default::default()
+            },
+        ));
+    }
+    let out = engine.run_to_completion();
+    assert_eq!(out.len(), 6);
+    assert!(out.iter().all(|r| r.tokens.len() == 4));
+}
+
+#[test]
+fn task_suite_eval_runs_on_quantized_model() {
+    let tok = Tokenizer::from_text("abcdefghijklmnopqrstuvwxyz 0123456789+-*=?.:!>()[]{}QA");
+    let mut model = test_model(tok.vocab_size(), 4);
+    model.quantize_with(
+        quant::by_name("ptqtp", 128).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    let suite = TaskSuite::standard(9, 5, 8, 5);
+    let s = eval_suite(&model, &tok, &suite);
+    assert!(s.math_acc >= 0.0 && s.cloze_acc <= 1.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_quantized_eval() {
+    let tok = Tokenizer::from_text("abcdef 0123456789+-*=?.:QA");
+    let mut model = test_model(tok.vocab_size(), 5);
+    model.quantize_with(
+        quant::by_name("ptqtp", 128).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    let dir = std::env::temp_dir().join("ptqtp_it_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.ptw");
+    model.save(&path).unwrap();
+    let loaded = Transformer::load(&path).unwrap();
+    // saved form densifies ternary backends; logits must match exactly
+    let mut c1 = model.new_cache();
+    let mut c2 = loaded.new_cache();
+    let a = model.decode_step(1, &mut c1);
+    let b = loaded.decode_step(1, &mut c2);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5);
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(dir.join("q.json")).ok();
+}
+
+// ---------------------------------------------------------------------
+// PJRT integration (requires `make artifacts`)
+// ---------------------------------------------------------------------
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn pjrt_artifacts_execute_and_match_reference() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = ptqtp::runtime::ArtifactManifest::load("artifacts").unwrap();
+    let mut engine = ptqtp::runtime::PjrtEngine::cpu().unwrap();
+    manifest.load_all(&mut engine).unwrap();
+
+    // ternary_matmul: cross-check PJRT output against the Rust kernels
+    let spec = manifest.get("ternary_matmul").unwrap();
+    let (m, d) = (spec.inputs[0][0], spec.inputs[0][1]);
+    let n = spec.inputs[1][0];
+    let gpr = spec.inputs[3][1];
+    let group = d / gpr;
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+    let t1: Vec<f32> = (0..n * d).map(|_| rng.below(3) as f32 - 1.0).collect();
+    let t2: Vec<f32> = (0..n * d).map(|_| rng.below(3) as f32 - 1.0).collect();
+    let a1: Vec<f32> = (0..n * gpr).map(|_| rng.normal()).collect();
+    let a2: Vec<f32> = (0..n * gpr).map(|_| rng.normal()).collect();
+    let out = engine
+        .run_f32(
+            "ternary_matmul",
+            &[
+                (&[m, d], x.as_slice()),
+                (&[n, d], t1.as_slice()),
+                (&[n, d], t2.as_slice()),
+                (&[n, gpr], a1.as_slice()),
+                (&[n, gpr], a2.as_slice()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].len(), m * n);
+
+    // Rust-side reference via TernaryLinear
+    let mut lin = ptqtp::ternary::TernaryLinear::new(n, d, group);
+    lin.t1.trits = t1.iter().map(|&v| v as i8).collect();
+    lin.t2.trits = t2.iter().map(|&v| v as i8).collect();
+    lin.alpha1 = a1;
+    lin.alpha2 = a2;
+    for row in 0..m {
+        let y = ptqtp::ternary::gemv::gemv(&lin, &x[row * d..(row + 1) * d]);
+        for (j, &v) in y.iter().enumerate() {
+            let got = out[0][row * n + j];
+            assert!(
+                (got - v).abs() < 1e-3 * (1.0 + v.abs()),
+                "({row},{j}): pjrt {got} vs rust {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_ptqtp_step_runs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = ptqtp::runtime::ArtifactManifest::load("artifacts").unwrap();
+    let mut engine = ptqtp::runtime::PjrtEngine::cpu().unwrap();
+    engine
+        .load_hlo_text("ptqtp_step", manifest.path_of("ptqtp_step").unwrap())
+        .unwrap();
+    let spec = manifest.get("ptqtp_step").unwrap();
+    let (g, gg) = (spec.inputs[0][0], spec.inputs[0][1]);
+    let mut rng = Rng::new(13);
+    let w: Vec<f32> = (0..g * gg).map(|_| rng.normal() * 0.05).collect();
+    let t: Vec<f32> = w.iter().map(|&v| if v < 0.0 { -1.0 } else { 1.0 }).collect();
+    let lam = vec![1e-8f32; g];
+    let out = engine
+        .run_f32(
+            "ptqtp_step",
+            &[
+                (&[g, gg], w.as_slice()),
+                (&[g, gg], t.as_slice()),
+                (&[g, gg], t.as_slice()),
+                (&[g, 1], lam.as_slice()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 5, "t1,t2,a1,a2,lam outputs");
+    // trits legal
+    assert!(out[0].iter().all(|&v| v == -1.0 || v == 0.0 || v == 1.0));
+}
