@@ -57,6 +57,14 @@ fn main() {
         }
     }
 
+    if run_all || filter.contains("batched") {
+        println!("\n== batched forward (fused vs per-token) ==");
+        let args = Args::parse("bench", std::iter::empty(), &[]);
+        if let Err(e) = ptqtp::bench::batched::run(true, &args) {
+            println!("batched bench failed: {e}");
+        }
+    }
+
     if run_all || filter.contains("table") {
         println!("\n== paper tables (quick mode) ==");
         let args = Args::parse("bench", std::iter::empty(), &[]);

@@ -1,0 +1,154 @@
+//! Batched-forward throughput: old per-token stepping vs the fused
+//! batch path, at batch sizes {1, 4, 16}, for decode and prefill.
+//!
+//! The paper's deployment claim (4.63× end-to-end from multiply-free
+//! inference) needs the ternary kernels to see enough rows to amortize
+//! plane decoding; this bench measures exactly that amortization on
+//! the CPU kernels. Results go to stdout and to
+//! `BENCH_batched_forward.json` (`--out` to relocate).
+//!
+//! Invoke: `ptqtp bench --batched [--quick]` or `cargo bench -- batched`.
+
+use super::harness::bench_fn;
+use crate::cli::Args;
+use crate::model::{ForwardBatch, KvCache, ModelConfig, Transformer};
+use crate::quant::{self, QuantCtx};
+use crate::rng::Rng;
+use crate::serialize::Json;
+use std::time::Duration;
+
+/// Context depth each decode row attends over.
+const CTX_LEN: usize = 16;
+/// Prompt length for the prefill comparison.
+const PROMPT_LEN: usize = 64;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let family = args.str_or("family", "tiny");
+    let mut cfg = ModelConfig::family(family)?;
+    cfg.vocab_size = 64;
+    cfg.max_seq = 128;
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let mut model = Transformer::random(cfg, &mut rng);
+    model.quantize_with(
+        quant::by_name("ptqtp", 128)?.as_ref(),
+        &QuantCtx::default(),
+    );
+    let budget = Duration::from_millis(if quick { 250 } else { 1500 });
+    let iters = if quick { 60 } else { 400 };
+
+    println!("== batched forward: per-token vs fused ({family}, ptqtp) ==");
+    let mut decode_rows = Vec::new();
+    for &bs in &[1usize, 4, 16] {
+        // bs sequences, each with CTX_LEN committed positions
+        let mut scratch = model.new_scratch();
+        let mut caches: Vec<KvCache> = (0..bs).map(|_| model.new_cache()).collect();
+        let prompt: Vec<u32> = (0..CTX_LEN as u32).map(|i| (i * 7 + 3) % 64).collect();
+        for cache in caches.iter_mut() {
+            model.prefill(&prompt, cache, &mut scratch, 32);
+        }
+        let toks: Vec<u32> = (0..bs as u32).map(|i| (i * 11 + 5) % 64).collect();
+
+        // old path: one decode_step per sequence (fresh scratch per
+        // call — exactly the pre-refactor allocation behavior)
+        let per_token = bench_fn(&format!("decode/per-token/b{bs}"), 3, iters, budget, || {
+            for (i, cache) in caches.iter_mut().enumerate() {
+                let logits = model.decode_step(toks[i], cache);
+                std::hint::black_box(&logits);
+                cache.truncate(CTX_LEN);
+            }
+        });
+
+        // fused path: all bs rows in one forward_batch
+        let mut batch = ForwardBatch::new();
+        for (i, &t) in toks.iter().enumerate() {
+            batch.push(t, CTX_LEN, i, true);
+        }
+        let fused = bench_fn(&format!("decode/fused/b{bs}"), 3, iters, budget, || {
+            {
+                let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                model.forward_batch(&batch, &mut refs, &mut scratch);
+            }
+            std::hint::black_box(&scratch.logits);
+            for cache in caches.iter_mut() {
+                cache.truncate(CTX_LEN);
+            }
+        });
+
+        let tps_old = per_token.throughput(bs as f64);
+        let tps_new = fused.throughput(bs as f64);
+        let speedup = tps_new / tps_old;
+        println!(
+            "  decode  b={bs:<2}  per-token {tps_old:>9.0} tok/s   fused {tps_new:>9.0} tok/s   {speedup:>5.2}x"
+        );
+        decode_rows.push(
+            Json::obj()
+                .set("batch", bs)
+                .set("per_token_tps", tps_old)
+                .set("fused_tps", tps_new)
+                .set("speedup", speedup),
+        );
+    }
+
+    // prefill: one PROMPT_LEN prompt, per-token vs chunked-batched
+    let prompt: Vec<u32> = (0..PROMPT_LEN as u32).map(|i| (i * 13 + 1) % 64).collect();
+    let mut cache = model.new_cache();
+    let per_token = bench_fn("prefill/per-token", 2, iters, budget, || {
+        cache.reset();
+        for &t in &prompt {
+            let logits = model.decode_step(t, &mut cache);
+            std::hint::black_box(&logits);
+        }
+    });
+    let mut scratch = model.new_scratch();
+    let fused = bench_fn("prefill/fused", 2, iters, budget, || {
+        cache.reset();
+        let logits = model.prefill(&prompt, &mut cache, &mut scratch, 32);
+        std::hint::black_box(&logits);
+    });
+    let ptps_old = per_token.throughput(PROMPT_LEN as f64);
+    let ptps_new = fused.throughput(PROMPT_LEN as f64);
+    println!(
+        "  prefill n={PROMPT_LEN}  per-token {ptps_old:>9.0} tok/s   fused {ptps_new:>9.0} tok/s   {:>5.2}x",
+        ptps_new / ptps_old
+    );
+
+    let out_path = args.str_or("out", "BENCH_batched_forward.json");
+    let json = Json::obj()
+        .set("bench", "batched_forward")
+        .set("family", family)
+        .set("method", "ptqtp")
+        .set("ctx_len", CTX_LEN)
+        .set("decode", Json::Arr(decode_rows))
+        .set(
+            "prefill",
+            Json::obj()
+                .set("prompt_len", PROMPT_LEN)
+                .set("per_token_tps", ptps_old)
+                .set("fused_tps", ptps_new)
+                .set("speedup", ptps_new / ptps_old),
+        );
+    std::fs::write(out_path, json.pretty())?;
+    println!("  wrote {out_path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    #[test]
+    fn bench_runs_quick_and_emits_json() {
+        let dir = std::env::temp_dir().join("ptqtp_bench_batched");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("b.json");
+        let raw = vec!["--out".to_string(), out.to_string_lossy().to_string()];
+        let args = Args::parse("ptqtp", raw, &[]);
+        run(true, &args).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.req_str("bench").unwrap(), "batched_forward");
+        let decode = j.get("decode").and_then(Json::as_arr).unwrap();
+        assert_eq!(decode.len(), 3);
+        std::fs::remove_file(out).ok();
+    }
+}

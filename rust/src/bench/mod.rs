@@ -6,6 +6,7 @@
 //! in the paper's evaluation (see DESIGN.md §5 for the index) and are
 //! invoked through `ptqtp bench --table N` / `--fig N` or `cargo bench`.
 
+pub mod batched;
 pub mod harness;
 pub mod workload;
 

@@ -5,6 +5,12 @@
 //! `prefill_token_budget` prompt tokens from sequences still in
 //! prefill — so long prompts never stall decode latency (the paper's
 //! Table 5 prefill/decode split motivates exactly this policy).
+//!
+//! The plan describes **one fused batch**: the engine stacks every
+//! planned prefill token and decode token into a single
+//! `ForwardBatch` and executes them in one model pass (see
+//! `rust/DESIGN.md` §Batched-Forward) — [`StepPlan::batch_rows`] is
+//! the row count of that pass.
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +41,17 @@ pub struct StepPlan {
     pub prefill: Vec<(usize, usize)>,
     /// Slot indices to decode one token for.
     pub decode: Vec<usize>,
+}
+
+impl StepPlan {
+    /// Upper bound on rows in the fused forward batch this plan
+    /// describes: all prefill tokens plus one decode row per decoding
+    /// sequence (sequences that finish this step contribute their row's
+    /// sampling but no continuation row, so the realized batch can be
+    /// smaller). The engine pre-sizes its `ForwardBatch` with this.
+    pub fn batch_rows(&self) -> usize {
+        self.prefill.iter().map(|&(_, take)| take).sum::<usize>() + self.decode.len()
+    }
 }
 
 /// Plan one step given per-slot state snapshots.
@@ -97,6 +114,18 @@ mod tests {
         let plan = plan_step(&policy, &slots);
         assert_eq!(plan.prefill, vec![(0, 4)]);
         assert_eq!(plan.decode, vec![1], "decode never starved by prefill");
+    }
+
+    #[test]
+    fn batch_rows_counts_fused_work() {
+        let policy = BatchPolicy {
+            prefill_token_budget: 10,
+            ..Default::default()
+        };
+        let slots = vec![(true, 6, false), (false, 0, true), (true, 8, false)];
+        let plan = plan_step(&policy, &slots);
+        // 6 + 4 prefill rows + 1 decode row
+        assert_eq!(plan.batch_rows(), 11);
     }
 
     #[test]

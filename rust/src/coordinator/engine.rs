@@ -1,11 +1,19 @@
 //! The serving engine: owns one model replica, a KV pool, and the set
 //! of in-flight sequences; advances them with continuous batching.
+//!
+//! Control flow is **batch-drives-model**: each [`ServeEngine::step`]
+//! turns the scheduler plan into one [`ForwardBatch`] — every planned
+//! prefill chunk plus one decode token per running sequence — and
+//! executes it with a single [`Transformer::forward_batch`] call, so
+//! the ternary kernels see the whole row stack at once. Sampling and
+//! logits storage run through engine-owned scratch buffers; the steady
+//! state performs no per-token heap allocation.
 
 use super::batcher::{plan_step, BatchPolicy};
 use super::kv_pool::KvPool;
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, Response, SequenceState};
-use crate::model::Transformer;
+use crate::model::{ForwardBatch, ForwardScratch, KvCache, Transformer};
 use crate::rng::Rng;
 use std::collections::VecDeque;
 
@@ -17,6 +25,16 @@ pub struct ServeEngine {
     waiting: VecDeque<Request>,
     running: Vec<SequenceState>,
     pub metrics: Metrics,
+    /// Fused batch under construction (reused across steps).
+    batch: ForwardBatch,
+    /// Model-pass scratch (reused across steps).
+    scratch: ForwardScratch,
+    /// Slot owning each logits row of the current batch, in row order.
+    logit_slots: Vec<usize>,
+    /// Recycled logits buffers (pending_logits allocations).
+    logit_pool: Vec<Vec<f32>>,
+    /// Sampling probability scratch.
+    prob_buf: Vec<f32>,
 }
 
 impl ServeEngine {
@@ -29,6 +47,11 @@ impl ServeEngine {
             waiting: VecDeque::new(),
             running: Vec::new(),
             metrics: Metrics::default(),
+            batch: ForwardBatch::new(),
+            scratch: ForwardScratch::new(),
+            logit_slots: Vec::new(),
+            logit_pool: Vec::new(),
+            prob_buf: Vec::new(),
         }
     }
 
@@ -73,8 +96,14 @@ impl ServeEngine {
         rejected
     }
 
-    /// One engine iteration: admit, plan, execute prefill + decode,
-    /// retire finished sequences. Returns completed responses.
+    /// One engine iteration: admit, plan, fuse all planned prefill
+    /// chunks + decode tokens into **one** [`ForwardBatch`], execute it
+    /// with a single model pass, scatter the logits back, retire
+    /// finished sequences. Returns completed responses.
+    ///
+    /// Produces token-for-token the same per-sequence output as
+    /// stepping each sequence alone (`max_running == 1`): the batched
+    /// model path is bit-identical per row to sequential decoding.
     pub fn step(&mut self) -> Vec<Response> {
         let mut done = self.admit();
         let slots: Vec<(bool, usize, bool)> = self
@@ -84,38 +113,86 @@ impl ServeEngine {
             .collect();
         let plan = plan_step(&self.policy, &slots);
 
-        // --- prefill work
+        // --- phase 1: build the fused batch (slot-ascending order so
+        // rows per sequence stay contiguous) and sample continuations
+        // from last step's pending logits
+        let mut prefill_take = vec![0usize; self.running.len()];
         for &(slot, take) in &plan.prefill {
-            let seq = &mut self.running[slot];
-            for _ in 0..take {
-                let tok = seq.request.prompt[seq.prefill_cursor];
-                let logits = self.model.decode_step(tok, &mut seq.cache);
-                seq.prefill_cursor += 1;
-                if !seq.in_prefill() {
-                    // prompt fully consumed: these logits predict token 1
-                    seq.pending_logits = Some(logits);
+            prefill_take[slot] = take;
+        }
+        let mut decode_slot = vec![false; self.running.len()];
+        for &slot in &plan.decode {
+            decode_slot[slot] = true;
+        }
+        self.batch.clear();
+        self.batch.reserve(plan.batch_rows());
+        self.logit_slots.clear();
+        // cache index per participating slot, assigned in slot order
+        let mut participates = vec![false; self.running.len()];
+        let mut n_caches = 0usize;
+        for slot in 0..self.running.len() {
+            let take = prefill_take[slot];
+            if take > 0 {
+                let seq = &mut self.running[slot];
+                let ci = n_caches;
+                n_caches += 1;
+                participates[slot] = true;
+                let base = seq.cache.len();
+                for j in 0..take {
+                    let tok = seq.request.prompt[seq.prefill_cursor];
+                    seq.prefill_cursor += 1;
+                    // prompt fully consumed ⇒ this row's logits predict token 1
+                    let need = !seq.in_prefill();
+                    if need {
+                        self.logit_slots.push(slot);
+                    }
+                    self.batch.push(tok, base + j, ci, need);
                 }
+                self.metrics.prefill_tokens += take as u64;
+            } else if decode_slot[slot] {
+                let seq = &mut self.running[slot];
+                let logits = seq.pending_logits.take().expect("planned decode without logits");
+                let next = sample(&logits, &seq.request.params, seq.generated.len(), &mut self.prob_buf);
+                self.logit_pool.push(logits); // recycle the allocation
+                if seq.first_token_at.is_none() {
+                    seq.first_token_at = Some(std::time::Instant::now());
+                }
+                seq.generated.push(next);
+                self.metrics.decode_tokens += 1;
+                let stop = Some(next) == seq.request.params.stop_token;
+                let out_of_budget = seq.budget_left() == 0;
+                let cache_full = seq.cache.len() + 1 >= seq.cache.max_seq;
+                if !(stop || out_of_budget || cache_full) {
+                    let ci = n_caches;
+                    n_caches += 1;
+                    participates[slot] = true;
+                    self.logit_slots.push(slot);
+                    self.batch.push(next, seq.cache.len(), ci, true);
+                }
+                // else: finished; pending_logits stays None, retired below
             }
-            self.metrics.prefill_tokens += take as u64;
         }
 
-        // --- decode work
-        for &slot in &plan.decode {
-            let seq = &mut self.running[slot];
-            let logits = seq.pending_logits.take().expect("planned decode without logits");
-            let next = sample(&logits, &seq.request.params, seq.generated.len());
-            if seq.first_token_at.is_none() {
-                seq.first_token_at = Some(std::time::Instant::now());
+        // --- phase 2: one fused model pass over the whole stack
+        if !self.batch.is_empty() {
+            let model = &self.model;
+            let batch = &self.batch;
+            let mut caches: Vec<&mut KvCache> = Vec::with_capacity(n_caches);
+            for (slot, seq) in self.running.iter_mut().enumerate() {
+                if participates[slot] {
+                    caches.push(&mut seq.cache);
+                }
             }
-            seq.generated.push(next);
-            self.metrics.decode_tokens += 1;
-            let stop = Some(next) == seq.request.params.stop_token;
-            let out_of_budget = seq.budget_left() == 0;
-            let cache_full = seq.cache.len() + 1 >= seq.cache.max_seq;
-            if !(stop || out_of_budget || cache_full) {
-                seq.pending_logits = Some(self.model.decode_step(next, &mut seq.cache));
-            } else {
-                seq.pending_logits = None; // finished; retired below
+            debug_assert_eq!(caches.len(), n_caches);
+            let n_logits = model.forward_batch(batch, &mut caches, &mut self.scratch);
+            debug_assert_eq!(n_logits, self.logit_slots.len());
+
+            // --- phase 3: scatter logits back to their sequences
+            for (li, &slot) in self.logit_slots.iter().enumerate() {
+                let mut buf = self.logit_pool.pop().unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(self.scratch.logits.row(li));
+                self.running[slot].pending_logits = Some(buf);
             }
         }
 
@@ -173,8 +250,14 @@ impl ServeEngine {
     }
 }
 
-/// Greedy or temperature sampling.
-fn sample(logits: &[f32], params: &super::request::SamplingParams, step: usize) -> u32 {
+/// Greedy or temperature sampling. `probs` is caller-owned scratch so
+/// the decode hot loop allocates nothing.
+fn sample(
+    logits: &[f32],
+    params: &super::request::SamplingParams,
+    step: usize,
+    probs: &mut Vec<f32>,
+) -> u32 {
     if params.temperature <= 0.0 {
         let mut best = 0usize;
         let mut best_v = f32::NEG_INFINITY;
@@ -188,9 +271,10 @@ fn sample(logits: &[f32], params: &super::request::SamplingParams, step: usize) 
     }
     let mut rng = Rng::new(params.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let inv_t = 1.0 / params.temperature;
-    let mut probs: Vec<f32> = logits.iter().map(|&x| x * inv_t).collect();
-    crate::tensor::ops::softmax_inplace(&mut probs);
-    rng.weighted(&probs) as u32
+    probs.clear();
+    probs.extend(logits.iter().map(|&x| x * inv_t));
+    crate::tensor::ops::softmax_inplace(probs);
+    rng.weighted(probs) as u32
 }
 
 #[cfg(test)]
@@ -267,6 +351,81 @@ mod tests {
 
         for (a, b) in out_batched.iter().zip(&out_seq) {
             assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn batched_output_matches_sequential_quantized_ragged() {
+        // fused path over ternary kernels with G % 4 != 0 (ragged
+        // packing) must still be token-for-token identical
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(21);
+        let mut model = Transformer::random(cfg, &mut rng);
+        model.quantize_with(
+            crate::quant::by_name("ptqtp", 10).unwrap().as_ref(),
+            &crate::quant::QuantCtx::default(),
+        );
+        let policy = |max_running| BatchPolicy {
+            max_running,
+            prefill_token_budget: 5,
+            fcfs_prefill: true,
+        };
+        let submit = |e: &mut ServeEngine| {
+            e.submit(req(1, vec![3, 4, 9, 2, 8, 1, 7], 5));
+            e.submit(req(2, vec![7, 8], 6));
+            e.submit(req(3, vec![1, 2, 3, 4], 4));
+        };
+        let mut e1 = ServeEngine::new(model.clone(), policy(4));
+        submit(&mut e1);
+        let mut out_batched = e1.run_to_completion();
+        out_batched.sort_by_key(|r| r.id);
+        let mut e2 = ServeEngine::new(model, policy(1));
+        submit(&mut e2);
+        let mut out_seq = e2.run_to_completion();
+        out_seq.sort_by_key(|r| r.id);
+        for (a, b) in out_batched.iter().zip(&out_seq) {
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn fused_step_counts_one_model_pass_of_logits() {
+        // a step with 2 decoding seqs + 1 prefilling seq builds one
+        // batch; pending logits appear for exactly the right slots
+        let mut e = engine(4);
+        e.submit(req(1, vec![1, 2], 8));
+        e.submit(req(2, vec![3], 8));
+        e.step(); // admits + prefills (budget 8 covers both prompts)
+        assert_eq!(e.running(), 2);
+        e.submit(req(3, vec![4, 5, 6], 8));
+        let before = e.metrics.decode_tokens;
+        e.step(); // decodes seq 1+2, prefills seq 3, in one fused batch
+        assert_eq!(e.metrics.decode_tokens - before, 2);
+        assert_eq!(e.metrics.prefill_tokens, 2 + 1 + 3);
+    }
+
+    #[test]
+    fn temperature_sampling_parity_across_batching() {
+        // seeded temperature sampling is deterministic given logits, so
+        // fused batching must not change sampled tokens either
+        let mk = |max_running| {
+            let mut e = engine(max_running);
+            for i in 0..4 {
+                let mut r = req(i, vec![1 + i as u32, 2, 5], 5);
+                r.params.temperature = 0.8;
+                r.params.seed = 42 + i;
+                e.submit(r);
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let a = mk(4);
+        let b = mk(1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "req {}", x.id);
         }
     }
 

@@ -48,7 +48,7 @@ fn help() -> String {
             ("quantize", "quantize --model X.ptw --method ptqtp --out Y.ptw"),
             ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]"),
             ("serve", "serve --model X.ptw [--method ptqtp] --requests N"),
-            ("bench", "bench --table N | --fig N  (regenerates a paper exhibit)"),
+            ("bench", "bench --table N | --fig N | --batched  (paper exhibits + fused-batch bench)"),
             ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
         ],
         &[
@@ -168,9 +168,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench --table N | --fig N [--quick]`
+/// `bench --table N | --fig N | --batched [--quick]`
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let quick = args.flag("quick");
+    if args.flag("batched") {
+        return bench::batched::run(quick, args);
+    }
     if let Some(t) = args.get("table") {
         return bench::run_table(t, quick, args);
     }
@@ -186,7 +189,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    anyhow::bail!("bench requires --table N, --fig N, or --all")
+    anyhow::bail!("bench requires --table N, --fig N, --batched, or --all")
 }
 
 /// `runtime --artifacts artifacts/` — PJRT smoke test of the AOT chain.

@@ -1,10 +1,22 @@
-//! Grouped-query attention with KV cache (decode path) — the module
-//! Table 6 benchmarks (`LlamaAttention` latency, FP16 vs PTQTP).
+//! Grouped-query attention with KV cache — the module Table 6
+//! benchmarks (`LlamaAttention` latency, FP16 vs PTQTP).
+//!
+//! Two entry points: [`Attention::decode`] is the classic one-token
+//! path (kept as the numerics reference); [`Attention::decode_rows`]
+//! is the fused serving path — it processes a whole [`ForwardBatch`]'s
+//! rows at once, where each row carries its own position and its own
+//! sequence's KV cache, so prefill chunks and decode tokens of many
+//! sequences share one QKV projection over the stacked activations.
+//!
+//! [`ForwardBatch`]: super::batch::ForwardBatch
 
+use super::batch::ensure_shape;
 use super::kv::KvCache;
 use super::linear::QuantLinear;
 use super::rope::Rope;
 use crate::tensor::ops::softmax_inplace;
+use crate::tensor::Matrix;
+use crate::ternary::gemm::GemmScratch;
 
 /// One attention block's projections.
 #[derive(Clone, Debug)]
@@ -16,6 +28,17 @@ pub struct Attention {
     pub n_heads: usize,
     pub n_kv_heads: usize,
     pub head_dim: usize,
+}
+
+/// Reusable buffers for the batched attention pass.
+#[derive(Clone, Debug, Default)]
+pub struct AttnScratch {
+    pub(crate) q: Matrix,
+    pub(crate) k: Matrix,
+    pub(crate) v: Matrix,
+    pub(crate) attn: Matrix,
+    pub(crate) scores: Vec<f32>,
+    pub(crate) gemm: GemmScratch,
 }
 
 impl Attention {
@@ -47,11 +70,32 @@ impl Attention {
         let keys = cache.keys(layer);
         let vals = cache.values(layer);
         let t = keys.len() / kv_dim; // cached positions incl. current
+        let mut attn_out = vec![0.0f32; q_dim];
+        let mut scores = Vec::new();
+        self.attend_one(&q, keys, vals, t, &mut scores, &mut attn_out);
+        self.wo.forward_vec(&attn_out, out);
+    }
+
+    /// Score/softmax/weighted-sum for one query row over `t` cached
+    /// positions — the single numerics body shared by the per-token
+    /// [`Attention::decode`] and the batched [`Attention::decode_rows`]
+    /// paths, so fused/sequential parity cannot drift. `out` must be
+    /// zeroed (`q_dim` long); `keys`/`vals` hold `t · kv_dim` values.
+    fn attend_one(
+        &self,
+        q: &[f32],
+        keys: &[f32],
+        vals: &[f32],
+        t: usize,
+        scores: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let hd = self.head_dim;
+        let kv_dim = self.n_kv_heads * hd;
         let scale = 1.0 / (hd as f32).sqrt();
         let group = self.n_heads / self.n_kv_heads;
-
-        let mut attn_out = vec![0.0f32; q_dim];
-        let mut scores = vec![0.0f32; t];
+        scores.clear();
+        scores.resize(t, 0.0);
         for h in 0..self.n_heads {
             let kvh = h / group;
             let qh = &q[h * hd..(h + 1) * hd];
@@ -59,8 +103,8 @@ impl Attention {
                 let kh = &keys[ti * kv_dim + kvh * hd..ti * kv_dim + (kvh + 1) * hd];
                 *score = crate::tensor::ops::dot(qh, kh) * scale;
             }
-            softmax_inplace(&mut scores);
-            let oh = &mut attn_out[h * hd..(h + 1) * hd];
+            softmax_inplace(scores);
+            let oh = &mut out[h * hd..(h + 1) * hd];
             for (ti, &p) in scores.iter().enumerate() {
                 let vh = &vals[ti * kv_dim + kvh * hd..ti * kv_dim + (kvh + 1) * hd];
                 for i in 0..hd {
@@ -68,7 +112,73 @@ impl Attention {
                 }
             }
         }
-        self.wo.forward_vec(&attn_out, out);
+    }
+
+    /// Fused multi-position attention: row `i` of `normed` is one token
+    /// at `positions[i]` belonging to `caches[cache_of[i]]`. All rows'
+    /// K/V are appended (uncommitted) to their caches before any score
+    /// is computed, and row `i` attends over exactly the first
+    /// `positions[i] + 1` cached positions — so a prefill chunk sees
+    /// its own earlier rows (causal) but never later ones.
+    ///
+    /// Per row this is bit-identical to [`Attention::decode`]: the QKV
+    /// and output projections run the row-exact batched kernels, and
+    /// the score/softmax/weighted-sum loops mirror the decode path's
+    /// operation order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_rows(
+        &self,
+        normed: &Matrix,
+        positions: &[usize],
+        cache_of: &[usize],
+        rope: &Rope,
+        caches: &mut [&mut KvCache],
+        layer: usize,
+        scratch: &mut AttnScratch,
+        out: &mut Matrix,
+    ) {
+        let n = normed.rows;
+        debug_assert_eq!(positions.len(), n);
+        debug_assert_eq!(cache_of.len(), n);
+        let hd = self.head_dim;
+        let q_dim = self.n_heads * hd;
+        let kv_dim = self.n_kv_heads * hd;
+        ensure_shape(&mut scratch.q, n, q_dim);
+        ensure_shape(&mut scratch.k, n, kv_dim);
+        ensure_shape(&mut scratch.v, n, kv_dim);
+        ensure_shape(&mut scratch.attn, n, q_dim);
+        self.wq.forward_rows_into(normed, &mut scratch.q, &mut scratch.gemm);
+        self.wk.forward_rows_into(normed, &mut scratch.k, &mut scratch.gemm);
+        self.wv.forward_rows_into(normed, &mut scratch.v, &mut scratch.gemm);
+        for i in 0..n {
+            rope.apply_heads(scratch.q.row_mut(i), positions[i]);
+            rope.apply_heads(scratch.k.row_mut(i), positions[i]);
+        }
+        // stage every row's K/V first so intra-chunk attention sees them
+        for i in 0..n {
+            let cache = &mut *caches[cache_of[i]];
+            cache.append(layer, scratch.k.row(i), scratch.v.row(i));
+            debug_assert_eq!(
+                cache.staged_len(layer),
+                positions[i] + 1,
+                "batch rows for one cache must be contiguous with ascending positions"
+            );
+        }
+        for i in 0..n {
+            let cache = &*caches[cache_of[i]];
+            let t = positions[i] + 1; // causal horizon incl. this row
+            let keys = &cache.keys(layer)[..t * kv_dim];
+            let vals = &cache.values(layer)[..t * kv_dim];
+            self.attend_one(
+                scratch.q.row(i),
+                keys,
+                vals,
+                t,
+                &mut scratch.scores,
+                scratch.attn.row_mut(i),
+            );
+        }
+        self.wo.forward_rows_into(&scratch.attn, out, &mut scratch.gemm);
     }
 }
 
@@ -142,6 +252,92 @@ mod tests {
         attn.decode(&x, &rope, &mut c1, 0, 0, &mut o1);
         attn.decode(&x, &rope, &mut c2, 0, 0, &mut o2);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn decode_rows_bit_identical_to_sequential_decode() {
+        // one fused call over a 4-token chunk == four sequential decodes
+        let attn = make_attn(32, 4, 2, 7);
+        let rope = Rope::new(8, 16, 10_000.0);
+        let mut rng = Rng::new(8);
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.normal()).collect())
+            .collect();
+
+        // sequential reference
+        let mut seq_cache = KvCache::new(1, 16, 16);
+        let mut expect = Vec::new();
+        for (pos, x) in xs.iter().enumerate() {
+            let mut out = vec![0.0; 32];
+            attn.decode(x, &rope, &mut seq_cache, 0, pos, &mut out);
+            seq_cache.commit();
+            expect.push(out);
+        }
+
+        // fused chunk
+        let mut cache = KvCache::new(1, 16, 16);
+        let mut normed = Matrix::zeros(4, 32);
+        for (i, x) in xs.iter().enumerate() {
+            normed.row_mut(i).copy_from_slice(x);
+        }
+        let mut scratch = AttnScratch::default();
+        let mut out = Matrix::zeros(4, 32);
+        let positions = [0, 1, 2, 3];
+        let cache_of = [0usize; 4];
+        attn.decode_rows(
+            &normed, &positions, &cache_of, &rope, &mut [&mut cache], 0, &mut scratch, &mut out,
+        );
+        cache.commit_n(4);
+        for i in 0..4 {
+            assert_eq!(out.row(i), expect[i].as_slice(), "row {i}");
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.keys(0), seq_cache.keys(0));
+        assert_eq!(cache.values(0), seq_cache.values(0));
+    }
+
+    #[test]
+    fn decode_rows_multiple_sequences() {
+        // two sequences at different positions in one fused call
+        let attn = make_attn(16, 2, 2, 9);
+        let rope = Rope::new(8, 8, 10_000.0);
+        let mut rng = Rng::new(10);
+        let x0: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let x1: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+
+        // seq A already has one committed position
+        let warm: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let mut ca = KvCache::new(1, 16, 8);
+        let mut warm_out = vec![0.0; 16];
+        attn.decode(&warm, &rope, &mut ca, 0, 0, &mut warm_out);
+        ca.commit();
+        let mut cb = KvCache::new(1, 16, 8);
+
+        // sequential reference for both next tokens
+        let mut ca_ref = ca.clone();
+        let mut ea = vec![0.0; 16];
+        attn.decode(&x0, &rope, &mut ca_ref, 0, 1, &mut ea);
+        let mut cb_ref = cb.clone();
+        let mut eb = vec![0.0; 16];
+        attn.decode(&x1, &rope, &mut cb_ref, 0, 0, &mut eb);
+
+        let mut normed = Matrix::zeros(2, 16);
+        normed.row_mut(0).copy_from_slice(&x0);
+        normed.row_mut(1).copy_from_slice(&x1);
+        let mut scratch = AttnScratch::default();
+        let mut out = Matrix::zeros(2, 16);
+        attn.decode_rows(
+            &normed,
+            &[1, 0],
+            &[0, 1],
+            &rope,
+            &mut [&mut ca, &mut cb],
+            0,
+            &mut scratch,
+            &mut out,
+        );
+        assert_eq!(out.row(0), ea.as_slice());
+        assert_eq!(out.row(1), eb.as_slice());
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! The fused forward batch: one engine step = one stacked matrix pass.
+//!
+//! [`ForwardBatch`] collects every token the scheduler planned for a
+//! step — all prefill chunks plus one decode token per running
+//! sequence — as rows tagged with `(position, kv-cache index,
+//! needs-logits)`. [`Transformer::forward_batch`] then runs each layer
+//! exactly once over the whole stack, so the ternary kernels see
+//! enough rows to amortize plane decoding (the paper's deployment
+//! speedup condition), instead of being fed one token at a time.
+//!
+//! [`ForwardScratch`] owns every intermediate buffer the pass needs;
+//! the serving engine keeps one alive across steps so the hot loop
+//! performs no per-token heap allocation.
+//!
+//! Dataflow and invariants are documented in `rust/DESIGN.md`
+//! §Batched-Forward.
+//!
+//! [`Transformer::forward_batch`]: super::transformer::Transformer::forward_batch
+
+use super::attention::AttnScratch;
+use crate::tensor::Matrix;
+use crate::ternary::gemm::GemmScratch;
+
+/// Row-set for one fused forward pass, stored struct-of-arrays so the
+/// layer loop can hand the kernels contiguous metadata slices.
+///
+/// Invariant (checked in debug builds by the attention pass): rows that
+/// share a `cache_idx` are contiguous and their positions ascend by 1 —
+/// i.e. each sequence contributes one ordered chunk. Rows of different
+/// sequences may appear in any order.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardBatch {
+    pub tokens: Vec<u32>,
+    pub positions: Vec<usize>,
+    /// Index into the `caches` slice passed to `forward_batch`.
+    pub cache_of: Vec<usize>,
+    pub need_logits: Vec<bool>,
+    /// Rows per cache index (how many positions to commit per cache).
+    per_cache: Vec<usize>,
+}
+
+impl ForwardBatch {
+    pub fn new() -> ForwardBatch {
+        ForwardBatch::default()
+    }
+
+    /// Pre-size the row buffers (`StepPlan::batch_rows` upper bound).
+    pub fn reserve(&mut self, rows: usize) {
+        self.tokens.reserve(rows);
+        self.positions.reserve(rows);
+        self.cache_of.reserve(rows);
+        self.need_logits.reserve(rows);
+    }
+
+    /// Drop all rows but keep buffer capacity (per-step reuse).
+    pub fn clear(&mut self) {
+        self.tokens.clear();
+        self.positions.clear();
+        self.cache_of.clear();
+        self.need_logits.clear();
+        self.per_cache.clear();
+    }
+
+    /// Add one token row. `pos` must be the next position of the cache
+    /// (`committed length + rows already pushed for this cache`).
+    pub fn push(&mut self, token: u32, pos: usize, cache_idx: usize, need_logits: bool) {
+        self.tokens.push(token);
+        self.positions.push(pos);
+        self.cache_of.push(cache_idx);
+        self.need_logits.push(need_logits);
+        if self.per_cache.len() <= cache_idx {
+            self.per_cache.resize(cache_idx + 1, 0);
+        }
+        self.per_cache[cache_idx] += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Rows contributed by cache `cache_idx` (positions to commit).
+    pub fn rows_for_cache(&self, cache_idx: usize) -> usize {
+        self.per_cache.get(cache_idx).copied().unwrap_or(0)
+    }
+
+    /// Number of caches referenced (max cache index + 1).
+    pub fn n_caches(&self) -> usize {
+        self.per_cache.len()
+    }
+
+    /// Rows flagged as needing logits.
+    pub fn n_logit_rows(&self) -> usize {
+        self.need_logits.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Every intermediate buffer of one fused forward pass. Create once,
+/// reuse forever: all members grow to the high-water batch shape and
+/// are recycled across steps, layers, and sequences.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardScratch {
+    /// Residual stream, batch × d_model.
+    pub(crate) x: Matrix,
+    /// Pre-norm output, batch × d_model.
+    pub(crate) normed: Matrix,
+    /// Attention / MLP output added back to the residual.
+    pub(crate) delta: Matrix,
+    /// SwiGLU intermediates, batch × d_ff.
+    pub(crate) gate: Matrix,
+    pub(crate) up: Matrix,
+    /// Hidden rows that need logits, n_logit_rows × d_model.
+    pub(crate) hidden: Matrix,
+    /// Attention-pass buffers (q/k/v/scores).
+    pub(crate) attn: AttnScratch,
+    /// Ternary decode buffers for the MLP / LM-head kernels.
+    pub(crate) gemm: GemmScratch,
+    /// Reusable batch for the single-row / chunked wrappers
+    /// (`decode_step_with`, `prefill`).
+    pub(crate) step_batch: ForwardBatch,
+    /// Output logits, n_logit_rows × vocab. Valid until the next pass.
+    pub logits: Matrix,
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        ForwardScratch::default()
+    }
+}
+
+/// Resize a scratch matrix, reusing its allocation. Contents zeroed.
+pub(crate) fn ensure_shape(m: &mut Matrix, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.clear();
+    m.data.resize(rows * cols, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_tracks_per_cache_counts() {
+        let mut b = ForwardBatch::new();
+        b.push(1, 0, 0, false);
+        b.push(2, 1, 0, true);
+        b.push(9, 5, 2, true);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.rows_for_cache(0), 2);
+        assert_eq!(b.rows_for_cache(1), 0);
+        assert_eq!(b.rows_for_cache(2), 1);
+        assert_eq!(b.n_caches(), 3);
+        assert_eq!(b.n_logit_rows(), 2);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.n_caches(), 0);
+    }
+
+    #[test]
+    fn ensure_shape_reuses_allocation() {
+        let mut m = Matrix::zeros(4, 4);
+        m.data[0] = 7.0;
+        let cap = m.data.capacity();
+        ensure_shape(&mut m, 2, 3);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert!(m.data.iter().all(|&v| v == 0.0), "stale data cleared");
+        assert_eq!(m.data.capacity(), cap, "no realloc when shrinking");
+    }
+}

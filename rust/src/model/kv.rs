@@ -41,19 +41,41 @@ impl KvCache {
         self.len >= self.max_seq
     }
 
-    /// Append one position's K/V for layer `layer`. All layers must be
-    /// appended exactly once per step, then [`KvCache::commit`] called.
+    /// Append one position's K/V for layer `layer`. Multiple positions
+    /// may be staged per layer before a single [`KvCache::commit_n`]
+    /// (the batched prefill path); the classic decode path appends one
+    /// position per layer then calls [`KvCache::commit`]. Staged
+    /// (uncommitted) positions are already visible through
+    /// [`KvCache::keys`]/[`KvCache::values`], which is what lets a
+    /// prefill chunk attend to itself causally.
     pub fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.kv_dim);
         debug_assert_eq!(v.len(), self.kv_dim);
-        assert!(!self.is_full(), "KV cache overflow (max_seq={})", self.max_seq);
+        assert!(
+            self.k[layer].len() < self.max_seq * self.kv_dim,
+            "KV cache overflow (max_seq={})",
+            self.max_seq
+        );
         self.k[layer].extend_from_slice(k);
         self.v[layer].extend_from_slice(v);
     }
 
+    /// Staged positions for `layer`: committed length plus any appends
+    /// not yet committed.
+    pub fn staged_len(&self, layer: usize) -> usize {
+        self.k[layer].len() / self.kv_dim
+    }
+
     /// Advance the position counter after all layers appended.
     pub fn commit(&mut self) {
-        self.len += 1;
+        self.commit_n(1);
+    }
+
+    /// Advance the position counter by `n` after every layer received
+    /// `n` staged appends (the batched forward path commits a whole
+    /// prefill chunk at once).
+    pub fn commit_n(&mut self, n: usize) {
+        self.len += n;
         for layer in 0..self.n_layers {
             debug_assert_eq!(self.k[layer].len(), self.len * self.kv_dim);
             debug_assert_eq!(self.v[layer].len(), self.len * self.kv_dim);
@@ -140,6 +162,38 @@ mod tests {
         c.append(0, &[9.0, 9.0], &[0.0, 0.0]);
         c.commit();
         assert_eq!(c.keys(0)[4], 9.0);
+    }
+
+    #[test]
+    fn multi_append_then_commit_n() {
+        // batched prefill: stage a whole chunk per layer, commit once
+        let mut c = KvCache::new(2, 2, 8);
+        for layer in 0..2 {
+            for p in 0..3 {
+                c.append(layer, &[p as f32, 0.0], &[0.0, p as f32]);
+            }
+            assert_eq!(c.staged_len(layer), 3);
+        }
+        assert_eq!(c.len(), 0, "not yet committed");
+        // staged K/V already visible (prefill chunk self-attention)
+        assert_eq!(c.keys(0).len(), 6);
+        assert_eq!(c.keys(1)[4], 2.0);
+        c.commit_n(3);
+        assert_eq!(c.len(), 3);
+        // and the cache keeps working with classic single commits
+        c.append(0, &[9.0, 9.0], &[0.0, 0.0]);
+        c.append(1, &[9.0, 9.0], &[0.0, 0.0]);
+        c.commit();
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn staged_overflow_panics() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.append(0, &[0.0; 2], &[0.0; 2]);
+        c.append(0, &[0.0; 2], &[0.0; 2]);
+        c.append(0, &[0.0; 2], &[0.0; 2]); // third staged position > max_seq
     }
 
     #[test]

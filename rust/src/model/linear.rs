@@ -7,7 +7,9 @@
 
 use crate::quant::{QuantCtx, QuantRepr, Quantizer};
 use crate::tensor::{ops, Matrix};
-use crate::ternary::gemm::{gemm_decoded, gemm_packed};
+use crate::ternary::gemm::{
+    gemm_decoded, gemm_packed, gemm_packed_blocked, gemm_packed_blocked_into, GemmScratch,
+};
 use crate::ternary::gemv::gemv_packed;
 use crate::ternary::linear::PackedTernaryLinear;
 
@@ -53,15 +55,47 @@ impl QuantLinear {
         }
     }
 
-    /// Prefill-path forward: Y = X·Wᵀ for a batch of rows.
+    /// Prefill-path forward: Y = X·Wᵀ for a batch of rows (allocating).
+    /// Throughput-tuned, NOT bit-matched to `forward_vec` — serving uses
+    /// [`QuantLinear::forward_rows_into`] instead.
     pub fn forward_mat(&self, x: &Matrix) -> Matrix {
         match &self.backend {
             Backend::Dense(w) => ops::matmul(x, &w.transpose()),
             Backend::Ternary(t) => {
                 if x.rows >= 8 {
                     gemm_decoded(t, x)
-                } else {
+                } else if x.rows == 1 {
                     gemm_packed(t, x)
+                } else {
+                    gemm_packed_blocked(t, x)
+                }
+            }
+        }
+    }
+
+    /// Batched serving forward: Y = X·Wᵀ into a caller-owned output,
+    /// zero allocation. Guaranteed **bit-identical per row** to
+    /// [`QuantLinear::forward_vec`] on both backends (dense rows run
+    /// the same matvec kernel; ternary rows run the row-blocked packed
+    /// kernel, which mirrors `gemv_packed`'s FP order exactly) — this
+    /// is what makes the fused engine step produce token-for-token the
+    /// same output as sequential decoding.
+    pub fn forward_rows_into(&self, x: &Matrix, y: &mut Matrix, scratch: &mut GemmScratch) {
+        debug_assert_eq!(x.cols, self.shape.1);
+        debug_assert_eq!(y.rows, x.rows);
+        debug_assert_eq!(y.cols, self.shape.0);
+        match &self.backend {
+            Backend::Dense(w) => {
+                for r in 0..x.rows {
+                    ops::matvec_into(w, x.row(r), y.row_mut(r));
+                }
+            }
+            Backend::Ternary(t) => {
+                if x.rows == 1 {
+                    // single decode row: skip the decode-to-buffer pass
+                    gemv_packed(t, x.row(0), y.row_mut(0));
+                } else {
+                    gemm_packed_blocked_into(t, x, y, scratch);
                 }
             }
         }
@@ -165,6 +199,36 @@ mod tests {
         lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
         let after = lin.resident_bytes();
         assert!(after * 3 < before, "{after} vs {before}");
+    }
+
+    #[test]
+    fn rows_path_bit_identical_to_vec_path() {
+        // both backends: the batched kernel must equal per-row forward_vec
+        // exactly (not just approximately) — engine parity depends on it
+        let mut rng = Rng::new(7);
+        let mut scratch = GemmScratch::new();
+        for quantized in [false, true] {
+            let w = Matrix::rand_heavy(12, 40, 0.05, &mut rng);
+            let mut lin = QuantLinear::dense(w);
+            if quantized {
+                // G=10: ragged groups, G % 4 != 0
+                lin.quantize_with(
+                    &Ptqtp::new(crate::quant::ptqtp::PtqtpOpts {
+                        group: 10,
+                        ..Default::default()
+                    }),
+                    &QuantCtx::default(),
+                );
+            }
+            let x = Matrix::randn(9, 40, 1.0, &mut rng);
+            let mut ym = Matrix::zeros(9, 12);
+            lin.forward_rows_into(&x, &mut ym, &mut scratch);
+            for r in 0..9 {
+                let mut yv = vec![0.0; 12];
+                lin.forward_vec(x.row(r), &mut yv);
+                assert_eq!(ym.row(r), yv.as_slice(), "quantized={quantized} row {r}");
+            }
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! config sidecar; [`transformer::Transformer::load`] reads both.
 
 pub mod attention;
+pub mod batch;
 pub mod config;
 pub mod kv;
 pub mod linear;
@@ -19,6 +20,7 @@ pub mod norm;
 pub mod rope;
 pub mod transformer;
 
+pub use batch::{ForwardBatch, ForwardScratch};
 pub use config::ModelConfig;
 pub use kv::KvCache;
 pub use linear::QuantLinear;

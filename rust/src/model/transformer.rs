@@ -1,7 +1,14 @@
 //! The full decoder-only transformer: embedding → N blocks → norm →
 //! LM head, with checkpoint IO and whole-model quantization.
+//!
+//! The primary forward path is **batched**: [`Transformer::forward_batch`]
+//! runs one fused pass over a [`ForwardBatch`] — any mix of prefill
+//! chunks and decode tokens across sequences — hitting each layer's
+//! weights exactly once per step. [`Transformer::decode_step`] remains
+//! as a thin single-row wrapper so all existing numerics stay pinned.
 
 use super::attention::Attention;
+use super::batch::{ensure_shape, ForwardBatch, ForwardScratch};
 use super::config::ModelConfig;
 use super::kv::KvCache;
 use super::linear::QuantLinear;
@@ -10,6 +17,10 @@ use super::rope::Rope;
 use crate::quant::{QuantCtx, Quantizer};
 use crate::serialize::{TensorFile, TensorEntry};
 use crate::tensor::Matrix;
+
+/// Row count per chunk for the prefill/NLL paths: two kernel row-blocks,
+/// enough to amortize plane decoding without inflating the logits buffer.
+pub const PREFILL_CHUNK: usize = 64;
 
 /// One transformer block: pre-norm attention + pre-norm SwiGLU MLP.
 #[derive(Clone, Debug)]
@@ -23,42 +34,72 @@ pub struct Block {
 }
 
 impl Block {
-    /// SwiGLU MLP: down( silu(gate(x)) * up(x) ).
-    fn mlp(&self, x: &[f32], out: &mut [f32]) {
-        let ff = self.w_gate.out_features();
-        let mut g = vec![0.0f32; ff];
-        let mut u = vec![0.0f32; ff];
-        self.w_gate.forward_vec(x, &mut g);
-        self.w_up.forward_vec(x, &mut u);
-        for i in 0..ff {
-            let s = g[i];
-            let silu = s / (1.0 + (-s).exp());
-            g[i] = silu * u[i];
-        }
-        self.w_down.forward_vec(&g, out);
-    }
-
-    /// Decode one token through this block (residual stream in `x`).
-    pub fn decode(
+    /// Fused pass of a whole row stack through this block: pre-norm
+    /// attention (per-row position/cache) then pre-norm SwiGLU MLP,
+    /// residuals updated in `x`. All intermediates live in `scratch` —
+    /// no per-token allocation, unlike the old one-token `decode`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_rows(
         &self,
-        x: &mut [f32],
+        x: &mut Matrix,
         rope: &Rope,
-        cache: &mut KvCache,
+        positions: &[usize],
+        cache_of: &[usize],
+        caches: &mut [&mut KvCache],
         layer: usize,
-        pos: usize,
+        scratch: &mut ForwardScratch,
     ) {
-        let d = x.len();
-        let mut normed = vec![0.0f32; d];
-        let mut delta = vec![0.0f32; d];
-        self.attn_norm.forward(x, &mut normed);
-        self.attn.decode(&normed, rope, cache, layer, pos, &mut delta);
-        for i in 0..d {
-            x[i] += delta[i];
+        let n = x.rows;
+        let d = x.cols;
+        ensure_shape(&mut scratch.normed, n, d);
+        ensure_shape(&mut scratch.delta, n, d);
+        for i in 0..n {
+            self.attn_norm.forward(x.row(i), scratch.normed.row_mut(i));
         }
-        self.mlp_norm.forward(x, &mut normed);
-        self.mlp(&normed, &mut delta);
-        for i in 0..d {
-            x[i] += delta[i];
+        self.attn.decode_rows(
+            &scratch.normed,
+            positions,
+            cache_of,
+            rope,
+            caches,
+            layer,
+            &mut scratch.attn,
+            &mut scratch.delta,
+        );
+        for i in 0..n {
+            let xr = x.row_mut(i);
+            let dr = scratch.delta.row(i);
+            for j in 0..d {
+                xr[j] += dr[j];
+            }
+        }
+        for i in 0..n {
+            self.mlp_norm.forward(x.row(i), scratch.normed.row_mut(i));
+        }
+        let ff = self.w_gate.out_features();
+        ensure_shape(&mut scratch.gate, n, ff);
+        ensure_shape(&mut scratch.up, n, ff);
+        self.w_gate
+            .forward_rows_into(&scratch.normed, &mut scratch.gate, &mut scratch.gemm);
+        self.w_up
+            .forward_rows_into(&scratch.normed, &mut scratch.up, &mut scratch.gemm);
+        for i in 0..n {
+            let g = scratch.gate.row_mut(i);
+            let u = scratch.up.row(i);
+            for j in 0..ff {
+                let s = g[j];
+                let silu = s / (1.0 + (-s).exp());
+                g[j] = silu * u[j];
+            }
+        }
+        self.w_down
+            .forward_rows_into(&scratch.gate, &mut scratch.delta, &mut scratch.gemm);
+        for i in 0..n {
+            let xr = x.row_mut(i);
+            let dr = scratch.delta.row(i);
+            for j in 0..d {
+                xr[j] += dr[j];
+            }
         }
     }
 }
@@ -85,60 +126,187 @@ impl Transformer {
         )
     }
 
-    /// Decode one token id at position `cache.len()`; returns logits.
-    /// The caller owns the cache (enables continuous batching upstream).
-    pub fn decode_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
-        let pos = cache.len();
-        let d = self.config.d_model;
-        let mut x = self.tok_embed.row(token as usize).to_vec();
-        debug_assert_eq!(x.len(), d);
-        for (layer, block) in self.blocks.iter().enumerate() {
-            block.decode(&mut x, &self.rope, cache, layer, pos);
-        }
-        cache.commit();
-        self.final_norm.forward_inplace(&mut x);
-        self.logits(&x)
+    /// Fresh scratch for the batched forward path. One per engine (or
+    /// per thread); every buffer inside is reused across steps.
+    pub fn new_scratch(&self) -> ForwardScratch {
+        ForwardScratch::new()
     }
 
-    fn logits(&self, h: &[f32]) -> Vec<f32> {
-        match &self.lm_head {
-            Some(head) => {
-                let mut out = vec![0.0f32; self.config.vocab_size];
-                head.forward_vec(h, &mut out);
-                out
-            }
-            None => {
-                // tied: logits = E·h
-                let mut out = vec![0.0f32; self.config.vocab_size];
-                crate::tensor::ops::matvec_into(&self.tok_embed, h, &mut out);
-                out
+    /// One fused pass over `batch`: embed all rows, run every layer
+    /// once over the whole stack (attention per row against its own
+    /// cache), commit each touched cache by its row count, then compute
+    /// logits for the rows that asked for them into `scratch.logits`
+    /// (row order = batch order of `need_logits` rows). Returns the
+    /// number of logits rows.
+    ///
+    /// `caches[batch.cache_of[i]]` is row `i`'s sequence cache; rows of
+    /// one cache must be contiguous with consecutive positions starting
+    /// at the cache's committed length.
+    ///
+    /// Per row this is bit-identical to [`Transformer::decode_step`] —
+    /// the batched kernels replay the per-token FP operation order —
+    /// which is what lets the serving engine fuse prefill and decode
+    /// into one matrix step without changing any sequence's tokens.
+    pub fn forward_batch(
+        &self,
+        batch: &ForwardBatch,
+        caches: &mut [&mut KvCache],
+        scratch: &mut ForwardScratch,
+    ) -> usize {
+        let n = batch.len();
+        let d = self.config.d_model;
+        debug_assert!(batch.n_caches() <= caches.len());
+        if n == 0 {
+            ensure_shape(&mut scratch.logits, 0, self.config.vocab_size);
+            return 0;
+        }
+        let mut x = std::mem::take(&mut scratch.x);
+        ensure_shape(&mut x, n, d);
+        for i in 0..n {
+            x.row_mut(i)
+                .copy_from_slice(self.tok_embed.row(batch.tokens[i] as usize));
+        }
+        for (layer, block) in self.blocks.iter().enumerate() {
+            block.forward_rows(
+                &mut x,
+                &self.rope,
+                &batch.positions,
+                &batch.cache_of,
+                caches,
+                layer,
+                scratch,
+            );
+        }
+        for (ci, cache) in caches.iter_mut().enumerate() {
+            let rows = batch.rows_for_cache(ci);
+            if rows > 0 {
+                cache.commit_n(rows);
             }
         }
+        let n_logits = batch.n_logit_rows();
+        ensure_shape(&mut scratch.hidden, n_logits, d);
+        let mut li = 0;
+        for i in 0..n {
+            if batch.need_logits[i] {
+                self.final_norm.forward(x.row(i), scratch.hidden.row_mut(li));
+                li += 1;
+            }
+        }
+        ensure_shape(&mut scratch.logits, n_logits, self.config.vocab_size);
+        match &self.lm_head {
+            Some(head) => {
+                head.forward_rows_into(&scratch.hidden, &mut scratch.logits, &mut scratch.gemm)
+            }
+            None => {
+                // tied: logits = E·h, row-exact with the decode path
+                for r in 0..n_logits {
+                    crate::tensor::ops::matvec_into(
+                        &self.tok_embed,
+                        scratch.hidden.row(r),
+                        scratch.logits.row_mut(r),
+                    );
+                }
+            }
+        }
+        scratch.x = x;
+        n_logits
+    }
+
+    /// Decode one token id at position `cache.len()`; returns logits.
+    /// The caller owns the cache (enables continuous batching upstream).
+    ///
+    /// Thin single-row wrapper over [`Transformer::forward_batch`];
+    /// allocates its own scratch per call — hot loops should hold a
+    /// [`ForwardScratch`] and use [`Transformer::decode_step_with`].
+    pub fn decode_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        let mut scratch = self.new_scratch();
+        self.decode_step_with(token, cache, &mut scratch).to_vec()
+    }
+
+    /// Allocation-free decode step: one row through the batched path,
+    /// returning the logits slice inside `scratch`.
+    pub fn decode_step_with<'s>(
+        &self,
+        token: u32,
+        cache: &mut KvCache,
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s [f32] {
+        let mut b = std::mem::take(&mut scratch.step_batch);
+        b.clear();
+        b.push(token, cache.len(), 0, true);
+        self.forward_batch(&b, &mut [&mut *cache], scratch);
+        scratch.step_batch = b;
+        scratch.logits.row(0)
+    }
+
+    /// Chunked prefill through the batched path: consumes `tokens` in
+    /// chunks of `chunk` rows and returns the logits after the last
+    /// token (all zeros when `tokens` is empty).
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        scratch: &mut ForwardScratch,
+        chunk: usize,
+    ) -> Vec<f32> {
+        let chunk = chunk.max(1);
+        let mut logits = vec![0.0f32; self.config.vocab_size];
+        let mut i = 0;
+        while i < tokens.len() {
+            let take = (tokens.len() - i).min(chunk);
+            let mut b = std::mem::take(&mut scratch.step_batch);
+            b.clear();
+            let base = cache.len();
+            for j in 0..take {
+                b.push(tokens[i + j], base + j, 0, i + j + 1 == tokens.len());
+            }
+            self.forward_batch(&b, &mut [&mut *cache], scratch);
+            scratch.step_batch = b;
+            i += take;
+        }
+        if !tokens.is_empty() {
+            logits.copy_from_slice(scratch.logits.row(0));
+        }
+        logits
     }
 
     /// Teacher-forced negative log-likelihoods: nll[i] = −log p(t[i+1] | t[..=i]).
+    /// Runs the batched path with chunked all-position logits.
     pub fn sequence_nll(&self, tokens: &[u32]) -> Vec<f64> {
         let mut cache = self.new_cache();
-        let mut nll = Vec::with_capacity(tokens.len().saturating_sub(1));
-        for i in 0..tokens.len().saturating_sub(1) {
-            let logits = self.decode_step(tokens[i], &mut cache);
-            let logp = crate::tensor::ops::log_softmax(&logits);
-            nll.push(-(logp[tokens[i + 1] as usize] as f64));
+        let mut scratch = self.new_scratch();
+        let n = tokens.len().saturating_sub(1);
+        let mut nll = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(PREFILL_CHUNK);
+            let mut b = std::mem::take(&mut scratch.step_batch);
+            b.clear();
+            for j in 0..take {
+                b.push(tokens[i + j], i + j, 0, true);
+            }
+            self.forward_batch(&b, &mut [&mut cache], &mut scratch);
+            scratch.step_batch = b;
+            for j in 0..take {
+                let logp = crate::tensor::ops::log_softmax(scratch.logits.row(j));
+                nll.push(-(logp[tokens[i + j + 1] as usize] as f64));
+            }
+            i += take;
         }
         nll
     }
 
     /// Greedy generation from a prompt; returns generated ids (prompt
-    /// excluded). Stops at `stop_token` or `max_new`.
+    /// excluded). Stops at `stop_token` or `max_new`. Prefill runs
+    /// chunked through the batched path; decode reuses one scratch.
     pub fn generate_greedy(&self, prompt: &[u32], max_new: usize, stop_token: Option<u32>) -> Vec<u32> {
         let mut cache = self.new_cache();
-        let mut logits = vec![0.0f32; self.config.vocab_size];
-        for &t in prompt {
-            logits = self.decode_step(t, &mut cache);
-            if cache.is_full() {
-                return Vec::new();
-            }
+        let mut scratch = self.new_scratch();
+        if prompt.len() >= self.config.max_seq {
+            // prompt alone fills the cache: nothing can be generated
+            return Vec::new();
         }
+        let mut logits = self.prefill(prompt, &mut cache, &mut scratch, PREFILL_CHUNK);
         let mut out = Vec::new();
         for _ in 0..max_new {
             let next = argmax(&logits) as u32;
@@ -149,7 +317,7 @@ impl Transformer {
             if cache.is_full() {
                 break;
             }
-            logits = self.decode_step(next, &mut cache);
+            logits.copy_from_slice(self.decode_step_with(next, &mut cache, &mut scratch));
         }
         out
     }
@@ -437,5 +605,109 @@ mod tests {
         let m = tiny_model(8);
         let layers = m.linear_layers();
         assert_eq!(layers.len(), m.config.n_layers * 7);
+    }
+
+    /// Sequential reference: decode tokens one at a time, collect the
+    /// logits of the positions in `want`.
+    fn sequential_logits(m: &Transformer, tokens: &[u32], want: &[usize]) -> Vec<Vec<f32>> {
+        let mut cache = m.new_cache();
+        let mut out = Vec::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            let logits = m.decode_step(t, &mut cache);
+            if want.contains(&i) {
+                out.push(logits);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn forward_batch_chunk_bit_identical_to_decode_steps() {
+        for quantized in [false, true] {
+            let mut m = tiny_model(10);
+            if quantized {
+                m.quantize_with(&Ptqtp::default(), &crate::quant::QuantCtx::default());
+            }
+            let tokens = [3u32, 1, 4, 1, 5, 9, 2, 6];
+            let expect = sequential_logits(&m, &tokens, &[5, 7]);
+
+            let mut cache = m.new_cache();
+            let mut scratch = m.new_scratch();
+            let mut batch = ForwardBatch::new();
+            for (i, &t) in tokens.iter().enumerate() {
+                batch.push(t, i, 0, i == 5 || i == 7);
+            }
+            let n = m.forward_batch(&batch, &mut [&mut cache], &mut scratch);
+            assert_eq!(n, 2);
+            assert_eq!(cache.len(), tokens.len());
+            assert_eq!(scratch.logits.row(0), expect[0].as_slice(), "q={quantized}");
+            assert_eq!(scratch.logits.row(1), expect[1].as_slice(), "q={quantized}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_multi_sequence_matches_sequential() {
+        // two sequences at different depths + one fresh prefill chunk,
+        // all fused into a single pass
+        let m = tiny_model(11);
+        let seq_a = [1u32, 7, 3];
+        let seq_b = [9u32];
+
+        // references, fully sequential
+        let ea = sequential_logits(&m, &seq_a, &[2]).remove(0);
+        let eb = sequential_logits(&m, &seq_b, &[0]).remove(0);
+
+        // fused: seq A prefilled 2 tokens already, decodes its third;
+        // seq B prefills its single token in the same batch
+        let mut ca = m.new_cache();
+        m.decode_step(seq_a[0], &mut ca);
+        m.decode_step(seq_a[1], &mut ca);
+        let mut cb = m.new_cache();
+        let mut scratch = m.new_scratch();
+        let mut batch = ForwardBatch::new();
+        batch.push(seq_a[2], 2, 0, true);
+        batch.push(seq_b[0], 0, 1, true);
+        let n = m.forward_batch(&batch, &mut [&mut ca, &mut cb], &mut scratch);
+        assert_eq!(n, 2);
+        assert_eq!(scratch.logits.row(0), ea.as_slice());
+        assert_eq!(scratch.logits.row(1), eb.as_slice());
+        assert_eq!(ca.len(), 3);
+        assert_eq!(cb.len(), 1);
+    }
+
+    #[test]
+    fn prefill_matches_token_at_a_time() {
+        let m = tiny_model(12);
+        let tokens = [2u32, 4, 8, 1, 0, 3, 3, 7, 5];
+        let expect = sequential_logits(&m, &tokens, &[tokens.len() - 1]).remove(0);
+        let mut cache = m.new_cache();
+        let mut scratch = m.new_scratch();
+        // chunk=4 forces multiple ragged chunks
+        let got = m.prefill(&tokens, &mut cache, &mut scratch, 4);
+        assert_eq!(got, expect);
+        assert_eq!(cache.len(), tokens.len());
+    }
+
+    #[test]
+    fn decode_step_with_reuses_scratch() {
+        let m = tiny_model(13);
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        let mut scratch = m.new_scratch();
+        for t in [1u32, 5, 9, 2] {
+            let a = m.decode_step(t, &mut c1);
+            let b = m.decode_step_with(t, &mut c2, &mut scratch).to_vec();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let m = tiny_model(14);
+        let mut scratch = m.new_scratch();
+        let batch = ForwardBatch::new();
+        let n = m.forward_batch(&batch, &mut [], &mut scratch);
+        assert_eq!(n, 0);
+        assert_eq!(scratch.logits.rows, 0);
     }
 }

@@ -1,108 +1,171 @@
 //! The PJRT execution engine: compile HLO-text artifacts once, execute
 //! many times from the Rust hot path.
+//!
+//! The real engine needs the `xla` crate (PJRT C-API bindings), which
+//! is only present in some build environments — it is gated behind the
+//! `pjrt` cargo feature. Without the feature a stub with the same API
+//! is compiled; it errors at construction so every caller (CLI
+//! `runtime` subcommand, PJRT integration tests) fails fast with a
+//! clear message instead of breaking the build.
 
-use std::collections::BTreeMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::tensor::Matrix;
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-use crate::tensor::Matrix;
+    /// A compiled artifact registry bound to one PJRT client.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    }
 
-/// A compiled artifact registry bound to one PJRT client.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    impl PjrtEngine {
+        /// CPU-backed engine (the only backend in this environment; the same
+        /// HLO would compile for TPU through a TPU PJRT plugin).
+        pub fn cpu() -> anyhow::Result<PjrtEngine> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(PjrtEngine {
+                client,
+                executables: BTreeMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO text file under `name`.
+        pub fn load_hlo_text(&mut self, name: &str, path: impl AsRef<Path>) -> anyhow::Result<()> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.executables.contains_key(name)
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            self.executables.keys().map(String::as_str).collect()
+        }
+
+        /// Execute an artifact on f32 inputs. Each input is (shape, data);
+        /// the module's tuple output is flattened to a list of f32 vectors.
+        pub fn run_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[usize], &[f32])],
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            let exe = self
+                .executables
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (shape, data) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape input for {name}: {e:?}"))?;
+                literals.push(lit);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+            let out_lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
+            // outputs are lowered with return_tuple=True
+            let elements = out_lit
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose tuple of {name}: {e:?}"))?;
+            let mut out = Vec::with_capacity(elements.len());
+            for el in elements {
+                out.push(
+                    el.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("read f32 output of {name}: {e:?}"))?,
+                );
+            }
+            Ok(out)
+        }
+
+        /// Convenience: single-output artifact on matrix inputs.
+        pub fn run_matrices(&self, name: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<f32>> {
+            let shaped: Vec<(Vec<usize>, &[f32])> = inputs
+                .iter()
+                .map(|m| (vec![m.rows, m.cols], m.data.as_slice()))
+                .collect();
+            let borrowed: Vec<(&[usize], &[f32])> =
+                shaped.iter().map(|(s, d)| (s.as_slice(), *d)).collect();
+            let mut outs = self.run_f32(name, &borrowed)?;
+            anyhow::ensure!(!outs.is_empty(), "artifact '{name}' produced no outputs");
+            Ok(outs.remove(0))
+        }
+    }
 }
 
-impl PjrtEngine {
-    /// CPU-backed engine (the only backend in this environment; the same
-    /// HLO would compile for TPU through a TPU PJRT plugin).
-    pub fn cpu() -> anyhow::Result<PjrtEngine> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(PjrtEngine {
-            client,
-            executables: BTreeMap::new(),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::tensor::Matrix;
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: ptqtp was built without the `pjrt` feature \
+         (rebuild with `--features pjrt` and the `xla` crate in the crate cache)";
+
+    /// Stub with the same API as the real engine; errors at construction.
+    pub struct PjrtEngine {
+        _priv: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO text file under `name`.
-    pub fn load_hlo_text(&mut self, name: &str, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        self.executables.keys().map(String::as_str).collect()
-    }
-
-    /// Execute an artifact on f32 inputs. Each input is (shape, data);
-    /// the module's tuple output is flattened to a list of f32 vectors.
-    pub fn run_f32(
-        &self,
-        name: &str,
-        inputs: &[(&[usize], &[f32])],
-    ) -> anyhow::Result<Vec<Vec<f32>>> {
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (shape, data) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow::anyhow!("reshape input for {name}: {e:?}"))?;
-            literals.push(lit);
+    impl PjrtEngine {
+        pub fn cpu() -> anyhow::Result<PjrtEngine> {
+            anyhow::bail!("{UNAVAILABLE}")
         }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
-        let out_lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
-        // outputs are lowered with return_tuple=True
-        let elements = out_lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decompose tuple of {name}: {e:?}"))?;
-        let mut out = Vec::with_capacity(elements.len());
-        for el in elements {
-            out.push(
-                el.to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("read f32 output of {name}: {e:?}"))?,
-            );
-        }
-        Ok(out)
-    }
 
-    /// Convenience: single-output artifact on matrix inputs.
-    pub fn run_matrices(&self, name: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<f32>> {
-        let shaped: Vec<(Vec<usize>, &[f32])> = inputs
-            .iter()
-            .map(|m| (vec![m.rows, m.cols], m.data.as_slice()))
-            .collect();
-        let borrowed: Vec<(&[usize], &[f32])> = shaped
-            .iter()
-            .map(|(s, d)| (s.as_slice(), *d))
-            .collect();
-        let mut outs = self.run_f32(name, &borrowed)?;
-        anyhow::ensure!(!outs.is_empty(), "artifact '{name}' produced no outputs");
-        Ok(outs.remove(0))
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo_text(
+            &mut self,
+            _name: &str,
+            _path: impl AsRef<Path>,
+        ) -> anyhow::Result<()> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+
+        pub fn has(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn run_f32(
+            &self,
+            _name: &str,
+            _inputs: &[(&[usize], &[f32])],
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
+
+        pub fn run_matrices(&self, _name: &str, _inputs: &[&Matrix]) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("{UNAVAILABLE}")
+        }
     }
 }
+
+pub use imp::PjrtEngine;
 
 impl std::fmt::Debug for PjrtEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -115,18 +178,20 @@ impl std::fmt::Debug for PjrtEngine {
 
 #[cfg(test)]
 mod tests {
-    // PJRT-dependent tests live in `rust/tests/runtime_integration.rs`
-    // (they need artifacts from `make artifacts`); here we only check
-    // engine construction and error paths that need no artifacts.
+    // PJRT-dependent tests live in `rust/tests/integration.rs` (they
+    // need artifacts from `make artifacts`); here we only check engine
+    // construction and error paths that need no artifacts.
     use super::*;
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn cpu_engine_constructs() {
         let engine = PjrtEngine::cpu().expect("PJRT CPU client");
         assert!(!engine.platform().is_empty());
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn missing_artifact_errors() {
         let engine = PjrtEngine::cpu().unwrap();
         let err = engine.run_f32("nope", &[]).unwrap_err().to_string();
@@ -134,10 +199,18 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn bad_path_errors() {
         let mut engine = PjrtEngine::cpu().unwrap();
         assert!(engine
             .load_hlo_text("x", "/definitely/not/here.hlo.txt")
             .is_err());
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_errors_with_clear_message() {
+        let err = PjrtEngine::cpu().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -18,6 +18,13 @@ pub struct Matrix {
     pub data: Vec<f32>,
 }
 
+impl Default for Matrix {
+    /// Empty 0×0 matrix (scratch-buffer initial state).
+    fn default() -> Matrix {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl Matrix {
     /// Zero-filled matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {

@@ -6,13 +6,111 @@
 //! per row-block of X so plane bytes stream exactly once per block —
 //! the CPU analogue of the paper's threadblock HBM schedule.
 
-use super::gemv::{gemv_fused, gemv_packed};
+use super::gemv::{decode_plane_row, gemv_fused, gemv_packed};
 use super::linear::{PackedTernaryLinear, TernaryLinear};
 use crate::tensor::Matrix;
 
 /// Row-block edge for X; keeps a block of X plus one decoded channel in
 /// L2 cache.
 const XBLOCK: usize = 32;
+
+/// Reusable decode buffers for the row-blocked packed kernel — one
+/// decoded channel per plane. Owned by the caller (the model's
+/// `ForwardScratch`) so the serving hot loop never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct GemmScratch {
+    dec1: Vec<f32>,
+    dec2: Vec<f32>,
+}
+
+impl GemmScratch {
+    pub fn new() -> GemmScratch {
+        GemmScratch::default()
+    }
+}
+
+/// Row-blocked `Y = X · Ŵᵀ` over the packed deployment form.
+///
+/// The serving batch kernel: each output channel's planes are decoded
+/// once per `XBLOCK` rows of X (amortizing the 2-bit→f32 decode over
+/// the whole block), and the inner loop is a pure f32 multiply-add over
+/// the decoded trits. Every output element is computed with the exact
+/// FP operation order of [`gemv_packed`], so the batched forward path
+/// is **bit-identical** to per-token decoding — the property the
+/// engine's batched-vs-sequential parity tests pin down.
+pub fn gemm_packed_blocked_into(
+    lin: &PackedTernaryLinear,
+    x: &Matrix,
+    y: &mut Matrix,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(x.cols, lin.cols, "gemm inner dim mismatch");
+    assert_eq!(y.rows, x.rows, "gemm out rows mismatch");
+    assert_eq!(y.cols, lin.rows, "gemm out cols mismatch");
+    let gpr = lin.groups_per_row();
+    let aligned = lin.group % 4 == 0 && lin.cols % 4 == 0;
+    scratch.dec1.resize(lin.cols, 0.0);
+    scratch.dec2.resize(lin.cols, 0.0);
+    for rb in (0..x.rows).step_by(XBLOCK) {
+        let re = (rb + XBLOCK).min(x.rows);
+        for ch in 0..lin.rows {
+            let p1 = &lin.p1[ch * lin.row_stride..(ch + 1) * lin.row_stride];
+            let p2 = &lin.p2[ch * lin.row_stride..(ch + 1) * lin.row_stride];
+            decode_plane_row(p1, lin.cols, &mut scratch.dec1);
+            decode_plane_row(p2, lin.cols, &mut scratch.dec2);
+            for xr in rb..re {
+                let xrow = x.row(xr);
+                let mut acc = 0.0f32;
+                for g in 0..gpr {
+                    let start = g * lin.group;
+                    let end = (start + lin.group).min(lin.cols);
+                    let (s1, s2) = if aligned {
+                        decoded_pair_sum_aligned(&scratch.dec1, &scratch.dec2, xrow, start, end)
+                    } else {
+                        decoded_pair_sum_scalar(&scratch.dec1, &scratch.dec2, xrow, start, end)
+                    };
+                    let ai = ch * gpr + g;
+                    acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
+                }
+                y.data[xr * lin.rows + ch] = acc;
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`gemm_packed_blocked_into`].
+pub fn gemm_packed_blocked(lin: &PackedTernaryLinear, x: &Matrix) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, lin.rows);
+    let mut scratch = GemmScratch::new();
+    gemm_packed_blocked_into(lin, x, &mut y, &mut scratch);
+    y
+}
+
+/// Mirror of `gemv::plane_pair_sum_aligned` over decoded-f32 planes:
+/// the same 4-wide sum expression per byte, so results are bit-equal.
+#[inline]
+fn decoded_pair_sum_aligned(d1: &[f32], d2: &[f32], x: &[f32], start: usize, end: usize) -> (f32, f32) {
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    for b in start / 4..end / 4 {
+        let i = b * 4;
+        s1 += d1[i] * x[i] + d1[i + 1] * x[i + 1] + d1[i + 2] * x[i + 2] + d1[i + 3] * x[i + 3];
+        s2 += d2[i] * x[i] + d2[i + 1] * x[i + 1] + d2[i + 2] * x[i + 2] + d2[i + 3] * x[i + 3];
+    }
+    (s1, s2)
+}
+
+/// Mirror of `gemv::plane_pair_sum_scalar` over decoded-f32 planes.
+#[inline]
+fn decoded_pair_sum_scalar(d1: &[f32], d2: &[f32], x: &[f32], start: usize, end: usize) -> (f32, f32) {
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    for c in start..end {
+        s1 += d1[c] * x[c];
+        s2 += d2[c] * x[c];
+    }
+    (s1, s2)
+}
 
 /// Y = X · Ŵᵀ with unpacked planes (reference path).
 pub fn gemm(lin: &TernaryLinear, x: &Matrix) -> Matrix {
@@ -152,6 +250,40 @@ mod tests {
         for i in 0..a.data.len() {
             assert!((a.data[i] - b.data[i]).abs() < 1e-4 * (1.0 + a.data[i].abs()));
             assert!((a.data[i] - c.data[i]).abs() < 1e-4 * (1.0 + a.data[i].abs()));
+        }
+    }
+
+    #[test]
+    fn blocked_bit_identical_to_gemv_packed() {
+        // the parity guarantee the batched forward path relies on:
+        // every output element equals the per-token gemv bit-for-bit,
+        // for aligned (G%4==0) and ragged (G%4!=0, cols%4!=0) layouts
+        let mut rng = Rng::new(58);
+        for (rows, cols, group) in [(10, 64, 32), (5, 37, 10), (7, 48, 12), (3, 16, 128)] {
+            let lin = random_linear(rows, cols, group, 59 + rows as u64);
+            let packed = lin.to_packed();
+            let x = Matrix::randn(XBLOCK + 7, cols, 1.0, &mut rng);
+            let y = gemm_packed_blocked(&packed, &x);
+            for r in 0..x.rows {
+                let mut yv = vec![0.0; rows];
+                gemv_packed(&packed, x.row(r), &mut yv);
+                assert_eq!(&y.data[r * rows..(r + 1) * rows], yv.as_slice(),
+                    "row {r} (rows={rows} cols={cols} G={group})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scratch_reuse_across_shapes() {
+        let mut rng = Rng::new(60);
+        let mut scratch = super::GemmScratch::new();
+        for (rows, cols, group) in [(6, 40, 8), (4, 24, 6)] {
+            let lin = random_linear(rows, cols, group, 61).to_packed();
+            let x = Matrix::randn(5, cols, 1.0, &mut rng);
+            let mut y = Matrix::zeros(5, rows);
+            gemm_packed_blocked_into(&lin, &x, &mut y, &mut scratch);
+            let expect = gemm_packed(&lin, &x);
+            assert_eq!(y.data, expect.data);
         }
     }
 

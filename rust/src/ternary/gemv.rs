@@ -2,7 +2,7 @@
 //!
 //! The paper's Appendix A.1 observation: a ternary weight contributes
 //! `+x`, `-x`, or nothing — so the inner loop needs only adds.
-//! CPU mapping of the paper's CUDA kernel (see DESIGN.md
+//! CPU mapping of the paper's CUDA kernel (see `rust/DESIGN.md`
 //! §Hardware-Adaptation): we stream the 2-bit packed planes, decode 4
 //! trits per byte via a 256-entry LUT, accumulate each plane in its own
 //! register, and apply the two group scales once per group at the
@@ -143,6 +143,24 @@ fn plane_pair_sum_aligned(p1: &[u8], p2: &[u8], x: &[f32], start: usize, end: us
         s2 += d2[0] * xb[0] + d2[1] * xb[1] + d2[2] * xb[2] + d2[3] * xb[3];
     }
     (s1, s2)
+}
+
+/// Decode one packed plane row to f32 trits (whole bytes via the LUT,
+/// ragged tail per-trit). Produces exactly the values the packed gemv
+/// sees, so kernels working from the decoded buffer stay bit-identical
+/// to [`gemv_packed`] — the property the batched forward path relies on
+/// (see `rust/DESIGN.md` §Batched-Forward).
+pub(crate) fn decode_plane_row(p: &[u8], cols: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= cols);
+    let lut = lut_f32();
+    let full = cols / 4;
+    for b in 0..full {
+        out[b * 4..b * 4 + 4].copy_from_slice(&lut[p[b] as usize]);
+    }
+    for c in full * 4..cols {
+        let sh = (c % 4) * 2;
+        out[c] = dec2(p[c / 4] >> sh) as f32;
+    }
 }
 
 /// Ragged fallback: per-trit decode.

@@ -1,0 +1,105 @@
+//! Offline shim for the `anyhow` crate (no registry access in this
+//! build environment). Implements exactly the subset the `ptqtp` crate
+//! uses: [`Result`], [`Error`], the [`anyhow!`]/[`bail!`]/[`ensure!`]
+//! macros, and `?`-conversion from any `std::error::Error`.
+//!
+//! Semantics match real anyhow for that subset: `Error` is an opaque
+//! display-able error value, `{:#}` formats the same as `{}` (we store
+//! a flattened message rather than a cause chain).
+
+use std::fmt;
+
+/// Opaque error type carrying a formatted message.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` lowers to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/here")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let r: Result<()> = (|| {
+            ensure!(x == 4, "x was {x}");
+            Ok(())
+        })();
+        assert_eq!(r.unwrap_err().to_string(), "x was 3");
+        let r: Result<()> = (|| bail!("stop"))();
+        assert_eq!(format!("{:#}", r.unwrap_err()), "stop");
+    }
+}
