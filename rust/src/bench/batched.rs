@@ -11,10 +11,11 @@
 
 use super::harness::bench_fn;
 use crate::cli::Args;
-use crate::model::{ForwardBatch, KvCache, ModelConfig, Transformer};
+use crate::model::{ForwardBatch, ForwardScratch, KvCache, ModelConfig, Transformer};
 use crate::quant::{self, QuantCtx};
 use crate::rng::Rng;
 use crate::serialize::Json;
+use crate::threads::Pool;
 use std::time::Duration;
 
 /// Context depth each decode row attends over.
@@ -112,6 +113,36 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         ptps_new / ptps_old
     );
 
+    // --threads scaling on the fused prefill path: each lane count must
+    // first reproduce the sequential logits bit-for-bit, then race
+    cache.reset();
+    let logits_seq = model.prefill(&prompt, &mut cache, &mut scratch, 32);
+    let mut scaling_rows = Vec::new();
+    let mut tps1 = f64::NAN;
+    for n in [1usize, 2, 4] {
+        let mut scratch_n = ForwardScratch::with_pool(Pool::new(n));
+        cache.reset();
+        let check = model.prefill(&prompt, &mut cache, &mut scratch_n, 32);
+        assert_eq!(check, logits_seq, "threaded prefill drifted at {n} threads");
+        let r = bench_fn(&format!("prefill/threads{n}"), 2, iters, budget, || {
+            cache.reset();
+            let logits = model.prefill(&prompt, &mut cache, &mut scratch_n, 32);
+            std::hint::black_box(&logits);
+        });
+        let tps = r.throughput(PROMPT_LEN as f64);
+        if n == 1 {
+            tps1 = tps;
+        }
+        let speedup = tps / tps1;
+        println!("  prefill threads={n}  {tps:>9.0} tok/s   {speedup:>5.2}x vs sequential");
+        scaling_rows.push(
+            Json::obj()
+                .set("threads", n)
+                .set("tps", tps)
+                .set("speedup_vs_1", speedup),
+        );
+    }
+
     let out_path = args.str_or("out", "BENCH_batched_forward.json");
     let json = Json::obj()
         .set("bench", "batched_forward")
@@ -126,7 +157,8 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                 .set("per_token_tps", ptps_old)
                 .set("fused_tps", ptps_new)
                 .set("speedup", ptps_new / ptps_old),
-        );
+        )
+        .set("prefill_scaling", Json::Arr(scaling_rows));
     std::fs::write(out_path, json.pretty())?;
     println!("  wrote {out_path}");
     Ok(())
@@ -149,6 +181,8 @@ mod tests {
         assert_eq!(j.req_str("bench").unwrap(), "batched_forward");
         let decode = j.get("decode").and_then(Json::as_arr).unwrap();
         assert_eq!(decode.len(), 3);
+        let scaling = j.get("prefill_scaling").and_then(Json::as_arr).unwrap();
+        assert_eq!(scaling.len(), 3);
         std::fs::remove_file(out).ok();
     }
 }

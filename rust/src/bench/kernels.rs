@@ -1,0 +1,194 @@
+//! Kernel-tier race (`ptqtp bench --kernels`): branchless-FMA → packed
+//! LUT-decode → activation-indexed LUT, sequential and row-parallel, at
+//! decode (gemv, rows ≥ 256) and prefill (gemm, m = 64) shapes.
+//!
+//! Before any timing, every racer's output is asserted `==` (bitwise)
+//! against `gemv_packed` — so running this bench in release mode (where
+//! `debug_assert!`s are off) doubles as the kernel-parity regression
+//! smoke CI runs. Results go to stdout and `BENCH_kernels.json`
+//! (`--out` to relocate), the perf-trajectory baseline for the LUT tier
+//! and `--threads` scaling.
+
+use super::harness::bench_fn;
+use super::workload::random_ternary;
+use crate::cli::Args;
+use crate::rng::Rng;
+use crate::serialize::Json;
+use crate::tensor::Matrix;
+use crate::ternary::gemm::{gemm_packed_blocked, gemm_packed_blocked_par_into, GemmScratch};
+use crate::ternary::gemv::{gemv_fused, gemv_packed, gemv_packed_par};
+use crate::ternary::lut::{gemm_lut_into, gemv_lut};
+use crate::threads::Pool;
+use std::time::Duration;
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let threads = args.threads_or_default();
+    let budget = Duration::from_millis(if quick { 200 } else { 900 });
+    let iters = if quick { 80 } else { 400 };
+    let pool = Pool::new(threads);
+
+    // ---- decode: gemv over projection-shaped matrices (rows ≥ 256) ----
+    let decode_shapes: Vec<(usize, usize)> = if quick {
+        vec![(256, 128)]
+    } else {
+        vec![(256, 128), (688, 256), (1024, 512)]
+    };
+    println!("== kernel race: decode gemv (threads={threads}) ==");
+    let mut decode_rows = Vec::new();
+    for &(rows, cols) in &decode_shapes {
+        let lin = random_ternary(rows, cols, 128, 1 + rows as u64);
+        let packed = lin.to_packed();
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+
+        // parity gate: every racer bitwise-equal to gemv_packed
+        let mut y_ref = vec![0.0f32; rows];
+        gemv_packed(&packed, &x, &mut y_ref);
+        let mut table = Vec::new();
+        let mut y = vec![0.0f32; rows];
+        gemv_lut(&packed, &x, &mut y, &mut table);
+        assert_eq!(y, y_ref, "LUT tier drifted from gemv_packed ({rows}x{cols})");
+        y.fill(0.0);
+        gemv_packed_par(&packed, &x, &mut y, &pool);
+        assert_eq!(y, y_ref, "parallel packed drifted ({rows}x{cols})");
+        let mut scratch = GemmScratch::new();
+        scratch.pool = pool.clone();
+        y.fill(0.0);
+        crate::ternary::lut::gemv_lut_into(&packed, &x, &mut y, &mut scratch);
+        assert_eq!(y, y_ref, "parallel LUT drifted ({rows}x{cols})");
+
+        let fused = bench_fn(&format!("gemv/fused/{rows}x{cols}"), 3, iters, budget, || {
+            gemv_fused(&lin, &x, &mut y)
+        });
+        let packed_t = bench_fn(&format!("gemv/packed/{rows}x{cols}"), 3, iters, budget, || {
+            gemv_packed(&packed, &x, &mut y)
+        });
+        let lut_t = bench_fn(&format!("gemv/lut/{rows}x{cols}"), 3, iters, budget, || {
+            gemv_lut(&packed, &x, &mut y, &mut table)
+        });
+        let lut_par_t = bench_fn(&format!("gemv/lut-par/{rows}x{cols}"), 3, iters, budget, || {
+            crate::ternary::lut::gemv_lut_into(&packed, &x, &mut y, &mut scratch)
+        });
+        let lut_speedup = packed_t.median.as_secs_f64() / lut_t.median.as_secs_f64();
+        let par_speedup = lut_t.median.as_secs_f64() / lut_par_t.median.as_secs_f64();
+        println!(
+            "  {rows:>4}x{cols:<4}  fused {:>8.1}us  packed {:>8.1}us  lut {:>8.1}us ({lut_speedup:>4.2}x)  lut@{threads}t {:>8.1}us ({par_speedup:>4.2}x)",
+            fused.median_us(),
+            packed_t.median_us(),
+            lut_t.median_us(),
+            lut_par_t.median_us(),
+        );
+        decode_rows.push(
+            Json::obj()
+                .set("rows", rows)
+                .set("cols", cols)
+                .set("fused_us", fused.median_us())
+                .set("packed_us", packed_t.median_us())
+                .set("lut_us", lut_t.median_us())
+                .set("lut_par_us", lut_par_t.median_us())
+                .set("lut_speedup_vs_packed", lut_speedup)
+                .set("par_speedup_vs_lut", par_speedup),
+        );
+    }
+
+    // ---- prefill: gemm over an m-row activation stack ----
+    let m = 64usize;
+    let prefill_shapes: Vec<(usize, usize)> = if quick {
+        vec![(344, 128)]
+    } else {
+        vec![(344, 128), (512, 192)]
+    };
+    println!("== kernel race: prefill gemm m={m} (threads={threads}) ==");
+    let mut prefill_rows = Vec::new();
+    for &(rows, cols) in &prefill_shapes {
+        let packed = random_ternary(rows, cols, 128, 7 + rows as u64).to_packed();
+        let mut rng = Rng::new(8);
+        let x = Matrix::randn(m, cols, 1.0, &mut rng);
+
+        let y_ref = gemm_packed_blocked(&packed, &x);
+        let mut scratch_seq = GemmScratch::new();
+        let mut scratch_par = GemmScratch::new();
+        scratch_par.pool = pool.clone();
+        let mut y = Matrix::zeros(m, rows);
+        gemm_lut_into(&packed, &x, &mut y, &mut scratch_seq);
+        assert_eq!(y.data, y_ref.data, "LUT gemm drifted ({rows}x{cols})");
+        y.data.fill(0.0);
+        gemm_lut_into(&packed, &x, &mut y, &mut scratch_par);
+        assert_eq!(y.data, y_ref.data, "parallel LUT gemm drifted ({rows}x{cols})");
+        y.data.fill(0.0);
+        gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_par);
+        assert_eq!(y.data, y_ref.data, "parallel blocked gemm drifted ({rows}x{cols})");
+
+        let blocked = bench_fn(&format!("gemm/blocked/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_seq)
+        });
+        let lut_t = bench_fn(&format!("gemm/lut/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_lut_into(&packed, &x, &mut y, &mut scratch_seq)
+        });
+        let blocked_par = bench_fn(&format!("gemm/blocked-par/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_par)
+        });
+        let lut_par = bench_fn(&format!("gemm/lut-par/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_lut_into(&packed, &x, &mut y, &mut scratch_par)
+        });
+        let tps = |b: &crate::bench::BenchResult| b.throughput(m as f64);
+        println!(
+            "  {rows:>4}x{cols:<4}  blocked {:>9.0} tok/s  lut {:>9.0} tok/s  blocked@{threads}t {:>9.0} tok/s  lut@{threads}t {:>9.0} tok/s",
+            tps(&blocked),
+            tps(&lut_t),
+            tps(&blocked_par),
+            tps(&lut_par),
+        );
+        prefill_rows.push(
+            Json::obj()
+                .set("rows", rows)
+                .set("cols", cols)
+                .set("m", m)
+                .set("blocked_tps", tps(&blocked))
+                .set("lut_tps", tps(&lut_t))
+                .set("blocked_par_tps", tps(&blocked_par))
+                .set("lut_par_tps", tps(&lut_par))
+                .set("lut_speedup_vs_blocked", tps(&lut_t) / tps(&blocked))
+                .set("par_speedup_vs_lut", tps(&lut_par) / tps(&lut_t)),
+        );
+    }
+
+    let out_path = args.str_or("out", "BENCH_kernels.json");
+    let json = Json::obj()
+        .set("bench", "kernels")
+        .set("threads", threads)
+        .set("quick", quick)
+        .set("parity", "all tiers asserted bit-identical to gemv_packed before timing")
+        .set("decode", Json::Arr(decode_rows))
+        .set("prefill", Json::Arr(prefill_rows));
+    std::fs::write(out_path, json.pretty())?;
+    println!("  wrote {out_path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_quick_and_emits_json() {
+        let dir = std::env::temp_dir().join("ptqtp_bench_kernels");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("k.json");
+        let raw = vec![
+            "--out".to_string(),
+            out.to_string_lossy().to_string(),
+            "--threads".to_string(),
+            "2".to_string(),
+        ];
+        let args = Args::parse("ptqtp", raw, &[]);
+        run(true, &args).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.req_str("bench").unwrap(), "kernels");
+        let decode = j.get("decode").and_then(Json::as_arr).unwrap();
+        assert_eq!(decode.len(), 1);
+        let prefill = j.get("prefill").and_then(Json::as_arr).unwrap();
+        assert_eq!(prefill.len(), 1);
+        std::fs::remove_file(out).ok();
+    }
+}

@@ -5,9 +5,13 @@
 //! reporting; the `table*` / `fig*` submodules regenerate every exhibit
 //! in the paper's evaluation (see DESIGN.md §5 for the index) and are
 //! invoked through `ptqtp bench --table N` / `--fig N` or `cargo bench`.
+//! [`batched`] (`--batched`) and [`kernels`] (`--kernels`) are the
+//! perf-trajectory benches: fused-batch throughput + thread scaling,
+//! and the kernel-tier race with bit-identity parity gates.
 
 pub mod batched;
 pub mod harness;
+pub mod kernels;
 pub mod workload;
 
 pub mod fig1;

@@ -4,14 +4,18 @@
 //!
 //! Paper shape to reproduce: at seq=1 all are close; as sequence grows,
 //! AQLM's per-element gather blows up, int4 stays nearest dense, PTQTP
-//! sits between int4 and dense with a modest prefill penalty.
+//! sits between int4 and dense with a modest prefill penalty. The
+//! PTQTP-LUT column races the activation-indexed table tier (bit-exact
+//! with the packed tier) against the throughput-tuned dispatch.
 
 use super::harness::bench_fn;
 use super::workload::bench_weight;
 use crate::cli::Args;
 use crate::report::Table;
 use crate::tensor::{ops, Matrix};
+use crate::ternary::gemm::GemmScratch;
 use crate::ternary::int4::{Aqlm2x2Linear, Int4Linear};
+use crate::ternary::lut::{gemm_lut_into, gemv_lut};
 use crate::quant::ptqtp::Ptqtp;
 use std::time::Duration;
 
@@ -37,8 +41,9 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
 
         let mut table = Table::new(
             &format!("Table 5 — gate_proj latency (ms), {name} ({n}x{d})"),
-            &["seq", "FP32-dense", "GPTQ-4bit", "AQLM-2x2bit", "PTQTP-1.58bit"],
+            &["seq", "FP32-dense", "GPTQ-4bit", "AQLM-2x2bit", "PTQTP-1.58bit", "PTQTP-LUT"],
         );
+        let mut lut_scratch = GemmScratch::new();
         for &seq in &seqs {
             let mut rng = crate::rng::Rng::new(7 + seq as u64);
             let x = Matrix::randn(seq, d, 1.0, &mut rng);
@@ -52,12 +57,22 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
                     crate::ternary::gemm::gemm_packed(&ptqtp, &x)
                 }
             });
+            let mut y = Matrix::zeros(seq, n);
+            let mut gemv_table = Vec::new();
+            let tp_lut = bench_fn("ptqtp-lut", 2, 60, budget, || {
+                if seq == 1 {
+                    gemv_lut(&ptqtp, x.row(0), y.row_mut(0), &mut gemv_table);
+                } else {
+                    gemm_lut_into(&ptqtp, &x, &mut y, &mut lut_scratch);
+                }
+            });
             table.row(vec![
                 format!("{seq}"),
                 format!("{:.3}", dense.median_ms()),
                 format!("{:.3}", i4.median_ms()),
                 format!("{:.3}", aq.median_ms()),
                 format!("{:.3}", tp.median_ms()),
+                format!("{:.3}", tp_lut.median_ms()),
             ]);
         }
         println!("{}", table.render());

@@ -112,6 +112,22 @@ pub fn quantized(
     (m, t0.elapsed())
 }
 
+/// Random two-plane ternary layer (uniform trits, N(0, 0.2²) group
+/// scales) — the one shared weight population for the kernel parity
+/// tests and the `bench --kernels` race, so they never silently drift
+/// onto different distributions.
+pub fn random_ternary(rows: usize, cols: usize, group: usize, seed: u64) -> crate::ternary::TernaryLinear {
+    let mut rng = Rng::new(seed);
+    let mut lin = crate::ternary::TernaryLinear::new(rows, cols, group);
+    for t in lin.t1.trits.iter_mut().chain(lin.t2.trits.iter_mut()) {
+        *t = rng.below(3) as i8 - 1;
+    }
+    for a in lin.alpha1.iter_mut().chain(lin.alpha2.iter_mut()) {
+        *a = rng.normal() * 0.2;
+    }
+    lin
+}
+
 /// Synthetic calibration context (per-layer widths are fixed up inside
 /// `QuantLinear::quantize_with`).
 pub fn calib_ctx(d: usize, seed: u64) -> QuantCtx {
@@ -119,6 +135,7 @@ pub fn calib_ctx(d: usize, seed: u64) -> QuantCtx {
     QuantCtx {
         calib: Some(crate::tensor::Matrix::randn(32, d, 1.0, &mut rng)),
         seed,
+        pool: crate::threads::Pool::sequential(),
     }
 }
 

@@ -100,6 +100,14 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Worker-lane count for the row-parallel kernels. Resolution
+    /// order: `--threads N` > `PTQTP_THREADS` env var > available
+    /// cores; `1` forces the exact sequential path (the documented
+    /// debugging escape hatch).
+    pub fn threads_or_default(&self) -> usize {
+        self.usize_or("threads", crate::threads::default_threads()).max(1)
+    }
+
     /// Required string option with a helpful error.
     pub fn require(&self, name: &str) -> anyhow::Result<&str> {
         self.get(name)
@@ -169,6 +177,15 @@ mod tests {
         assert!(a.flag("verbose"));
         assert!(a.flag("dry-run"));
         assert_eq!(a.usize_or("port", 0), 8080);
+    }
+
+    #[test]
+    fn threads_option_overrides_default() {
+        let a = parse(&["serve", "--threads", "3"]);
+        assert_eq!(a.threads_or_default(), 3);
+        let b = parse(&["serve", "--threads", "0"]);
+        assert_eq!(b.threads_or_default(), 1, "clamped to ≥ 1");
+        assert!(parse(&["serve"]).threads_or_default() >= 1);
     }
 
     #[test]

@@ -38,7 +38,27 @@ pub struct ServeEngine {
 }
 
 impl ServeEngine {
+    /// Engine on the process-wide shared worker pool (sized by
+    /// `PTQTP_THREADS` / available cores). Use
+    /// [`ServeEngine::with_threads`] for an explicit lane count;
+    /// `with_threads(_, _, 1)` forces the exact sequential path.
     pub fn new(model: Transformer, policy: BatchPolicy) -> ServeEngine {
+        Self::with_pool(model, policy, crate::threads::Pool::global().clone())
+    }
+
+    /// Engine whose model pass runs on its own `threads`-lane pool.
+    /// Token output is bit-identical for every thread count (the
+    /// row-parallel kernels preserve per-row FP order); `threads == 1`
+    /// spawns nothing and is the documented debugging escape hatch.
+    pub fn with_threads(model: Transformer, policy: BatchPolicy, threads: usize) -> ServeEngine {
+        Self::with_pool(model, policy, crate::threads::Pool::new(threads))
+    }
+
+    fn with_pool(
+        model: Transformer,
+        policy: BatchPolicy,
+        worker_pool: crate::threads::Pool,
+    ) -> ServeEngine {
         let pool = KvPool::for_model(&model.config, policy.max_running);
         ServeEngine {
             model,
@@ -48,11 +68,16 @@ impl ServeEngine {
             running: Vec::new(),
             metrics: Metrics::default(),
             batch: ForwardBatch::new(),
-            scratch: ForwardScratch::new(),
+            scratch: ForwardScratch::with_pool(worker_pool),
             logit_slots: Vec::new(),
             logit_pool: Vec::new(),
             prob_buf: Vec::new(),
         }
+    }
+
+    /// Worker lanes driving this engine's model pass.
+    pub fn threads(&self) -> usize {
+        self.scratch.pool().threads()
     }
 
     /// Enqueue a request (admission happens during [`ServeEngine::step`]).
@@ -387,6 +412,53 @@ mod tests {
         out_seq.sort_by_key(|r| r.id);
         for (a, b) in out_batched.iter().zip(&out_seq) {
             assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn threaded_engine_matches_sequential_token_for_token() {
+        // the §Threading determinism claim end-to-end: same model, same
+        // workload, thread counts {1, 2, 4} — identical tokens through
+        // ServeEngine::step, greedy and seeded-temperature, quantized
+        // with a ragged group so both kernel tiers are exercised
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(31);
+        let mut model = Transformer::random(cfg, &mut rng);
+        model.quantize_with(
+            crate::quant::by_name("ptqtp", 10).unwrap().as_ref(),
+            &crate::quant::QuantCtx::default(),
+        );
+        let run = |threads: usize| {
+            let mut e = ServeEngine::with_threads(
+                model.clone(),
+                BatchPolicy {
+                    max_running: 3,
+                    prefill_token_budget: 6,
+                    fcfs_prefill: true,
+                },
+                threads,
+            );
+            assert_eq!(e.threads(), threads.max(1));
+            for i in 0..5u64 {
+                let mut r = req(i, vec![1 + i as u32, 4, 7, 2], 5);
+                if i % 2 == 1 {
+                    r.params.temperature = 0.7;
+                    r.params.seed = 11 + i;
+                }
+                e.submit(r);
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let seq = run(1);
+        for threads in [2usize, 4] {
+            let par = run(threads);
+            for (a, b) in par.iter().zip(&seq) {
+                assert_eq!(a.tokens, b.tokens, "threads={threads} req {}", a.id);
+            }
         }
     }
 

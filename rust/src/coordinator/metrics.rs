@@ -5,7 +5,7 @@ use super::request::Response;
 use std::time::Duration;
 
 /// Engine-level metrics.
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub submitted: u64,
     pub completed: u64,

@@ -7,6 +7,7 @@
 //! responses without blocking workers.
 
 use super::engine::ServeEngine;
+use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response, SamplingParams};
 use super::router::{RoutePolicy, Router};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -25,6 +26,8 @@ pub struct Server {
     router: Router,
     workers: Vec<Sender<WorkerMsg>>,
     responses: Receiver<(usize, Response)>,
+    /// Final per-replica metrics snapshots, sent as workers exit.
+    metrics_rx: Receiver<(usize, Metrics)>,
     handles: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     shutdown: Arc<AtomicBool>,
@@ -36,15 +39,17 @@ impl Server {
         assert!(!engines.is_empty());
         let n = engines.len();
         let (resp_tx, resp_rx) = channel::<(usize, Response)>();
+        let (metrics_tx, metrics_rx) = channel::<(usize, Metrics)>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for (replica, mut engine) in engines.into_iter().enumerate() {
             let (tx, rx) = channel::<WorkerMsg>();
             let resp_tx = resp_tx.clone();
+            let metrics_tx = metrics_tx.clone();
             let stop = shutdown.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(replica, &mut engine, rx, resp_tx, stop);
+                worker_loop(replica, &mut engine, rx, resp_tx, metrics_tx, stop);
             }));
             workers.push(tx);
         }
@@ -52,10 +57,30 @@ impl Server {
             router: Router::new(n, policy),
             workers,
             responses: resp_rx,
+            metrics_rx,
             handles,
             next_id: AtomicU64::new(1),
             shutdown,
         }
+    }
+
+    /// Spawn `replicas` engines cloned from one model, each replica
+    /// worker with its **own** `threads`-lane kernel pool (so replicas
+    /// never contend on a shared pool's dispatch lock). `threads == 1`
+    /// forces every replica onto the exact sequential kernel path —
+    /// the debugging escape hatch `--threads 1` plumbs through here.
+    pub fn start_replicas(
+        model: crate::model::Transformer,
+        replicas: usize,
+        policy: super::batcher::BatchPolicy,
+        route: RoutePolicy,
+        threads: usize,
+    ) -> Server {
+        assert!(replicas >= 1, "need at least one replica");
+        let engines = (0..replicas)
+            .map(|_| ServeEngine::with_threads(model.clone(), policy, threads))
+            .collect();
+        Server::start(engines, route)
     }
 
     /// Submit a prompt; returns the assigned request id.
@@ -100,8 +125,11 @@ impl Server {
         out
     }
 
-    /// Graceful shutdown: drain workers and join threads.
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown: drain workers, join threads, and return each
+    /// replica's final [`Metrics`] snapshot (sorted by replica index)
+    /// so multi-replica serves can report the same stats as a single
+    /// engine.
+    pub fn shutdown(mut self) -> Vec<Metrics> {
         self.shutdown.store(true, Ordering::SeqCst);
         for w in &self.workers {
             let _ = w.send(WorkerMsg::Shutdown);
@@ -109,6 +137,9 @@ impl Server {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        let mut out: Vec<(usize, Metrics)> = self.metrics_rx.try_iter().collect();
+        out.sort_by_key(|(replica, _)| *replica);
+        out.into_iter().map(|(_, m)| m).collect()
     }
 }
 
@@ -117,35 +148,38 @@ fn worker_loop(
     engine: &mut ServeEngine,
     rx: Receiver<WorkerMsg>,
     resp_tx: Sender<(usize, Response)>,
+    metrics_tx: Sender<(usize, Metrics)>,
     stop: Arc<AtomicBool>,
 ) {
-    loop {
+    'serve: loop {
         // drain intake without blocking while work is pending
         loop {
             match rx.try_recv() {
                 Ok(WorkerMsg::Submit(req)) => engine.submit(req),
-                Ok(WorkerMsg::Shutdown) => return,
+                Ok(WorkerMsg::Shutdown) => break 'serve,
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
+                Err(TryRecvError::Disconnected) => break 'serve,
             }
         }
         if stop.load(Ordering::Relaxed) {
-            return;
+            break 'serve;
         }
         if engine.pending() == 0 {
             // idle: block briefly for new work
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(WorkerMsg::Submit(req)) => engine.submit(req),
-                Ok(WorkerMsg::Shutdown) => return,
+                Ok(WorkerMsg::Shutdown) => break 'serve,
                 Err(_) => continue,
             }
         }
         for resp in engine.step() {
             if resp_tx.send((replica, resp)).is_err() {
-                return;
+                break 'serve;
             }
         }
     }
+    // final snapshot for Server::shutdown's aggregate report
+    let _ = metrics_tx.send((replica, engine.metrics.clone()));
 }
 
 #[cfg(test)]
@@ -197,6 +231,42 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(got, ids);
         server.shutdown();
+    }
+
+    #[test]
+    fn threaded_replicas_match_sequential_replicas() {
+        // replica workers with 2-lane kernel pools must serve the same
+        // tokens as sequential replicas (determinism across --threads)
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(5);
+        let model = Transformer::random(cfg, &mut rng);
+        let serve = |threads: usize| {
+            let mut server = Server::start_replicas(
+                model.clone(),
+                2,
+                BatchPolicy::default(),
+                RoutePolicy::RoundRobin,
+                threads,
+            );
+            for i in 0..6u64 {
+                server.submit(vec![1 + (i % 5) as u32, 2, 3], params(4), 0);
+            }
+            let mut out = server.wait_for(6, Duration::from_secs(30));
+            let metrics = server.shutdown();
+            assert_eq!(metrics.len(), 2, "one final snapshot per replica");
+            assert_eq!(metrics.iter().map(|m| m.completed).sum::<u64>(), 6);
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let seq = serve(1);
+        let par = serve(2);
+        assert_eq!(seq.len(), 6);
+        assert_eq!(par.len(), 6);
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
     }
 
     #[test]

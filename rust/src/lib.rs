@@ -32,6 +32,7 @@
 //! | [`data`] | synthetic corpora, tasks, tokenizer |
 //! | [`eval`] | perplexity + task-accuracy evaluators |
 //! | [`runtime`] | PJRT engine for AOT HLO artifacts |
+//! | [`threads`] | deterministic row-parallel worker pool substrate |
 //! | [`coordinator`] | serving engine: router, batcher, kv-cache, scheduler |
 //! | [`bench`] | timing harness + per-table/figure reproductions |
 //! | [`report`] | table rendering for paper-style output |
@@ -51,6 +52,7 @@ pub mod runtime;
 pub mod serialize;
 pub mod tensor;
 pub mod ternary;
+pub mod threads;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -47,8 +47,8 @@ fn help() -> String {
             ("gen-corpus", "generate synthetic corpora + tokenizer into --out"),
             ("quantize", "quantize --model X.ptw --method ptqtp --out Y.ptw"),
             ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]"),
-            ("serve", "serve --model X.ptw [--method ptqtp] --requests N"),
-            ("bench", "bench --table N | --fig N | --batched  (paper exhibits + fused-batch bench)"),
+            ("serve", "serve --model X.ptw [--method ptqtp] --requests N [--replicas R]"),
+            ("bench", "bench --table N | --fig N | --batched | --kernels  (paper exhibits + perf benches)"),
             ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
         ],
         &[
@@ -56,6 +56,8 @@ fn help() -> String {
             OptSpec { name: "seed", help: "RNG seed", default: Some("0") },
             OptSpec { name: "group-size", help: "quantization group size G", default: Some("128") },
             OptSpec { name: "method", help: "fp16|rtn*|gptq*|awq*|pbllm|billm|arb|absmean|ptqtp", default: Some("ptqtp") },
+            OptSpec { name: "threads", help: "worker lanes for row-parallel kernels/quantization (1 = exact sequential path; env PTQTP_THREADS)", default: Some("cores") },
+            OptSpec { name: "replicas", help: "serve: engine replicas, each with its own pool", default: Some("1") },
         ],
     )
 }
@@ -90,17 +92,24 @@ fn cmd_gen_corpus(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Shared: load model, optionally quantize with --method.
+/// Shared: load model, optionally quantize with --method. Quantization
+/// runs matrix-parallel on `--threads` lanes (bit-identical to
+/// sequential; see DESIGN.md §Threading).
 fn load_and_quantize(args: &Args) -> anyhow::Result<(Transformer, String)> {
     let model_path = args.require("model")?;
     let mut model = Transformer::load(model_path)?;
+    let threads = args.threads_or_default();
     let method = args.str_or("method", "fp16").to_string();
     let group = args.usize_or("group-size", 128);
     if method != "fp16" && method != "fp" {
         let q = quant::by_name(&method, group)?;
         let t0 = std::time::Instant::now();
-        model.quantize_with(q.as_ref(), &QuantCtx::default());
-        eprintln!("quantized with {} in {:.2?}", q.name(), t0.elapsed());
+        model.quantize_with(q.as_ref(), &QuantCtx::with_threads(threads));
+        eprintln!(
+            "quantized with {} in {:.2?} ({threads} threads)",
+            q.name(),
+            t0.elapsed()
+        );
     }
     Ok((model, method))
 }
@@ -117,9 +126,12 @@ fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `eval --model X.ptw [--method M] [--data data/]`
+/// `eval --model X.ptw [--method M] [--data data/] [--threads T]`
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {
-    let (model, method) = load_and_quantize(args)?;
+    let (mut model, method) = load_and_quantize(args)?;
+    // eval's forward passes use the model's self-managed scratch, so
+    // bind --threads here (serve binds pools per engine instead)
+    model.set_threads(args.threads_or_default());
     let data_dir = args.str_or("data", "data");
     let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
     println!("model: {} ({} params)", model.config.name, model.config.param_count());
@@ -140,39 +152,71 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `serve --model X.ptw [--method M] [--requests N] [--data data/]`
+/// `serve --model X.ptw [--method M] [--requests N] [--data data/]
+/// [--threads T] [--replicas R]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let (model, method) = load_and_quantize(args)?;
     let n_requests = args.usize_or("requests", 32);
     let data_dir = args.str_or("data", "data");
+    let threads = args.threads_or_default();
+    let replicas = args.usize_or("replicas", 1).max(1);
     let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
-    let mut engine = ServeEngine::new(model, Default::default());
 
     // workload: math prompts (realistic mixed lengths)
     let suite = TaskSuite::standard(args.u64_or("seed", 2), n_requests, 0, 0);
+    let params = SamplingParams {
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    if replicas > 1 {
+        // threaded front-end: each replica worker owns a threads-lane pool
+        let mut server = ptqtp::coordinator::Server::start_replicas(
+            model,
+            replicas,
+            Default::default(),
+            ptqtp::coordinator::router::RoutePolicy::LeastLoaded,
+            threads,
+        );
+        let t0 = std::time::Instant::now();
+        for task in suite.math.iter() {
+            server.submit(tok.encode(&task.prompt), params, 0);
+        }
+        let responses = server.wait_for(suite.math.len(), std::time::Duration::from_secs(600));
+        let wall = t0.elapsed();
+        let metrics = server.shutdown();
+        println!(
+            "served {} requests with method {method} ({replicas} replicas × {threads} threads, wall {wall:.2?})",
+            responses.len()
+        );
+        for (i, m) in metrics.iter().enumerate() {
+            println!("replica {i}:\n{}", m.render(wall));
+        }
+        return Ok(());
+    }
+    let mut engine = ServeEngine::with_threads(model, Default::default(), threads);
     let t0 = std::time::Instant::now();
     for (i, task) in suite.math.iter().enumerate() {
         engine.submit(ptqtp::coordinator::Request::new(
             i as u64,
             tok.encode(&task.prompt),
-            SamplingParams {
-                max_new_tokens: 8,
-                ..Default::default()
-            },
+            params,
         ));
     }
     let responses = engine.run_to_completion();
     let wall = t0.elapsed();
-    println!("served {} requests with method {method}", responses.len());
+    println!("served {} requests with method {method} ({threads} threads)", responses.len());
     println!("{}", engine.metrics.render(wall));
     Ok(())
 }
 
-/// `bench --table N | --fig N | --batched [--quick]`
+/// `bench --table N | --fig N | --batched | --kernels [--quick]`
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let quick = args.flag("quick");
     if args.flag("batched") {
         return bench::batched::run(quick, args);
+    }
+    if args.flag("kernels") {
+        return bench::kernels::run(quick, args);
     }
     if let Some(t) = args.get("table") {
         return bench::run_table(t, quick, args);
@@ -189,7 +233,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    anyhow::bail!("bench requires --table N, --fig N, --batched, or --all")
+    anyhow::bail!("bench requires --table N, --fig N, --batched, --kernels, or --all")
 }
 
 /// `runtime --artifacts artifacts/` — PJRT smoke test of the AOT chain.

@@ -129,6 +129,28 @@ impl ForwardScratch {
     pub fn new() -> ForwardScratch {
         ForwardScratch::default()
     }
+
+    /// Scratch pre-bound to a worker pool (see [`ForwardScratch::set_pool`]).
+    pub fn with_pool(pool: crate::threads::Pool) -> ForwardScratch {
+        let mut s = ForwardScratch::default();
+        s.set_pool(pool);
+        s
+    }
+
+    /// Bind the worker pool driving the row-parallel kernels of every
+    /// pass using this scratch (MLP/LM-head gemms and the attention
+    /// projections each carry their own `GemmScratch`). The default is
+    /// the sequential pool — the exact legacy path; parallel output is
+    /// bit-identical either way (DESIGN.md §Threading).
+    pub fn set_pool(&mut self, pool: crate::threads::Pool) {
+        self.attn.gemm.pool = pool.clone();
+        self.gemm.pool = pool;
+    }
+
+    /// The pool bound by [`ForwardScratch::set_pool`] (sequential default).
+    pub fn pool(&self) -> &crate::threads::Pool {
+        &self.gemm.pool
+    }
 }
 
 /// Resize a scratch matrix, reusing its allocation. Contents zeroed.

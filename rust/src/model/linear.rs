@@ -8,10 +8,11 @@
 use crate::quant::{QuantCtx, QuantRepr, Quantizer};
 use crate::tensor::{ops, Matrix};
 use crate::ternary::gemm::{
-    gemm_decoded, gemm_packed, gemm_packed_blocked, gemm_packed_blocked_into, GemmScratch,
+    gemm_decoded, gemm_packed, gemm_packed_blocked, gemm_packed_blocked_par_into, GemmScratch,
 };
-use crate::ternary::gemv::gemv_packed;
+use crate::ternary::gemv::{gemv_packed, gemv_packed_par};
 use crate::ternary::linear::PackedTernaryLinear;
+use crate::ternary::lut;
 
 /// Weight backend.
 #[derive(Clone, Debug)]
@@ -74,28 +75,36 @@ impl QuantLinear {
     }
 
     /// Batched serving forward: Y = X·Wᵀ into a caller-owned output,
-    /// zero allocation. Guaranteed **bit-identical per row** to
-    /// [`QuantLinear::forward_vec`] on both backends (dense rows run
-    /// the same matvec kernel; ternary rows run the row-blocked packed
-    /// kernel, which mirrors `gemv_packed`'s FP order exactly) — this
-    /// is what makes the fused engine step produce token-for-token the
-    /// same output as sequential decoding.
+    /// zero steady-state allocation. Guaranteed **bit-identical per
+    /// row** to [`QuantLinear::forward_vec`] on both backends and for
+    /// any `scratch.pool` thread count: dense rows run the same matvec
+    /// body (row-partitioned when the pool has lanes); ternary rows
+    /// pick the fastest tier whose FP order mirrors `gemv_packed`
+    /// exactly — the activation-indexed LUT kernels when the layout is
+    /// byte-aligned and the matrix is tall enough to amortize the table
+    /// build, else the row-blocked packed kernel. This tier freedom is
+    /// safe precisely because every tier is bit-identical; it is what
+    /// makes the fused engine step produce token-for-token the same
+    /// output as sequential decoding at any `--threads`.
     pub fn forward_rows_into(&self, x: &Matrix, y: &mut Matrix, scratch: &mut GemmScratch) {
         debug_assert_eq!(x.cols, self.shape.1);
         debug_assert_eq!(y.rows, x.rows);
         debug_assert_eq!(y.cols, self.shape.0);
         match &self.backend {
-            Backend::Dense(w) => {
-                for r in 0..x.rows {
-                    ops::matvec_into(w, x.row(r), y.row_mut(r));
-                }
-            }
+            Backend::Dense(w) => ops::matvec_rows_pooled(w, x, y, &scratch.pool),
             Backend::Ternary(t) => {
+                let use_lut = lut::is_aligned(t) && t.rows >= lut::LUT_MIN_ROWS;
                 if x.rows == 1 {
-                    // single decode row: skip the decode-to-buffer pass
-                    gemv_packed(t, x.row(0), y.row_mut(0));
+                    if use_lut {
+                        lut::gemv_lut_into(t, x.row(0), y.row_mut(0), scratch);
+                    } else {
+                        let pool = scratch.pool.clone();
+                        gemv_packed_par(t, x.row(0), y.row_mut(0), &pool);
+                    }
+                } else if use_lut {
+                    lut::gemm_lut_into(t, x, y, scratch);
                 } else {
-                    gemm_packed_blocked_into(t, x, y, scratch);
+                    gemm_packed_blocked_par_into(t, x, y, scratch);
                 }
             }
         }
@@ -128,6 +137,7 @@ impl QuantLinear {
                 ctx_local = QuantCtx {
                     calib: Some(Matrix::randn(c.rows.max(16), self.shape.1, 1.0, &mut rng)),
                     seed: ctx.seed,
+                    pool: ctx.pool.clone(),
                 };
                 &ctx_local
             }
@@ -228,6 +238,79 @@ mod tests {
                 lin.forward_vec(x.row(r), &mut yv);
                 assert_eq!(ym.row(r), yv.as_slice(), "quantized={quantized} row {r}");
             }
+        }
+    }
+
+    #[test]
+    fn rows_path_bit_identical_across_threads_and_tiers() {
+        // aligned LUT tier (rows ≥ LUT_MIN_ROWS), ragged packed tier,
+        // and dense — every (backend, threads) combo must equal per-row
+        // forward_vec exactly
+        use crate::quant::ptqtp::PtqtpOpts;
+        use crate::threads::Pool;
+        let mut rng = Rng::new(9);
+        // both shapes clear the PAR_MIN_WORK dispatch gate for their
+        // batch size, so the pool paths are genuinely exercised
+        for (rows, cols, group, xrows) in [(560usize, 64usize, 16usize, 7usize), (70, 40, 10, 12)] {
+            let w = Matrix::rand_heavy(rows, cols, 0.05, &mut rng);
+            for quantized in [false, true] {
+                let mut lin = QuantLinear::dense(w.clone());
+                if quantized {
+                    lin.quantize_with(
+                        &Ptqtp::new(PtqtpOpts {
+                            group,
+                            ..Default::default()
+                        }),
+                        &QuantCtx::default(),
+                    );
+                }
+                let x = Matrix::randn(xrows, cols, 1.0, &mut rng);
+                let x1 = Matrix::from_vec(1, cols, x.row(0).to_vec());
+                for threads in [1usize, 2, 4] {
+                    let mut scratch = GemmScratch::new();
+                    scratch.pool = Pool::new(threads);
+                    let mut ym = Matrix::zeros(xrows, rows);
+                    lin.forward_rows_into(&x, &mut ym, &mut scratch);
+                    let mut y1 = Matrix::zeros(1, rows);
+                    lin.forward_rows_into(&x1, &mut y1, &mut scratch);
+                    for r in 0..xrows {
+                        let mut yv = vec![0.0; rows];
+                        lin.forward_vec(x.row(r), &mut yv);
+                        assert_eq!(
+                            ym.row(r),
+                            yv.as_slice(),
+                            "q={quantized} threads={threads} row {r} G={group}"
+                        );
+                        if r == 0 {
+                            assert_eq!(
+                                y1.row(0),
+                                yv.as_slice(),
+                                "single-row q={quantized} threads={threads} G={group}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_through_threaded_scratch_is_noop() {
+        // regression: a pure-prefill engine step can hand the LM head
+        // zero logit rows; with a multi-lane pool this must be a no-op,
+        // not an x.row(0) panic
+        let mut rng = Rng::new(11);
+        for quantized in [false, true] {
+            let mut lin = QuantLinear::dense(Matrix::rand_heavy(96, 32, 0.05, &mut rng));
+            if quantized {
+                lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
+            }
+            let mut scratch = GemmScratch::new();
+            scratch.pool = crate::threads::Pool::new(4);
+            let x = Matrix::zeros(0, 32);
+            let mut y = Matrix::zeros(0, 96);
+            lin.forward_rows_into(&x, &mut y, &mut scratch);
+            assert!(y.data.is_empty());
         }
     }
 

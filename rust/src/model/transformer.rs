@@ -114,6 +114,12 @@ pub struct Transformer {
     /// None when tied to `tok_embed`.
     pub lm_head: Option<QuantLinear>,
     pub rope: Rope,
+    /// Pool bound into every self-managed [`ForwardScratch`]
+    /// ([`Transformer::new_scratch`]) — covers eval / NLL / greedy
+    /// paths that don't hold an engine scratch. Sequential by default
+    /// (never serialized; [`Transformer::set_threads`] to change).
+    /// Output is bit-identical for any lane count.
+    pub exec_pool: crate::threads::Pool,
 }
 
 impl Transformer {
@@ -127,9 +133,17 @@ impl Transformer {
     }
 
     /// Fresh scratch for the batched forward path. One per engine (or
-    /// per thread); every buffer inside is reused across steps.
+    /// per thread); every buffer inside is reused across steps. Bound
+    /// to [`Transformer::exec_pool`].
     pub fn new_scratch(&self) -> ForwardScratch {
-        ForwardScratch::new()
+        ForwardScratch::with_pool(self.exec_pool.clone())
+    }
+
+    /// Run this model's self-managed passes (eval, NLL, greedy
+    /// generation) on `threads` worker lanes. `1` restores the exact
+    /// sequential path; results are bit-identical either way.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.exec_pool = crate::threads::Pool::new(threads);
     }
 
     /// One fused pass over `batch`: embed all rows, run every layer
@@ -198,14 +212,15 @@ impl Transformer {
                 head.forward_rows_into(&scratch.hidden, &mut scratch.logits, &mut scratch.gemm)
             }
             None => {
-                // tied: logits = E·h, row-exact with the decode path
-                for r in 0..n_logits {
-                    crate::tensor::ops::matvec_into(
-                        &self.tok_embed,
-                        scratch.hidden.row(r),
-                        scratch.logits.row_mut(r),
-                    );
-                }
+                // tied: logits = E·h, row-exact with the decode path;
+                // lanes take whole logits rows (deep batches) or vocab
+                // spans (single decode row) — bit-identical either way
+                crate::tensor::ops::matvec_rows_pooled(
+                    &self.tok_embed,
+                    &scratch.hidden,
+                    &mut scratch.logits,
+                    &scratch.gemm.pool,
+                );
             }
         }
         scratch.x = x;
@@ -324,19 +339,44 @@ impl Transformer {
 
     /// Quantize every linear layer in place with `q`. Embeddings and
     /// norms stay FP (the paper quantizes "all linear layers").
+    ///
+    /// When `ctx.pool` has worker lanes, the matrices are partitioned
+    /// across them (each lane quantizes whole matrices with an inner
+    /// sequential context — [`crate::threads`] pools must not nest).
+    /// Each matrix's result is independent of every other, so the
+    /// quantized model is bit-identical for any thread count. With a
+    /// sequential (or single-matrix) context the per-matrix call runs
+    /// inline, where PTQTP itself row-parallelizes on `ctx.pool`.
     pub fn quantize_with(&mut self, q: &dyn Quantizer, ctx: &QuantCtx) {
+        let pool = ctx.pool.clone();
+        let mut layers: Vec<&mut QuantLinear> = Vec::new();
         for b in self.blocks.iter_mut() {
-            b.attn.wq.quantize_with(q, ctx);
-            b.attn.wk.quantize_with(q, ctx);
-            b.attn.wv.quantize_with(q, ctx);
-            b.attn.wo.quantize_with(q, ctx);
-            b.w_gate.quantize_with(q, ctx);
-            b.w_up.quantize_with(q, ctx);
-            b.w_down.quantize_with(q, ctx);
+            layers.push(&mut b.attn.wq);
+            layers.push(&mut b.attn.wk);
+            layers.push(&mut b.attn.wv);
+            layers.push(&mut b.attn.wo);
+            layers.push(&mut b.w_gate);
+            layers.push(&mut b.w_up);
+            layers.push(&mut b.w_down);
         }
         if let Some(head) = self.lm_head.as_mut() {
-            head.quantize_with(q, ctx);
+            layers.push(head);
         }
+        let lanes = pool.threads();
+        if lanes <= 1 || layers.len() < 2 {
+            for l in layers {
+                l.quantize_with(q, ctx);
+            }
+            return;
+        }
+        let mut ctx_inner = ctx.clone();
+        ctx_inner.pool = crate::threads::Pool::sequential();
+        let n = layers.len();
+        crate::threads::run_spans(&pool, n, 1, &mut layers, |_, _, span| {
+            for l in span.iter_mut() {
+                l.quantize_with(q, &ctx_inner);
+            }
+        });
     }
 
     /// All quantizable weight matrices (name, reference) — used by the
@@ -399,6 +439,7 @@ impl Transformer {
             final_norm: RmsNorm::ones(d, config.norm_eps),
             lm_head: None,
             config,
+            exec_pool: crate::threads::Pool::sequential(),
         }
     }
 
@@ -481,6 +522,7 @@ impl Transformer {
             final_norm: RmsNorm::new(tf.vec_f32("final_norm")?, config.norm_eps),
             lm_head,
             config,
+            exec_pool: crate::threads::Pool::sequential(),
         })
     }
 }
@@ -698,6 +740,24 @@ mod tests {
             let a = m.decode_step(t, &mut c1);
             let b = m.decode_step_with(t, &mut c2, &mut scratch).to_vec();
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn threaded_exec_pool_bit_identical_on_eval_paths() {
+        // set_threads must not change a single bit of the self-managed
+        // passes (sequence NLL, greedy generation), quantized included
+        for quantized in [false, true] {
+            let mut m = tiny_model(15);
+            if quantized {
+                m.quantize_with(&Ptqtp::default(), &crate::quant::QuantCtx::default());
+            }
+            let tokens = [1u32, 5, 9, 2, 6, 3];
+            let nll_seq = m.sequence_nll(&tokens);
+            let gen_seq = m.generate_greedy(&[2, 4], 6, None);
+            m.set_threads(3);
+            assert_eq!(m.sequence_nll(&tokens), nll_seq, "q={quantized}");
+            assert_eq!(m.generate_greedy(&[2, 4], 6, None), gen_seq, "q={quantized}");
         }
     }
 

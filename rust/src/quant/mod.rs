@@ -27,19 +27,32 @@ use crate::tensor::Matrix;
 use crate::ternary::TernaryLinear;
 
 /// Quantization context: optional calibration activations (rows =
-/// samples, cols = layer input dim) for activation-aware methods, and a
-/// seed for any stochastic choices.
+/// samples, cols = layer input dim) for activation-aware methods, a
+/// seed for any stochastic choices, and the worker pool parallel-aware
+/// quantizers (PTQTP's per-row progressive approximation, the model
+/// loader's per-matrix sweep) partition work on. The sequential default
+/// reproduces the legacy path exactly; results are bit-identical for
+/// any thread count (DESIGN.md §Threading).
 #[derive(Clone, Debug, Default)]
 pub struct QuantCtx {
     pub calib: Option<Matrix>,
     pub seed: u64,
+    pub pool: crate::threads::Pool,
 }
 
 impl QuantCtx {
     pub fn with_calib(calib: Matrix) -> QuantCtx {
         QuantCtx {
             calib: Some(calib),
-            seed: 0,
+            ..Default::default()
+        }
+    }
+
+    /// Context whose parallel-aware quantizers run on `threads` lanes.
+    pub fn with_threads(threads: usize) -> QuantCtx {
+        QuantCtx {
+            pool: crate::threads::Pool::new(threads),
+            ..Default::default()
         }
     }
 }
@@ -74,8 +87,10 @@ impl QuantResult {
     }
 }
 
-/// A post-training weight quantizer.
-pub trait Quantizer {
+/// A post-training weight quantizer. `Send + Sync` so the model
+/// loader's matrix-parallel sweep can share one quantizer across the
+/// pool's lanes (all implementations are plain parameter structs).
+pub trait Quantizer: Send + Sync {
     /// Short method name as used in the paper's tables ("PTQTP", "GPTQ").
     fn name(&self) -> String;
     /// Nominal weight bit-width as reported in the paper's "#Bits" column.

@@ -22,6 +22,7 @@
 use super::{QuantCtx, QuantRepr, QuantResult, Quantizer};
 use crate::tensor::Matrix;
 use crate::ternary::TernaryLinear;
+use crate::threads::{chunk_range, Pool, SendPtr};
 
 /// PTQTP hyper-parameters (defaults = paper §4.1).
 #[derive(Clone, Copy, Debug)]
@@ -118,6 +119,79 @@ impl Ptqtp {
             report.mean_lambda = lambda_sum / (w.rows * gpr) as f64;
         }
 
+        report.final_sq_err = lin.sq_err(w);
+        (lin, report)
+    }
+
+    /// Row-parallel variant of [`Ptqtp::quantize_with_report`]: weight
+    /// rows are partitioned into contiguous spans, one per pool lane.
+    /// Every group's progressive approximation is row-local and each
+    /// lane runs the identical sequential group optimizer with its own
+    /// scratch, so planes, scales, and the report are **bit-identical**
+    /// to the sequential path for any thread count (the λ mean is
+    /// reduced by the leader in group order, not lane order). History
+    /// tracking needs sweep-synchronized groups and stays sequential.
+    pub fn quantize_with_report_pooled(
+        &self,
+        w: &Matrix,
+        pool: &Pool,
+    ) -> (TernaryLinear, PtqtpReport) {
+        let o = &self.opts;
+        let lanes = pool.threads();
+        if o.track_history || lanes <= 1 || w.rows < 2 {
+            return self.quantize_with_report(w);
+        }
+        let group = if o.group == 0 { w.cols } else { o.group };
+        let mut lin = TernaryLinear::new(w.rows, w.cols, group);
+        let gpr = lin.groups_per_row();
+        let n_groups = w.rows * gpr;
+        let mut iters = vec![0usize; n_groups];
+        let mut lambdas = vec![0.0f32; n_groups];
+        let cols = w.cols;
+        let t1p = SendPtr(lin.t1.trits.as_mut_ptr());
+        let t2p = SendPtr(lin.t2.trits.as_mut_ptr());
+        let a1p = SendPtr(lin.alpha1.as_mut_ptr());
+        let a2p = SendPtr(lin.alpha2.as_mut_ptr());
+        let itp = SendPtr(iters.as_mut_ptr());
+        let lmp = SendPtr(lambdas.as_mut_ptr());
+        pool.run(|lane| {
+            let rows = chunk_range(w.rows, lanes, lane);
+            if rows.is_empty() {
+                return;
+            }
+            let mut scratch = Scratch::new(group.min(cols).max(1));
+            for r in rows {
+                let row_w = w.row(r);
+                // SAFETY: lanes own disjoint whole rows of both planes
+                // and disjoint `gi` spans of α / report buffers; all
+                // buffers outlive `run` (the leader blocks inside it).
+                let t1 =
+                    unsafe { std::slice::from_raw_parts_mut(t1p.get().add(r * cols), cols) };
+                let t2 =
+                    unsafe { std::slice::from_raw_parts_mut(t2p.get().add(r * cols), cols) };
+                for g in 0..gpr {
+                    let s = g * group;
+                    let e = (s + group).min(cols);
+                    let gi = r * gpr + g;
+                    let (a1, a2, it, lam) =
+                        optimize_group_full(&row_w[s..e], &mut t1[s..e], &mut t2[s..e], o, &mut scratch);
+                    unsafe {
+                        *a1p.get().add(gi) = a1;
+                        *a2p.get().add(gi) = a2;
+                        *itp.get().add(gi) = it;
+                        *lmp.get().add(gi) = lam;
+                    }
+                }
+            }
+        });
+        // deterministic reduction: group order, independent of lanes —
+        // the exact addition order of the sequential path
+        let lambda_sum: f64 = lambdas.iter().map(|&l| l as f64).sum();
+        let mut report = PtqtpReport {
+            iters_per_group: iters,
+            mean_lambda: lambda_sum / n_groups as f64,
+            ..Default::default()
+        };
         report.final_sq_err = lin.sq_err(w);
         (lin, report)
     }
@@ -423,8 +497,8 @@ impl Quantizer for Ptqtp {
         1.58
     }
 
-    fn quantize(&self, w: &Matrix, _ctx: &QuantCtx) -> QuantResult {
-        let (lin, _report) = self.quantize_with_report(w);
+    fn quantize(&self, w: &Matrix, ctx: &QuantCtx) -> QuantResult {
+        let (lin, _report) = self.quantize_with_report_pooled(w, &ctx.pool);
         QuantResult {
             w_hat: lin.reconstruct(),
             bits_per_weight: lin.bits_per_weight(),
@@ -510,6 +584,27 @@ mod tests {
         let first = rep.flip_history[0];
         let last = *rep.flip_history.last().unwrap();
         assert!(last < first / 4, "flips {first} -> {last}");
+    }
+
+    #[test]
+    fn pooled_quantization_bit_identical_to_sequential() {
+        let w = heavy(12, 256, 9);
+        let q = Ptqtp::new(PtqtpOpts {
+            group: 64,
+            ..Default::default()
+        });
+        let (seq, seq_rep) = q.quantize_with_report(&w);
+        for threads in [1usize, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            let (par, par_rep) = q.quantize_with_report_pooled(&w, &pool);
+            assert_eq!(par.t1, seq.t1, "threads={threads}");
+            assert_eq!(par.t2, seq.t2, "threads={threads}");
+            assert_eq!(par.alpha1, seq.alpha1, "threads={threads}");
+            assert_eq!(par.alpha2, seq.alpha2, "threads={threads}");
+            assert_eq!(par_rep.iters_per_group, seq_rep.iters_per_group);
+            assert_eq!(par_rep.mean_lambda, seq_rep.mean_lambda);
+            assert_eq!(par_rep.final_sq_err, seq_rep.final_sq_err);
+        }
     }
 
     #[test]

@@ -53,9 +53,19 @@ pub fn matvec(w: &Matrix, x: &[f32]) -> Vec<f32> {
 
 /// y (len n) = W(n×d) · x(d), unrolled 4-wide accumulators.
 pub fn matvec_into(w: &Matrix, x: &[f32], y: &mut [f32]) {
+    matvec_span_into(w, x, 0, y);
+}
+
+/// Span form of [`matvec_into`]: `y[i]` = row `row0 + i` of `W·x`. The
+/// single numerics body shared by the sequential and row-parallel
+/// drivers (`QuantLinear::forward_rows_into`, the tied LM head), so
+/// partitioning output rows across threads cannot change any value.
+pub fn matvec_span_into(w: &Matrix, x: &[f32], row0: usize, y: &mut [f32]) {
     let d = w.cols;
+    debug_assert!(row0 + y.len() <= w.rows);
     for (i, yi) in y.iter_mut().enumerate() {
-        let row = &w.data[i * d..(i + 1) * d];
+        let r = row0 + i;
+        let row = &w.data[r * d..(r + 1) * d];
         let mut s0 = 0.0f32;
         let mut s1 = 0.0f32;
         let mut s2 = 0.0f32;
@@ -73,6 +83,39 @@ pub fn matvec_into(w: &Matrix, x: &[f32], y: &mut [f32]) {
             s += row[b] * x[b];
         }
         *yi = s;
+    }
+}
+
+/// Pool-parallel batched matvec: row `r` of `y` = `W · x.row(r)`.
+/// Lanes take contiguous spans of batch rows, or — for a single source
+/// row — contiguous spans of W's output rows (when W is tall enough to
+/// amortize dispatch); empty batches are a no-op. Either way every
+/// output element runs the same [`matvec_span_into`] body, so results
+/// are bit-identical to the sequential loop for any lane count
+/// (DESIGN.md §Threading). Shared by `QuantLinear::forward_rows_into`'s
+/// dense arm and the tied LM head.
+pub fn matvec_rows_pooled(w: &Matrix, x: &Matrix, y: &mut Matrix, pool: &crate::threads::Pool) {
+    debug_assert_eq!(x.cols, w.cols);
+    debug_assert_eq!(y.rows, x.rows);
+    debug_assert_eq!(y.cols, w.rows);
+    let lanes = pool.threads();
+    let n = w.rows;
+    // same engagement policy as the ternary drivers: dispatch to the
+    // pool only when the total work amortizes the condvar round trip
+    if lanes > 1 && x.rows > 1 && crate::threads::worth_parallel(x.rows * n, w.cols) {
+        crate::threads::run_spans(pool, x.rows, n, &mut y.data, |_, rows, span| {
+            for (i, r) in rows.enumerate() {
+                matvec_into(w, x.row(r), &mut span[i * n..(i + 1) * n]);
+            }
+        });
+    } else if lanes > 1 && x.rows == 1 && crate::threads::worth_parallel(n, w.cols) {
+        crate::threads::run_spans(pool, n, 1, &mut y.data, |_, chans, span| {
+            matvec_span_into(w, x.row(0), chans.start, span);
+        });
+    } else {
+        for r in 0..x.rows {
+            matvec_into(w, x.row(r), y.row_mut(r));
+        }
     }
 }
 

@@ -9,23 +9,46 @@
 use super::gemv::{decode_plane_row, gemv_fused, gemv_packed};
 use super::linear::{PackedTernaryLinear, TernaryLinear};
 use crate::tensor::Matrix;
+use crate::threads::{chunk_range, worth_parallel, Pool, SendPtr};
 
 /// Row-block edge for X; keeps a block of X plus one decoded channel in
 /// L2 cache.
 const XBLOCK: usize = 32;
 
-/// Reusable decode buffers for the row-blocked packed kernel — one
-/// decoded channel per plane. Owned by the caller (the model's
-/// `ForwardScratch`) so the serving hot loop never allocates.
+/// Reusable buffers + execution policy for the packed matrix kernels.
+/// Owned by the caller (the model's `ForwardScratch`) so the serving
+/// hot loop never allocates: channel-decode buffers for the blocked
+/// tier (one pair per pool lane), activation-indexed tables for the
+/// LUT tier (one per lane), and the worker pool the row-parallel
+/// drivers dispatch on (sequential by default — the exact legacy path).
 #[derive(Clone, Debug, Default)]
 pub struct GemmScratch {
     dec1: Vec<f32>,
     dec2: Vec<f32>,
+    /// Per-lane channel-decode buffers for the parallel blocked kernel
+    /// (lane 0's pair is distinct from `dec1`/`dec2`, which stay
+    /// dedicated to the sequential path).
+    pub(crate) lane_dec: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Per-lane activation-indexed tables for the LUT tier.
+    pub(crate) lut_tables: Vec<Vec<f32>>,
+    /// Worker pool driving the row-parallel kernels. `threads == 1`
+    /// forces the exact sequential path.
+    pub pool: Pool,
 }
 
 impl GemmScratch {
     pub fn new() -> GemmScratch {
         GemmScratch::default()
+    }
+
+    /// Grow the per-lane buffer sets to at least `lanes` entries.
+    pub(crate) fn ensure_lanes(&mut self, lanes: usize) {
+        if self.lane_dec.len() < lanes {
+            self.lane_dec.resize_with(lanes, Default::default);
+        }
+        if self.lut_tables.len() < lanes {
+            self.lut_tables.resize_with(lanes, Vec::new);
+        }
     }
 }
 
@@ -47,17 +70,37 @@ pub fn gemm_packed_blocked_into(
     assert_eq!(x.cols, lin.cols, "gemm inner dim mismatch");
     assert_eq!(y.rows, x.rows, "gemm out rows mismatch");
     assert_eq!(y.cols, lin.rows, "gemm out cols mismatch");
+    let yp = SendPtr(y.data.as_mut_ptr());
+    gemm_blocked_chans(lin, x, 0..lin.rows, &mut scratch.dec1, &mut scratch.dec2, yp);
+}
+
+/// Channel-span core shared by the sequential and channel-parallel
+/// blocked kernels — the single FP-order body (the `gemv_packed_rows`
+/// pattern), so the bit-identity invariant is maintained in one place.
+/// Computes output channels `chans` for every row of X, writing
+/// `y[xr·n_out + ch]` through the raw output pointer. Caller contract:
+/// exclusive access to exactly those elements, with the output buffer
+/// alive for the whole call.
+fn gemm_blocked_chans(
+    lin: &PackedTernaryLinear,
+    x: &Matrix,
+    chans: std::ops::Range<usize>,
+    dec1: &mut Vec<f32>,
+    dec2: &mut Vec<f32>,
+    yp: SendPtr<f32>,
+) {
     let gpr = lin.groups_per_row();
     let aligned = lin.group % 4 == 0 && lin.cols % 4 == 0;
-    scratch.dec1.resize(lin.cols, 0.0);
-    scratch.dec2.resize(lin.cols, 0.0);
+    let n_out = lin.rows;
+    dec1.resize(lin.cols, 0.0);
+    dec2.resize(lin.cols, 0.0);
     for rb in (0..x.rows).step_by(XBLOCK) {
         let re = (rb + XBLOCK).min(x.rows);
-        for ch in 0..lin.rows {
+        for ch in chans.clone() {
             let p1 = &lin.p1[ch * lin.row_stride..(ch + 1) * lin.row_stride];
             let p2 = &lin.p2[ch * lin.row_stride..(ch + 1) * lin.row_stride];
-            decode_plane_row(p1, lin.cols, &mut scratch.dec1);
-            decode_plane_row(p2, lin.cols, &mut scratch.dec2);
+            decode_plane_row(p1, lin.cols, dec1);
+            decode_plane_row(p2, lin.cols, dec2);
             for xr in rb..re {
                 let xrow = x.row(xr);
                 let mut acc = 0.0f32;
@@ -65,14 +108,16 @@ pub fn gemm_packed_blocked_into(
                     let start = g * lin.group;
                     let end = (start + lin.group).min(lin.cols);
                     let (s1, s2) = if aligned {
-                        decoded_pair_sum_aligned(&scratch.dec1, &scratch.dec2, xrow, start, end)
+                        decoded_pair_sum_aligned(dec1, dec2, xrow, start, end)
                     } else {
-                        decoded_pair_sum_scalar(&scratch.dec1, &scratch.dec2, xrow, start, end)
+                        decoded_pair_sum_scalar(dec1, dec2, xrow, start, end)
                     };
                     let ai = ch * gpr + g;
                     acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
                 }
-                y.data[xr * lin.rows + ch] = acc;
+                // SAFETY: caller grants exclusive access to the `chans`
+                // columns of `y` (see function doc).
+                unsafe { *yp.get().add(xr * n_out + ch) = acc };
             }
         }
     }
@@ -84,6 +129,46 @@ pub fn gemm_packed_blocked(lin: &PackedTernaryLinear, x: &Matrix) -> Matrix {
     let mut scratch = GemmScratch::new();
     gemm_packed_blocked_into(lin, x, &mut y, &mut scratch);
     y
+}
+
+/// Channel-parallel [`gemm_packed_blocked_into`]: output channels are
+/// partitioned into contiguous spans, one per lane of `scratch.pool`;
+/// each lane decodes its own channels into its own lane buffers and
+/// runs the identical blocked sweep, so every output element carries
+/// the sequential FP order — output is bit-identical to the sequential
+/// kernel (and hence to `gemv_packed` per row) for any thread count.
+/// Falls back inline when the pool is sequential or the whole stack's
+/// work is below [`crate::threads::PAR_MIN_WORK`].
+pub fn gemm_packed_blocked_par_into(
+    lin: &PackedTernaryLinear,
+    x: &Matrix,
+    y: &mut Matrix,
+    scratch: &mut GemmScratch,
+) {
+    let pool = scratch.pool.clone();
+    let lanes = pool.threads();
+    if lanes <= 1 || !worth_parallel(x.rows * lin.rows, lin.cols) {
+        gemm_packed_blocked_into(lin, x, y, scratch);
+        return;
+    }
+    assert_eq!(x.cols, lin.cols, "gemm inner dim mismatch");
+    assert_eq!(y.rows, x.rows, "gemm out rows mismatch");
+    assert_eq!(y.cols, lin.rows, "gemm out cols mismatch");
+    scratch.ensure_lanes(lanes);
+    let n_out = lin.rows;
+    let yp = SendPtr(y.data.as_mut_ptr());
+    let lane_bufs = SendPtr(scratch.lane_dec.as_mut_ptr());
+    pool.run(|lane| {
+        let chans = chunk_range(n_out, lanes, lane);
+        if chans.is_empty() {
+            return;
+        }
+        // SAFETY: one decode-buffer pair per lane (ensure_lanes sized
+        // the vec); lanes own disjoint channel columns of `y`; both
+        // outlive `run` because the leader blocks inside it.
+        let bufs = unsafe { &mut *lane_bufs.get().add(lane) };
+        gemm_blocked_chans(lin, x, chans, &mut bufs.0, &mut bufs.1, yp);
+    });
 }
 
 /// Mirror of `gemv::plane_pair_sum_aligned` over decoded-f32 planes:
@@ -269,6 +354,25 @@ mod tests {
                 gemv_packed(&packed, x.row(r), &mut yv);
                 assert_eq!(&y.data[r * rows..(r + 1) * rows], yv.as_slice(),
                     "row {r} (rows={rows} cols={cols} G={group})");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_blocked_bit_identical_for_any_thread_count() {
+        let mut rng = Rng::new(62);
+        // work above the PAR_MIN_WORK gate (parallel engages, aligned +
+        // ragged) and below it (inline fallback)
+        for (rows, cols, group) in [(100, 64, 32), (80, 37, 10), (12, 24, 8)] {
+            let lin = random_linear(rows, cols, group, 63 + rows as u64).to_packed();
+            let x = Matrix::randn(XBLOCK + 5, cols, 1.0, &mut rng);
+            let seq = gemm_packed_blocked(&lin, &x);
+            for threads in [1usize, 2, 4] {
+                let mut scratch = GemmScratch::new();
+                scratch.pool = crate::threads::Pool::new(threads);
+                let mut y = Matrix::zeros(x.rows, rows);
+                gemm_packed_blocked_par_into(&lin, &x, &mut y, &mut scratch);
+                assert_eq!(y.data, seq.data, "threads={threads} rows={rows} G={group}");
             }
         }
     }

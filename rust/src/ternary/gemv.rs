@@ -8,14 +8,22 @@
 //! register, and apply the two group scales once per group at the
 //! epilogue — weights are never multiplied inside the loop.
 //!
-//! Three implementations, cross-checked by tests and raced in Table 5:
+//! Three implementations here, cross-checked by tests and raced in
+//! Table 5 and `bench --kernels`:
 //! * [`gemv_unpacked`] — i8 planes, branch on trit (reference).
 //! * [`gemv_fused`]    — i8 planes, branchless select-add, both planes in
 //!   one pass.
-//! * [`gemv_packed`]   — 2-bit packed planes + LUT decode (deployment).
+//! * [`gemv_packed`]   — 2-bit packed planes + LUT decode (deployment);
+//!   [`gemv_packed_par`] row-partitions it across a worker pool with
+//!   bit-identical output.
+//!
+//! The activation-indexed table tier ([`super::lut`]) sits above these:
+//! one table load + add per byte per plane, amortized over output rows.
 
 use super::linear::{PackedTernaryLinear, TernaryLinear};
+use super::lut::decode_lut_f32;
 use super::pack::dec2;
+use crate::threads::{run_spans, worth_parallel, Pool};
 
 /// Reference kernel: explicit branches, reads the unpacked planes.
 pub fn gemv_unpacked(lin: &TernaryLinear, x: &[f32], y: &mut [f32]) {
@@ -84,10 +92,25 @@ pub fn gemv_fused(lin: &TernaryLinear, x: &[f32], y: &mut [f32]) {
 pub fn gemv_packed(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
     assert_eq!(y.len(), lin.rows);
+    gemv_packed_rows(lin, x, 0..lin.rows, y);
+}
+
+/// Row-span core of [`gemv_packed`]: output rows `rows` into `y_span`
+/// (`y_span[i]` = row `rows.start + i`). The single numerics body
+/// shared by the sequential and row-parallel drivers, so they cannot
+/// drift.
+fn gemv_packed_rows(
+    lin: &PackedTernaryLinear,
+    x: &[f32],
+    rows: std::ops::Range<usize>,
+    y_span: &mut [f32],
+) {
+    debug_assert_eq!(y_span.len(), rows.len());
     let gpr = lin.groups_per_row();
     let stride = lin.row_stride;
     let aligned = lin.group % 4 == 0 && lin.cols % 4 == 0;
-    for r in 0..lin.rows {
+    let y0 = rows.start;
+    for r in rows {
         let p1 = &lin.p1[r * stride..(r + 1) * stride];
         let p2 = &lin.p2[r * stride..(r + 1) * stride];
         let mut acc = 0.0f32;
@@ -102,35 +125,31 @@ pub fn gemv_packed(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32]) {
             let ai = r * gpr + g;
             acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
         }
-        y[r] = acc;
+        y_span[r - y0] = acc;
     }
 }
 
-/// 256-entry byte → 4×f32 decode LUT (4 KiB, stays L1-resident). Built
-/// once per process; the hot loop replaces 8 shift/mask chains per byte
-/// pair with two table loads + fused multiply-adds.
-fn lut_f32() -> &'static [[f32; 4]; 256] {
-    use std::sync::OnceLock;
-    static LUT: OnceLock<Box<[[f32; 4]; 256]>> = OnceLock::new();
-    LUT.get_or_init(|| {
-        let mut t = Box::new([[0.0f32; 4]; 256]);
-        for b in 0..256usize {
-            let byte = b as u8;
-            t[b] = [
-                dec2(byte) as f32,
-                dec2(byte >> 2) as f32,
-                dec2(byte >> 4) as f32,
-                dec2(byte >> 6) as f32,
-            ];
-        }
-        t
-    })
+/// Row-parallel [`gemv_packed`]: output rows are partitioned into
+/// contiguous spans, one per pool lane; each row keeps its sequential
+/// FP order, so the result is bit-identical to the sequential kernel
+/// for any thread count. Falls back inline when the matrix's work is
+/// below [`crate::threads::PAR_MIN_WORK`].
+pub fn gemv_packed_par(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32], pool: &Pool) {
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    if pool.threads() <= 1 || !worth_parallel(lin.rows, lin.cols) {
+        gemv_packed_rows(lin, x, 0..lin.rows, y);
+        return;
+    }
+    run_spans(pool, lin.rows, 1, y, |_, rows, span| {
+        gemv_packed_rows(lin, x, rows, span);
+    });
 }
 
 /// Byte-aligned group: process 4 trits per byte per plane via the LUT.
 #[inline]
 fn plane_pair_sum_aligned(p1: &[u8], p2: &[u8], x: &[f32], start: usize, end: usize) -> (f32, f32) {
-    let lut = lut_f32();
+    let lut = decode_lut_f32();
     let mut s1 = 0.0f32;
     let mut s2 = 0.0f32;
     let b0 = start / 4;
@@ -152,7 +171,7 @@ fn plane_pair_sum_aligned(p1: &[u8], p2: &[u8], x: &[f32], start: usize, end: us
 /// (see `rust/DESIGN.md` §Batched-Forward).
 pub(crate) fn decode_plane_row(p: &[u8], cols: usize, out: &mut [f32]) {
     debug_assert!(out.len() >= cols);
-    let lut = lut_f32();
+    let lut = decode_lut_f32();
     let full = cols / 4;
     for b in 0..full {
         out[b * 4..b * 4 + 4].copy_from_slice(&lut[p[b] as usize]);
@@ -275,6 +294,25 @@ mod tests {
         let x = vec![1.0; 16];
         let y = gemv(&lin, &x);
         assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn parallel_gemv_bit_identical_for_any_thread_count() {
+        let mut rng = Rng::new(70);
+        // work above the PAR_MIN_WORK gate (parallel engages, aligned +
+        // ragged packing) and below it (inline fallback)
+        for (rows, cols, group) in [(600, 64, 32), (400, 96, 10), (9, 128, 32)] {
+            let packed = random_linear(rows, cols, group, 71 + rows as u64).to_packed();
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut seq = vec![0.0; rows];
+            gemv_packed(&packed, &x, &mut seq);
+            for threads in [1usize, 2, 3, 4] {
+                let pool = Pool::new(threads);
+                let mut par = vec![0.0; rows];
+                gemv_packed_par(&packed, &x, &mut par, &pool);
+                assert_eq!(par, seq, "threads={threads} rows={rows} G={group}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Activation-indexed lookup-table kernels — the fifth kernel tier
+//! (DESIGN.md §LUT-Kernels), plus the one shared byte-decode LUT used
+//! by pack, gemv, and this tier.
+//!
+//! The packed tiers spend 2 FMAs *per trit per plane*: decode a byte to
+//! four f32 trits, multiply each against its activation, accumulate.
+//! But within one 4-column chunk there are only 3⁴ = 81 distinct trit
+//! patterns (≤ 256 byte codes), while every projection in the model has
+//! 64–1024 output rows reading the *same* activation chunk. So, in the
+//! spirit of bitnet.cpp / T-MAC, we precompute per chunk a 256-entry
+//! table
+//!
+//! ```text
+//! lut[b] = d₀(b)·x₀ + d₁(b)·x₁ + d₂(b)·x₂ + d₃(b)·x₃
+//! ```
+//!
+//! once per activation vector, and the inner loop collapses to **one
+//! table load + one add per byte per plane** — the 2-bit packing turned
+//! from a memory format into a compute shortcut. The build amortizes
+//! whenever output rows ≳ [`LUT_MIN_ROWS`].
+//!
+//! **Bit-identity invariant**: each table entry is produced by the
+//! exact left-fold `((d₀·x₀ + d₁·x₁) + d₂·x₂) + d₃·x₃` that
+//! `gemv::plane_pair_sum_aligned` evaluates per byte, and the per-group
+//! byte loop and α epilogue mirror [`gemv_packed`] line for line — so
+//! LUT outputs are `==` (bitwise) to the packed tier, which is what
+//! lets the model dispatch between tiers freely without perturbing any
+//! served token. Ragged layouts (`G % 4 != 0` or `cols % 4 != 0`) stay
+//! on the packed tier's scalar path; see [`is_aligned`].
+//!
+//! [`gemv_packed`]: super::gemv::gemv_packed
+
+use super::gemm::GemmScratch;
+use super::linear::PackedTernaryLinear;
+use super::pack::dec2;
+use crate::tensor::Matrix;
+use crate::threads::{run_spans, worth_parallel, Pool, SendPtr};
+use std::sync::OnceLock;
+
+/// Minimum output rows before the table build amortizes over the row
+/// sweep (~340 flops of build per chunk vs ~14 flops saved per row).
+pub const LUT_MIN_ROWS: usize = 64;
+
+/// The one 256-entry byte → 4-trit decode table (i8 form), shared by
+/// every consumer that used to build its own copy.
+pub fn decode_lut_i8() -> &'static [[i8; 4]; 256] {
+    static LUT: OnceLock<Box<[[i8; 4]; 256]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = Box::new([[0i8; 4]; 256]);
+        for (b, entry) in t.iter_mut().enumerate() {
+            let byte = b as u8;
+            *entry = [dec2(byte), dec2(byte >> 2), dec2(byte >> 4), dec2(byte >> 6)];
+        }
+        t
+    })
+}
+
+/// f32 view of the decode table (4 KiB, L1-resident) for the FMA-style
+/// kernels that multiply trits as {-1.0, 0.0, 1.0} factors.
+pub fn decode_lut_f32() -> &'static [[f32; 4]; 256] {
+    static LUT: OnceLock<Box<[[f32; 4]; 256]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = Box::new([[0.0f32; 4]; 256]);
+        for (b, entry) in t.iter_mut().enumerate() {
+            let d = decode_lut_i8()[b];
+            *entry = [d[0] as f32, d[1] as f32, d[2] as f32, d[3] as f32];
+        }
+        t
+    })
+}
+
+/// True when every group spans whole packed bytes, which the LUT tier
+/// (and the packed tier's fast path) requires.
+pub fn is_aligned(lin: &PackedTernaryLinear) -> bool {
+    lin.group % 4 == 0 && lin.cols % 4 == 0
+}
+
+/// Build the per-chunk activation tables for one activation vector
+/// (`x.len() % 4 == 0`): `table[c*256 + b]` is chunk `c`'s partial sum
+/// for byte code `b`. The buffer is caller-owned scratch, reused across
+/// calls without reallocation.
+pub fn fill_tables(x: &[f32], table: &mut Vec<f32>) {
+    debug_assert_eq!(x.len() % 4, 0, "LUT tier requires 4-aligned activations");
+    let chunks = x.len() / 4;
+    table.resize(chunks * 256, 0.0);
+    for (xc, seg) in x.chunks_exact(4).zip(table.chunks_exact_mut(256)) {
+        fill_chunk(xc, seg);
+    }
+}
+
+/// Fill one 256-entry chunk table by left-fold dynamic programming:
+/// level `t` extends every level-`t-1` prefix with trit `t`'s
+/// contribution, appended at the end of the fold — i.e. entry `b`
+/// is computed as exactly `((d₀·x₀ + d₁·x₁) + d₂·x₂) + d₃·x₃`, the
+/// association `plane_pair_sum_aligned` uses, so downstream sums are
+/// bit-identical to the packed tier. ~4·(4 + 16 + 64) adds per chunk
+/// instead of 256·7 for the direct build.
+#[inline]
+fn fill_chunk(x: &[f32], seg: &mut [f32]) {
+    // 2-bit code → trit factor, matching `pack::dec2` (0b11 → 0).
+    const DEC: [f32; 4] = [0.0, 1.0, -1.0, 0.0];
+    debug_assert_eq!(x.len(), 4);
+    debug_assert_eq!(seg.len(), 256);
+    for (code, slot) in seg.iter_mut().enumerate().take(4) {
+        *slot = DEC[code] * x[0];
+    }
+    for trit in 1..4 {
+        let width = 1usize << (2 * trit); // 4^trit entries already valid
+        // high codes first so the level-(t-1) prefix at [0, width) is
+        // still intact when code 0 finally overwrites it in place
+        for code in (0..4usize).rev() {
+            let add = DEC[code] * x[trit];
+            let base = code * width;
+            for lo in 0..width {
+                seg[base + lo] = seg[lo] + add;
+            }
+        }
+    }
+}
+
+/// Core row sweep: compute output rows `rows` into `y_span`
+/// (`y_span[i]` = row `rows.start + i`). Group loop and α epilogue
+/// mirror `gemv_packed` exactly; the per-byte body is one table load +
+/// add per plane.
+fn lut_rows_span(
+    lin: &PackedTernaryLinear,
+    table: &[f32],
+    rows: std::ops::Range<usize>,
+    y_span: &mut [f32],
+) {
+    debug_assert_eq!(y_span.len(), rows.len());
+    let gpr = lin.groups_per_row();
+    let stride = lin.row_stride;
+    let y0 = rows.start;
+    for r in rows {
+        let p1 = &lin.p1[r * stride..(r + 1) * stride];
+        let p2 = &lin.p2[r * stride..(r + 1) * stride];
+        let mut acc = 0.0f32;
+        for g in 0..gpr {
+            let start = g * lin.group;
+            let end = (start + lin.group).min(lin.cols);
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            for b in start / 4..end / 4 {
+                let seg = &table[b * 256..b * 256 + 256];
+                s1 += seg[p1[b] as usize];
+                s2 += seg[p2[b] as usize];
+            }
+            let ai = r * gpr + g;
+            acc += lin.alpha1[ai] * s1 + lin.alpha2[ai] * s2;
+        }
+        y_span[r - y0] = acc;
+    }
+}
+
+/// Sequential LUT gemv over a caller-owned table buffer. Panics on
+/// ragged layouts — dispatchers gate on [`is_aligned`].
+pub fn gemv_lut(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32], table: &mut Vec<f32>) {
+    assert!(is_aligned(lin), "gemv_lut requires byte-aligned groups");
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    fill_tables(x, table);
+    lut_rows_span(lin, table, 0..lin.rows, y);
+}
+
+/// Partition one output vector's rows across the pool's lanes; each
+/// lane writes its contiguous disjoint span with the sequential sweep,
+/// so output is bit-identical to [`gemv_lut`] for any lane count.
+fn lut_row_par(lin: &PackedTernaryLinear, table: &[f32], y_row: &mut [f32], pool: &Pool) {
+    run_spans(pool, lin.rows, 1, y_row, |_, rows, span| {
+        lut_rows_span(lin, table, rows, span);
+    });
+}
+
+/// Pool-aware LUT gemv over engine scratch (decode path). Builds the
+/// table once on the leader, then row-partitions the sweep.
+pub fn gemv_lut_into(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32], scratch: &mut GemmScratch) {
+    assert!(is_aligned(lin), "gemv_lut requires byte-aligned groups");
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    let pool = scratch.pool.clone();
+    let lanes = pool.threads();
+    scratch.ensure_lanes(lanes);
+    let table = &mut scratch.lut_tables[0];
+    fill_tables(x, table);
+    if lanes <= 1 || !worth_parallel(lin.rows, lin.cols) {
+        lut_rows_span(lin, table, 0..lin.rows, y);
+    } else {
+        lut_row_par(lin, table, y, &pool);
+    }
+}
+
+/// Pool-aware LUT gemm `Y = X · Ŵᵀ` (prefill / batched serving path).
+/// Every output element carries `gemv_packed`'s exact FP order, so this
+/// is bit-identical per row to the packed tiers. Parallel split: by X
+/// row when the batch is deep enough (each lane builds its own tables),
+/// else by output channel.
+pub fn gemm_lut_into(lin: &PackedTernaryLinear, x: &Matrix, y: &mut Matrix, scratch: &mut GemmScratch) {
+    assert!(is_aligned(lin), "gemm_lut requires byte-aligned groups");
+    assert_eq!(x.cols, lin.cols, "gemm inner dim mismatch");
+    assert_eq!(y.rows, x.rows, "gemm out rows mismatch");
+    assert_eq!(y.cols, lin.rows, "gemm out cols mismatch");
+    let pool = scratch.pool.clone();
+    let lanes = pool.threads();
+    scratch.ensure_lanes(lanes);
+    if lanes > 1 && x.rows >= lanes && worth_parallel(x.rows * lin.rows, lin.cols) {
+        // deep batch: lanes own disjoint X-row spans end to end
+        let tables = SendPtr(scratch.lut_tables.as_mut_ptr());
+        let n_out = lin.rows;
+        run_spans(&pool, x.rows, n_out, &mut y.data, |lane, rows, span| {
+            // SAFETY: one table buffer per lane (ensure_lanes sized the
+            // vec), alive past `run` because the leader blocks in it.
+            let table = unsafe { &mut *tables.get().add(lane) };
+            for (i, r) in rows.enumerate() {
+                fill_tables(x.row(r), table);
+                lut_rows_span(lin, table, 0..n_out, &mut span[i * n_out..(i + 1) * n_out]);
+            }
+        });
+        return;
+    }
+    // shallow batch: per X row, build once and split output channels
+    let table = &mut scratch.lut_tables[0];
+    for r in 0..x.rows {
+        fill_tables(x.row(r), table);
+        let row = &mut y.data[r * lin.rows..(r + 1) * lin.rows];
+        if lanes <= 1 || !worth_parallel(lin.rows, lin.cols) {
+            lut_rows_span(lin, table, 0..lin.rows, row);
+        } else {
+            lut_row_par(lin, table, row, &pool);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::random_ternary as random_linear;
+    use crate::proptest::{check, prop_assert, Gen};
+    use crate::rng::Rng;
+    use crate::ternary::gemm::{gemm_packed_blocked, GemmScratch};
+    use crate::ternary::gemv::gemv_packed;
+    use crate::ternary::linear::TernaryLinear;
+
+    #[test]
+    fn shared_decode_lut_matches_scalar_decode() {
+        let i8lut = decode_lut_i8();
+        let f32lut = decode_lut_f32();
+        for b in 0u16..256 {
+            let b = b as u8;
+            let expect = [dec2(b), dec2(b >> 2), dec2(b >> 4), dec2(b >> 6)];
+            assert_eq!(i8lut[b as usize], expect);
+            for (got, want) in f32lut[b as usize].iter().zip(expect.iter()) {
+                assert_eq!(*got, *want as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_table_matches_direct_expression() {
+        // DP build must equal the packed tier's per-byte left fold bitwise
+        let lutf = decode_lut_f32();
+        let mut rng = Rng::new(3);
+        for case in 0..50 {
+            let x: [f32; 4] = if case == 0 {
+                [0.0, -0.0, 1.5, -2.25]
+            } else {
+                [rng.normal(), rng.normal(), rng.normal() * 100.0, rng.normal() * 1e-3]
+            };
+            let mut seg = vec![0.0f32; 256];
+            fill_chunk(&x, &mut seg);
+            for (b, (got, d)) in seg.iter().zip(lutf.iter()).enumerate() {
+                let direct = d[0] * x[0] + d[1] * x[1] + d[2] * x[2] + d[3] * x[3];
+                assert_eq!(got.to_bits(), direct.to_bits(), "byte {b} x={x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_lut_bit_identical_to_gemv_packed() {
+        let mut rng = Rng::new(7);
+        let mut table = Vec::new();
+        for (rows, cols, group) in [(9, 128, 32), (64, 64, 128), (3, 16, 4), (130, 48, 8)] {
+            let packed = random_linear(rows, cols, group, 70 + rows as u64).to_packed();
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0; rows];
+            let mut b = vec![0.0; rows];
+            gemv_packed(&packed, &x, &mut a);
+            gemv_lut(&packed, &x, &mut b, &mut table);
+            assert_eq!(a, b, "rows={rows} cols={cols} G={group}");
+        }
+    }
+
+    #[test]
+    fn zero_planes_give_zero_output() {
+        let packed = TernaryLinear::new(8, 16, 4).to_packed();
+        let x = vec![1.0f32; 16];
+        let mut y = vec![9.0f32; 8];
+        gemv_lut(&packed, &x, &mut y, &mut Vec::new());
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn threaded_gemv_lut_bit_identical_to_sequential() {
+        // 360×96 clears the PAR_MIN_WORK dispatch gate
+        let mut rng = Rng::new(11);
+        let packed = random_linear(360, 96, 32, 12).to_packed();
+        let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        let mut seq = vec![0.0; 360];
+        gemv_lut(&packed, &x, &mut seq, &mut Vec::new());
+        for threads in [1usize, 2, 3, 5] {
+            let mut scratch = GemmScratch::new();
+            scratch.pool = Pool::new(threads);
+            let mut par = vec![0.0; 360];
+            gemv_lut_into(&packed, &x, &mut par, &mut scratch);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gemm_lut_bit_identical_to_blocked_and_gemv() {
+        // covers the inline fallback (small), the shallow channel-split
+        // (m=1, work over the gate), and the deep X-row split (m=40)
+        let mut rng = Rng::new(13);
+        for (rows, cols, group, m) in [(10, 64, 32, 5), (1040, 32, 4, 1), (65, 48, 12, 40)] {
+            let packed = random_linear(rows, cols, group, 50 + m as u64).to_packed();
+            let x = Matrix::randn(m, cols, 1.0, &mut rng);
+            let blocked = gemm_packed_blocked(&packed, &x);
+            for threads in [1usize, 2, 4] {
+                let mut scratch = GemmScratch::new();
+                scratch.pool = Pool::new(threads);
+                let mut y = Matrix::zeros(m, rows);
+                gemm_lut_into(&packed, &x, &mut y, &mut scratch);
+                assert_eq!(y.data, blocked.data, "threads={threads} m={m} rows={rows}");
+            }
+            for r in 0..m {
+                let mut yv = vec![0.0; rows];
+                gemv_packed(&packed, x.row(r), &mut yv);
+                assert_eq!(&blocked.data[r * rows..(r + 1) * rows], yv.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lut_tier_always_bit_identical() {
+        check(60, |g: &mut Gen| {
+            let rows = g.usize_in(1, 150);
+            let cols = 4 * g.usize_in(1, 24);
+            let group = 4 * *g.pick(&[1usize, 2, 4, 8, 32]);
+            let seed = g.rng.next_u64();
+            let packed = random_linear(rows, cols, group, seed).to_packed();
+            let x = g.vec_normal(cols, 1.0);
+            let mut a = vec![0.0; rows];
+            let mut b = vec![0.0; rows];
+            gemv_packed(&packed, &x, &mut a);
+            gemv_lut(&packed, &x, &mut b, &mut Vec::new());
+            prop_assert(
+                a == b,
+                format!("LUT/packed drift (rows={rows} cols={cols} G={group})"),
+            )
+        });
+    }
+}

@@ -16,11 +16,15 @@
 //!   group-wise scales, reconstruction and quality metrics.
 //! * [`gemv`]   — multiply-free matrix–vector kernels (decode path).
 //! * [`gemm`]   — multiply-free matrix–matrix kernels (prefill path).
+//! * [`lut`]    — activation-indexed table kernels (one table load +
+//!   add per byte per plane, bit-identical to the packed tiers) and
+//!   the shared byte-decode LUT.
 
 pub mod gemm;
 pub mod gemv;
 pub mod int4;
 pub mod linear;
+pub mod lut;
 pub mod pack;
 pub mod plane;
 

@@ -39,30 +39,20 @@ pub fn pack2bit(trits: &[i8]) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` trits from a 2-bit stream.
+/// Unpack `n` trits from a 2-bit stream. Whole bytes decode through the
+/// shared 256-entry LUT ([`super::lut::decode_lut_i8`] — the one copy
+/// the packed kernels use too); the ragged tail decodes per trit.
 pub fn unpack2bit(bytes: &[u8], n: usize) -> Vec<i8> {
     assert!(bytes.len() * 4 >= n, "packed buffer too short");
+    let lut = super::lut::decode_lut_i8();
     let mut out = Vec::with_capacity(n);
-    for i in 0..n {
+    for &b in bytes.iter().take(n / 4) {
+        out.extend_from_slice(&lut[b as usize]);
+    }
+    for i in out.len()..n {
         out.push(dec2(bytes[i / 4] >> ((i % 4) * 2)));
     }
     out
-}
-
-/// 256-entry decode LUT: byte → 4 trits. Built once; the hot GEMV uses it
-/// to decode 4 trits per table lookup instead of 4 shift/mask chains.
-pub fn build_lut2() -> Vec<[i8; 4]> {
-    (0u16..256)
-        .map(|b| {
-            let b = b as u8;
-            [
-                dec2(b),
-                dec2(b >> 2),
-                dec2(b >> 4),
-                dec2(b >> 6),
-            ]
-        })
-        .collect()
 }
 
 /// Pack trits 5-per-byte in base 3 (digit value = trit + 1).
@@ -141,16 +131,6 @@ mod tests {
         assert!(bytes_base3(1000) < bytes_2bit(1000));
         assert_eq!(bytes_base3(1000), 200);
         assert_eq!(bytes_2bit(1000), 250);
-    }
-
-    #[test]
-    fn lut_matches_scalar_decode() {
-        let lut = build_lut2();
-        for b in 0u16..256 {
-            let b = b as u8;
-            let expect = [dec2(b), dec2(b >> 2), dec2(b >> 4), dec2(b >> 6)];
-            assert_eq!(lut[b as usize], expect);
-        }
     }
 
     #[test]

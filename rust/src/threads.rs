@@ -1,0 +1,462 @@
+//! Deterministic row-parallel execution substrate (std-only).
+//!
+//! A small persistent worker pool that partitions work by *output
+//! channel* (or row). Determinism argument: every output element is
+//! computed in full by exactly one lane, running the identical
+//! sequential kernel code over that element — the floating-point
+//! operation order within an element never changes, and the partition
+//! is a pure function of `(total, lanes)` — so parallel output is
+//! **bit-identical** to sequential output for any thread count. There
+//! is no work stealing and no atomically-reduced accumulator anywhere
+//! in the crate; cross-lane reductions are always performed by the
+//! leader in a fixed order.
+//!
+//! Sizing: `--threads N` on the CLI, else the `PTQTP_THREADS`
+//! environment variable, else all available cores
+//! ([`default_threads`]). `threads = 1` *is* the sequential path — no
+//! workers are spawned and [`Pool::run`] invokes the job inline — the
+//! documented escape hatch for debugging.
+//!
+//! Lifecycle: [`Pool::new`] spawns `n - 1` parked workers (the caller
+//! is lane 0); handles are cheap clones sharing one pool; the last
+//! handle to drop signals shutdown and joins the workers. The
+//! process-wide [`Pool::global`] pool is shared by every engine that
+//! doesn't ask for its own size and lives for the whole process.
+//!
+//! Nesting rule: a job body must never call [`Pool::run`] on the same
+//! pool (the leader holds the dispatch lock while workers run, so a
+//! nested call deadlocks). Callers that fan out at an outer level pass
+//! [`Pool::sequential`] to inner layers — see
+//! `Transformer::quantize_with`.
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Minimum total multiply-add work (output elements × reduction
+/// length) before the parallel drivers engage: a pool dispatch costs a
+/// condvar round trip (order of microseconds), so only matrices with
+/// comfortably-larger kernels go to the lanes. Below it, drivers stay
+/// inline — identical output either way.
+pub const PAR_MIN_WORK: usize = 32_768;
+
+/// Dispatch gate for the row-parallel drivers: `out_rows` output
+/// elements each reducing over `cols` inputs. Batch kernels pass
+/// `x_rows * out_rows` so the whole stack amortizes one dispatch.
+#[inline]
+pub fn worth_parallel(out_rows: usize, cols: usize) -> bool {
+    out_rows.saturating_mul(cols) >= PAR_MIN_WORK
+}
+
+/// Resolve the default lane count: `PTQTP_THREADS` if set and valid,
+/// else the number of available cores.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PTQTP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Contiguous near-even span of `0..total` owned by `lane` out of
+/// `lanes`. Pure function of its arguments (the determinism anchor):
+/// the first `total % lanes` lanes take one extra item.
+pub fn chunk_range(total: usize, lanes: usize, lane: usize) -> std::ops::Range<usize> {
+    debug_assert!(lane < lanes);
+    let base = total / lanes;
+    let rem = total % lanes;
+    let start = lane * base + lane.min(rem);
+    let len = base + usize::from(lane < rem);
+    start..start + len
+}
+
+/// Raw-pointer wrapper so kernels can hand each lane its disjoint
+/// output span through a shared `Fn` closure. Safety contract is the
+/// caller's: lanes must write non-overlapping regions.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// Partition `y` into per-lane contiguous spans — `chunk_range(total,
+/// lanes, lane)` items of `stride` elements each — and invoke
+/// `f(lane, items, span)` with each lane's disjoint `&mut` view. This
+/// is the one place the span-aliasing argument lives; parallel kernels
+/// should prefer it over hand-rolled [`SendPtr`] arithmetic.
+pub fn run_spans<T: Send>(
+    pool: &Pool,
+    total: usize,
+    stride: usize,
+    y: &mut [T],
+    f: impl Fn(usize, std::ops::Range<usize>, &mut [T]) + Sync,
+) {
+    debug_assert!(y.len() >= total * stride);
+    let lanes = pool.threads();
+    if lanes <= 1 {
+        if total > 0 {
+            f(0, 0..total, &mut y[..total * stride]);
+        }
+        return;
+    }
+    let yp = SendPtr(y.as_mut_ptr());
+    pool.run(|lane| {
+        let items = chunk_range(total, lanes, lane);
+        if items.is_empty() {
+            return;
+        }
+        // SAFETY: chunk_range tiles 0..total disjointly across lanes,
+        // so the [start·stride, end·stride) element spans never
+        // overlap, and `y` outlives the call because `run` blocks the
+        // leader until every lane returns.
+        let span = unsafe {
+            std::slice::from_raw_parts_mut(
+                yp.get().add(items.start * stride),
+                items.len() * stride,
+            )
+        };
+        f(lane, items, span);
+    });
+}
+
+/// Job handed to the workers: a lifetime-erased pointer to the caller's
+/// closure. Valid only while the leader blocks in [`Pool::run`].
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+}
+
+unsafe impl Send for Job {}
+
+struct JobState {
+    /// Monotone dispatch counter; workers run each epoch exactly once.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still inside the current epoch's job.
+    remaining: usize,
+    /// First worker panic of the epoch, preserved so the leader can
+    /// rethrow the original payload (e.g. a parity-assert message).
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    /// Set under the mutex (so parked workers can't miss it) when the
+    /// last pool handle drops.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Workers park here waiting for a new epoch.
+    work_cv: Condvar,
+    /// The leader parks here waiting for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+struct PoolInner {
+    shared: Arc<Shared>,
+    /// Total lanes including the leader.
+    lanes: usize,
+    /// Serializes concurrent `run` calls from different leader threads.
+    run_lock: Mutex<()>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Cheaply-cloneable handle to a worker pool (or to the sequential
+/// no-pool when `threads == 1`).
+#[derive(Clone, Default)]
+pub struct Pool {
+    inner: Option<Arc<PoolInner>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads()).finish()
+    }
+}
+
+impl Pool {
+    /// The inline, single-lane pool: `run` calls the job on the caller.
+    pub fn sequential() -> Pool {
+        Pool { inner: None }
+    }
+
+    /// Spawn a pool with `threads` total lanes (`threads - 1` workers;
+    /// the calling thread is always lane 0). `threads <= 1` spawns
+    /// nothing and behaves exactly like [`Pool::sequential`].
+    pub fn new(threads: usize) -> Pool {
+        if threads <= 1 {
+            return Pool::sequential();
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for lane in 1..threads {
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || worker_loop(&shared, lane)));
+        }
+        Pool {
+            inner: Some(Arc::new(PoolInner {
+                shared,
+                lanes: threads,
+                run_lock: Mutex::new(()),
+                handles: Mutex::new(handles),
+            })),
+        }
+    }
+
+    /// Process-wide shared pool sized by [`default_threads`]. Engines
+    /// and benches that don't request a size clone this.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| Pool::new(default_threads()))
+    }
+
+    /// Total lanes including the leader (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.inner.as_ref().map(|i| i.lanes).unwrap_or(1)
+    }
+
+    /// True when `run` executes inline on the caller only.
+    pub fn is_sequential(&self) -> bool {
+        self.inner.is_none()
+    }
+
+    /// Execute `f(lane)` once per lane in `0..threads()`, in parallel;
+    /// the caller runs lane 0. Blocks until every lane returns, so `f`
+    /// may borrow the caller's stack. Panics in any lane are surfaced
+    /// here after all lanes finish.
+    pub fn run(&self, f: impl Fn(usize) + Sync) {
+        let Some(inner) = self.inner.as_ref() else {
+            f(0);
+            return;
+        };
+        let shared = &inner.shared;
+        let guard = inner.run_lock.lock().unwrap();
+        // Erase the borrow: workers only dereference while we block below.
+        let job = Job {
+            f: &f as &(dyn Fn(usize) + Sync) as *const (dyn Fn(usize) + Sync),
+        };
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.remaining = inner.lanes - 1;
+            st.panic_payload = None;
+            shared.work_cv.notify_all();
+        }
+        let lead = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        let worker_payload = {
+            let mut st = shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic_payload.take()
+        };
+        drop(guard);
+        if let Err(p) = lead {
+            std::panic::resume_unwind(p);
+        }
+        if let Some(p) = worker_payload {
+            // rethrow the worker's original payload so e.g. a kernel
+            // parity assert keeps its message
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job {
+                    Some(job) if st.epoch != seen => {
+                        seen = st.epoch;
+                        break job;
+                    }
+                    _ => st = shared.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        // The leader blocks until `remaining == 0`, so the closure
+        // behind `job.f` is alive for the whole call.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (&*job.f)(lane)
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic_payload.is_none() {
+                st.panic_payload = Some(payload);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for total in [0usize, 1, 5, 64, 97, 1000] {
+            for lanes in [1usize, 2, 3, 4, 7] {
+                let mut next = 0usize;
+                for lane in 0..lanes {
+                    let r = chunk_range(total, lanes, lane);
+                    assert_eq!(r.start, next, "total={total} lanes={lanes} lane={lane}");
+                    next = r.end;
+                }
+                assert_eq!(next, total);
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline() {
+        let pool = Pool::sequential();
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.is_sequential());
+        let hits = AtomicUsize::new(0);
+        pool.run(|lane| {
+            assert_eq!(lane, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn every_lane_runs_once_per_job() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for _round in 0..20 {
+            let mask = AtomicUsize::new(0);
+            pool.run(|lane| {
+                mask.fetch_or(1 << lane, Ordering::SeqCst);
+            });
+            assert_eq!(mask.load(Ordering::SeqCst), 0b1111);
+        }
+    }
+
+    #[test]
+    fn disjoint_spans_fill_a_buffer() {
+        let pool = Pool::new(3);
+        let lanes = pool.threads();
+        let mut buf = vec![0u32; 101];
+        let ptr = SendPtr(buf.as_mut_ptr());
+        pool.run(|lane| {
+            let r = chunk_range(101, lanes, lane);
+            for i in r {
+                unsafe { *ptr.get().add(i) = i as u32 + 1 };
+            }
+        });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
+    }
+
+    #[test]
+    fn run_spans_hands_each_lane_its_items() {
+        for (pool, total, stride) in
+            [(Pool::new(3), 10usize, 4usize), (Pool::sequential(), 7, 2), (Pool::new(4), 0, 3)]
+        {
+            let mut buf = vec![0usize; total * stride];
+            run_spans(&pool, total, stride, &mut buf, |_, items, span| {
+                assert_eq!(span.len(), items.len() * stride);
+                for (i, item) in items.enumerate() {
+                    for k in 0..stride {
+                        span[i * stride + k] = item * stride + k + 1;
+                    }
+                }
+            });
+            assert!(
+                buf.iter().enumerate().all(|(i, &v)| v == i + 1),
+                "total={total} stride={stride}"
+            );
+        }
+    }
+
+    #[test]
+    fn clones_share_workers_and_drop_cleanly() {
+        let pool = Pool::new(2);
+        let clone = pool.clone();
+        let hits = AtomicUsize::new(0);
+        clone.run(|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        // remaining handle still works
+        clone.run(|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        drop(clone); // joins workers without hanging
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_leader() {
+        let pool = Pool::new(2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|lane| {
+                if lane == 1 {
+                    panic!("lane 1 exploded");
+                }
+            });
+        }));
+        // the worker's original payload must survive to the leader
+        let payload = boom.unwrap_err();
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("lane 1 exploded"), "payload lost: {msg:?}");
+        // pool survives a panicked job
+        let hits = AtomicUsize::new(0);
+        pool.run(|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

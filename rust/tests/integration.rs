@@ -207,6 +207,62 @@ fn fused_batch_matches_sequential_property() {
 }
 
 // ---------------------------------------------------------------------
+// Row-parallel execution parity (quantize → serve, any thread count)
+// ---------------------------------------------------------------------
+
+/// The whole pipeline under `--threads`: matrix-parallel quantization
+/// must produce a bit-identical model, and a threaded engine must then
+/// serve token-for-token what the sequential engine serves. Ragged
+/// G = 10 keeps the packed tier in play; the aligned pass exercises the
+/// activation-indexed LUT tier.
+#[test]
+fn threaded_pipeline_matches_sequential_end_to_end() {
+    let tok = Tokenizer::from_text("abcdefgh 0123456789+-*=?.:QA");
+    for group in [128usize, 10] {
+        let base = test_model(tok.vocab_size(), 7);
+        let q = quant::by_name("ptqtp", group).unwrap();
+
+        let mut m_seq = base.clone();
+        m_seq.quantize_with(q.as_ref(), &QuantCtx::default());
+        let mut m_par = base.clone();
+        m_par.quantize_with(q.as_ref(), &QuantCtx::with_threads(4));
+
+        // quantized weights identical regardless of quantization threads
+        let mut c1 = m_seq.new_cache();
+        let mut c2 = m_par.new_cache();
+        assert_eq!(
+            m_seq.decode_step(1, &mut c1),
+            m_par.decode_step(1, &mut c2),
+            "G={group}: threaded quantization changed the model"
+        );
+
+        let serve = |model: &Transformer, threads: usize| {
+            let mut e = ServeEngine::with_threads(model.clone(), Default::default(), threads);
+            for i in 0..4 {
+                e.submit(Request::new(
+                    i,
+                    tok.encode("Q:2+2=? A:"),
+                    SamplingParams {
+                        max_new_tokens: 5,
+                        stop_token: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let seq = serve(&m_seq, 1);
+        let par = serve(&m_par, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.tokens, b.tokens, "G={group} req {}", a.id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // PJRT integration (requires `make artifacts`)
 // ---------------------------------------------------------------------
 
