@@ -36,7 +36,13 @@ def load(path):
     """Read a .ptw file into dict[str, np.ndarray]."""
     out = {}
     with open(path, "rb") as f:
-        assert f.read(4) == MAGIC, "bad magic"
+        magic = f.read(4)
+        if magic == b"PTW2":
+            raise ValueError(
+                "PTW2 (packed trit-plane) checkpoints are a Rust-engine "
+                "deployment format; the Python build path reads/writes PTW1 only"
+            )
+        assert magic == MAGIC, f"bad magic {magic!r}"
         (count,) = struct.unpack("<I", f.read(4))
         for _ in range(count):
             (nlen,) = struct.unpack("<I", f.read(4))

@@ -146,6 +146,10 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
     let out_path = args.str_or("out", "BENCH_batched_forward.json");
     let json = Json::obj()
         .set("bench", "batched_forward")
+        // real measured numbers (the committed placeholders say
+        // "pending-first-toolchain-run"; CI's bench-baselines job
+        // rejects that marker in generated output)
+        .set("status", "measured")
         .set("family", family)
         .set("method", "ptqtp")
         .set("ctx_len", CTX_LEN)

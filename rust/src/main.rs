@@ -2,27 +2,43 @@
 //!
 //! Subcommands:
 //!   gen-corpus   write the synthetic corpora + tokenizer (build path)
+//!   gen-ckpt     write a random FP32 checkpoint (CI / dev, no JAX)
 //!   quantize     quantize a checkpoint with any method, save + report
 //!   eval         perplexity + task suites for a (quantized) checkpoint
 //!   serve        run the batching server on a workload and report
 //!   bench        regenerate a paper table/figure (--table N | --fig N)
 //!   runtime      smoke-run the AOT artifacts through PJRT
+//!
+//! Deployment workflow is **quantize once, serve many**: `quantize
+//! --out Q.ptw` persists the packed trit-planes (PTW2) + a manifest,
+//! and every later `serve`/`eval` of `Q.ptw` cold-starts from the
+//! packed artifact without re-running the quantization pass.
 
 use ptqtp::bench;
 use ptqtp::cli::{usage, Args, OptSpec};
 use ptqtp::coordinator::{SamplingParams, ServeEngine};
 use ptqtp::data::{CorpusDomain, CorpusGen, TaskSuite, Tokenizer};
 use ptqtp::eval;
-use ptqtp::model::Transformer;
+use ptqtp::model::{ModelConfig, Transformer};
 use ptqtp::quant::{self, QuantCtx};
 use ptqtp::runtime::{ArtifactManifest, PjrtEngine};
+use ptqtp::serialize::{CheckpointManifest, Json};
 
-const SUBCOMMANDS: &[&str] = &["gen-corpus", "quantize", "eval", "serve", "bench", "runtime"];
+const SUBCOMMANDS: &[&str] = &[
+    "gen-corpus",
+    "gen-ckpt",
+    "quantize",
+    "eval",
+    "serve",
+    "bench",
+    "runtime",
+];
 
 fn main() {
     let args = Args::from_env(SUBCOMMANDS);
     let result = match args.subcommand.as_deref() {
         Some("gen-corpus") => cmd_gen_corpus(&args),
+        Some("gen-ckpt") => cmd_gen_ckpt(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
@@ -45,9 +61,10 @@ fn help() -> String {
         "Post-Training Quantization to Trit-Planes — full-system reproduction",
         &[
             ("gen-corpus", "generate synthetic corpora + tokenizer into --out"),
-            ("quantize", "quantize --model X.ptw --method ptqtp --out Y.ptw"),
-            ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]"),
-            ("serve", "serve --model X.ptw [--method ptqtp] --requests N [--replicas R]"),
+            ("gen-ckpt", "gen-ckpt --out X.ptw [--family tiny] [--data DIR|--vocab N]  (random FP32 checkpoint)"),
+            ("quantize", "quantize --model X.ptw --method ptqtp --out Q.ptw  (Q.ptw = packed PTW2 artifact + manifest)"),
+            ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]  (packed checkpoints skip quantization)"),
+            ("serve", "serve --model X.ptw [--method ptqtp] --requests N [--replicas R]  (packed checkpoints skip quantization)"),
             ("bench", "bench --table N | --fig N | --batched | --kernels  (paper exhibits + perf benches)"),
             ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
         ],
@@ -92,43 +109,149 @@ fn cmd_gen_corpus(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// A model ready to serve/eval, plus where its quantization came from.
+struct LoadedModel {
+    model: Transformer,
+    /// Method that produced the weights (from `--method` or, for a
+    /// packed checkpoint, its manifest).
+    method: String,
+    /// Quantizer hyper-parameters for the manifest (when a pass ran).
+    quant_opts: Option<Json>,
+    /// Wall-clock seconds of the quantization pass (0 when skipped).
+    quantize_secs: f64,
+    /// True when the checkpoint already carried packed trit-planes and
+    /// the quantization pass was skipped.
+    from_packed: bool,
+}
+
 /// Shared: load model, optionally quantize with --method. Quantization
 /// runs matrix-parallel on `--threads` lanes (bit-identical to
 /// sequential; see DESIGN.md §Threading).
-fn load_and_quantize(args: &Args) -> anyhow::Result<(Transformer, String)> {
+///
+/// A checkpoint that already holds packed trit-planes (PTW2) **skips
+/// the quantization pass entirely** — that's the quantize-once /
+/// serve-many contract: replicas cold-start from the immutable packed
+/// artifact instead of re-running progressive approximation per
+/// process.
+fn load_and_quantize(args: &Args) -> anyhow::Result<LoadedModel> {
     let model_path = args.require("model")?;
     let mut model = Transformer::load(model_path)?;
     let threads = args.threads_or_default();
-    let method = args.str_or("method", "fp16").to_string();
+    let requested = args.str_or("method", "fp16").to_string();
     let group = args.usize_or("group-size", 128);
-    if method != "fp16" && method != "fp" {
-        let q = quant::by_name(&method, group)?;
+
+    let n_packed = model.ternary_layers();
+    if n_packed > 0 {
+        // carry provenance forward from the artifact's own manifest so
+        // a re-save doesn't lose how the weights were produced
+        let (method, quant_opts) = match CheckpointManifest::load_for(model_path)? {
+            Some(m) => (m.method, m.quant_opts),
+            None => ("packed".to_string(), None),
+        };
+        // any explicitly passed quantization knob is a no-op on a
+        // packed artifact — say so instead of silently ignoring it
+        if (args.get("method").is_some() && requested != method)
+            || args.get("group-size").is_some()
+        {
+            eprintln!(
+                "note: quantization options (--method/--group-size) ignored — checkpoint is \
+                 already quantized with {method}; re-quantize from the FP32 checkpoint to \
+                 change them"
+            );
+        }
+        eprintln!(
+            "loaded packed trit-plane checkpoint ({n_packed} ternary layers, method {method}) — skipping quantization pass"
+        );
+        return Ok(LoadedModel {
+            model,
+            method,
+            quant_opts,
+            quantize_secs: 0.0,
+            from_packed: true,
+        });
+    }
+
+    let mut quant_opts = None;
+    let mut quantize_secs = 0.0;
+    if requested != "fp16" && requested != "fp" {
+        let q = quant::by_name(&requested, group)?;
         let t0 = std::time::Instant::now();
         model.quantize_with(q.as_ref(), &QuantCtx::with_threads(threads));
+        quantize_secs = t0.elapsed().as_secs_f64();
         eprintln!(
             "quantized with {} in {:.2?} ({threads} threads)",
             q.name(),
             t0.elapsed()
         );
+        quant_opts = Some(q.meta_json());
     }
-    Ok((model, method))
+    Ok(LoadedModel {
+        model,
+        method: requested,
+        quant_opts,
+        quantize_secs,
+        from_packed: false,
+    })
 }
 
 /// `quantize --model in.ptw --method ptqtp --out out.ptw`
+///
+/// The output is the deployable artifact: packed trit-planes for
+/// ternary methods (PTW2, ≤ 1/8 of the FP32 serialization per ternary
+/// layer) plus a `out.manifest.json` sidecar recording method, options,
+/// a quantization report, and the payload checksum.
 fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
-    let (model, method) = load_and_quantize(args)?;
+    let lm = load_and_quantize(args)?;
     let out = args.require("out")?;
+    let report = lm
+        .model
+        .quant_summary()
+        .set("quantize_secs", lm.quantize_secs)
+        .set("threads", args.threads_or_default());
+    lm.model
+        .save_with_manifest(out, &lm.method, lm.quant_opts.clone(), Some(report))?;
+    let disk = std::fs::metadata(out)?.len();
+    println!(
+        "saved {}-quantized model to {out} ({}, {} resident bytes, {disk} bytes on disk)",
+        lm.method,
+        lm.model.checkpoint_format(),
+        lm.model.resident_bytes()
+    );
+    Ok(())
+}
+
+/// `gen-ckpt --out fp.ptw [--family tiny] [--data DIR | --vocab N]
+/// [--max-seq N] [--seed S]` — write a random FP32 checkpoint so the
+/// quantize→serve pipeline (and CI) can run without the JAX build path.
+/// Vocab resolution: `--vocab`, else the tokenizer at `--data`, else 64.
+fn cmd_gen_ckpt(args: &Args) -> anyhow::Result<()> {
+    let out = args.require("out")?;
+    let family = args.str_or("family", "tiny");
+    let mut cfg = ModelConfig::family(family)?;
+    cfg.vocab_size = match args.get("vocab") {
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad --vocab '{v}'"))?,
+        None => match args.get("data") {
+            Some(dir) => Tokenizer::load(format!("{dir}/tokenizer.json"))?.vocab_size(),
+            None => 64,
+        },
+    };
+    cfg.max_seq = args.usize_or("max-seq", 128);
+    cfg.validate()?;
+    let mut rng = ptqtp::rng::Rng::new(args.u64_or("seed", 0));
+    let model = Transformer::random(cfg, &mut rng);
     model.save(out)?;
     println!(
-        "saved {method}-quantized model to {out} ({} resident bytes)",
-        model.resident_bytes()
+        "wrote random {family} FP32 checkpoint to {out} (vocab {}, {} params)",
+        model.config.vocab_size,
+        model.config.param_count()
     );
     Ok(())
 }
 
 /// `eval --model X.ptw [--method M] [--data data/] [--threads T]`
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {
-    let (mut model, method) = load_and_quantize(args)?;
+    let lm = load_and_quantize(args)?;
+    let (mut model, method) = (lm.model, lm.method);
     // eval's forward passes use the model's self-managed scratch, so
     // bind --threads here (serve binds pools per engine instead)
     model.set_threads(args.threads_or_default());
@@ -155,7 +278,11 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// `serve --model X.ptw [--method M] [--requests N] [--data data/]
 /// [--threads T] [--replicas R]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let (model, method) = load_and_quantize(args)?;
+    let lm = load_and_quantize(args)?;
+    let (model, method) = (lm.model, lm.method);
+    if lm.from_packed {
+        eprintln!("serving from packed planes (no quantization pass; replicas clone the one loaded model)");
+    }
     let n_requests = args.usize_or("requests", 32);
     let data_dir = args.str_or("data", "data");
     let threads = args.threads_or_default();

@@ -7,9 +7,7 @@
 
 use crate::quant::{QuantCtx, QuantRepr, Quantizer};
 use crate::tensor::{ops, Matrix};
-use crate::ternary::gemm::{
-    gemm_decoded, gemm_packed, gemm_packed_blocked, gemm_packed_blocked_par_into, GemmScratch,
-};
+use crate::ternary::gemm::{gemm_packed_blocked_par_into, GemmScratch};
 use crate::ternary::gemv::{gemv_packed, gemv_packed_par};
 use crate::ternary::linear::PackedTernaryLinear;
 use crate::ternary::lut;
@@ -38,6 +36,17 @@ impl QuantLinear {
         }
     }
 
+    /// Adopt a packed trit-plane backend directly (checkpoint load
+    /// path: the planes come off disk already packed, so no densify and
+    /// no requantize happens between quantization and serving).
+    pub fn from_packed(lin: PackedTernaryLinear) -> QuantLinear {
+        let shape = (lin.rows, lin.cols);
+        QuantLinear {
+            backend: Backend::Ternary(lin),
+            shape,
+        }
+    }
+
     pub fn out_features(&self) -> usize {
         self.shape.0
     }
@@ -56,22 +65,20 @@ impl QuantLinear {
         }
     }
 
-    /// Prefill-path forward: Y = X·Wᵀ for a batch of rows (allocating).
-    /// Throughput-tuned, NOT bit-matched to `forward_vec` — serving uses
-    /// [`QuantLinear::forward_rows_into`] instead.
+    /// Batch forward: Y = X·Wᵀ (allocating convenience wrapper).
+    ///
+    /// Routed through [`QuantLinear::forward_rows_into`], so it is
+    /// **bit-identical per row** to [`QuantLinear::forward_vec`] on
+    /// both backends. It used to dispatch to throughput-tuned tiers
+    /// with a different FP order — a footgun if a serving or eval path
+    /// ever reached it; now every forward entry point shares the one
+    /// bit-matched kernel family. Hot loops should still hold a
+    /// [`GemmScratch`] and call `forward_rows_into` directly.
     pub fn forward_mat(&self, x: &Matrix) -> Matrix {
-        match &self.backend {
-            Backend::Dense(w) => ops::matmul(x, &w.transpose()),
-            Backend::Ternary(t) => {
-                if x.rows >= 8 {
-                    gemm_decoded(t, x)
-                } else if x.rows == 1 {
-                    gemm_packed(t, x)
-                } else {
-                    gemm_packed_blocked(t, x)
-                }
-            }
-        }
+        let mut y = Matrix::zeros(x.rows, self.shape.0);
+        let mut scratch = GemmScratch::new();
+        self.forward_rows_into(x, &mut y, &mut scratch);
+        y
     }
 
     /// Batched serving forward: Y = X·Wᵀ into a caller-owned output,
@@ -315,19 +322,53 @@ mod tests {
     }
 
     #[test]
-    fn mat_and_vec_paths_agree() {
+    fn mat_path_bit_identical_to_vec_path() {
+        // forward_mat is routed through forward_rows_into, so it must
+        // equal per-row forward_vec EXACTLY on both backends (the old
+        // throughput-tuned dispatch was only approximately equal — the
+        // documented footgun this guards against reintroducing)
         let mut rng = Rng::new(4);
-        let w = Matrix::rand_heavy(12, 64, 0.05, &mut rng);
-        let mut lin = QuantLinear::dense(w);
-        lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
-        let x = Matrix::randn(10, 64, 1.0, &mut rng);
-        let ym = lin.forward_mat(&x);
-        for r in 0..10 {
-            let mut yv = vec![0.0; 12];
-            lin.forward_vec(x.row(r), &mut yv);
-            for (a, b) in ym.row(r).iter().zip(&yv) {
-                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        for quantized in [false, true] {
+            let w = Matrix::rand_heavy(12, 64, 0.05, &mut rng);
+            let mut lin = QuantLinear::dense(w);
+            if quantized {
+                lin.quantize_with(
+                    &Ptqtp::new(crate::quant::ptqtp::PtqtpOpts {
+                        group: 10, // ragged: G % 4 != 0
+                        ..Default::default()
+                    }),
+                    &QuantCtx::default(),
+                );
+            }
+            for rows in [1usize, 3, 10] {
+                let x = Matrix::randn(rows, 64, 1.0, &mut rng);
+                let ym = lin.forward_mat(&x);
+                for r in 0..rows {
+                    let mut yv = vec![0.0; 12];
+                    lin.forward_vec(x.row(r), &mut yv);
+                    assert_eq!(ym.row(r), yv.as_slice(), "q={quantized} rows={rows} r={r}");
+                }
             }
         }
+    }
+
+    #[test]
+    fn from_packed_preserves_kernel_output() {
+        // moving the packed backend out and back in (what checkpoint
+        // save/load does) must not change a single output bit
+        let mut rng = Rng::new(5);
+        let mut lin = QuantLinear::dense(Matrix::rand_heavy(16, 40, 0.05, &mut rng));
+        lin.quantize_with(&Ptqtp::default(), &QuantCtx::default());
+        let Backend::Ternary(packed) = &lin.backend else {
+            panic!("expected ternary backend")
+        };
+        let lin2 = QuantLinear::from_packed(packed.clone());
+        assert!(lin2.is_ternary());
+        assert_eq!(lin2.shape, lin.shape);
+        let x: Vec<f32> = (0..40).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (vec![0.0; 16], vec![0.0; 16]);
+        lin.forward_vec(&x, &mut a);
+        lin2.forward_vec(&x, &mut b);
+        assert_eq!(a, b);
     }
 }

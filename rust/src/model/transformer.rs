@@ -11,11 +11,11 @@ use super::attention::Attention;
 use super::batch::{ensure_shape, ForwardBatch, ForwardScratch};
 use super::config::ModelConfig;
 use super::kv::KvCache;
-use super::linear::QuantLinear;
+use super::linear::{Backend, QuantLinear};
 use super::norm::RmsNorm;
 use super::rope::Rope;
 use crate::quant::{QuantCtx, Quantizer};
-use crate::serialize::{TensorFile, TensorEntry};
+use crate::serialize::{CheckpointManifest, Json, TensorEntry, TensorFile};
 use crate::tensor::Matrix;
 
 /// Row count per chunk for the prefill/NLL paths: two kernel row-blocks,
@@ -407,6 +407,69 @@ impl Transformer {
         total
     }
 
+    /// How many linear layers currently hold a packed trit-plane
+    /// backend. `> 0` after loading a `PTW2` quantized checkpoint —
+    /// the serve/eval front-ends use this to skip the quantization
+    /// pass entirely (quantize once, serve many).
+    pub fn ternary_layers(&self) -> usize {
+        self.linear_layers()
+            .iter()
+            .filter(|(_, l)| l.is_ternary())
+            .count()
+    }
+
+    /// Container revision [`Transformer::save`] will emit for the
+    /// current backends.
+    pub fn checkpoint_format(&self) -> &'static str {
+        if self.ternary_layers() > 0 {
+            "PTW2"
+        } else {
+            "PTW1"
+        }
+    }
+
+    /// Aggregate quantization summary for the checkpoint manifest:
+    /// layer counts, footprint, per-plane sparsity, and scale
+    /// magnitude (all derivable from the quantized weights, so the
+    /// record stays truthful for any quantizer).
+    pub fn quant_summary(&self) -> Json {
+        let layers = self.linear_layers();
+        let mut ternary = 0usize;
+        let mut weights = 0usize; // total ternary weights
+        let mut alphas = 0usize; // total scale entries (both planes)
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        let mut abs_alpha = 0.0f64;
+        let mut bits = 0.0f64;
+        for (_, l) in &layers {
+            if let Backend::Ternary(t) = &l.backend {
+                ternary += 1;
+                // weight every aggregate by layer size, so the record
+                // means total-bits / total-weights (not a per-layer
+                // mean that a single tiny layer could skew)
+                let wn = (t.rows * t.cols) as f64;
+                let an = 2 * t.alpha1.len();
+                weights += t.rows * t.cols;
+                alphas += an;
+                let u = t.unpack();
+                s1 += u.t1.sparsity() * wn;
+                s2 += u.t2.sparsity() * wn;
+                abs_alpha += u.mean_abs_alpha() * an as f64;
+                bits += u.bits_per_weight() * wn;
+            }
+        }
+        let wn = weights.max(1) as f64;
+        Json::obj()
+            .set("layers_total", layers.len())
+            .set("layers_ternary", ternary)
+            .set("ternary_weights", weights)
+            .set("resident_bytes", self.resident_bytes())
+            .set("bits_per_weight", bits / wn)
+            .set("t1_sparsity", s1 / wn)
+            .set("t2_sparsity", s2 / wn)
+            .set("mean_abs_alpha", abs_alpha / alphas.max(1) as f64)
+    }
+
     // ---------------- init & io ----------------
 
     /// Random init (for tests and the synthetic-weight benches).
@@ -443,10 +506,36 @@ impl Transformer {
         }
     }
 
-    /// Save checkpoint (`.ptw`) + config (`.json`, same stem).
+    /// Save checkpoint (`.ptw`) + config (`.json`) + manifest
+    /// (`.manifest.json`), all on the same stem.
+    ///
+    /// Dense layers serialize as plain f32 tensors (`PTW1`, readable by
+    /// the Python tooling). Ternary backends serialize as packed
+    /// trit-plane records (`PTW2`) — **no densification**: the exact
+    /// planes and f32 scales the kernels stream go to disk, so a loaded
+    /// model is bit-identical to the saved one.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let method = if self.ternary_layers() > 0 { "packed" } else { "fp32" };
+        self.save_with_manifest(path, method, None, None)
+    }
+
+    /// [`Transformer::save`] with explicit manifest metadata: the
+    /// quantization method name, its hyper-parameters, and a
+    /// quantization report (`cmd_quantize` passes all three so the
+    /// artifact documents its own provenance).
+    pub fn save_with_manifest(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        method: &str,
+        quant_opts: Option<Json>,
+        report: Option<Json>,
+    ) -> anyhow::Result<()> {
         let path = path.as_ref();
         let mut tf = TensorFile::new();
+        let put = |tf: &mut TensorFile, name: &str, l: &QuantLinear| match &l.backend {
+            Backend::Dense(w) => tf.insert_matrix(name, w),
+            Backend::Ternary(t) => tf.insert_packed(name, t),
+        };
         tf.insert_matrix("tok_embed", &self.tok_embed);
         tf.insert(
             "final_norm",
@@ -461,46 +550,111 @@ impl Transformer {
                 &format!("L{i}.mlp_norm"),
                 TensorEntry::from_f32(vec![1, self.config.d_model], &b.mlp_norm.weight),
             );
-            tf.insert_matrix(&format!("L{i}.wq"), &b.attn.wq.dense_weights());
-            tf.insert_matrix(&format!("L{i}.wk"), &b.attn.wk.dense_weights());
-            tf.insert_matrix(&format!("L{i}.wv"), &b.attn.wv.dense_weights());
-            tf.insert_matrix(&format!("L{i}.wo"), &b.attn.wo.dense_weights());
-            tf.insert_matrix(&format!("L{i}.w_gate"), &b.w_gate.dense_weights());
-            tf.insert_matrix(&format!("L{i}.w_up"), &b.w_up.dense_weights());
-            tf.insert_matrix(&format!("L{i}.w_down"), &b.w_down.dense_weights());
+            put(&mut tf, &format!("L{i}.wq"), &b.attn.wq);
+            put(&mut tf, &format!("L{i}.wk"), &b.attn.wk);
+            put(&mut tf, &format!("L{i}.wv"), &b.attn.wv);
+            put(&mut tf, &format!("L{i}.wo"), &b.attn.wo);
+            put(&mut tf, &format!("L{i}.w_gate"), &b.w_gate);
+            put(&mut tf, &format!("L{i}.w_up"), &b.w_up);
+            put(&mut tf, &format!("L{i}.w_down"), &b.w_down);
         }
         if let Some(h) = &self.lm_head {
-            tf.insert_matrix("lm_head", &h.dense_weights());
+            put(&mut tf, "lm_head", h);
         }
-        tf.save(path)?;
+        // stream to disk through a hashing writer: the checksum covers
+        // exactly the bytes written, with no extra in-memory copy
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("create {path:?}: {e}"))?;
+        let mut w = crate::serialize::HashingWriter::new(std::io::BufWriter::new(file));
+        tf.write_to(&mut w)?;
+        let (payload_bytes, digest) = w.finish()?;
+        let mut manifest = CheckpointManifest::from_digest(
+            tf.format(),
+            method,
+            payload_bytes,
+            digest,
+            tf.tensors.len(),
+            tf.packed.len(),
+        );
+        manifest.quant_opts = quant_opts;
+        manifest.report = report;
+        manifest.save_for(path)?;
         self.config.save(path.with_extension("json"))?;
         Ok(())
     }
 
-    /// Load checkpoint + config sidecar.
+    /// Load checkpoint + config sidecar. When a manifest sidecar is
+    /// present, the whole-file checksum and size are verified as the
+    /// payload streams in (a corrupt artifact fails with a clear
+    /// checksum/size — or parse — error, never a silently wrong
+    /// model); `PTW1` files without a manifest — e.g. from the Python
+    /// build path — load as before. Packed trit-plane records come
+    /// back as ternary backends with **no requantization**.
     pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Transformer> {
         let path = path.as_ref();
         let config = ModelConfig::load(path.with_extension("json"))?;
         config.validate()?;
-        let tf = TensorFile::load(path)?;
+        let manifest = CheckpointManifest::load_for(path)?;
+        let file =
+            std::fs::File::open(path).map_err(|e| anyhow::anyhow!("open {path:?}: {e}"))?;
+        let mut r = crate::serialize::HashingReader::new(std::io::BufReader::new(file));
+        let tf = TensorFile::read_from(&mut r)?;
+        if let Some(manifest) = manifest {
+            // finish() drains to EOF so the digest (and size check)
+            // covers the whole file, trailing bytes included
+            let (payload_bytes, digest) = r.finish()?;
+            manifest
+                .verify_digest(payload_bytes, digest)
+                .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        }
         let d = config.d_model;
+        // packed records are MOVED out of the container (not cloned):
+        // cold start holds one copy of the planes, not two
+        fn lin(
+            tf: &mut TensorFile,
+            name: String,
+            out_f: usize,
+            in_f: usize,
+        ) -> anyhow::Result<QuantLinear> {
+            if let Some(p) = tf.packed.remove(&name) {
+                anyhow::ensure!(
+                    p.rows == out_f && p.cols == in_f,
+                    "packed '{name}' shape ({}, {}) vs expected ({out_f}, {in_f})",
+                    p.rows,
+                    p.cols
+                );
+                Ok(QuantLinear::from_packed(p))
+            } else {
+                let m = tf.matrix(&name)?;
+                anyhow::ensure!(
+                    m.rows == out_f && m.cols == in_f,
+                    "tensor '{name}' shape ({}, {}) vs expected ({out_f}, {in_f})",
+                    m.rows,
+                    m.cols
+                );
+                Ok(QuantLinear::dense(m))
+            }
+        }
+        let mut tf = tf;
+        let kv = config.kv_dim();
+        let ff = config.d_ff;
         let mut blocks = Vec::with_capacity(config.n_layers);
         for i in 0..config.n_layers {
             blocks.push(Block {
                 attn_norm: RmsNorm::new(tf.vec_f32(&format!("L{i}.attn_norm"))?, config.norm_eps),
                 mlp_norm: RmsNorm::new(tf.vec_f32(&format!("L{i}.mlp_norm"))?, config.norm_eps),
                 attn: Attention {
-                    wq: QuantLinear::dense(tf.matrix(&format!("L{i}.wq"))?),
-                    wk: QuantLinear::dense(tf.matrix(&format!("L{i}.wk"))?),
-                    wv: QuantLinear::dense(tf.matrix(&format!("L{i}.wv"))?),
-                    wo: QuantLinear::dense(tf.matrix(&format!("L{i}.wo"))?),
+                    wq: lin(&mut tf, format!("L{i}.wq"), d, d)?,
+                    wk: lin(&mut tf, format!("L{i}.wk"), kv, d)?,
+                    wv: lin(&mut tf, format!("L{i}.wv"), kv, d)?,
+                    wo: lin(&mut tf, format!("L{i}.wo"), d, d)?,
                     n_heads: config.n_heads,
                     n_kv_heads: config.n_kv_heads,
                     head_dim: config.head_dim(),
                 },
-                w_gate: QuantLinear::dense(tf.matrix(&format!("L{i}.w_gate"))?),
-                w_up: QuantLinear::dense(tf.matrix(&format!("L{i}.w_up"))?),
-                w_down: QuantLinear::dense(tf.matrix(&format!("L{i}.w_down"))?),
+                w_gate: lin(&mut tf, format!("L{i}.w_gate"), ff, d)?,
+                w_up: lin(&mut tf, format!("L{i}.w_up"), ff, d)?,
+                w_down: lin(&mut tf, format!("L{i}.w_down"), d, ff)?,
             });
         }
         let tok_embed = tf.matrix("tok_embed")?;
@@ -510,8 +664,8 @@ impl Transformer {
             (tok_embed.rows, tok_embed.cols),
             config.vocab_size
         );
-        let lm_head = if tf.tensors.contains_key("lm_head") {
-            Some(QuantLinear::dense(tf.matrix("lm_head")?))
+        let lm_head = if tf.has("lm_head") {
+            Some(lin(&mut tf, "lm_head".to_string(), config.vocab_size, d)?)
         } else {
             None
         };
@@ -620,6 +774,100 @@ mod tests {
         }
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(dir.join("m.json")).ok();
+        std::fs::remove_file(dir.join("m.manifest.json")).ok();
+    }
+
+    #[test]
+    fn packed_save_load_roundtrip_bit_exact_logits() {
+        // quantized models persist their planes directly (PTW2): the
+        // loaded model must produce the SAME bits, not approximately
+        for group in [128usize, 10] {
+            let mut m = tiny_model(20 + group as u64);
+            m.quantize_with(
+                &Ptqtp::new(crate::quant::ptqtp::PtqtpOpts {
+                    group,
+                    ..Default::default()
+                }),
+                &crate::quant::QuantCtx::default(),
+            );
+            assert_eq!(m.checkpoint_format(), "PTW2");
+            let dir = std::env::temp_dir().join(format!("ptqtp_packed_rt_{group}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("q.ptw");
+            m.save(&path).unwrap();
+            // the file really is PTW2 and carries a manifest sidecar
+            let magic = &std::fs::read(&path).unwrap()[..4];
+            assert_eq!(magic, b"PTW2", "G={group}");
+            let manifest = CheckpointManifest::load_for(&path).unwrap().unwrap();
+            assert_eq!(manifest.format, "PTW2");
+            assert_eq!(manifest.packed_tensors, m.ternary_layers());
+
+            let m2 = Transformer::load(&path).unwrap();
+            assert_eq!(m2.ternary_layers(), m.ternary_layers(), "G={group}");
+            assert_eq!(m2.resident_bytes(), m.resident_bytes(), "G={group}");
+            let mut c1 = m.new_cache();
+            let mut c2 = m2.new_cache();
+            for t in [0u32, 3, 7, 1] {
+                assert_eq!(
+                    m.decode_step(t, &mut c1),
+                    m2.decode_step(t, &mut c2),
+                    "G={group}: loaded logits drifted"
+                );
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn corrupted_checkpoint_fails_checksum() {
+        let mut m = tiny_model(22);
+        m.quantize_with(&Ptqtp::default(), &crate::quant::QuantCtx::default());
+        let dir = std::env::temp_dir().join("ptqtp_corrupt_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("q.ptw");
+        m.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Transformer::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fp_checkpoints_stay_ptw1_with_manifest() {
+        // dense models keep the Python-readable revision; the manifest
+        // records method fp32
+        let m = tiny_model(23);
+        assert_eq!(m.checkpoint_format(), "PTW1");
+        let dir = std::env::temp_dir().join("ptqtp_fp_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fp.ptw");
+        m.save(&path).unwrap();
+        assert_eq!(&std::fs::read(&path).unwrap()[..4], b"PTW1");
+        let manifest = CheckpointManifest::load_for(&path).unwrap().unwrap();
+        assert_eq!((manifest.format.as_str(), manifest.method.as_str()), ("PTW1", "fp32"));
+        assert_eq!(manifest.packed_tensors, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quant_summary_reflects_backends() {
+        let mut m = tiny_model(24);
+        let before = m.quant_summary();
+        assert_eq!(before.req_usize("layers_ternary").unwrap(), 0);
+        m.quantize_with(&Ptqtp::default(), &crate::quant::QuantCtx::default());
+        let after = m.quant_summary();
+        assert_eq!(
+            after.req_usize("layers_ternary").unwrap(),
+            m.linear_layers().len()
+        );
+        assert!(after.req_f64("bits_per_weight").unwrap() > 0.0);
+        assert!(
+            after.req_usize("resident_bytes").unwrap()
+                < before.req_usize("resident_bytes").unwrap()
+        );
     }
 
     #[test]

@@ -97,6 +97,15 @@ pub trait Quantizer: Send + Sync {
     fn nominal_bits(&self) -> f64;
     /// Quantize one weight matrix.
     fn quantize(&self, w: &Matrix, ctx: &QuantCtx) -> QuantResult;
+    /// Hyper-parameters for the checkpoint sidecar manifest. The default
+    /// records name + nominal bits; methods with real knobs (PTQTP)
+    /// override to serialize them all so a saved artifact is fully
+    /// reproducible.
+    fn meta_json(&self) -> crate::serialize::Json {
+        crate::serialize::Json::obj()
+            .set("name", self.name())
+            .set("nominal_bits", self.nominal_bits())
+    }
 }
 
 /// Look up a quantizer by its table name, e.g. `"ptqtp"`, `"gptq3"`,

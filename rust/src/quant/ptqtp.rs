@@ -57,6 +57,20 @@ impl Default for PtqtpOpts {
     }
 }
 
+impl PtqtpOpts {
+    /// Full hyper-parameter record for the checkpoint manifest, so an
+    /// artifact documents exactly how it was produced.
+    pub fn to_json(&self) -> crate::serialize::Json {
+        crate::serialize::Json::obj()
+            .set("group", self.group)
+            .set("t_max", self.t_max)
+            .set("eps", self.eps as f64)
+            .set("lambda_init", self.lambda_init as f64)
+            .set("lambda_max", self.lambda_max as f64)
+            .set("kappa_threshold", self.kappa_threshold)
+    }
+}
+
 /// Convergence/diagnostic report (drives Fig 3, Fig 5, Table 7).
 #[derive(Clone, Debug, Default)]
 pub struct PtqtpReport {
@@ -505,6 +519,13 @@ impl Quantizer for Ptqtp {
             memory_bytes: lin.memory_bytes(),
             repr: QuantRepr::TritPlanes(lin),
         }
+    }
+
+    fn meta_json(&self) -> crate::serialize::Json {
+        self.opts
+            .to_json()
+            .set("name", self.name())
+            .set("nominal_bits", self.nominal_bits())
     }
 }
 

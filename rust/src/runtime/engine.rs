@@ -2,13 +2,22 @@
 //! many times from the Rust hot path.
 //!
 //! The real engine needs the `xla` crate (PJRT C-API bindings), which
-//! is only present in some build environments — it is gated behind the
-//! `pjrt` cargo feature. Without the feature a stub with the same API
-//! is compiled; it errors at construction so every caller (CLI
-//! `runtime` subcommand, PJRT integration tests) fails fast with a
-//! clear message instead of breaking the build.
+//! is only present in some build environments. Gating is two-level so
+//! the stub path can never rot unbuilt (CI checks it):
+//!
+//! * `--features pjrt` — opts into the PJRT runtime surface. On its
+//!   own it still compiles the **stub** (same API, errors at
+//!   construction), because the `xla` dependency may be absent from
+//!   the offline crate cache.
+//! * `RUSTFLAGS="--cfg xla_backend"` — asserts the environment has
+//!   added `xla = "0.5"` under `[dependencies]`; only
+//!   `pjrt` + `xla_backend` together compile the real engine.
+//!
+//! Every caller (CLI `runtime` subcommand, PJRT integration tests)
+//! fails fast with a clear message on the stub instead of breaking
+//! the build.
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", xla_backend))]
 mod imp {
     use crate::tensor::Matrix;
     use std::collections::BTreeMap;
@@ -112,14 +121,20 @@ mod imp {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", xla_backend)))]
 mod imp {
     use crate::tensor::Matrix;
     use std::path::Path;
 
-    const UNAVAILABLE: &str =
+    const UNAVAILABLE: &str = if cfg!(feature = "pjrt") {
+        "PJRT runtime unavailable: built with the `pjrt` feature but without the XLA \
+         backend (add `xla = \"0.5\"` to [dependencies] and rebuild with \
+         RUSTFLAGS=\"--cfg xla_backend\")"
+    } else {
         "PJRT runtime unavailable: ptqtp was built without the `pjrt` feature \
-         (rebuild with `--features pjrt` and the `xla` crate in the crate cache)";
+         (rebuild with `--features pjrt`, the `xla` crate in the crate cache, and \
+         RUSTFLAGS=\"--cfg xla_backend\")"
+    };
 
     /// Stub with the same API as the real engine; errors at construction.
     pub struct PjrtEngine {
@@ -184,14 +199,14 @@ mod tests {
     use super::*;
 
     #[test]
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", xla_backend))]
     fn cpu_engine_constructs() {
         let engine = PjrtEngine::cpu().expect("PJRT CPU client");
         assert!(!engine.platform().is_empty());
     }
 
     #[test]
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", xla_backend))]
     fn missing_artifact_errors() {
         let engine = PjrtEngine::cpu().unwrap();
         let err = engine.run_f32("nope", &[]).unwrap_err().to_string();
@@ -199,7 +214,7 @@ mod tests {
     }
 
     #[test]
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", xla_backend))]
     fn bad_path_errors() {
         let mut engine = PjrtEngine::cpu().unwrap();
         assert!(engine
@@ -208,7 +223,7 @@ mod tests {
     }
 
     #[test]
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", xla_backend)))]
     fn stub_errors_with_clear_message() {
         let err = PjrtEngine::cpu().unwrap_err().to_string();
         assert!(err.contains("pjrt"), "{err}");

@@ -1,0 +1,348 @@
+//! Checkpoint sidecar manifest (`X.manifest.json` next to `X.ptw`).
+//!
+//! A quantized checkpoint is an immutable deployment artifact: replicas
+//! cold-start from it without re-running the progressive-approximation
+//! pass, so the manifest records everything a serving fleet needs to
+//! trust the file — the container revision, the quantization method and
+//! its hyper-parameters, a summary report of the quantization that
+//! produced it, and an FNV-1a-64 checksum of the full `.ptw` payload
+//! that [`Transformer::load`](crate::model::Transformer::load) verifies
+//! before deserializing.
+//!
+//! The manifest is optional on load (checkpoints written by the Python
+//! build path, and pre-PTW2 files, have none); when present, a checksum
+//! or size mismatch is a hard error.
+
+use super::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Streaming FNV-1a 64-bit accumulator — the integrity checksum for
+/// `.ptw` payloads. Not cryptographic; it guards against truncation
+/// and bit-rot, which is the failure mode for an artifact store, and
+/// needs no deps.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a64 {
+    state: u64,
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Fnv1a64 {
+            state: 0xcbf29ce484222325,
+        }
+    }
+}
+
+impl Fnv1a64 {
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a64::default();
+    h.update(bytes);
+    h.finish()
+}
+
+/// `Write` adapter that checksums and counts exactly the bytes the
+/// inner writer accepted — checkpoints stream to disk without a
+/// second in-memory copy just for the digest.
+pub struct HashingWriter<W: std::io::Write> {
+    inner: W,
+    hash: Fnv1a64,
+    count: usize,
+}
+
+impl<W: std::io::Write> HashingWriter<W> {
+    pub fn new(inner: W) -> Self {
+        HashingWriter {
+            inner,
+            hash: Fnv1a64::default(),
+            count: 0,
+        }
+    }
+
+    /// Flush the inner writer and return (bytes written, digest).
+    pub fn finish(mut self) -> std::io::Result<(usize, u64)> {
+        self.inner.flush()?;
+        Ok((self.count, self.hash.finish()))
+    }
+}
+
+impl<W: std::io::Write> std::io::Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hash.update(&buf[..n]);
+        self.count += n;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// `Read` adapter mirroring [`HashingWriter`]: checksums and counts
+/// everything read. [`HashingReader::finish`] drains to EOF so the
+/// digest covers the whole file (trailing garbage fails the size
+/// check).
+pub struct HashingReader<R: std::io::Read> {
+    inner: R,
+    hash: Fnv1a64,
+    count: usize,
+}
+
+impl<R: std::io::Read> HashingReader<R> {
+    pub fn new(inner: R) -> Self {
+        HashingReader {
+            inner,
+            hash: Fnv1a64::default(),
+            count: 0,
+        }
+    }
+
+    /// Consume the rest of the stream and return (total bytes, digest).
+    pub fn finish(mut self) -> std::io::Result<(usize, u64)> {
+        let mut buf = [0u8; 8192];
+        loop {
+            let n = self.inner.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            self.hash.update(&buf[..n]);
+            self.count += n;
+        }
+        Ok((self.count, self.hash.finish()))
+    }
+}
+
+impl<R: std::io::Read> std::io::Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.hash.update(&buf[..n]);
+        self.count += n;
+        Ok(n)
+    }
+}
+
+const CHECKSUM_ALGO: &str = "fnv1a64";
+
+/// Sidecar metadata for one `.ptw` checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointManifest {
+    /// Container revision the payload serialized as ("PTW1" | "PTW2").
+    pub format: String,
+    /// Quantization method that produced the weights ("fp32" when the
+    /// checkpoint is dense/unquantized).
+    pub method: String,
+    /// Quantizer hyper-parameters (e.g. serialized `PtqtpOpts`).
+    pub quant_opts: Option<Json>,
+    /// Quantization report/summary (per-model aggregates).
+    pub report: Option<Json>,
+    /// `"fnv1a64:<16 hex digits>"` over the full `.ptw` file bytes.
+    pub checksum: String,
+    /// Exact `.ptw` file size in bytes.
+    pub payload_bytes: usize,
+    /// Plain tensor records in the payload.
+    pub tensors: usize,
+    /// Packed trit-plane records in the payload.
+    pub packed_tensors: usize,
+}
+
+impl CheckpointManifest {
+    /// Build a manifest from a streamed payload size + digest (what
+    /// [`HashingWriter::finish`] returns).
+    pub fn from_digest(
+        format: &str,
+        method: &str,
+        payload_bytes: usize,
+        digest: u64,
+        tensors: usize,
+        packed_tensors: usize,
+    ) -> CheckpointManifest {
+        CheckpointManifest {
+            format: format.to_string(),
+            method: method.to_string(),
+            quant_opts: None,
+            report: None,
+            checksum: format!("{CHECKSUM_ALGO}:{digest:016x}"),
+            payload_bytes,
+            tensors,
+            packed_tensors,
+        }
+    }
+
+    /// Build a manifest for in-memory checkpoint bytes.
+    pub fn for_payload(
+        format: &str,
+        method: &str,
+        payload: &[u8],
+        tensors: usize,
+        packed_tensors: usize,
+    ) -> CheckpointManifest {
+        Self::from_digest(
+            format,
+            method,
+            payload.len(),
+            fnv1a64(payload),
+            tensors,
+            packed_tensors,
+        )
+    }
+
+    /// Sidecar path for a checkpoint path: `m.ptw` → `m.manifest.json`.
+    pub fn path_for(ckpt: impl AsRef<Path>) -> PathBuf {
+        ckpt.as_ref().with_extension("manifest.json")
+    }
+
+    /// Verify a streamed (size, digest) pair against this manifest.
+    pub fn verify_digest(&self, payload_bytes: usize, digest: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            payload_bytes == self.payload_bytes,
+            "checkpoint size {payload_bytes} != manifest payload_bytes {} (truncated or swapped file?)",
+            self.payload_bytes
+        );
+        let got = format!("{CHECKSUM_ALGO}:{digest:016x}");
+        anyhow::ensure!(
+            got == self.checksum,
+            "checkpoint checksum mismatch: file {got} vs manifest {} (corrupt artifact)",
+            self.checksum
+        );
+        Ok(())
+    }
+
+    /// Verify `bytes` (the full `.ptw` file) against this manifest.
+    pub fn verify(&self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.verify_digest(bytes.len(), fnv1a64(bytes))
+    }
+
+    // ---------- json ----------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("format", self.format.as_str())
+            .set("method", self.method.as_str())
+            .set("checksum", self.checksum.as_str())
+            .set("payload_bytes", self.payload_bytes)
+            .set("tensors", self.tensors)
+            .set("packed_tensors", self.packed_tensors);
+        if let Some(q) = &self.quant_opts {
+            j = j.set("quant_opts", q.clone());
+        }
+        if let Some(r) = &self.report {
+            j = j.set("report", r.clone());
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CheckpointManifest> {
+        Ok(CheckpointManifest {
+            format: j.req_str("format")?.to_string(),
+            method: j.req_str("method")?.to_string(),
+            quant_opts: j.get("quant_opts").cloned(),
+            report: j.get("report").cloned(),
+            checksum: j.req_str("checksum")?.to_string(),
+            payload_bytes: j.req_usize("payload_bytes")?,
+            tensors: j.req_usize("tensors")?,
+            packed_tensors: j.req_usize("packed_tensors")?,
+        })
+    }
+
+    /// Write the sidecar next to `ckpt`.
+    pub fn save_for(&self, ckpt: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(Self::path_for(ckpt), self.to_json().pretty())?;
+        Ok(())
+    }
+
+    /// Load the sidecar for `ckpt`, if one exists. A present-but-invalid
+    /// manifest is an error (it means the artifact pair is damaged).
+    pub fn load_for(ckpt: impl AsRef<Path>) -> anyhow::Result<Option<CheckpointManifest>> {
+        let path = Self::path_for(ckpt);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        Ok(Some(CheckpointManifest::from_json(&j)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_hash_matches_one_shot() {
+        use std::io::{Read, Write};
+        let payload: Vec<u8> = (0..10_000u32).map(|i| (i * 7 + 3) as u8).collect();
+        let mut w = HashingWriter::new(Vec::new());
+        // uneven chunks: digest must be split-invariant
+        for chunk in payload.chunks(307) {
+            w.write_all(chunk).unwrap();
+        }
+        let (n, digest) = w.finish().unwrap();
+        assert_eq!((n, digest), (payload.len(), fnv1a64(&payload)));
+
+        let mut r = HashingReader::new(payload.as_slice());
+        let mut head = [0u8; 123];
+        r.read_exact(&mut head).unwrap();
+        let (n, digest) = r.finish().unwrap(); // drains the rest
+        assert_eq!((n, digest), (payload.len(), fnv1a64(&payload)));
+    }
+
+    #[test]
+    fn json_roundtrip_with_and_without_quant() {
+        let mut m = CheckpointManifest::for_payload("PTW2", "ptqtp", b"payload", 3, 7);
+        assert_eq!(CheckpointManifest::from_json(&m.to_json()).unwrap(), m);
+        m.quant_opts = Some(Json::obj().set("group", 128usize));
+        m.report = Some(Json::obj().set("layers_ternary", 14usize));
+        assert_eq!(CheckpointManifest::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn verify_accepts_exact_and_rejects_tampered() {
+        let payload = b"some checkpoint bytes".to_vec();
+        let m = CheckpointManifest::for_payload("PTW2", "ptqtp", &payload, 1, 1);
+        m.verify(&payload).unwrap();
+        let mut flipped = payload.clone();
+        flipped[4] ^= 0x40;
+        let err = m.verify(&flipped).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        let err = m.verify(&payload[..payload.len() - 1]).unwrap_err().to_string();
+        assert!(err.contains("payload_bytes"), "{err}");
+    }
+
+    #[test]
+    fn sidecar_path_and_file_roundtrip() {
+        let dir = std::env::temp_dir().join("ptqtp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("m.ptw");
+        assert_eq!(
+            CheckpointManifest::path_for(&ckpt),
+            dir.join("m.manifest.json")
+        );
+        let m = CheckpointManifest::for_payload("PTW1", "fp32", b"x", 2, 0);
+        m.save_for(&ckpt).unwrap();
+        assert_eq!(CheckpointManifest::load_for(&ckpt).unwrap(), Some(m));
+        std::fs::remove_file(dir.join("m.manifest.json")).ok();
+        assert_eq!(CheckpointManifest::load_for(&ckpt).unwrap(), None);
+    }
+}

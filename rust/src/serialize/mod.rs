@@ -7,12 +7,17 @@
 //!   benchmark reports, checkpoint manifests shared with the Python
 //!   build path).
 //! * [`tensorfile`] — `.ptw`, a little-endian binary tensor container
-//!   (magic + named f32/i8/u8 tensors) used for model checkpoints
-//!   written by `python/compile/train.py` and read by the Rust engine,
-//!   and for persisted quantized models.
+//!   (magic + named f32/i8/u8 tensors; the `PTW2` revision adds packed
+//!   trit-plane records) used for model checkpoints written by
+//!   `python/compile/train.py` and read by the Rust engine, and for
+//!   persisted quantized models (quantize once, serve many).
+//! * [`manifest`] — the `X.manifest.json` checkpoint sidecar: method,
+//!   quantizer options, quantization report, payload checksum.
 
 pub mod json;
+pub mod manifest;
 pub mod tensorfile;
 
 pub use json::Json;
-pub use tensorfile::{TensorEntry, TensorFile};
+pub use manifest::{CheckpointManifest, HashingReader, HashingWriter};
+pub use tensorfile::{PlaneCoding, TensorEntry, TensorFile};

@@ -1,7 +1,10 @@
 //! `.ptw` — PTQTP tensor-file container.
 //!
 //! Little-endian binary format shared between the Python build path
-//! (`python/compile/ptw.py` writes checkpoints) and the Rust engine:
+//! (`python/compile/ptw.py` writes `PTW1` checkpoints) and the Rust
+//! engine. Two on-disk revisions exist:
+//!
+//! **`PTW1`** — plain named tensors only (what Python writes/reads):
 //!
 //! ```text
 //! magic   : 4 bytes  = "PTW1"
@@ -14,12 +17,55 @@
 //!   dims     : ndim × u64
 //!   payload  : product(dims) × sizeof(dtype) bytes
 //! ```
+//!
+//! **`PTW2`** — adds a packed-ternary record kind so quantized models
+//! persist their trit-planes directly (quantize once, serve many — no
+//! densify, no requantize). Every record gains a leading `kind` byte:
+//!
+//! ```text
+//! magic   : 4 bytes  = "PTW2"
+//! count   : u32
+//! repeat count times:
+//!   name_len : u32
+//!   name     : utf-8 bytes
+//!   kind     : u8   (0 = plain tensor, 1 = packed ternary linear)
+//!   kind 0 → dtype/ndim/dims/payload exactly as in PTW1
+//!   kind 1 →
+//!     coding : u8   (0 = 2-bit rows [resident layout],
+//!                    1 = base-3 rows [archival, 1.6 bits/trit])
+//!     rows   : u64
+//!     cols   : u64
+//!     group  : u64  (column group size G of the α scales)
+//!     stride : u64  (bytes per packed row in `coding`; alignment
+//!                    metadata — must equal bytes_2bit(cols) or
+//!                    bytes_base3(cols) respectively)
+//!     p1     : rows × stride bytes   (plane T⁽¹⁾, row-aligned)
+//!     p2     : rows × stride bytes   (plane T⁽²⁾, row-aligned)
+//!     alpha1 : rows × ceil(cols/G) × f32 LE
+//!     alpha2 : rows × ceil(cols/G) × f32 LE
+//! ```
+//!
+//! The writer emits `PTW1` whenever no packed records are present (so
+//! FP checkpoints stay readable by the Python tooling) and `PTW2`
+//! otherwise; the reader accepts both. Plane payloads default to the
+//! base-3 archival coding — trits survive either coding exactly, and
+//! base-3 is what brings a ternary layer to ≤ 1/8 of its FP32
+//! serialization while the α scales stay lossless f32 (bit-exact
+//! round-trip is a hard requirement of the serving parity tests).
+//! Readers decode both codings back to the resident 2-bit layout.
 
+use crate::ternary::linear::PackedTernaryLinear;
+use crate::ternary::pack::{bytes_2bit, bytes_base3, pack2bit, unpack2bit, unpack_base3};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"PTW1";
+const MAGIC_V1: &[u8; 4] = b"PTW1";
+const MAGIC_V2: &[u8; 4] = b"PTW2";
+
+/// Hard ceiling on a single record's payload; a hostile header past it
+/// is rejected before any allocation happens.
+const MAX_PAYLOAD_BYTES: usize = 1 << 34; // 16 GiB
 
 /// Supported element types.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,6 +91,33 @@ impl DType {
         match self {
             DType::F32 | DType::I32 => 4,
             DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+/// On-disk coding of the packed trit-plane payloads (PTW2 kind-1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneCoding {
+    /// 4 trits/byte — mirrors the resident kernel layout, zero-transform load.
+    TwoBit = 0,
+    /// 5 trits/byte (3⁵ = 243 ≤ 256) — the dense archival default.
+    Base3 = 1,
+}
+
+impl PlaneCoding {
+    fn from_u8(x: u8) -> anyhow::Result<PlaneCoding> {
+        Ok(match x {
+            0 => PlaneCoding::TwoBit,
+            1 => PlaneCoding::Base3,
+            other => anyhow::bail!("unknown plane coding {other}"),
+        })
+    }
+
+    /// Bytes per packed row of `cols` trits in this coding.
+    pub fn row_bytes(self, cols: usize) -> usize {
+        match self {
+            PlaneCoding::TwoBit => bytes_2bit(cols),
+            PlaneCoding::Base3 => bytes_base3(cols),
         }
     }
 }
@@ -119,10 +192,14 @@ impl TensorEntry {
     }
 }
 
-/// Ordered collection of named tensors.
+/// Ordered collection of named tensors: plain entries plus (PTW2)
+/// packed ternary linears. The two namespaces are disjoint.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TensorFile {
     pub tensors: BTreeMap<String, TensorEntry>,
+    /// Packed trit-plane records, kept in the resident 2-bit layout
+    /// (whatever the on-disk coding was).
+    pub packed: BTreeMap<String, PackedTernaryLinear>,
 }
 
 impl TensorFile {
@@ -131,6 +208,10 @@ impl TensorFile {
     }
 
     pub fn insert(&mut self, name: &str, entry: TensorEntry) {
+        assert!(
+            !self.packed.contains_key(name),
+            "'{name}' already present as a packed record"
+        );
         self.tensors.insert(name.to_string(), entry);
     }
 
@@ -138,10 +219,40 @@ impl TensorFile {
         self.insert(name, TensorEntry::from_f32(vec![m.rows, m.cols], &m.data));
     }
 
+    /// Add a packed ternary linear under `name` (forces the `PTW2`
+    /// revision on write).
+    pub fn insert_packed(&mut self, name: &str, lin: &PackedTernaryLinear) {
+        assert!(
+            !self.tensors.contains_key(name),
+            "'{name}' already present as a plain tensor"
+        );
+        debug_assert_eq!(lin.row_stride, bytes_2bit(lin.cols));
+        self.packed.insert(name.to_string(), lin.clone());
+    }
+
     pub fn get(&self, name: &str) -> anyhow::Result<&TensorEntry> {
         self.tensors
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("tensor '{name}' not found in checkpoint"))
+    }
+
+    /// Packed record under `name`, if any.
+    pub fn get_packed(&self, name: &str) -> Option<&PackedTernaryLinear> {
+        self.packed.get(name)
+    }
+
+    /// True when `name` exists as either a plain or a packed record.
+    pub fn has(&self, name: &str) -> bool {
+        self.tensors.contains_key(name) || self.packed.contains_key(name)
+    }
+
+    /// On-disk revision this file serializes as.
+    pub fn format(&self) -> &'static str {
+        if self.packed.is_empty() {
+            "PTW1"
+        } else {
+            "PTW2"
+        }
     }
 
     pub fn matrix(&self, name: &str) -> anyhow::Result<crate::tensor::Matrix> {
@@ -154,22 +265,60 @@ impl TensorFile {
 
     // ---------- io ----------
 
+    /// Serialize with the default archival plane coding (base-3).
     pub fn write_to(&self, w: &mut impl Write) -> anyhow::Result<()> {
-        w.write_all(MAGIC)?;
-        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        self.write_to_coded(w, PlaneCoding::Base3)
+    }
+
+    /// Serialize with an explicit plane coding for packed records.
+    /// `PTW1` is emitted when there are no packed records (Python
+    /// interop); `PTW2` otherwise.
+    pub fn write_to_coded(&self, w: &mut impl Write, coding: PlaneCoding) -> anyhow::Result<()> {
+        let v2 = !self.packed.is_empty();
+        w.write_all(if v2 { MAGIC_V2 } else { MAGIC_V1 })?;
+        let count = self.tensors.len() + self.packed.len();
+        w.write_all(&(count as u32).to_le_bytes())?;
+
+        // deterministic order: merged name-sorted view over both maps
+        enum Rec<'a> {
+            Plain(&'a TensorEntry),
+            Packed(&'a PackedTernaryLinear),
+        }
+        let mut recs: BTreeMap<&str, Rec> = BTreeMap::new();
         for (name, t) in &self.tensors {
+            recs.insert(name, Rec::Plain(t));
+        }
+        for (name, p) in &self.packed {
+            anyhow::ensure!(
+                recs.insert(name, Rec::Packed(p)).is_none(),
+                "duplicate record name '{name}'"
+            );
+        }
+
+        for (name, rec) in recs {
             w.write_all(&(name.len() as u32).to_le_bytes())?;
             w.write_all(name.as_bytes())?;
-            w.write_all(&[t.dtype as u8])?;
-            w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
-            for &d in &t.dims {
-                w.write_all(&(d as u64).to_le_bytes())?;
+            match rec {
+                Rec::Plain(t) => {
+                    if v2 {
+                        w.write_all(&[0u8])?; // kind: plain
+                    }
+                    w.write_all(&[t.dtype as u8])?;
+                    w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+                    for &d in &t.dims {
+                        w.write_all(&(d as u64).to_le_bytes())?;
+                    }
+                    anyhow::ensure!(
+                        t.bytes.len() == t.numel() * t.dtype.size(),
+                        "payload size mismatch for '{name}'"
+                    );
+                    w.write_all(&t.bytes)?;
+                }
+                Rec::Packed(p) => {
+                    debug_assert!(v2);
+                    write_packed(w, name, p, coding)?;
+                }
             }
-            anyhow::ensure!(
-                t.bytes.len() == t.numel() * t.dtype.size(),
-                "payload size mismatch for '{name}'"
-            );
-            w.write_all(&t.bytes)?;
         }
         Ok(())
     }
@@ -182,8 +331,13 @@ impl TensorFile {
     pub fn read_from(r: &mut impl Read) -> anyhow::Result<TensorFile> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "bad magic: {magic:?}");
+        let v2 = match &magic {
+            m if m == MAGIC_V1 => false,
+            m if m == MAGIC_V2 => true,
+            _ => anyhow::bail!("bad magic: {magic:?} (expected PTW1 or PTW2)"),
+        };
         let count = read_u32(r)? as usize;
+        anyhow::ensure!(count < 1 << 24, "unreasonable tensor count {count}");
         let mut tf = TensorFile::new();
         for _ in 0..count {
             let name_len = read_u32(r)? as usize;
@@ -191,21 +345,20 @@ impl TensorFile {
             let mut name = vec![0u8; name_len];
             r.read_exact(&mut name)?;
             let name = String::from_utf8(name)?;
-            let mut tag = [0u8; 1];
-            r.read_exact(&mut tag)?;
-            let dtype = DType::from_u8(tag[0])?;
-            let ndim = read_u32(r)? as usize;
-            anyhow::ensure!(ndim <= 8, "unreasonable rank {ndim}");
-            let mut dims = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                let mut b = [0u8; 8];
-                r.read_exact(&mut b)?;
-                dims.push(u64::from_le_bytes(b) as usize);
+            let kind = if v2 { read_u8(r)? } else { 0 };
+            match kind {
+                0 => {
+                    let entry = read_plain(r, &name)?;
+                    anyhow::ensure!(!tf.has(&name), "duplicate record '{name}'");
+                    tf.insert(&name, entry);
+                }
+                1 => {
+                    let lin = read_packed(r, &name)?;
+                    anyhow::ensure!(!tf.has(&name), "duplicate record '{name}'");
+                    tf.insert_packed(&name, &lin);
+                }
+                other => anyhow::bail!("unknown record kind {other} for '{name}'"),
             }
-            let numel: usize = dims.iter().product();
-            let mut bytes = vec![0u8; numel * dtype.size()];
-            r.read_exact(&mut bytes)?;
-            tf.insert(&name, TensorEntry { dtype, dims, bytes });
         }
         Ok(tf)
     }
@@ -219,10 +372,166 @@ impl TensorFile {
     }
 }
 
+fn write_packed(
+    w: &mut impl Write,
+    name: &str,
+    p: &PackedTernaryLinear,
+    coding: PlaneCoding,
+) -> anyhow::Result<()> {
+    let gpr = p.groups_per_row();
+    anyhow::ensure!(
+        p.row_stride == bytes_2bit(p.cols),
+        "packed '{name}': resident stride {} != bytes_2bit({})",
+        p.row_stride,
+        p.cols
+    );
+    anyhow::ensure!(
+        p.p1.len() == p.rows * p.row_stride && p.p2.len() == p.rows * p.row_stride,
+        "packed '{name}': plane payload size mismatch"
+    );
+    anyhow::ensure!(
+        p.alpha1.len() == p.rows * gpr && p.alpha2.len() == p.rows * gpr,
+        "packed '{name}': scale length mismatch"
+    );
+    w.write_all(&[1u8])?; // kind: packed ternary
+    w.write_all(&[coding as u8])?;
+    w.write_all(&(p.rows as u64).to_le_bytes())?;
+    w.write_all(&(p.cols as u64).to_le_bytes())?;
+    w.write_all(&(p.group as u64).to_le_bytes())?;
+    let stride = coding.row_bytes(p.cols);
+    w.write_all(&(stride as u64).to_le_bytes())?;
+    for plane in [&p.p1, &p.p2] {
+        match coding {
+            PlaneCoding::TwoBit => w.write_all(plane)?,
+            PlaneCoding::Base3 => {
+                // re-encode row-by-row so rows stay byte-aligned (the
+                // stride metadata stays meaningful in both codings)
+                for row in 0..p.rows {
+                    let src = &plane[row * p.row_stride..(row + 1) * p.row_stride];
+                    let trits = unpack2bit(src, p.cols);
+                    let mut enc = crate::ternary::pack_base3(&trits);
+                    enc.resize(stride, 0);
+                    w.write_all(&enc)?;
+                }
+            }
+        }
+    }
+    for alphas in [&p.alpha1, &p.alpha2] {
+        for &a in alphas.iter() {
+            w.write_all(&a.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_plain(r: &mut impl Read, name: &str) -> anyhow::Result<TensorEntry> {
+    let dtype = DType::from_u8(read_u8(r)?)?;
+    let ndim = read_u32(r)? as usize;
+    anyhow::ensure!(ndim <= 8, "unreasonable rank {ndim} for '{name}'");
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(read_dim(r, name)?);
+    }
+    let numel = checked_product(&dims)
+        .ok_or_else(|| anyhow::anyhow!("dims product overflows for '{name}': {dims:?}"))?;
+    let payload = numel
+        .checked_mul(dtype.size())
+        .filter(|&n| n <= MAX_PAYLOAD_BYTES)
+        .ok_or_else(|| anyhow::anyhow!("payload size overflows for '{name}': {dims:?}"))?;
+    let mut bytes = vec![0u8; payload];
+    r.read_exact(&mut bytes)
+        .map_err(|e| anyhow::anyhow!("truncated payload for '{name}' ({payload} bytes): {e}"))?;
+    Ok(TensorEntry { dtype, dims, bytes })
+}
+
+fn read_packed(r: &mut impl Read, name: &str) -> anyhow::Result<PackedTernaryLinear> {
+    let coding = PlaneCoding::from_u8(read_u8(r)?)
+        .map_err(|e| anyhow::anyhow!("packed '{name}': {e}"))?;
+    let rows = read_dim(r, name)?;
+    let cols = read_dim(r, name)?;
+    let group = read_dim(r, name)?;
+    let stride = read_dim(r, name)?;
+    anyhow::ensure!(group > 0, "packed '{name}': group size must be positive");
+    anyhow::ensure!(
+        stride == coding.row_bytes(cols),
+        "packed '{name}': stride {stride} inconsistent with cols {cols} under {coding:?}"
+    );
+    let plane_bytes = rows
+        .checked_mul(stride)
+        .filter(|&n| n <= MAX_PAYLOAD_BYTES)
+        .ok_or_else(|| anyhow::anyhow!("plane size overflows for '{name}' ({rows}×{stride})"))?;
+    let gpr = cols.div_ceil(group);
+    let alpha_len = rows
+        .checked_mul(gpr)
+        .filter(|&n| n.checked_mul(4).is_some_and(|b| b <= MAX_PAYLOAD_BYTES))
+        .ok_or_else(|| anyhow::anyhow!("scale size overflows for '{name}' ({rows}×{gpr})"))?;
+
+    let row_stride = bytes_2bit(cols);
+    let mut planes: [Vec<u8>; 2] = [Vec::new(), Vec::new()];
+    for plane in planes.iter_mut() {
+        let mut raw = vec![0u8; plane_bytes];
+        r.read_exact(&mut raw)
+            .map_err(|e| anyhow::anyhow!("truncated plane for '{name}': {e}"))?;
+        *plane = match coding {
+            PlaneCoding::TwoBit => raw,
+            PlaneCoding::Base3 => {
+                // decode each archival row back to the resident 2-bit layout
+                let mut out = vec![0u8; rows * row_stride];
+                for row in 0..rows {
+                    let trits = unpack_base3(&raw[row * stride..(row + 1) * stride], cols);
+                    let packed = pack2bit(&trits);
+                    out[row * row_stride..row * row_stride + packed.len()]
+                        .copy_from_slice(&packed);
+                }
+                out
+            }
+        };
+    }
+    let mut alphas: [Vec<f32>; 2] = [Vec::new(), Vec::new()];
+    for alpha in alphas.iter_mut() {
+        let mut bytes = vec![0u8; alpha_len * 4];
+        r.read_exact(&mut bytes)
+            .map_err(|e| anyhow::anyhow!("truncated scales for '{name}': {e}"))?;
+        *alpha = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+    }
+    let [p1, p2] = planes;
+    let [alpha1, alpha2] = alphas;
+    Ok(PackedTernaryLinear {
+        rows,
+        cols,
+        group,
+        row_stride,
+        p1,
+        p2,
+        alpha1,
+        alpha2,
+    })
+}
+
+fn checked_product(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+}
+
+fn read_u8(r: &mut impl Read) -> anyhow::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
 fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_dim(r: &mut impl Read, name: &str) -> anyhow::Result<usize> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    usize::try_from(u64::from_le_bytes(b))
+        .map_err(|_| anyhow::anyhow!("dimension overflows usize for '{name}'"))
 }
 
 #[cfg(test)]
@@ -230,6 +539,19 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
     use crate::tensor::Matrix;
+    use crate::ternary::TernaryLinear;
+
+    fn random_packed(rows: usize, cols: usize, group: usize, seed: u64) -> PackedTernaryLinear {
+        let mut rng = Rng::new(seed);
+        let mut lin = TernaryLinear::new(rows, cols, group);
+        for t in lin.t1.trits.iter_mut().chain(lin.t2.trits.iter_mut()) {
+            *t = rng.below(3) as i8 - 1;
+        }
+        for a in lin.alpha1.iter_mut().chain(lin.alpha2.iter_mut()) {
+            *a = rng.normal() * 0.1;
+        }
+        lin.to_packed()
+    }
 
     #[test]
     fn roundtrip_in_memory() {
@@ -242,6 +564,7 @@ mod tests {
 
         let mut buf = Vec::new();
         tf.write_to(&mut buf).unwrap();
+        assert_eq!(&buf[..4], b"PTW1", "dense-only files stay PTW1");
         let tf2 = TensorFile::read_from(&mut buf.as_slice()).unwrap();
         assert_eq!(tf, tf2);
         assert_eq!(tf2.matrix("w.0").unwrap(), m);
@@ -262,9 +585,123 @@ mod tests {
     }
 
     #[test]
+    fn packed_roundtrip_both_codings() {
+        // aligned (G=4-divisible cols) and ragged cols/groups, zero-plane
+        // rows included: trits and f32 scales must survive bit-exactly in
+        // either plane coding
+        for (rows, cols, group) in [(6usize, 16usize, 4usize), (9, 37, 8), (3, 10, 128)] {
+            let mut p = random_packed(rows, cols, group, 7 + cols as u64);
+            // row 0: all-zero planes and scales (converged-to-zero group)
+            for b in p.p1[..p.row_stride].iter_mut() {
+                *b = 0;
+            }
+            for b in p.p2[..p.row_stride].iter_mut() {
+                *b = 0;
+            }
+            let gpr = p.groups_per_row();
+            for a in p.alpha1[..gpr].iter_mut().chain(p.alpha2[..gpr].iter_mut()) {
+                *a = 0.0;
+            }
+            let mut tf = TensorFile::new();
+            tf.insert_packed("w", &p);
+            tf.insert_matrix("dense", &Matrix::from_vec(1, 2, vec![0.5, -0.5]));
+            assert_eq!(tf.format(), "PTW2");
+            for coding in [PlaneCoding::TwoBit, PlaneCoding::Base3] {
+                let mut buf = Vec::new();
+                tf.write_to_coded(&mut buf, coding).unwrap();
+                assert_eq!(&buf[..4], b"PTW2");
+                let tf2 = TensorFile::read_from(&mut buf.as_slice()).unwrap();
+                assert_eq!(tf, tf2, "coding {coding:?} ({rows}x{cols} G={group})");
+                assert_eq!(tf2.get_packed("w").unwrap(), &p);
+            }
+        }
+    }
+
+    #[test]
+    fn base3_coding_denser_than_two_bit() {
+        let p = random_packed(32, 320, 128, 3);
+        let mut tf = TensorFile::new();
+        tf.insert_packed("w", &p);
+        let mut b2 = Vec::new();
+        tf.write_to_coded(&mut b2, PlaneCoding::TwoBit).unwrap();
+        let mut b3 = Vec::new();
+        tf.write_to_coded(&mut b3, PlaneCoding::Base3).unwrap();
+        assert!(b3.len() < b2.len(), "{} !< {}", b3.len(), b2.len());
+    }
+
+    #[test]
     fn bad_magic_rejected() {
         let buf = b"NOPE\x00\x00\x00\x00".to_vec();
+        let err = TensorFile::read_from(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_rejected_with_name() {
+        let mut tf = TensorFile::new();
+        tf.insert("weights", TensorEntry::from_f32(vec![4, 4], &[0.25; 16]));
+        let mut buf = Vec::new();
+        tf.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 10);
+        let err = TensorFile::read_from(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("weights"), "{err}");
+    }
+
+    #[test]
+    fn truncated_packed_rejected() {
+        let mut tf = TensorFile::new();
+        tf.insert_packed("w", &random_packed(4, 16, 8, 5));
+        let mut buf = Vec::new();
+        tf.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 4);
         assert!(TensorFile::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn dims_product_overflow_rejected() {
+        // hand-craft a PTW1 header whose dims product overflows usize
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"PTW1");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(b'x');
+        buf.push(0); // dtype f32
+        buf.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        buf.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        buf.extend_from_slice(&16u64.to_le_bytes());
+        let err = TensorFile::read_from(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn packed_stride_mismatch_rejected() {
+        let mut tf = TensorFile::new();
+        tf.insert_packed("w", &random_packed(2, 16, 8, 9));
+        let mut buf = Vec::new();
+        tf.write_to_coded(&mut buf, PlaneCoding::TwoBit).unwrap();
+        // stride field sits after magic(4)+count(4)+name_len(4)+name(1)
+        // +kind(1)+coding(1)+rows(8)+cols(8)+group(8)
+        let stride_off = 4 + 4 + 4 + 1 + 1 + 1 + 8 + 8 + 8;
+        buf[stride_off] = buf[stride_off].wrapping_add(1);
+        let err = TensorFile::read_from(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("stride"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_and_coding_rejected() {
+        let mut tf = TensorFile::new();
+        tf.insert_packed("w", &random_packed(2, 8, 8, 11));
+        let mut buf = Vec::new();
+        tf.write_to(&mut buf).unwrap();
+        let kind_off = 4 + 4 + 4 + 1;
+        let mut bad_kind = buf.clone();
+        bad_kind[kind_off] = 9;
+        let err = TensorFile::read_from(&mut bad_kind.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("kind"), "{err}");
+        let mut bad_coding = buf;
+        bad_coding[kind_off + 1] = 7;
+        let err = TensorFile::read_from(&mut bad_coding.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("coding"), "{err}");
     }
 
     #[test]
@@ -278,5 +715,26 @@ mod tests {
     fn non_2d_matrix_rejected() {
         let e = TensorEntry::from_f32(vec![8], &[0.0; 8]);
         assert!(e.to_matrix().is_err());
+    }
+
+    #[test]
+    fn prop_packed_roundtrip() {
+        use crate::proptest::{check, prop_assert, Gen};
+        check(60, |g: &mut Gen| {
+            let rows = g.usize_in(1, 12);
+            let cols = g.usize_in(1, 70);
+            let group = g.usize_in(1, 160);
+            let p = random_packed(rows, cols, group, g.rng.next_u64());
+            let mut tf = TensorFile::new();
+            tf.insert_packed("w", &p);
+            let coding = *g.pick(&[PlaneCoding::TwoBit, PlaneCoding::Base3]);
+            let mut buf = Vec::new();
+            tf.write_to_coded(&mut buf, coding).unwrap();
+            let tf2 = TensorFile::read_from(&mut buf.as_slice()).unwrap();
+            prop_assert(
+                tf2.get_packed("w") == Some(&p),
+                "packed roundtrip mismatch",
+            )
+        });
     }
 }

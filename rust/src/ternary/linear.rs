@@ -10,7 +10,7 @@ use super::plane::TritPlane;
 use crate::tensor::Matrix;
 
 /// Two-plane ternary factorization of one linear layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TernaryLinear {
     /// Output features (rows of W).
     pub rows: usize,
@@ -134,7 +134,7 @@ fn pack_rows(t: &TritPlane) -> Vec<u8> {
 }
 
 /// 2-bit packed deployment form — what the serving engine keeps resident.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PackedTernaryLinear {
     pub rows: usize,
     pub cols: usize,
