@@ -1,13 +1,15 @@
 //! Kernel-tier race (`ptqtp bench --kernels`): branchless-FMA → packed
-//! LUT-decode → activation-indexed LUT, sequential and row-parallel, at
-//! decode (gemv, rows ≥ 256) and prefill (gemm, m = 64) shapes.
+//! LUT-decode → activation-indexed LUT → SIMD row-block tier,
+//! sequential and row-parallel, at decode (gemv, rows ≥ 256) and
+//! prefill (gemm, m = 64) shapes.
 //!
 //! Before any timing, every racer's output is asserted `==` (bitwise)
 //! against `gemv_packed` — so running this bench in release mode (where
 //! `debug_assert!`s are off) doubles as the kernel-parity regression
-//! smoke CI runs. Results go to stdout and `BENCH_kernels.json`
-//! (`--out` to relocate), the perf-trajectory baseline for the LUT tier
-//! and `--threads` scaling.
+//! smoke CI runs; a SIMD/scalar mismatch aborts the bench (hard parity
+//! gate). Results go to stdout and `BENCH_kernels.json` (`--out` to
+//! relocate) together with the detected CPU features and active SIMD
+//! tier, so baselines are interpretable across machines.
 
 use super::harness::bench_fn;
 use super::workload::random_ternary;
@@ -17,7 +19,8 @@ use crate::serialize::Json;
 use crate::tensor::Matrix;
 use crate::ternary::gemm::{gemm_packed_blocked, gemm_packed_blocked_par_into, GemmScratch};
 use crate::ternary::gemv::{gemv_fused, gemv_packed, gemv_packed_par};
-use crate::ternary::lut::{gemm_lut_into, gemv_lut};
+use crate::ternary::lut::{gemm_lut_into, gemv_lut, gemv_lut_into};
+use crate::ternary::simd;
 use crate::threads::Pool;
 use std::time::Duration;
 
@@ -26,6 +29,9 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
     let budget = Duration::from_millis(if quick { 200 } else { 900 });
     let iters = if quick { 80 } else { 400 };
     let pool = Pool::new(threads);
+    let simd_label = simd::label();
+    let cpu_features = simd::cpu_features().join(",");
+    println!("cpu features: {cpu_features} (simd tier: {simd_label})");
 
     // ---- decode: gemv over projection-shaped matrices (rows ≥ 256) ----
     let decode_shapes: Vec<(usize, usize)> = if quick {
@@ -33,7 +39,7 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
     } else {
         vec![(256, 128), (688, 256), (1024, 512)]
     };
-    println!("== kernel race: decode gemv (threads={threads}) ==");
+    println!("== kernel race: decode gemv (threads={threads}, simd={simd_label}) ==");
     let mut decode_rows = Vec::new();
     for &(rows, cols) in &decode_shapes {
         let lin = random_ternary(rows, cols, 128, 1 + rows as u64);
@@ -41,7 +47,8 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         let mut rng = Rng::new(2);
         let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
 
-        // parity gate: every racer bitwise-equal to gemv_packed
+        // parity gates: every racer bitwise-equal to gemv_packed.
+        // A SIMD mismatch fails here, before any timing is recorded.
         let mut y_ref = vec![0.0f32; rows];
         gemv_packed(&packed, &x, &mut y_ref);
         let mut table = Vec::new();
@@ -51,11 +58,30 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         y.fill(0.0);
         gemv_packed_par(&packed, &x, &mut y, &pool);
         assert_eq!(y, y_ref, "parallel packed drifted ({rows}x{cols})");
-        let mut scratch = GemmScratch::new();
-        scratch.pool = pool.clone();
+        // scalar-forced scratch (the non-SIMD LUT tier), threaded
+        let mut scratch_scalar = GemmScratch::new();
+        scratch_scalar.pool = pool.clone();
+        scratch_scalar.simd = false;
         y.fill(0.0);
-        crate::ternary::lut::gemv_lut_into(&packed, &x, &mut y, &mut scratch);
+        gemv_lut_into(&packed, &x, &mut y, &mut scratch_scalar);
         assert_eq!(y, y_ref, "parallel LUT drifted ({rows}x{cols})");
+        // SIMD-forced scratches: sequential and threaded
+        let mut scratch_simd_seq = GemmScratch::new();
+        scratch_simd_seq.simd = true;
+        let mut scratch_simd = GemmScratch::new();
+        scratch_simd.pool = pool.clone();
+        scratch_simd.simd = true;
+        y.fill(0.0);
+        gemv_lut_into(&packed, &x, &mut y, &mut scratch_simd_seq);
+        assert_eq!(y, y_ref, "SIMD LUT tier drifted ({rows}x{cols})");
+        y.fill(0.0);
+        gemv_lut_into(&packed, &x, &mut y, &mut scratch_simd);
+        assert_eq!(y, y_ref, "threaded SIMD LUT drifted ({rows}x{cols})");
+        if let Some(il) = packed.interleave.clone() {
+            y.fill(0.0);
+            simd::gemv_packed_simd(&packed, &il, &x, &mut y, &Pool::sequential());
+            assert_eq!(y, y_ref, "SIMD packed tier drifted ({rows}x{cols})");
+        }
 
         let fused = bench_fn(&format!("gemv/fused/{rows}x{cols}"), 3, iters, budget, || {
             gemv_fused(&lin, &x, &mut y)
@@ -66,17 +92,36 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         let lut_t = bench_fn(&format!("gemv/lut/{rows}x{cols}"), 3, iters, budget, || {
             gemv_lut(&packed, &x, &mut y, &mut table)
         });
-        let lut_par_t = bench_fn(&format!("gemv/lut-par/{rows}x{cols}"), 3, iters, budget, || {
-            crate::ternary::lut::gemv_lut_into(&packed, &x, &mut y, &mut scratch)
+        let simd_t = bench_fn(&format!("gemv/simd/{rows}x{cols}"), 3, iters, budget, || {
+            gemv_lut_into(&packed, &x, &mut y, &mut scratch_simd_seq)
         });
+        let simd_par_t = bench_fn(&format!("gemv/simd-par/{rows}x{cols}"), 3, iters, budget, || {
+            gemv_lut_into(&packed, &x, &mut y, &mut scratch_simd)
+        });
+        // packed-SIMD tier (the dispatch for aligned layers below
+        // LUT_MIN_ROWS) gets its own baseline; without an interleave
+        // (mode off) this honestly times the scalar packed kernel —
+        // the top-level simd_tier field says which it was
+        let seq_pool = Pool::sequential();
+        let il = packed.interleave.clone();
+        let simd_packed_t =
+            bench_fn(&format!("gemv/simd-packed/{rows}x{cols}"), 3, iters, budget, || {
+                match &il {
+                    Some(il) => simd::gemv_packed_simd(&packed, il, &x, &mut y, &seq_pool),
+                    None => gemv_packed(&packed, &x, &mut y),
+                }
+            });
         let lut_speedup = packed_t.median.as_secs_f64() / lut_t.median.as_secs_f64();
-        let par_speedup = lut_t.median.as_secs_f64() / lut_par_t.median.as_secs_f64();
+        let simd_speedup = lut_t.median.as_secs_f64() / simd_t.median.as_secs_f64();
+        let par_speedup = simd_t.median.as_secs_f64() / simd_par_t.median.as_secs_f64();
         println!(
-            "  {rows:>4}x{cols:<4}  fused {:>8.1}us  packed {:>8.1}us  lut {:>8.1}us ({lut_speedup:>4.2}x)  lut@{threads}t {:>8.1}us ({par_speedup:>4.2}x)",
+            "  {rows:>4}x{cols:<4}  fused {:>8.1}us  packed {:>8.1}us  lut {:>8.1}us ({lut_speedup:>4.2}x)  simd {:>8.1}us ({simd_speedup:>4.2}x)  simd@{threads}t {:>8.1}us ({par_speedup:>4.2}x)  simd-packed {:>8.1}us",
             fused.median_us(),
             packed_t.median_us(),
             lut_t.median_us(),
-            lut_par_t.median_us(),
+            simd_t.median_us(),
+            simd_par_t.median_us(),
+            simd_packed_t.median_us(),
         );
         decode_rows.push(
             Json::obj()
@@ -85,9 +130,12 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                 .set("fused_us", fused.median_us())
                 .set("packed_us", packed_t.median_us())
                 .set("lut_us", lut_t.median_us())
-                .set("lut_par_us", lut_par_t.median_us())
+                .set("simd_us", simd_t.median_us())
+                .set("simd_par_us", simd_par_t.median_us())
+                .set("simd_packed_us", simd_packed_t.median_us())
                 .set("lut_speedup_vs_packed", lut_speedup)
-                .set("par_speedup_vs_lut", par_speedup),
+                .set("simd_speedup_vs_lut", simd_speedup)
+                .set("par_speedup_vs_simd", par_speedup),
         );
     }
 
@@ -98,7 +146,7 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
     } else {
         vec![(344, 128), (512, 192)]
     };
-    println!("== kernel race: prefill gemm m={m} (threads={threads}) ==");
+    println!("== kernel race: prefill gemm m={m} (threads={threads}, simd={simd_label}) ==");
     let mut prefill_rows = Vec::new();
     for &(rows, cols) in &prefill_shapes {
         let packed = random_ternary(rows, cols, 128, 7 + rows as u64).to_packed();
@@ -106,38 +154,67 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         let x = Matrix::randn(m, cols, 1.0, &mut rng);
 
         let y_ref = gemm_packed_blocked(&packed, &x);
-        let mut scratch_seq = GemmScratch::new();
-        let mut scratch_par = GemmScratch::new();
-        scratch_par.pool = pool.clone();
+        let mut scratch_scalar_seq = GemmScratch::new();
+        scratch_scalar_seq.simd = false;
+        let mut scratch_scalar_par = GemmScratch::new();
+        scratch_scalar_par.pool = pool.clone();
+        scratch_scalar_par.simd = false;
+        let mut scratch_simd_seq = GemmScratch::new();
+        scratch_simd_seq.simd = true;
+        let mut scratch_simd_par = GemmScratch::new();
+        scratch_simd_par.pool = pool.clone();
+        scratch_simd_par.simd = true;
         let mut y = Matrix::zeros(m, rows);
-        gemm_lut_into(&packed, &x, &mut y, &mut scratch_seq);
+        gemm_lut_into(&packed, &x, &mut y, &mut scratch_scalar_seq);
         assert_eq!(y.data, y_ref.data, "LUT gemm drifted ({rows}x{cols})");
         y.data.fill(0.0);
-        gemm_lut_into(&packed, &x, &mut y, &mut scratch_par);
+        gemm_lut_into(&packed, &x, &mut y, &mut scratch_scalar_par);
         assert_eq!(y.data, y_ref.data, "parallel LUT gemm drifted ({rows}x{cols})");
         y.data.fill(0.0);
-        gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_par);
+        gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_scalar_par);
         assert_eq!(y.data, y_ref.data, "parallel blocked gemm drifted ({rows}x{cols})");
+        y.data.fill(0.0);
+        gemm_lut_into(&packed, &x, &mut y, &mut scratch_simd_seq);
+        assert_eq!(y.data, y_ref.data, "SIMD LUT gemm drifted ({rows}x{cols})");
+        y.data.fill(0.0);
+        gemm_lut_into(&packed, &x, &mut y, &mut scratch_simd_par);
+        assert_eq!(y.data, y_ref.data, "threaded SIMD LUT gemm drifted ({rows}x{cols})");
+        if let Some(il) = packed.interleave.clone() {
+            y.data.fill(0.0);
+            simd::gemm_packed_simd(&packed, &il, &x, &mut y, &pool);
+            assert_eq!(y.data, y_ref.data, "SIMD packed gemm drifted ({rows}x{cols})");
+        }
 
         let blocked = bench_fn(&format!("gemm/blocked/{rows}x{cols}"), 2, iters, budget, || {
-            gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_seq)
+            gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_scalar_seq)
         });
         let lut_t = bench_fn(&format!("gemm/lut/{rows}x{cols}"), 2, iters, budget, || {
-            gemm_lut_into(&packed, &x, &mut y, &mut scratch_seq)
+            gemm_lut_into(&packed, &x, &mut y, &mut scratch_scalar_seq)
         });
-        let blocked_par = bench_fn(&format!("gemm/blocked-par/{rows}x{cols}"), 2, iters, budget, || {
-            gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_par)
+        let simd_t = bench_fn(&format!("gemm/simd/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_lut_into(&packed, &x, &mut y, &mut scratch_simd_seq)
         });
-        let lut_par = bench_fn(&format!("gemm/lut-par/{rows}x{cols}"), 2, iters, budget, || {
-            gemm_lut_into(&packed, &x, &mut y, &mut scratch_par)
+        let simd_par = bench_fn(&format!("gemm/simd-par/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_lut_into(&packed, &x, &mut y, &mut scratch_simd_par)
         });
+        // packed-SIMD gemm baseline (scalar blocked fallback when no
+        // interleave exists — see the decode-side note)
+        let il = packed.interleave.clone();
+        let simd_packed_t =
+            bench_fn(&format!("gemm/simd-packed/{rows}x{cols}"), 2, iters, budget, || {
+                match &il {
+                    Some(il) => simd::gemm_packed_simd(&packed, il, &x, &mut y, &pool),
+                    None => gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_scalar_par),
+                }
+            });
         let tps = |b: &crate::bench::BenchResult| b.throughput(m as f64);
         println!(
-            "  {rows:>4}x{cols:<4}  blocked {:>9.0} tok/s  lut {:>9.0} tok/s  blocked@{threads}t {:>9.0} tok/s  lut@{threads}t {:>9.0} tok/s",
+            "  {rows:>4}x{cols:<4}  blocked {:>9.0} tok/s  lut {:>9.0} tok/s  simd {:>9.0} tok/s  simd@{threads}t {:>9.0} tok/s  simd-packed {:>9.0} tok/s",
             tps(&blocked),
             tps(&lut_t),
-            tps(&blocked_par),
-            tps(&lut_par),
+            tps(&simd_t),
+            tps(&simd_par),
+            tps(&simd_packed_t),
         );
         prefill_rows.push(
             Json::obj()
@@ -146,10 +223,12 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                 .set("m", m)
                 .set("blocked_tps", tps(&blocked))
                 .set("lut_tps", tps(&lut_t))
-                .set("blocked_par_tps", tps(&blocked_par))
-                .set("lut_par_tps", tps(&lut_par))
+                .set("simd_tps", tps(&simd_t))
+                .set("simd_par_tps", tps(&simd_par))
+                .set("simd_packed_tps", tps(&simd_packed_t))
                 .set("lut_speedup_vs_blocked", tps(&lut_t) / tps(&blocked))
-                .set("par_speedup_vs_lut", tps(&lut_par) / tps(&lut_t)),
+                .set("simd_speedup_vs_lut", tps(&simd_t) / tps(&lut_t))
+                .set("par_speedup_vs_simd", tps(&simd_par) / tps(&simd_t)),
         );
     }
 
@@ -162,7 +241,12 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         .set("status", "measured")
         .set("threads", threads)
         .set("quick", quick)
-        .set("parity", "all tiers asserted bit-identical to gemv_packed before timing")
+        .set("simd_tier", simd_label)
+        .set("cpu_features", cpu_features)
+        .set(
+            "parity",
+            "all tiers (incl. SIMD row-block) asserted bit-identical to gemv_packed before timing",
+        )
         .set("decode", Json::Arr(decode_rows))
         .set("prefill", Json::Arr(prefill_rows));
     std::fs::write(out_path, json.pretty())?;
@@ -189,6 +273,8 @@ mod tests {
         run(true, &args).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.req_str("bench").unwrap(), "kernels");
+        assert!(!j.req_str("cpu_features").unwrap().is_empty());
+        assert!(!j.req_str("simd_tier").unwrap().is_empty());
         let decode = j.get("decode").and_then(Json::as_arr).unwrap();
         assert_eq!(decode.len(), 1);
         let prefill = j.get("prefill").and_then(Json::as_arr).unwrap();

@@ -43,7 +43,12 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
             &format!("Table 5 — gate_proj latency (ms), {name} ({n}x{d})"),
             &["seq", "FP32-dense", "GPTQ-4bit", "AQLM-2x2bit", "PTQTP-1.58bit", "PTQTP-LUT"],
         );
+        // this exhibit's LUT column measures the *scalar* LUT tier (the
+        // PR-2 baseline); pin SIMD off so the numbers stay comparable
+        // across machines and to pre-SIMD baselines — the SIMD tier is
+        // raced (with parity gates) in `bench --kernels` instead
         let mut lut_scratch = GemmScratch::new();
+        lut_scratch.simd = false;
         for &seq in &seqs {
             let mut rng = crate::rng::Rng::new(7 + seq as u64);
             let x = Matrix::randn(seq, d, 1.0, &mut rng);

@@ -45,34 +45,38 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
         let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
         let rope = &model.rope;
 
-        // pre-warm a cache to ctx_len, then measure one decode step
+        // pre-warm a cache to ctx_len, then measure one decode step;
+        // the scratch is held across steps (the long-context decode
+        // pattern — no per-token allocation inside the timed region)
         fn mk_cache(
             attn: &crate::model::attention::Attention,
             rope: &crate::model::rope::Rope,
             x: &[f32],
             kv_dim: usize,
             ctx_len: usize,
+            scratch: &mut crate::model::DecodeScratch,
         ) -> KvCache {
             let mut c = KvCache::new(1, kv_dim, ctx_len + 8);
             let mut out = vec![0.0; x.len()];
             for pos in 0..ctx_len {
-                attn.decode(x, rope, &mut c, 0, pos, &mut out);
+                attn.decode_with(x, rope, &mut c, 0, pos, scratch, &mut out);
                 c.commit();
             }
             c
         }
-        let mut cache_fp = mk_cache(&attn_fp, rope, &x, kv_dim, ctx_len);
-        let mut cache_q = mk_cache(&attn_q, rope, &x, kv_dim, ctx_len);
+        let mut scratch = crate::model::DecodeScratch::default();
+        let mut cache_fp = mk_cache(&attn_fp, rope, &x, kv_dim, ctx_len, &mut scratch);
+        let mut cache_q = mk_cache(&attn_q, rope, &x, kv_dim, ctx_len, &mut scratch);
         let mut out = vec![0.0f32; d];
         let fp = bench_fn("fp", 3, 200, budget, || {
             cache_fp.truncate(ctx_len);
-            attn_fp.decode(&x, rope, &mut cache_fp, 0, ctx_len, &mut out);
+            attn_fp.decode_with(&x, rope, &mut cache_fp, 0, ctx_len, &mut scratch, &mut out);
             cache_fp.commit();
             out[0]
         });
         let qn = bench_fn("ptqtp", 3, 200, budget, || {
             cache_q.truncate(ctx_len);
-            attn_q.decode(&x, rope, &mut cache_q, 0, ctx_len, &mut out);
+            attn_q.decode_with(&x, rope, &mut cache_q, 0, ctx_len, &mut scratch, &mut out);
             cache_q.commit();
             out[0]
         });

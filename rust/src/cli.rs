@@ -114,6 +114,21 @@ impl Args {
             .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
     }
 
+    /// Enumerated option: `None` when absent (caller falls back to its
+    /// env/default chain), `Some(value)` when present and legal, and a
+    /// helpful error naming the allowed values otherwise. Used by
+    /// `--simd auto|on|off`.
+    pub fn choice<'a>(&'a self, name: &str, allowed: &[&str]) -> anyhow::Result<Option<&'a str>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) if allowed.contains(&v) => Ok(Some(v)),
+            Some(v) => Err(anyhow::anyhow!(
+                "invalid --{name} '{v}' (expected one of: {})",
+                allowed.join("|")
+            )),
+        }
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
@@ -186,6 +201,18 @@ mod tests {
         let b = parse(&["serve", "--threads", "0"]);
         assert_eq!(b.threads_or_default(), 1, "clamped to ≥ 1");
         assert!(parse(&["serve"]).threads_or_default() >= 1);
+    }
+
+    #[test]
+    fn choice_validates_values() {
+        let a = parse(&["serve", "--simd", "off"]);
+        assert_eq!(a.choice("simd", &["auto", "on", "off"]).unwrap(), Some("off"));
+        assert_eq!(parse(&["serve"]).choice("simd", &["auto", "on", "off"]).unwrap(), None);
+        let e = parse(&["serve", "--simd", "sideways"])
+            .choice("simd", &["auto", "on", "off"])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--simd") && e.contains("auto|on|off"), "{e}");
     }
 
     #[test]

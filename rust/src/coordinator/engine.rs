@@ -80,6 +80,22 @@ impl ServeEngine {
         self.scratch.pool().threads()
     }
 
+    /// Toggle the SIMD row-block kernel tier for this engine's model
+    /// pass (default: the process-wide `--simd`/`PTQTP_SIMD` mode).
+    /// Token output is bit-identical either way — the SIMD tier replays
+    /// the scalar per-row FP order — so this is a perf/debug knob, not
+    /// a numerics one (pinned by the SIMD on/off engine parity test).
+    ///
+    /// `false` always downgrades to the scalar tiers. `true` engages
+    /// SIMD only for layers that carry an interleaved layout — which is
+    /// every aligned layer unless the process started with the mode
+    /// `off` (then no interleave was built and the flag is a no-op;
+    /// force layouts with `PackedTernaryLinear::set_interleave_lanes`
+    /// for an A/B run in that state).
+    pub fn set_simd(&mut self, on: bool) {
+        self.scratch.set_simd(on);
+    }
+
     /// Enqueue a request (admission happens during [`ServeEngine::step`]).
     pub fn submit(&mut self, req: Request) {
         self.metrics.submitted += 1;

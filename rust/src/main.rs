@@ -36,6 +36,19 @@ const SUBCOMMANDS: &[&str] = &[
 
 fn main() {
     let args = Args::from_env(SUBCOMMANDS);
+    // Pin the SIMD kernel-tier mode before any packed layer is built:
+    // --simd > PTQTP_SIMD > auto. `off` is the exact scalar escape
+    // hatch (output is bit-identical either way).
+    match args.choice("simd", &["auto", "on", "off"]) {
+        Ok(Some(v)) => ptqtp::ternary::simd::set_mode(
+            ptqtp::ternary::simd::SimdMode::parse(v).expect("validated by choice()"),
+        ),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
     let result = match args.subcommand.as_deref() {
         Some("gen-corpus") => cmd_gen_corpus(&args),
         Some("gen-ckpt") => cmd_gen_ckpt(&args),
@@ -74,6 +87,7 @@ fn help() -> String {
             OptSpec { name: "group-size", help: "quantization group size G", default: Some("128") },
             OptSpec { name: "method", help: "fp16|rtn*|gptq*|awq*|pbllm|billm|arb|absmean|ptqtp", default: Some("ptqtp") },
             OptSpec { name: "threads", help: "worker lanes for row-parallel kernels/quantization (1 = exact sequential path; env PTQTP_THREADS)", default: Some("cores") },
+            OptSpec { name: "simd", help: "SIMD kernel tier: auto|on|off (off = exact scalar path; env PTQTP_SIMD); bit-identical output either way", default: Some("auto") },
             OptSpec { name: "replicas", help: "serve: engine replicas, each with its own pool", default: Some("1") },
         ],
     )
@@ -287,6 +301,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let data_dir = args.str_or("data", "data");
     let threads = args.threads_or_default();
     let replicas = args.usize_or("replicas", 1).max(1);
+    // tier label + how many layers actually carry an interleaved
+    // layout (0 on ragged/dense models ⇒ the pass ran scalar even
+    // when the tier says e.g. "avx2")
+    let simd_desc = format!(
+        "{} ({} layers interleaved)",
+        ptqtp::ternary::simd::label(),
+        model.simd_layers()
+    );
     let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
 
     // workload: math prompts (realistic mixed lengths)
@@ -312,7 +334,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let wall = t0.elapsed();
         let metrics = server.shutdown();
         println!(
-            "served {} requests with method {method} ({replicas} replicas × {threads} threads, wall {wall:.2?})",
+            "served {} requests with method {method} ({replicas} replicas × {threads} threads, simd {simd_desc}, wall {wall:.2?})",
             responses.len()
         );
         for (i, m) in metrics.iter().enumerate() {
@@ -331,7 +353,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let responses = engine.run_to_completion();
     let wall = t0.elapsed();
-    println!("served {} requests with method {method} ({threads} threads)", responses.len());
+    println!(
+        "served {} requests with method {method} ({threads} threads, simd {simd_desc})",
+        responses.len()
+    );
     println!("{}", engine.metrics.render(wall));
     Ok(())
 }

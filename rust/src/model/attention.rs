@@ -41,10 +41,27 @@ pub struct AttnScratch {
     pub(crate) gemm: GemmScratch,
 }
 
+/// Reusable buffers for the one-token [`Attention::decode_with`] path —
+/// the same caller-owned pattern as [`GemmScratch`]: a long-context
+/// decode loop holds one across steps, so the per-step q/k/v, head
+/// accumulator, and score buffers stop allocating per token.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeScratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    scores: Vec<f32>,
+}
+
 impl Attention {
     /// Decode one token: `x` is the normed hidden state (d_model);
     /// appends this position's K/V to `cache[layer]` and returns the
     /// attention output (d_model). `pos` = index of this token.
+    ///
+    /// Allocates a fresh [`DecodeScratch`] per call (kept as the simple
+    /// numerics-reference entry); loops should hold a scratch and call
+    /// [`Attention::decode_with`].
     pub fn decode(
         &self,
         x: &[f32],
@@ -54,26 +71,46 @@ impl Attention {
         pos: usize,
         out: &mut [f32],
     ) {
+        let mut scratch = DecodeScratch::default();
+        self.decode_with(x, rope, cache, layer, pos, &mut scratch, out);
+    }
+
+    /// [`Attention::decode`] over caller-owned scratch: zero per-token
+    /// heap allocation in steady state, bit-identical output (the
+    /// buffers are resized/zeroed to exactly the states the allocating
+    /// path starts from).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_with(
+        &self,
+        x: &[f32],
+        rope: &Rope,
+        cache: &mut KvCache,
+        layer: usize,
+        pos: usize,
+        scratch: &mut DecodeScratch,
+        out: &mut [f32],
+    ) {
         let hd = self.head_dim;
         let q_dim = self.n_heads * hd;
         let kv_dim = self.n_kv_heads * hd;
-        let mut q = vec![0.0f32; q_dim];
-        let mut k = vec![0.0f32; kv_dim];
-        let mut v = vec![0.0f32; kv_dim];
-        self.wq.forward_vec(x, &mut q);
-        self.wk.forward_vec(x, &mut k);
-        self.wv.forward_vec(x, &mut v);
-        rope.apply_heads(&mut q, pos);
-        rope.apply_heads(&mut k, pos);
-        cache.append(layer, &k, &v);
+        scratch.q.resize(q_dim, 0.0);
+        scratch.k.resize(kv_dim, 0.0);
+        scratch.v.resize(kv_dim, 0.0);
+        self.wq.forward_vec(x, &mut scratch.q);
+        self.wk.forward_vec(x, &mut scratch.k);
+        self.wv.forward_vec(x, &mut scratch.v);
+        rope.apply_heads(&mut scratch.q, pos);
+        rope.apply_heads(&mut scratch.k, pos);
+        cache.append(layer, &scratch.k, &scratch.v);
 
         let keys = cache.keys(layer);
         let vals = cache.values(layer);
         let t = keys.len() / kv_dim; // cached positions incl. current
-        let mut attn_out = vec![0.0f32; q_dim];
-        let mut scores = Vec::new();
-        self.attend_one(&q, keys, vals, t, &mut scores, &mut attn_out);
-        self.wo.forward_vec(&attn_out, out);
+        // attend_one accumulates into its output: zero the head buffer
+        scratch.attn.clear();
+        scratch.attn.resize(q_dim, 0.0);
+        self.attend_one(&scratch.q, keys, vals, t, &mut scratch.scores, &mut scratch.attn);
+        self.wo.forward_vec(&scratch.attn, out);
     }
 
     /// Score/softmax/weighted-sum for one query row over `t` cached
@@ -252,6 +289,30 @@ mod tests {
         attn.decode(&x, &rope, &mut c1, 0, 0, &mut o1);
         attn.decode(&x, &rope, &mut c2, 0, 0, &mut o2);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn decode_with_reused_scratch_bit_identical_to_decode() {
+        // one scratch across many positions (long-context decode
+        // pattern) must equal the fresh-allocation path exactly
+        let attn = make_attn(32, 4, 2, 17);
+        let rope = Rope::new(8, 32, 10_000.0);
+        let mut rng = Rng::new(18);
+        let mut c_ref = KvCache::new(1, 16, 32);
+        let mut c_scr = KvCache::new(1, 16, 32);
+        let mut scratch = DecodeScratch::default();
+        for pos in 0..12 {
+            let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0; 32];
+            let mut b = vec![0.0; 32];
+            attn.decode(&x, &rope, &mut c_ref, 0, pos, &mut a);
+            c_ref.commit();
+            attn.decode_with(&x, &rope, &mut c_scr, 0, pos, &mut scratch, &mut b);
+            c_scr.commit();
+            assert_eq!(a, b, "pos {pos}");
+        }
+        assert_eq!(c_ref.keys(0), c_scr.keys(0));
+        assert_eq!(c_ref.values(0), c_scr.values(0));
     }
 
     #[test]

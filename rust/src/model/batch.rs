@@ -151,6 +151,16 @@ impl ForwardScratch {
     pub fn pool(&self) -> &crate::threads::Pool {
         &self.gemm.pool
     }
+
+    /// Toggle the SIMD row-block kernel tier for every pass using this
+    /// scratch (MLP/LM-head gemms and the attention projections carry
+    /// their own `GemmScratch`). Default is the process-wide
+    /// `--simd`/`PTQTP_SIMD` mode; output is bit-identical either way
+    /// (DESIGN.md §SIMD-Kernels), so this is a perf/debug knob only.
+    pub fn set_simd(&mut self, on: bool) {
+        self.gemm.simd = on;
+        self.attn.gemm.simd = on;
+    }
 }
 
 /// Resize a scratch matrix, reusing its allocation. Contents zeroed.

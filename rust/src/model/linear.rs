@@ -11,6 +11,7 @@ use crate::ternary::gemm::{gemm_packed_blocked_par_into, GemmScratch};
 use crate::ternary::gemv::{gemv_packed, gemv_packed_par};
 use crate::ternary::linear::PackedTernaryLinear;
 use crate::ternary::lut;
+use crate::ternary::simd;
 
 /// Weight backend.
 #[derive(Clone, Debug)]
@@ -38,8 +39,11 @@ impl QuantLinear {
 
     /// Adopt a packed trit-plane backend directly (checkpoint load
     /// path: the planes come off disk already packed, so no densify and
-    /// no requantize happens between quantization and serving).
-    pub fn from_packed(lin: PackedTernaryLinear) -> QuantLinear {
+    /// no requantize happens between quantization and serving). Builds
+    /// the SIMD interleave if the reader didn't already (safety net for
+    /// hand-constructed layers).
+    pub fn from_packed(mut lin: PackedTernaryLinear) -> QuantLinear {
+        lin.ensure_interleave();
         let shape = (lin.rows, lin.cols);
         QuantLinear {
             backend: Backend::Ternary(lin),
@@ -83,16 +87,19 @@ impl QuantLinear {
 
     /// Batched serving forward: Y = X·Wᵀ into a caller-owned output,
     /// zero steady-state allocation. Guaranteed **bit-identical per
-    /// row** to [`QuantLinear::forward_vec`] on both backends and for
-    /// any `scratch.pool` thread count: dense rows run the same matvec
-    /// body (row-partitioned when the pool has lanes); ternary rows
-    /// pick the fastest tier whose FP order mirrors `gemv_packed`
-    /// exactly — the activation-indexed LUT kernels when the layout is
-    /// byte-aligned and the matrix is tall enough to amortize the table
-    /// build, else the row-blocked packed kernel. This tier freedom is
-    /// safe precisely because every tier is bit-identical; it is what
-    /// makes the fused engine step produce token-for-token the same
-    /// output as sequential decoding at any `--threads`.
+    /// row** to [`QuantLinear::forward_vec`] on both backends, for any
+    /// `scratch.pool` thread count and either `scratch.simd` setting:
+    /// dense rows run the same matvec body (row-partitioned when the
+    /// pool has lanes); ternary rows pick the fastest tier whose FP
+    /// order mirrors `gemv_packed` exactly — the activation-indexed LUT
+    /// kernels (SIMD row-blocked when the layer carries an interleaved
+    /// layout) when the layout is byte-aligned and the matrix is tall
+    /// enough to amortize the table build, else the SIMD packed kernel
+    /// for aligned layouts below the LUT threshold, else the
+    /// row-blocked packed kernel. This tier freedom is safe precisely
+    /// because every tier is bit-identical; it is what makes the fused
+    /// engine step produce token-for-token the same output as
+    /// sequential decoding at any `--threads` and any `--simd`.
     pub fn forward_rows_into(&self, x: &Matrix, y: &mut Matrix, scratch: &mut GemmScratch) {
         debug_assert_eq!(x.cols, self.shape.1);
         debug_assert_eq!(y.rows, x.rows);
@@ -101,15 +108,26 @@ impl QuantLinear {
             Backend::Dense(w) => ops::matvec_rows_pooled(w, x, y, &scratch.pool),
             Backend::Ternary(t) => {
                 let use_lut = lut::is_aligned(t) && t.rows >= lut::LUT_MIN_ROWS;
+                let il = if scratch.simd {
+                    t.interleave.as_deref()
+                } else {
+                    None
+                };
                 if x.rows == 1 {
                     if use_lut {
                         lut::gemv_lut_into(t, x.row(0), y.row_mut(0), scratch);
+                    } else if let Some(il) = il {
+                        let pool = scratch.pool.clone();
+                        simd::gemv_packed_simd(t, il, x.row(0), y.row_mut(0), &pool);
                     } else {
                         let pool = scratch.pool.clone();
                         gemv_packed_par(t, x.row(0), y.row_mut(0), &pool);
                     }
                 } else if use_lut {
                     lut::gemm_lut_into(t, x, y, scratch);
+                } else if let Some(il) = il {
+                    let pool = scratch.pool.clone();
+                    simd::gemm_packed_simd(t, il, x, y, &pool);
                 } else {
                     gemm_packed_blocked_par_into(t, x, y, scratch);
                 }

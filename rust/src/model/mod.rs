@@ -20,6 +20,7 @@ pub mod norm;
 pub mod rope;
 pub mod transformer;
 
+pub use attention::DecodeScratch;
 pub use batch::{ForwardBatch, ForwardScratch};
 pub use config::ModelConfig;
 pub use kv::KvCache;

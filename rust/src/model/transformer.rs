@@ -418,6 +418,21 @@ impl Transformer {
             .count()
     }
 
+    /// Linear layers currently carrying a SIMD-interleaved layout — the
+    /// layers the SIMD tier can actually serve. 0 when the mode is
+    /// `off`, on ragged-only quantizations (`G % 4 != 0`), or on a
+    /// dense model; the serve front-end prints this next to the tier
+    /// name so "simd avx2" can't mislead when every dispatch ran
+    /// scalar.
+    pub fn simd_layers(&self) -> usize {
+        self.linear_layers()
+            .iter()
+            .filter(|(_, l)| {
+                matches!(&l.backend, Backend::Ternary(t) if t.interleave.is_some())
+            })
+            .count()
+    }
+
     /// Container revision [`Transformer::save`] will emit for the
     /// current backends.
     pub fn checkpoint_format(&self) -> &'static str {
@@ -888,6 +903,37 @@ mod tests {
         assert!(cos > 0.8, "cosine {cos}");
         // memory shrank
         assert!(mq.resident_bytes() < m.resident_bytes());
+    }
+
+    #[test]
+    fn simd_layers_counts_interleaved_backends() {
+        let mut m = tiny_model(25);
+        assert_eq!(m.simd_layers(), 0, "dense model has no interleaves");
+        m.quantize_with(&Ptqtp::default(), &crate::quant::QuantCtx::default());
+        let total = m.linear_layers().len();
+        // force layouts on/off explicitly so the count is deterministic
+        // regardless of the process-wide SIMD mode
+        let for_each = |m: &mut Transformer, lanes: Option<usize>| {
+            for b in m.blocks.iter_mut() {
+                for l in [
+                    &mut b.attn.wq,
+                    &mut b.attn.wk,
+                    &mut b.attn.wv,
+                    &mut b.attn.wo,
+                    &mut b.w_gate,
+                    &mut b.w_up,
+                    &mut b.w_down,
+                ] {
+                    if let Backend::Ternary(t) = &mut l.backend {
+                        t.set_interleave_lanes(lanes);
+                    }
+                }
+            }
+        };
+        for_each(&mut m, Some(4));
+        assert_eq!(m.simd_layers(), total);
+        for_each(&mut m, None);
+        assert_eq!(m.simd_layers(), 0, "stripped layouts must count zero");
     }
 
     #[test]

@@ -146,11 +146,23 @@ impl TensorEntry {
     }
 
     pub fn from_i8(dims: Vec<usize>, data: &[i8]) -> TensorEntry {
-        assert_eq!(dims.iter().product::<usize>(), data.len());
+        // checked fast path: validate the shape with overflow-checked
+        // arithmetic, then reinterpret the payload with a presized cast
+        // loop (i8 and u8 are layout-identical, so this lowers to a
+        // memcpy — no iterator-collect bookkeeping per element)
+        let numel = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .expect("tensor dims product overflows");
+        assert_eq!(numel, data.len(), "dims {dims:?} vs {} elements", data.len());
+        let mut bytes = vec![0u8; data.len()];
+        for (dst, &src) in bytes.iter_mut().zip(data) {
+            *dst = src as u8;
+        }
         TensorEntry {
             dtype: DType::I8,
             dims,
-            bytes: data.iter().map(|&x| x as u8).collect(),
+            bytes,
         }
     }
 
@@ -174,7 +186,14 @@ impl TensorEntry {
 
     pub fn to_i8(&self) -> anyhow::Result<Vec<i8>> {
         anyhow::ensure!(self.dtype == DType::I8, "tensor is not i8");
-        Ok(self.bytes.iter().map(|&b| b as i8).collect())
+        // reinterpret the byte payload in place: i8/u8 share a layout,
+        // so a presized safe cast loop replaces the per-element
+        // map/collect round-trip (the compiler lowers it to a memcpy)
+        let mut out = vec![0i8; self.bytes.len()];
+        for (dst, &src) in out.iter_mut().zip(&self.bytes) {
+            *dst = src as i8;
+        }
+        Ok(out)
     }
 
     pub fn numel(&self) -> usize {
@@ -499,6 +518,10 @@ fn read_packed(r: &mut impl Read, name: &str) -> anyhow::Result<PackedTernaryLin
     }
     let [p1, p2] = planes;
     let [alpha1, alpha2] = alphas;
+    // NOTE: the derived SIMD interleave is NOT built here — the
+    // serializer stays layout-agnostic (re-save and inspection paths
+    // would pay the build + ~2x plane memory for nothing). The model
+    // layer rebuilds it where serving starts: `QuantLinear::from_packed`.
     Ok(PackedTernaryLinear {
         rows,
         cols,
@@ -508,6 +531,7 @@ fn read_packed(r: &mut impl Read, name: &str) -> anyhow::Result<PackedTernaryLin
         p2,
         alpha1,
         alpha2,
+        interleave: None,
     })
 }
 
@@ -569,6 +593,17 @@ mod tests {
         assert_eq!(tf, tf2);
         assert_eq!(tf2.matrix("w.0").unwrap(), m);
         assert_eq!(tf2.get("trits").unwrap().to_i8().unwrap(), vec![-1, 0, 1, 1, 0, -1]);
+    }
+
+    #[test]
+    fn i8_cast_roundtrip_full_range() {
+        // the presized cast loops must reinterpret every i8 value
+        // exactly, sign bit included
+        let all: Vec<i8> = (-128i16..=127).map(|v| v as i8).collect();
+        let e = TensorEntry::from_i8(vec![16, 16], &all);
+        assert_eq!(e.bytes.len(), 256);
+        assert_eq!(e.to_i8().unwrap(), all);
+        assert!(e.to_f32().is_err(), "dtype check still enforced");
     }
 
     #[test]

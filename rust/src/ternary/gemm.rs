@@ -21,7 +21,7 @@ const XBLOCK: usize = 32;
 /// tier (one pair per pool lane), activation-indexed tables for the
 /// LUT tier (one per lane), and the worker pool the row-parallel
 /// drivers dispatch on (sequential by default — the exact legacy path).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct GemmScratch {
     dec1: Vec<f32>,
     dec2: Vec<f32>,
@@ -34,6 +34,24 @@ pub struct GemmScratch {
     /// Worker pool driving the row-parallel kernels. `threads == 1`
     /// forces the exact sequential path.
     pub pool: Pool,
+    /// SIMD row-block tier toggle consulted by the dispatchers using
+    /// this scratch. Defaults to the process-wide mode
+    /// (`--simd`/`PTQTP_SIMD`); flip per scratch for exact A/B runs —
+    /// outputs are bit-identical either way (DESIGN.md §SIMD-Kernels).
+    pub simd: bool,
+}
+
+impl Default for GemmScratch {
+    fn default() -> GemmScratch {
+        GemmScratch {
+            dec1: Vec::new(),
+            dec2: Vec::new(),
+            lane_dec: Vec::new(),
+            lut_tables: Vec::new(),
+            pool: Pool::default(),
+            simd: crate::ternary::simd::enabled(),
+        }
+    }
 }
 
 impl GemmScratch {

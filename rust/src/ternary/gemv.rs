@@ -97,9 +97,9 @@ pub fn gemv_packed(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32]) {
 
 /// Row-span core of [`gemv_packed`]: output rows `rows` into `y_span`
 /// (`y_span[i]` = row `rows.start + i`). The single numerics body
-/// shared by the sequential and row-parallel drivers, so they cannot
-/// drift.
-fn gemv_packed_rows(
+/// shared by the sequential and row-parallel drivers (and the SIMD
+/// tier's ragged tail rows), so they cannot drift.
+pub(crate) fn gemv_packed_rows(
     lin: &PackedTernaryLinear,
     x: &[f32],
     rows: std::ops::Range<usize>,

@@ -7,7 +7,9 @@
 
 use super::pack::{bytes_2bit, pack2bit, unpack2bit};
 use super::plane::TritPlane;
+use super::simd::{self, InterleavedPlanes};
 use crate::tensor::Matrix;
+use std::sync::Arc;
 
 /// Two-plane ternary factorization of one linear layer.
 #[derive(Clone, Debug, PartialEq)]
@@ -100,9 +102,11 @@ impl TernaryLinear {
     }
 
     /// Pack both planes into the 2-bit deployment format (row-major,
-    /// per-plane streams).
+    /// per-plane streams). Also builds the row-interleaved SIMD layout
+    /// when the process-wide SIMD mode allows it (quantize-time cost,
+    /// serve-time win).
     pub fn to_packed(&self) -> PackedTernaryLinear {
-        PackedTernaryLinear {
+        let mut p = PackedTernaryLinear {
             rows: self.rows,
             cols: self.cols,
             group: self.group,
@@ -111,7 +115,10 @@ impl TernaryLinear {
             p2: pack_rows(&self.t2),
             alpha1: self.alpha1.clone(),
             alpha2: self.alpha2.clone(),
-        }
+            interleave: None,
+        };
+        p.ensure_interleave();
+        p
     }
 
     /// Mean |α| over both planes (diagnostic; bounded per Appendix C.2).
@@ -134,7 +141,7 @@ fn pack_rows(t: &TritPlane) -> Vec<u8> {
 }
 
 /// 2-bit packed deployment form — what the serving engine keeps resident.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct PackedTernaryLinear {
     pub rows: usize,
     pub cols: usize,
@@ -145,11 +152,63 @@ pub struct PackedTernaryLinear {
     pub p2: Vec<u8>,
     pub alpha1: Vec<f32>,
     pub alpha2: Vec<f32>,
+    /// Derived row-interleaved copy for the SIMD row-block kernels
+    /// (DESIGN.md §SIMD-Kernels) — `None` on ragged layouts, when the
+    /// SIMD mode is `off`, or until [`PackedTernaryLinear::ensure_interleave`]
+    /// runs. `Arc` so model/replica clones share one copy. **Not part of
+    /// layer identity** (excluded from `PartialEq`); after mutating the
+    /// flat planes/scales directly, call
+    /// [`PackedTernaryLinear::refresh_interleave`].
+    pub interleave: Option<Arc<InterleavedPlanes>>,
+}
+
+/// Equality is over the logical layer (shape, planes, scales); the
+/// interleave is derived data and deliberately excluded, so a loaded
+/// layer equals its in-memory source regardless of SIMD mode.
+impl PartialEq for PackedTernaryLinear {
+    fn eq(&self, o: &PackedTernaryLinear) -> bool {
+        self.rows == o.rows
+            && self.cols == o.cols
+            && self.group == o.group
+            && self.row_stride == o.row_stride
+            && self.p1 == o.p1
+            && self.p2 == o.p2
+            && self.alpha1 == o.alpha1
+            && self.alpha2 == o.alpha2
+    }
 }
 
 impl PackedTernaryLinear {
     pub fn groups_per_row(&self) -> usize {
         self.cols.div_ceil(self.group)
+    }
+
+    /// Build the row-interleaved SIMD layout when the process-wide SIMD
+    /// mode allows it and the layout qualifies (byte-aligned groups, at
+    /// least one full lane block). Idempotent; `--simd off` makes this
+    /// a no-op, which is the exact scalar escape hatch.
+    pub fn ensure_interleave(&mut self) {
+        if self.interleave.is_some() || !simd::enabled() {
+            return;
+        }
+        self.interleave = simd::build_interleave(self, simd::detected_lanes()).map(Arc::new);
+    }
+
+    /// Drop and rebuild the derived SIMD layout — required after any
+    /// direct mutation of `p1`/`p2`/`alpha1`/`alpha2` (the interleave
+    /// is a copy, not a view).
+    pub fn refresh_interleave(&mut self) {
+        self.interleave = None;
+        self.ensure_interleave();
+    }
+
+    /// Test/bench hook: force a specific lane width, or strip the
+    /// interleave with `None` (guaranteed scalar dispatch). Ignores the
+    /// process-wide mode by design.
+    pub fn set_interleave_lanes(&mut self, lanes: Option<usize>) {
+        self.interleave = lanes
+            .and_then(|n| simd::build_interleave(self, n))
+            .map(Arc::new);
     }
 
     /// Unpack back to the i8 working form (tests / cross-checks).
@@ -179,9 +238,22 @@ impl PackedTernaryLinear {
         }
     }
 
-    /// Resident bytes (planes + f32 scales as stored here).
+    /// Resident bytes of the deployment format (planes + f32 scales as
+    /// stored here). Deliberately excludes the derived SIMD interleave:
+    /// exhibits compare this against the paper's Eq. 13 memory model,
+    /// and the checkpoint manifest's report must not depend on which
+    /// machine (or SIMD mode) packed the layer — see
+    /// [`PackedTernaryLinear::interleave_bytes`] for the extra copy.
     pub fn resident_bytes(&self) -> usize {
         self.p1.len() + self.p2.len() + 4 * (self.alpha1.len() + self.alpha2.len())
+    }
+
+    /// Bytes held by the derived SIMD interleave (0 when not built) —
+    /// roughly a second copy of the planes and scales for full blocks.
+    pub fn interleave_bytes(&self) -> usize {
+        self.interleave.as_deref().map_or(0, |il| {
+            il.p1.len() + il.p2.len() + 4 * (il.a1.len() + il.a2.len())
+        })
     }
 }
 

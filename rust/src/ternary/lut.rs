@@ -33,6 +33,7 @@
 use super::gemm::GemmScratch;
 use super::linear::PackedTernaryLinear;
 use super::pack::dec2;
+use super::simd;
 use crate::tensor::Matrix;
 use crate::threads::{run_spans, worth_parallel, Pool, SendPtr};
 use std::sync::OnceLock;
@@ -121,8 +122,9 @@ fn fill_chunk(x: &[f32], seg: &mut [f32]) {
 /// Core row sweep: compute output rows `rows` into `y_span`
 /// (`y_span[i]` = row `rows.start + i`). Group loop and α epilogue
 /// mirror `gemv_packed` exactly; the per-byte body is one table load +
-/// add per plane.
-fn lut_rows_span(
+/// add per plane. Shared with the SIMD tier, which uses it for ragged
+/// tail rows (`rows % lanes`).
+pub(crate) fn lut_rows_span(
     lin: &PackedTernaryLinear,
     table: &[f32],
     rows: std::ops::Range<usize>,
@@ -173,17 +175,28 @@ fn lut_row_par(lin: &PackedTernaryLinear, table: &[f32], y_row: &mut [f32], pool
 }
 
 /// Pool-aware LUT gemv over engine scratch (decode path). Builds the
-/// table once on the leader, then row-partitions the sweep.
+/// table once on the leader, then row-partitions the sweep. When the
+/// scratch has SIMD enabled and the layer carries an interleaved
+/// layout, the sweep runs on the SIMD row-block tier — bit-identical
+/// by construction (DESIGN.md §SIMD-Kernels), so the choice is purely
+/// a speed policy.
 pub fn gemv_lut_into(lin: &PackedTernaryLinear, x: &[f32], y: &mut [f32], scratch: &mut GemmScratch) {
     assert!(is_aligned(lin), "gemv_lut requires byte-aligned groups");
     assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
     assert_eq!(y.len(), lin.rows);
     let pool = scratch.pool.clone();
     let lanes = pool.threads();
+    let il = if scratch.simd {
+        lin.interleave.as_deref()
+    } else {
+        None
+    };
     scratch.ensure_lanes(lanes);
     let table = &mut scratch.lut_tables[0];
     fill_tables(x, table);
-    if lanes <= 1 || !worth_parallel(lin.rows, lin.cols) {
+    if let Some(il) = il {
+        simd::lut_sweep(lin, il, table, y, &pool);
+    } else if lanes <= 1 || !worth_parallel(lin.rows, lin.cols) {
         lut_rows_span(lin, table, 0..lin.rows, y);
     } else {
         lut_row_par(lin, table, y, &pool);
@@ -202,6 +215,11 @@ pub fn gemm_lut_into(lin: &PackedTernaryLinear, x: &Matrix, y: &mut Matrix, scra
     assert_eq!(y.cols, lin.rows, "gemm out cols mismatch");
     let pool = scratch.pool.clone();
     let lanes = pool.threads();
+    let il = if scratch.simd {
+        lin.interleave.as_deref()
+    } else {
+        None
+    };
     scratch.ensure_lanes(lanes);
     if lanes > 1 && x.rows >= lanes && worth_parallel(x.rows * lin.rows, lin.cols) {
         // deep batch: lanes own disjoint X-row spans end to end
@@ -213,7 +231,11 @@ pub fn gemm_lut_into(lin: &PackedTernaryLinear, x: &Matrix, y: &mut Matrix, scra
             let table = unsafe { &mut *tables.get().add(lane) };
             for (i, r) in rows.enumerate() {
                 fill_tables(x.row(r), table);
-                lut_rows_span(lin, table, 0..n_out, &mut span[i * n_out..(i + 1) * n_out]);
+                let out = &mut span[i * n_out..(i + 1) * n_out];
+                match il {
+                    Some(il) => simd::lut_rows_all(lin, il, table, out),
+                    None => lut_rows_span(lin, table, 0..n_out, out),
+                }
             }
         });
         return;
@@ -223,7 +245,9 @@ pub fn gemm_lut_into(lin: &PackedTernaryLinear, x: &Matrix, y: &mut Matrix, scra
     for r in 0..x.rows {
         fill_tables(x.row(r), table);
         let row = &mut y.data[r * lin.rows..(r + 1) * lin.rows];
-        if lanes <= 1 || !worth_parallel(lin.rows, lin.cols) {
+        if let Some(il) = il {
+            simd::lut_sweep(lin, il, table, row, &pool);
+        } else if lanes <= 1 || !worth_parallel(lin.rows, lin.cols) {
             lut_rows_span(lin, table, 0..lin.rows, row);
         } else {
             lut_row_par(lin, table, row, &pool);

@@ -19,6 +19,10 @@
 //! * [`lut`]    — activation-indexed table kernels (one table load +
 //!   add per byte per plane, bit-identical to the packed tiers) and
 //!   the shared byte-decode LUT.
+//! * [`simd`]   — runtime-dispatched row-vectorized tier (AVX2 /
+//!   SSE2 / NEON / scalar fallback) over a row-interleaved plane
+//!   layout; N lanes = N consecutive output rows, bit-identical to
+//!   the scalar tiers.
 
 pub mod gemm;
 pub mod gemv;
@@ -27,6 +31,7 @@ pub mod linear;
 pub mod lut;
 pub mod pack;
 pub mod plane;
+pub mod simd;
 
 pub use linear::TernaryLinear;
 pub use pack::{pack2bit, pack_base3, unpack2bit, unpack_base3};

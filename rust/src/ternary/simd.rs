@@ -1,0 +1,892 @@
+//! SIMD ternary kernel tier — row-vectorized LUT / packed kernels over
+//! a row-interleaved plane layout (DESIGN.md §SIMD-Kernels).
+//!
+//! The scalar tiers compute one output row at a time; every projection
+//! in the model has 64–1024 output rows reading the *same* activation
+//! chunk, so the natural SIMD axis is **across consecutive output
+//! rows**: N lanes = N consecutive rows sharing one activation-chunk
+//! table load (LUT tier) or one decoded activation chunk (packed tier).
+//! Each lane performs the exact per-row left-fold operation order of
+//! the scalar kernel — lanewise IEEE adds/muls are the same operations
+//! the scalar kernel issues, in the same order — so SIMD output is
+//! **bitwise `==`** to the scalar tiers for any dispatch decision, and
+//! the dispatcher stays free to pick purely on speed.
+//!
+//! Implementations, runtime-selected:
+//! * **AVX2** (x86/x86_64, `is_x86_feature_detected!("avx2")`) — 8-lane
+//!   f32 with `vpgatherdps` table gathers; the interleaved layout makes
+//!   the 8 plane-byte loads one contiguous 64-bit load.
+//! * **4-lane portable** — `[f32; 4]` row-block kernels with the exact
+//!   scalar fold per lane; on x86_64 the SSE2 baseline vectorizes the
+//!   adds/muls, on aarch64 the NEON baseline does. This is also the
+//!   safe scalar fallback: it compiles and is bit-exact on any arch.
+//!
+//! Lane loads are made contiguous by [`InterleavedPlanes`]: blocks of N
+//! rows with their plane bytes interleaved byte-by-byte (and their
+//! group scales lane-interleaved), built once at pack / checkpoint-load
+//! time. Ragged layouts (`G % 4 != 0` or `cols % 4 != 0`) and tail rows
+//! (`rows % N`) stay on the flat layout and the scalar kernels.
+//!
+//! Mode resolution: `--simd auto|on|off` (CLI, [`set_mode`]) >
+//! `PTQTP_SIMD` env > `auto`. `off` is an exact escape hatch: no
+//! interleave is built and every dispatcher takes the scalar tiers —
+//! output is identical either way, so the knob is perf-only.
+
+use super::linear::PackedTernaryLinear;
+use super::lut::decode_lut_f32;
+use crate::tensor::Matrix;
+use crate::threads::{run_spans, worth_parallel, Pool};
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Process-wide SIMD policy (see module docs for resolution order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the best detected tier (the default).
+    Auto,
+    /// Explicit affirm — same tier selection as `Auto`, recorded so
+    /// benches/logs can show the operator forced it on.
+    On,
+    /// Exact escape hatch: no interleave built, scalar tiers only.
+    Off,
+}
+
+impl SimdMode {
+    /// Parse a CLI/env value. Empty means unset (`Auto`).
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Some(SimdMode::Auto),
+            "on" | "1" | "true" | "force" => Some(SimdMode::On),
+            "off" | "0" | "false" => Some(SimdMode::Off),
+            _ => None,
+        }
+    }
+}
+
+static MODE: OnceLock<SimdMode> = OnceLock::new();
+
+/// Pin the process-wide mode (the CLI calls this for `--simd` before
+/// any packed layer is built). First caller wins; later calls are
+/// no-ops so tests cannot race the CLI.
+pub fn set_mode(m: SimdMode) {
+    let _ = MODE.set(m);
+}
+
+/// Resolved mode: pinned value, else `PTQTP_SIMD`, else `Auto`.
+pub fn mode() -> SimdMode {
+    *MODE.get_or_init(|| {
+        std::env::var("PTQTP_SIMD")
+            .ok()
+            .and_then(|v| SimdMode::parse(&v))
+            .unwrap_or(SimdMode::Auto)
+    })
+}
+
+/// True unless the mode is the `off` escape hatch.
+pub fn enabled() -> bool {
+    mode() != SimdMode::Off
+}
+
+/// True when the 8-lane AVX2 kernels can run on this machine.
+pub fn avx2_available() -> bool {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Lane width [`PackedTernaryLinear::ensure_interleave`] builds for on
+/// this machine: 8 with AVX2, else the portable 4.
+pub fn detected_lanes() -> usize {
+    if avx2_available() { 8 } else { 4 }
+}
+
+/// Human name of the active kernel tier (dispatch table in
+/// DESIGN.md §SIMD-Kernels).
+pub fn tier_name() -> &'static str {
+    if avx2_available() {
+        "avx2"
+    } else if cfg!(target_arch = "aarch64") {
+        "neon"
+    } else if cfg!(any(target_arch = "x86", target_arch = "x86_64")) {
+        "sse2"
+    } else {
+        "scalar4"
+    }
+}
+
+/// Tier label honoring the mode ("off" when disabled) — what serve
+/// logs and bench JSON print.
+pub fn label() -> &'static str {
+    if enabled() { tier_name() } else { "off" }
+}
+
+/// Detected CPU features relevant to the kernel tiers, most capable
+/// first — stamped into `BENCH_kernels.json` so baselines are
+/// interpretable across machines.
+pub fn cpu_features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx512f") {
+            f.push("avx512f");
+        }
+        if is_x86_feature_detected!("avx2") {
+            f.push("avx2");
+        }
+        if is_x86_feature_detected!("avx") {
+            f.push("avx");
+        }
+        if is_x86_feature_detected!("sse4.2") {
+            f.push("sse4.2");
+        }
+        if is_x86_feature_detected!("sse2") {
+            f.push("sse2");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        f.push("neon");
+    }
+    if f.is_empty() {
+        f.push("scalar");
+    }
+    f
+}
+
+/// Row-interleaved copy of a packed layer's planes + scales for the
+/// row-block kernels. Rows are grouped into `blocks` of `lanes`
+/// consecutive rows; within a block:
+///
+/// * plane byte `b` of lanes `0..N` is stored contiguously at
+///   `p[(block·stride + b)·N + lane]` — one contiguous N-byte load
+///   replaces N row-strided loads;
+/// * group scale `g` interleaves as `a[(block·gpr + g)·N + lane]`.
+///
+/// This is **derived** data (a second copy of the 2-bit planes): any
+/// direct mutation of the flat planes/scales must be followed by
+/// [`PackedTernaryLinear::refresh_interleave`]. Tail rows
+/// (`rows % lanes`) have no interleaved form and always take the
+/// scalar kernels.
+#[derive(Clone, Debug)]
+pub struct InterleavedPlanes {
+    /// Rows per block (SIMD width): 8 (AVX2) or 4 (portable).
+    pub lanes: usize,
+    /// Full blocks (`rows / lanes`).
+    pub blocks: usize,
+    pub p1: Vec<u8>,
+    pub p2: Vec<u8>,
+    pub a1: Vec<f32>,
+    pub a2: Vec<f32>,
+}
+
+/// Build the interleaved layout, or `None` when it cannot help: ragged
+/// group/column packing (the SIMD tier requires the byte-aligned fast
+/// path), fewer rows than one block, or an unsupported lane width.
+pub fn build_interleave(lin: &PackedTernaryLinear, lanes: usize) -> Option<InterleavedPlanes> {
+    if !(lanes == 4 || lanes == 8) || !super::lut::is_aligned(lin) || lin.rows < lanes {
+        return None;
+    }
+    let stride = lin.row_stride;
+    let gpr = lin.groups_per_row();
+    let blocks = lin.rows / lanes;
+    let mut p1 = vec![0u8; blocks * stride * lanes];
+    let mut p2 = vec![0u8; blocks * stride * lanes];
+    let mut a1 = vec![0.0f32; blocks * gpr * lanes];
+    let mut a2 = vec![0.0f32; blocks * gpr * lanes];
+    for k in 0..blocks {
+        for l in 0..lanes {
+            let r = k * lanes + l;
+            let src1 = &lin.p1[r * stride..(r + 1) * stride];
+            let src2 = &lin.p2[r * stride..(r + 1) * stride];
+            for (b, (&v1, &v2)) in src1.iter().zip(src2).enumerate() {
+                p1[(k * stride + b) * lanes + l] = v1;
+                p2[(k * stride + b) * lanes + l] = v2;
+            }
+            for g in 0..gpr {
+                a1[(k * gpr + g) * lanes + l] = lin.alpha1[r * gpr + g];
+                a2[(k * gpr + g) * lanes + l] = lin.alpha2[r * gpr + g];
+            }
+        }
+    }
+    Some(InterleavedPlanes {
+        lanes,
+        blocks,
+        p1,
+        p2,
+        a1,
+        a2,
+    })
+}
+
+// ---------------------------------------------------------------------
+// LUT-tier row-block kernels (activation-indexed tables)
+// ---------------------------------------------------------------------
+
+/// One N-row block of the LUT sweep, portable form: per lane the exact
+/// group loop / byte fold / α epilogue of `lut::lut_rows_span`, so each
+/// lane's output is bitwise the scalar row.
+#[allow(clippy::too_many_arguments)]
+fn lut_block_portable<const N: usize>(
+    table: &[f32],
+    p1: &[u8],
+    p2: &[u8],
+    a1: &[f32],
+    a2: &[f32],
+    group: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    let gpr = cols.div_ceil(group);
+    let mut acc = [0.0f32; N];
+    for g in 0..gpr {
+        let start = g * group;
+        let end = (start + group).min(cols);
+        let mut s1 = [0.0f32; N];
+        let mut s2 = [0.0f32; N];
+        for b in start / 4..end / 4 {
+            let seg = &table[b * 256..b * 256 + 256];
+            let q1 = &p1[b * N..b * N + N];
+            let q2 = &p2[b * N..b * N + N];
+            for (s, &q) in s1.iter_mut().zip(q1) {
+                *s += seg[q as usize];
+            }
+            for (s, &q) in s2.iter_mut().zip(q2) {
+                *s += seg[q as usize];
+            }
+        }
+        let ga1 = &a1[g * N..g * N + N];
+        let ga2 = &a2[g * N..g * N + N];
+        for l in 0..N {
+            acc[l] += ga1[l] * s1[l] + ga2[l] * s2[l];
+        }
+    }
+    out.copy_from_slice(&acc);
+}
+
+/// One N-row block of the packed sweep, portable form: per lane the
+/// exact per-byte 4-wide fold of `gemv::plane_pair_sum_aligned`.
+#[allow(clippy::too_many_arguments)]
+fn packed_block_portable<const N: usize>(
+    x: &[f32],
+    p1: &[u8],
+    p2: &[u8],
+    a1: &[f32],
+    a2: &[f32],
+    group: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    let lutf = decode_lut_f32();
+    let gpr = cols.div_ceil(group);
+    let mut acc = [0.0f32; N];
+    for g in 0..gpr {
+        let start = g * group;
+        let end = (start + group).min(cols);
+        let mut s1 = [0.0f32; N];
+        let mut s2 = [0.0f32; N];
+        for b in start / 4..end / 4 {
+            let q1 = &p1[b * N..b * N + N];
+            let q2 = &p2[b * N..b * N + N];
+            let xb = &x[b * 4..b * 4 + 4];
+            for (s, &q) in s1.iter_mut().zip(q1) {
+                let d = &lutf[q as usize];
+                *s += d[0] * xb[0] + d[1] * xb[1] + d[2] * xb[2] + d[3] * xb[3];
+            }
+            for (s, &q) in s2.iter_mut().zip(q2) {
+                let d = &lutf[q as usize];
+                *s += d[0] * xb[0] + d[1] * xb[1] + d[2] * xb[2] + d[3] * xb[3];
+            }
+        }
+        let ga1 = &a1[g * N..g * N + N];
+        let ga2 = &a2[g * N..g * N + N];
+        for l in 0..N {
+            acc[l] += ga1[l] * s1[l] + ga2[l] * s2[l];
+        }
+    }
+    out.copy_from_slice(&acc);
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86 {
+    //! 8-lane AVX2 row-block kernels. Bit-identity argument: every
+    //! vector op here is the lanewise IEEE operation the scalar kernel
+    //! issues (`vaddps`/`vmulps`, no FMA contraction — Rust never
+    //! contracts), gathers load exact table bits, and the loop order is
+    //! byte-for-byte the scalar order — so each lane reproduces the
+    //! scalar row exactly.
+    #[cfg(target_arch = "x86")]
+    use core::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// 8 interleaved plane bytes → 8 zero-extended i32 gather indices.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_indices(p: *const u8) -> __m256i {
+        _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
+
+    /// LUT-tier block: one gather + add per byte per plane.
+    ///
+    /// Safety: caller must have verified AVX2; `p1`/`p2` hold
+    /// `(cols/4)·8` interleaved bytes, `a1`/`a2` hold `gpr·8`
+    /// interleaved scales, `table` holds `(cols/4)·256` entries,
+    /// `out` holds 8 rows.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lut_block8(
+        table: &[f32],
+        p1: &[u8],
+        p2: &[u8],
+        a1: &[f32],
+        a2: &[f32],
+        group: usize,
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        let gpr = cols.div_ceil(group);
+        let mut acc = _mm256_setzero_ps();
+        for g in 0..gpr {
+            let start = g * group;
+            let end = (start + group).min(cols);
+            let mut s1 = _mm256_setzero_ps();
+            let mut s2 = _mm256_setzero_ps();
+            for b in start / 4..end / 4 {
+                let seg = table.as_ptr().add(b * 256);
+                let i1 = load_indices(p1.as_ptr().add(b * 8));
+                let i2 = load_indices(p2.as_ptr().add(b * 8));
+                s1 = _mm256_add_ps(s1, _mm256_i32gather_ps::<4>(seg, i1));
+                s2 = _mm256_add_ps(s2, _mm256_i32gather_ps::<4>(seg, i2));
+            }
+            let va1 = _mm256_loadu_ps(a1.as_ptr().add(g * 8));
+            let va2 = _mm256_loadu_ps(a2.as_ptr().add(g * 8));
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_add_ps(_mm256_mul_ps(va1, s1), _mm256_mul_ps(va2, s2)),
+            );
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+
+    /// `((d0·x0 + d1·x1) + d2·x2) + d3·x3` for 8 rows: 4 gathers into
+    /// the flat byte-decode LUT, folded in the scalar association.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn byte_dot(lut: *const f32, base: __m256i, xv: &[__m256; 4]) -> __m256 {
+        let one = _mm256_set1_epi32(1);
+        let d0 = _mm256_i32gather_ps::<4>(lut, base);
+        let i1 = _mm256_add_epi32(base, one);
+        let d1 = _mm256_i32gather_ps::<4>(lut, i1);
+        let i2 = _mm256_add_epi32(i1, one);
+        let d2 = _mm256_i32gather_ps::<4>(lut, i2);
+        let i3 = _mm256_add_epi32(i2, one);
+        let d3 = _mm256_i32gather_ps::<4>(lut, i3);
+        let mut t = _mm256_mul_ps(d0, xv[0]);
+        t = _mm256_add_ps(t, _mm256_mul_ps(d1, xv[1]));
+        t = _mm256_add_ps(t, _mm256_mul_ps(d2, xv[2]));
+        _mm256_add_ps(t, _mm256_mul_ps(d3, xv[3]))
+    }
+
+    /// Packed-tier block (no activation table): decode via LUT gathers,
+    /// multiply against broadcast activation chunk.
+    ///
+    /// Safety: as [`lut_block8`], with `lut` = the flat 1024-entry
+    /// byte-decode table and `x` holding `cols` activations.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn packed_block8(
+        lut: *const f32,
+        x: &[f32],
+        p1: &[u8],
+        p2: &[u8],
+        a1: &[f32],
+        a2: &[f32],
+        group: usize,
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        let gpr = cols.div_ceil(group);
+        let mut acc = _mm256_setzero_ps();
+        for g in 0..gpr {
+            let start = g * group;
+            let end = (start + group).min(cols);
+            let mut s1 = _mm256_setzero_ps();
+            let mut s2 = _mm256_setzero_ps();
+            for b in start / 4..end / 4 {
+                let base1 = _mm256_slli_epi32::<2>(load_indices(p1.as_ptr().add(b * 8)));
+                let base2 = _mm256_slli_epi32::<2>(load_indices(p2.as_ptr().add(b * 8)));
+                let xb = &x[b * 4..b * 4 + 4];
+                let xv = [
+                    _mm256_set1_ps(xb[0]),
+                    _mm256_set1_ps(xb[1]),
+                    _mm256_set1_ps(xb[2]),
+                    _mm256_set1_ps(xb[3]),
+                ];
+                s1 = _mm256_add_ps(s1, byte_dot(lut, base1, &xv));
+                s2 = _mm256_add_ps(s2, byte_dot(lut, base2, &xv));
+            }
+            let va1 = _mm256_loadu_ps(a1.as_ptr().add(g * 8));
+            let va2 = _mm256_loadu_ps(a2.as_ptr().add(g * 8));
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_add_ps(_mm256_mul_ps(va1, s1), _mm256_mul_ps(va2, s2)),
+            );
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+}
+
+/// Dispatch one LUT block to the widest kernel its lane count allows.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn lut_block_one(
+    lanes: usize,
+    table: &[f32],
+    p1: &[u8],
+    p2: &[u8],
+    a1: &[f32],
+    a2: &[f32],
+    group: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if lanes == 8 && avx2_available() {
+            // SAFETY: AVX2 presence just checked; slices carry the
+            // 8-lane block shapes `build_interleave` produced.
+            unsafe { x86::lut_block8(table, p1, p2, a1, a2, group, cols, out) };
+            return;
+        }
+    }
+    match lanes {
+        8 => lut_block_portable::<8>(table, p1, p2, a1, a2, group, cols, out),
+        _ => {
+            debug_assert_eq!(lanes, 4, "unsupported interleave lane width");
+            lut_block_portable::<4>(table, p1, p2, a1, a2, group, cols, out)
+        }
+    }
+}
+
+/// Dispatch one packed block likewise.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn packed_block_one(
+    lanes: usize,
+    x: &[f32],
+    p1: &[u8],
+    p2: &[u8],
+    a1: &[f32],
+    a2: &[f32],
+    group: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if lanes == 8 && avx2_available() {
+            let lut = decode_lut_f32().as_ptr() as *const f32;
+            // SAFETY: AVX2 presence just checked; slices carry the
+            // 8-lane block shapes `build_interleave` produced.
+            unsafe { x86::packed_block8(lut, x, p1, p2, a1, a2, group, cols, out) };
+            return;
+        }
+    }
+    match lanes {
+        8 => packed_block_portable::<8>(x, p1, p2, a1, a2, group, cols, out),
+        _ => {
+            debug_assert_eq!(lanes, 4, "unsupported interleave lane width");
+            packed_block_portable::<4>(x, p1, p2, a1, a2, group, cols, out)
+        }
+    }
+}
+
+/// Debug-build spot check that the interleave still mirrors the flat
+/// planes/scales: mutating `p1`/`p2`/`alpha1`/`alpha2` in place without
+/// [`PackedTernaryLinear::refresh_interleave`] would otherwise serve
+/// silently wrong outputs (SIMD reads the stale copy, scalar reads the
+/// new planes). Samples the first and last interleaved positions —
+/// cheap enough to run once per sweep, loud where it matters.
+fn debug_check_sync(lin: &PackedTernaryLinear, il: &InterleavedPlanes) {
+    if !cfg!(debug_assertions) || il.blocks == 0 || lin.row_stride == 0 {
+        return;
+    }
+    let n = il.lanes;
+    let stride = lin.row_stride;
+    let gpr = lin.groups_per_row();
+    let k = il.blocks - 1; // last block, last byte, last lane
+    debug_assert!(
+        il.p1[0] == lin.p1[0]
+            && il.p1[(k * stride + stride - 1) * n + n - 1]
+                == lin.p1[(k * n + n - 1) * stride + stride - 1]
+            && il.a1[n - 1] == lin.alpha1[(n - 1) * gpr]
+            && il.a2[(k * gpr + gpr - 1) * n + n - 1] == lin.alpha2[(k * n + n - 1) * gpr + gpr - 1],
+        "SIMD interleave out of sync with flat planes — call refresh_interleave() \
+         after mutating p1/p2/alpha1/alpha2 in place"
+    );
+}
+
+/// The one place the interleaved block-span arithmetic lives: hand
+/// each block `k` of `blks` its plane/scale slices and its output span
+/// (`y_span[i·N..]` receives block `blks.start + i`).
+fn blocks_by(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    blks: Range<usize>,
+    y_span: &mut [f32],
+    block: impl Fn(&[u8], &[u8], &[f32], &[f32], &mut [f32]),
+) {
+    let n = il.lanes;
+    debug_assert_eq!(y_span.len(), blks.len() * n);
+    let stride = lin.row_stride;
+    let gpr = lin.groups_per_row();
+    let b0 = blks.start;
+    for k in blks {
+        block(
+            &il.p1[k * stride * n..(k + 1) * stride * n],
+            &il.p2[k * stride * n..(k + 1) * stride * n],
+            &il.a1[k * gpr * n..(k + 1) * gpr * n],
+            &il.a2[k * gpr * n..(k + 1) * gpr * n],
+            &mut y_span[(k - b0) * n..(k - b0 + 1) * n],
+        );
+    }
+}
+
+/// The one sweep driver behind every SIMD entry point: full blocks run
+/// `blocks` (pool-partitioned into contiguous *block* spans so SIMD
+/// blocks are never split mid-block; inline when sequential or below
+/// the dispatch gate), then the ragged row tail runs `tail` (a scalar
+/// row-span kernel) on the leader. Bit-identical to the sequential
+/// sweep for any thread count.
+fn sweep_by(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    y: &mut [f32],
+    pool: &Pool,
+    blocks: impl Fn(Range<usize>, &mut [f32]) + Sync,
+    tail: impl FnOnce(Range<usize>, &mut [f32]),
+) {
+    debug_assert_eq!(y.len(), lin.rows);
+    debug_check_sync(lin, il);
+    let full = il.blocks * il.lanes;
+    let (head, rest) = y.split_at_mut(full);
+    if pool.threads() <= 1 || !worth_parallel(lin.rows, lin.cols) {
+        blocks(0..il.blocks, head);
+    } else {
+        run_spans(pool, il.blocks, il.lanes, head, |_, blks, span| blocks(blks, span));
+    }
+    if !rest.is_empty() {
+        tail(full..lin.rows, rest);
+    }
+}
+
+/// LUT sweep over interleaved blocks `blks`.
+pub(crate) fn lut_blocks(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    table: &[f32],
+    blks: Range<usize>,
+    y_span: &mut [f32],
+) {
+    blocks_by(lin, il, blks, y_span, |p1, p2, a1, a2, out| {
+        lut_block_one(il.lanes, table, p1, p2, a1, a2, lin.group, lin.cols, out)
+    });
+}
+
+/// Packed sweep over interleaved blocks `blks`.
+pub(crate) fn packed_blocks(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    x: &[f32],
+    blks: Range<usize>,
+    y_span: &mut [f32],
+) {
+    blocks_by(lin, il, blks, y_span, |p1, p2, a1, a2, out| {
+        packed_block_one(il.lanes, x, p1, p2, a1, a2, lin.group, lin.cols, out)
+    });
+}
+
+/// Full-row LUT sweep: SIMD blocks then scalar tail — sequential.
+pub fn lut_rows_all(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    table: &[f32],
+    y: &mut [f32],
+) {
+    lut_sweep(lin, il, table, y, &Pool::sequential());
+}
+
+/// Pool-partitioned LUT sweep — bit-identical to the scalar sweep for
+/// any thread count.
+pub fn lut_sweep(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    table: &[f32],
+    y: &mut [f32],
+    pool: &Pool,
+) {
+    sweep_by(
+        lin,
+        il,
+        y,
+        pool,
+        |blks, span| lut_blocks(lin, il, table, blks, span),
+        |rows, span| super::lut::lut_rows_span(lin, table, rows, span),
+    );
+}
+
+/// Full-row packed sweep: SIMD blocks then scalar tail — sequential.
+pub fn packed_rows_all(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    gemv_packed_simd(lin, il, x, y, &Pool::sequential());
+}
+
+/// SIMD gemv over the packed planes — the decode-path entry for
+/// byte-aligned layouts below the LUT threshold. Bit-identical to
+/// [`super::gemv::gemv_packed`] for any thread count.
+pub fn gemv_packed_simd(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    x: &[f32],
+    y: &mut [f32],
+    pool: &Pool,
+) {
+    assert_eq!(x.len(), lin.cols, "gemv dim mismatch");
+    assert_eq!(y.len(), lin.rows);
+    sweep_by(
+        lin,
+        il,
+        y,
+        pool,
+        |blks, span| packed_blocks(lin, il, x, blks, span),
+        |rows, span| super::gemv::gemv_packed_rows(lin, x, rows, span),
+    );
+}
+
+/// SIMD gemm `Y = X · Ŵᵀ` over the packed planes: per X row the exact
+/// [`gemv_packed_simd`] sweep, deep batches split X rows across pool
+/// lanes. Bit-identical to `gemm_packed_blocked` (and hence to
+/// `gemv_packed` per row) for any thread count.
+pub fn gemm_packed_simd(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    x: &Matrix,
+    y: &mut Matrix,
+    pool: &Pool,
+) {
+    assert_eq!(x.cols, lin.cols, "gemm inner dim mismatch");
+    assert_eq!(y.rows, x.rows, "gemm out rows mismatch");
+    assert_eq!(y.cols, lin.rows, "gemm out cols mismatch");
+    let n_out = lin.rows;
+    if pool.threads() > 1 && x.rows >= pool.threads() && worth_parallel(x.rows * n_out, lin.cols) {
+        run_spans(pool, x.rows, n_out, &mut y.data, |_, rows, span| {
+            for (i, r) in rows.enumerate() {
+                packed_rows_all(lin, il, x.row(r), &mut span[i * n_out..(i + 1) * n_out]);
+            }
+        });
+        return;
+    }
+    for r in 0..x.rows {
+        let row = &mut y.data[r * n_out..(r + 1) * n_out];
+        // sweep_by re-applies the threads/worth_parallel gate, so the
+        // shallow-batch path needs no duplicate policy here
+        gemv_packed_simd(lin, il, x.row(r), row, pool);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::ternary::gemm::gemm_packed_blocked;
+    use crate::ternary::gemv::gemv_packed;
+    use crate::ternary::linear::TernaryLinear;
+    use crate::ternary::lut::{fill_tables, gemv_lut};
+
+    fn random_packed(rows: usize, cols: usize, group: usize, seed: u64) -> PackedTernaryLinear {
+        let mut rng = Rng::new(seed);
+        let mut lin = TernaryLinear::new(rows, cols, group);
+        for t in lin.t1.trits.iter_mut().chain(lin.t2.trits.iter_mut()) {
+            *t = rng.below(3) as i8 - 1;
+        }
+        for a in lin.alpha1.iter_mut().chain(lin.alpha2.iter_mut()) {
+            *a = rng.normal() * 0.2;
+        }
+        lin.to_packed()
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse(""), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("ON"), Some(SimdMode::On));
+        assert_eq!(SimdMode::parse("off"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("0"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("sideways"), None);
+        assert!(!cpu_features().is_empty());
+        assert!(detected_lanes() == 4 || detected_lanes() == 8);
+    }
+
+    #[test]
+    fn interleave_layout_positions() {
+        let packed = random_packed(11, 24, 8, 5);
+        for lanes in [4usize, 8] {
+            let Some(il) = build_interleave(&packed, lanes) else {
+                panic!("aligned layout must interleave at {lanes} lanes");
+            };
+            assert_eq!(il.blocks, 11 / lanes);
+            let stride = packed.row_stride;
+            let gpr = packed.groups_per_row();
+            for k in 0..il.blocks {
+                for l in 0..lanes {
+                    let r = k * lanes + l;
+                    for b in 0..stride {
+                        assert_eq!(
+                            il.p1[(k * stride + b) * lanes + l],
+                            packed.p1[r * stride + b]
+                        );
+                        assert_eq!(
+                            il.p2[(k * stride + b) * lanes + l],
+                            packed.p2[r * stride + b]
+                        );
+                    }
+                    for g in 0..gpr {
+                        assert_eq!(il.a1[(k * gpr + g) * lanes + l], packed.alpha1[r * gpr + g]);
+                        assert_eq!(il.a2[(k * gpr + g) * lanes + l], packed.alpha2[r * gpr + g]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_layouts_do_not_interleave() {
+        // G % 4 != 0 and cols % 4 != 0 must both refuse
+        assert!(build_interleave(&random_packed(16, 40, 10, 1), 4).is_none());
+        assert!(build_interleave(&random_packed(16, 37, 4, 2), 4).is_none());
+        // fewer rows than one block refuses too
+        assert!(build_interleave(&random_packed(3, 16, 4, 3), 4).is_none());
+        // unsupported lane width refuses
+        assert!(build_interleave(&random_packed(16, 16, 4, 4), 3).is_none());
+    }
+
+    #[test]
+    fn lut_sweep_bit_identical_to_scalar_incl_tail() {
+        let mut rng = Rng::new(7);
+        // rows chosen to leave ragged tails at both lane widths; the
+        // 370x96 shape clears PAR_MIN_WORK so the block-partitioned
+        // pool path genuinely runs
+        for (rows, cols, group) in [(37usize, 32usize, 8usize), (370, 96, 32), (8, 16, 16)] {
+            let packed = random_packed(rows, cols, group, 70 + rows as u64);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut y_ref = vec![0.0f32; rows];
+            let mut table = Vec::new();
+            gemv_lut(&packed, &x, &mut y_ref, &mut table);
+            for lanes in [4usize, 8] {
+                let Some(il) = build_interleave(&packed, lanes) else {
+                    assert!(rows < lanes, "rows={rows} lanes={lanes}");
+                    continue;
+                };
+                let mut y = vec![9.0f32; rows];
+                lut_rows_all(&packed, &il, &table, &mut y);
+                assert_eq!(y, y_ref, "seq rows={rows} lanes={lanes}");
+                for threads in [2usize, 3] {
+                    let pool = Pool::new(threads);
+                    let mut y = vec![9.0f32; rows];
+                    lut_sweep(&packed, &il, &table, &mut y, &pool);
+                    assert_eq!(y, y_ref, "rows={rows} lanes={lanes} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sweep_bit_identical_to_gemv_packed() {
+        let mut rng = Rng::new(9);
+        // 300x128 clears PAR_MIN_WORK (threaded span path engages)
+        for (rows, cols, group) in [(37usize, 32usize, 8usize), (9, 16, 4), (300, 128, 128)] {
+            let packed = random_packed(rows, cols, group, 90 + rows as u64);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut y_ref = vec![0.0f32; rows];
+            gemv_packed(&packed, &x, &mut y_ref);
+            for lanes in [4usize, 8] {
+                let Some(il) = build_interleave(&packed, lanes) else {
+                    continue;
+                };
+                for threads in [1usize, 2, 4] {
+                    let pool = Pool::new(threads);
+                    let mut y = vec![9.0f32; rows];
+                    gemv_packed_simd(&packed, &il, &x, &mut y, &pool);
+                    assert_eq!(y, y_ref, "rows={rows} lanes={lanes} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_simd_bit_identical_to_blocked() {
+        let mut rng = Rng::new(11);
+        for (rows, cols, group, m) in [(22usize, 32usize, 8usize, 5usize), (70, 64, 16, 40)] {
+            let packed = random_packed(rows, cols, group, 110 + m as u64);
+            let x = Matrix::randn(m, cols, 1.0, &mut rng);
+            let y_ref = gemm_packed_blocked(&packed, &x);
+            for lanes in [4usize, 8] {
+                let Some(il) = build_interleave(&packed, lanes) else {
+                    continue;
+                };
+                for threads in [1usize, 2, 4] {
+                    let pool = Pool::new(threads);
+                    let mut y = Matrix::zeros(m, rows);
+                    gemm_packed_simd(&packed, &il, &x, &mut y, &pool);
+                    assert_eq!(y.data, y_ref.data, "lanes={lanes} threads={threads} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_planes_stay_zero_through_simd() {
+        let packed = TernaryLinear::new(12, 16, 4).to_packed();
+        let il = build_interleave(&packed, 4).unwrap();
+        let x = vec![1.0f32; 16];
+        let mut y = vec![9.0f32; 12];
+        gemv_packed_simd(&packed, &il, &x, &mut y, &Pool::sequential());
+        assert!(y.iter().all(|&v| v == 0.0));
+        let mut table = Vec::new();
+        fill_tables(&x, &mut table);
+        let mut y = vec![9.0f32; 12];
+        lut_rows_all(&packed, &il, &table, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn avx2_path_matches_portable_when_available() {
+        if !avx2_available() {
+            eprintln!("skipping: no AVX2 on this machine (portable path covered elsewhere)");
+            return;
+        }
+        let mut rng = Rng::new(13);
+        let packed = random_packed(24, 32, 8, 21);
+        let il8 = build_interleave(&packed, 8).unwrap();
+        let il4 = build_interleave(&packed, 4).unwrap();
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let mut table = Vec::new();
+        fill_tables(&x, &mut table);
+        let (mut a, mut b) = (vec![0.0f32; 24], vec![0.0f32; 24]);
+        lut_rows_all(&packed, &il8, &table, &mut a);
+        lut_rows_all(&packed, &il4, &table, &mut b);
+        assert_eq!(a, b, "avx2 vs portable LUT");
+        let pool = Pool::sequential();
+        gemv_packed_simd(&packed, &il8, &x, &mut a, &pool);
+        gemv_packed_simd(&packed, &il4, &x, &mut b, &pool);
+        assert_eq!(a, b, "avx2 vs portable packed");
+    }
+}

@@ -261,6 +261,170 @@ fn threaded_pipeline_matches_sequential_end_to_end() {
 }
 
 // ---------------------------------------------------------------------
+// SIMD kernel tier (row-vectorized, bit-identical to scalar)
+// ---------------------------------------------------------------------
+
+/// The SIMD × threads × layout matrix: for aligned, ragged-group,
+/// ragged-cols, zero-plane, and interleaved-tail layouts, across
+/// `threads ∈ {1, 2}`, interleave lane widths {none, 4, detected}, and
+/// `simd on|off`, the model-layer dispatcher must produce output
+/// `==`-bitwise-identical to the scalar per-row reference
+/// (`forward_vec` → `gemv_packed`). No tolerance anywhere.
+#[test]
+fn simd_threads_layout_matrix_bit_identical() {
+    use ptqtp::model::linear::Backend;
+    use ptqtp::model::QuantLinear;
+    use ptqtp::proptest::{check_seeded, prop_assert, Gen};
+    use ptqtp::tensor::Matrix;
+    use ptqtp::ternary::gemm::GemmScratch;
+    use ptqtp::ternary::simd;
+    use ptqtp::ternary::TernaryLinear;
+    use ptqtp::threads::Pool;
+
+    check_seeded(0x51AD_D00D, 30, |g: &mut Gen| {
+        let rows = g.usize_in(1, 140).max(1);
+        // 0: aligned (G % 4 == 0, cols % 4 == 0, interleaved-tail rows)
+        // 1: ragged group (G % 4 != 0) — no interleave, scalar fallback
+        // 2: ragged cols (cols % 4 != 0) — no interleave either
+        let (cols, group) = match g.usize_in(0, 2) {
+            0 => (4 * g.usize_in(1, 20).max(1), 4 * *g.pick(&[1usize, 2, 8, 32])),
+            1 => (4 * g.usize_in(1, 20).max(1), *g.pick(&[6usize, 10, 14])),
+            _ => (g.usize_in(1, 70).max(1), *g.pick(&[4usize, 10])),
+        };
+        let mut lin = TernaryLinear::new(rows, cols, group);
+        let zero_planes = g.usize_in(0, 3) == 0;
+        if !zero_planes {
+            for t in lin.t1.trits.iter_mut().chain(lin.t2.trits.iter_mut()) {
+                *t = g.rng.below(3) as i8 - 1;
+            }
+            for a in lin.alpha1.iter_mut().chain(lin.alpha2.iter_mut()) {
+                *a = g.rng.normal() * 0.2;
+            }
+        }
+        let packed = lin.to_packed();
+        let m = g.usize_in(1, 12).max(1);
+        let x = Matrix::from_vec(m, cols, g.vec_normal(m * cols, 1.0));
+
+        let mut lanes_cases: Vec<Option<usize>> = vec![None, Some(4)];
+        if simd::detected_lanes() != 4 {
+            lanes_cases.push(Some(simd::detected_lanes()));
+        }
+        for lanes in lanes_cases {
+            let mut ql = QuantLinear::from_packed(packed.clone());
+            let Backend::Ternary(t) = &mut ql.backend else {
+                return Err("expected ternary backend".to_string());
+            };
+            t.set_interleave_lanes(lanes);
+            // scalar per-row reference
+            let mut refs: Vec<Vec<f32>> = Vec::with_capacity(m);
+            for r in 0..m {
+                let mut yv = vec![0.0f32; rows];
+                ql.forward_vec(x.row(r), &mut yv);
+                refs.push(yv);
+            }
+            for threads in [1usize, 2] {
+                for simd_on in [false, true] {
+                    let mut scratch = GemmScratch::new();
+                    scratch.pool = Pool::new(threads);
+                    scratch.simd = simd_on;
+                    let mut y = Matrix::zeros(m, rows);
+                    ql.forward_rows_into(&x, &mut y, &mut scratch);
+                    for (r, want) in refs.iter().enumerate() {
+                        if y.row(r) != want.as_slice() {
+                            return Err(format!(
+                                "row {r} drifted (rows={rows} cols={cols} G={group} m={m} \
+                                 lanes={lanes:?} threads={threads} simd={simd_on} zero={zero_planes})"
+                            ));
+                        }
+                    }
+                    // single-row (decode) dispatch path
+                    let x1 = Matrix::from_vec(1, cols, x.row(0).to_vec());
+                    let mut y1 = Matrix::zeros(1, rows);
+                    ql.forward_rows_into(&x1, &mut y1, &mut scratch);
+                    if y1.row(0) != refs[0].as_slice() {
+                        return Err(format!(
+                            "single-row drifted (rows={rows} cols={cols} G={group} \
+                             lanes={lanes:?} threads={threads} simd={simd_on})"
+                        ));
+                    }
+                }
+            }
+        }
+        prop_assert(true, "")
+    });
+}
+
+/// `ServeEngine::step` with SIMD forced on vs off (and threads 1 vs 2)
+/// must serve token-for-token identical output — the `--simd off`
+/// escape hatch is exact, and SIMD×threads composes bit-identically
+/// through the whole fused serving path.
+#[test]
+fn engine_simd_on_off_token_for_token() {
+    use ptqtp::model::linear::Backend;
+    use ptqtp::ternary::simd;
+
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = 32;
+    cfg.max_seq = 48;
+    let mut rng = Rng::new(61);
+    let mut model = Transformer::random(cfg, &mut rng);
+    // aligned G so the LUT + SIMD tiers genuinely engage
+    model.quantize_with(
+        quant::by_name("ptqtp", 128).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    // force-build the interleaved layouts so set_simd(true) really runs
+    // the SIMD kernels even when the process-wide mode is `off` (the
+    // CI simd-off leg must still exercise this parity, not vacuously
+    // compare scalar against scalar)
+    for b in model.blocks.iter_mut() {
+        for l in [
+            &mut b.attn.wq,
+            &mut b.attn.wk,
+            &mut b.attn.wv,
+            &mut b.attn.wo,
+            &mut b.w_gate,
+            &mut b.w_up,
+            &mut b.w_down,
+        ] {
+            if let Backend::Ternary(t) = &mut l.backend {
+                t.set_interleave_lanes(Some(simd::detected_lanes()));
+            }
+        }
+    }
+    let run = |simd_on: bool, threads: usize| {
+        let mut e = ServeEngine::with_threads(model.clone(), Default::default(), threads);
+        e.set_simd(simd_on);
+        for i in 0..5u64 {
+            let mut params = SamplingParams {
+                max_new_tokens: 5,
+                stop_token: None,
+                ..Default::default()
+            };
+            if i % 2 == 1 {
+                params.temperature = 0.7;
+                params.seed = 21 + i;
+            }
+            let prompt: Vec<u32> = (0..=(i % 3) + 1).map(|j| (j as u32 * 5 + i as u32) % 32).collect();
+            e.submit(Request::new(i, prompt, params));
+        }
+        let mut out = e.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    let base = run(false, 1);
+    for threads in [1usize, 2] {
+        for simd_on in [false, true] {
+            assert_eq!(
+                run(simd_on, threads),
+                base,
+                "simd={simd_on} threads={threads} diverged from scalar sequential"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Packed checkpoints (PTW2): quantize once, serve many
 // ---------------------------------------------------------------------
 
@@ -311,6 +475,9 @@ fn packed_checkpoint_roundtrip_property() {
             let gpr = t.groups_per_row();
             t.alpha1[..gpr].fill(0.0);
             t.alpha2[..gpr].fill(0.0);
+            // the SIMD interleave is a derived copy of the planes —
+            // direct mutation requires a rebuild (documented contract)
+            t.refresh_interleave();
         }
 
         let path = dir.join(format!("m{}.ptw", g.rng.next_u64() & 0xffff));
