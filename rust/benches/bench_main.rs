@@ -65,6 +65,14 @@ fn main() {
         }
     }
 
+    if run_all || filter.contains("attention") {
+        println!("\n== attention tiers (head-major scalar vs SIMD vs threaded) ==");
+        let args = Args::parse("bench", std::iter::empty(), &[]);
+        if let Err(e) = ptqtp::bench::attention::run(true, &args) {
+            println!("attention bench failed: {e}");
+        }
+    }
+
     if run_all || filter.contains("table") {
         println!("\n== paper tables (quick mode) ==");
         let args = Args::parse("bench", std::iter::empty(), &[]);

@@ -5,10 +5,13 @@
 //! reporting; the `table*` / `fig*` submodules regenerate every exhibit
 //! in the paper's evaluation (see DESIGN.md §5 for the index) and are
 //! invoked through `ptqtp bench --table N` / `--fig N` or `cargo bench`.
-//! [`batched`] (`--batched`) and [`kernels`] (`--kernels`) are the
-//! perf-trajectory benches: fused-batch throughput + thread scaling,
-//! and the kernel-tier race with bit-identity parity gates.
+//! [`batched`] (`--batched`), [`kernels`] (`--kernels`), and
+//! [`attention`] (`--attention`) are the perf-trajectory benches:
+//! fused-batch throughput + thread scaling, the ternary kernel-tier
+//! race, and the head-major attention-tier race — all behind
+//! bit-identity parity gates.
 
+pub mod attention;
 pub mod batched;
 pub mod harness;
 pub mod kernels;

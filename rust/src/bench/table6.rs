@@ -40,7 +40,6 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
         attn_q.wo.quantize_with(&q, &ctx);
 
         let d = model.config.d_model;
-        let kv_dim = model.config.kv_dim();
         let mut rng = crate::rng::Rng::new(3);
         let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
         let rope = &model.rope;
@@ -52,11 +51,10 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
             attn: &crate::model::attention::Attention,
             rope: &crate::model::rope::Rope,
             x: &[f32],
-            kv_dim: usize,
             ctx_len: usize,
             scratch: &mut crate::model::DecodeScratch,
         ) -> KvCache {
-            let mut c = KvCache::new(1, kv_dim, ctx_len + 8);
+            let mut c = KvCache::new(1, attn.n_kv_heads, attn.head_dim, ctx_len + 8);
             let mut out = vec![0.0; x.len()];
             for pos in 0..ctx_len {
                 attn.decode_with(x, rope, &mut c, 0, pos, scratch, &mut out);
@@ -65,8 +63,8 @@ pub fn run(quick: bool, _args: &Args) -> anyhow::Result<()> {
             c
         }
         let mut scratch = crate::model::DecodeScratch::default();
-        let mut cache_fp = mk_cache(&attn_fp, rope, &x, kv_dim, ctx_len, &mut scratch);
-        let mut cache_q = mk_cache(&attn_q, rope, &x, kv_dim, ctx_len, &mut scratch);
+        let mut cache_fp = mk_cache(&attn_fp, rope, &x, ctx_len, &mut scratch);
+        let mut cache_q = mk_cache(&attn_q, rope, &x, ctx_len, &mut scratch);
         let mut out = vec![0.0f32; d];
         let fp = bench_fn("fp", 3, 200, budget, || {
             cache_fp.truncate(ctx_len);

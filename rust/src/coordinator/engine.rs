@@ -80,18 +80,23 @@ impl ServeEngine {
         self.scratch.pool().threads()
     }
 
-    /// Toggle the SIMD row-block kernel tier for this engine's model
-    /// pass (default: the process-wide `--simd`/`PTQTP_SIMD` mode).
-    /// Token output is bit-identical either way — the SIMD tier replays
-    /// the scalar per-row FP order — so this is a perf/debug knob, not
-    /// a numerics one (pinned by the SIMD on/off engine parity test).
+    /// Toggle the SIMD kernel tiers for this engine's model pass —
+    /// the ternary row-block kernels *and* the head-major attention
+    /// kernels (default: the process-wide `--simd`/`PTQTP_SIMD`
+    /// mode). Token output is bit-identical either way — every SIMD
+    /// tier replays the scalar per-row FP order — so this is a
+    /// perf/debug knob, not a numerics one (pinned by the SIMD on/off
+    /// engine parity tests).
     ///
-    /// `false` always downgrades to the scalar tiers. `true` engages
-    /// SIMD only for layers that carry an interleaved layout — which is
-    /// every aligned layer unless the process started with the mode
-    /// `off` (then no interleave was built and the flag is a no-op;
-    /// force layouts with `PackedTernaryLinear::set_interleave_lanes`
-    /// for an A/B run in that state).
+    /// `false` always downgrades everything to the scalar tiers.
+    /// `true` engages the attention kernels unconditionally (they need
+    /// no derived layout), but the ternary kernels only for layers
+    /// carrying an interleaved layout — which is every aligned layer
+    /// unless the process started with the mode `off` (then no
+    /// interleave was built and the ternary half of the flag is a
+    /// no-op; force layouts with
+    /// `PackedTernaryLinear::set_interleave_lanes` for an A/B run in
+    /// that state).
     pub fn set_simd(&mut self, on: bool) {
         self.scratch.set_simd(on);
     }
@@ -172,9 +177,20 @@ impl ServeEngine {
         let mut participates = vec![false; self.running.len()];
         let mut n_caches = 0usize;
         for slot in 0..self.running.len() {
-            let take = prefill_take[slot];
+            let mut take = prefill_take[slot];
             if take > 0 {
                 let seq = &mut self.running[slot];
+                // defensive capacity clamp: the KV cache surfaces a
+                // recoverable full signal (`remaining`), so a
+                // planner/capacity disagreement — e.g. a request
+                // admitted past capacity by a buggy scheduler — fails
+                // this request with CacheOverflow instead of hitting
+                // the append panic and killing the replica
+                take = take.min(seq.cache.remaining());
+                if take == 0 {
+                    seq.overflowed = true;
+                    continue;
+                }
                 let ci = n_caches;
                 n_caches += 1;
                 participates[slot] = true;
@@ -242,7 +258,7 @@ impl ServeEngine {
         while i < self.running.len() {
             let finished = {
                 let s = &self.running[i];
-                !s.in_prefill() && s.pending_logits.is_none()
+                s.overflowed || (!s.in_prefill() && s.pending_logits.is_none())
             };
             if finished {
                 let s = self.running.swap_remove(i);
@@ -253,7 +269,9 @@ impl ServeEngine {
                 if stop_hit {
                     tokens.pop();
                 }
-                let finish = if stop_hit {
+                let finish = if s.overflowed {
+                    FinishReason::CacheOverflow
+                } else if stop_hit {
                     FinishReason::Stop
                 } else {
                     FinishReason::Length
@@ -515,6 +533,37 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.tokens, y.tokens, "req {}", x.id);
         }
+    }
+
+    #[test]
+    fn undersized_cache_fails_per_request_not_replica() {
+        // regression: a sequence whose KV cache is smaller than its
+        // prompt (simulating a scheduler/capacity bug — admission
+        // normally prevents this) used to die in KvCache::append's
+        // overflow panic, taking the whole replica down. The engine now
+        // clamps prefill to the cache's remaining capacity and retires
+        // the request with CacheOverflow.
+        use crate::coordinator::request::SequenceState;
+        use crate::model::KvCache;
+        let mut e = engine(2);
+        e.submit(req(1, vec![1, 2], 3)); // a healthy request rides along
+        // a cache with room for only 3 positions, against a 6-token prompt
+        let cfg = &e.model.config;
+        let small = KvCache::new(cfg.n_layers, cfg.n_kv_heads, cfg.head_dim(), 3);
+        // account the foreign cache so the pool's release bookkeeping
+        // stays balanced when the doomed sequence retires
+        let _placeholder = e.pool.acquire().expect("pool has capacity");
+        e.running.push(SequenceState::new(req(7, vec![1, 2, 3, 4, 5, 6], 4), small));
+        let mut out = e.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(out[0].tokens.len(), 3, "healthy request unaffected");
+        assert_eq!(out[1].id, 7);
+        assert_eq!(out[1].finish, FinishReason::CacheOverflow);
+        assert!(out[1].tokens.is_empty(), "prompt never finished prefill");
+        assert_eq!(e.running(), 0, "replica still alive and drained");
     }
 
     #[test]

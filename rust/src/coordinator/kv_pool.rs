@@ -7,11 +7,12 @@
 
 use crate::model::KvCache;
 
-/// Bounded pool of KV caches.
+/// Bounded pool of KV caches (head-major layout — see `model::kv`).
 #[derive(Debug)]
 pub struct KvPool {
     n_layers: usize,
-    kv_dim: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
     max_seq: usize,
     capacity: usize,
     free: Vec<KvCache>,
@@ -21,10 +22,17 @@ pub struct KvPool {
 }
 
 impl KvPool {
-    pub fn new(n_layers: usize, kv_dim: usize, max_seq: usize, capacity: usize) -> KvPool {
+    pub fn new(
+        n_layers: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        capacity: usize,
+    ) -> KvPool {
         KvPool {
             n_layers,
-            kv_dim,
+            n_kv_heads,
+            head_dim,
             max_seq,
             capacity,
             free: Vec::with_capacity(capacity),
@@ -35,7 +43,13 @@ impl KvPool {
 
     /// For a model configuration.
     pub fn for_model(config: &crate::model::ModelConfig, capacity: usize) -> KvPool {
-        KvPool::new(config.n_layers, config.kv_dim(), config.max_seq, capacity)
+        KvPool::new(
+            config.n_layers,
+            config.n_kv_heads,
+            config.head_dim(),
+            config.max_seq,
+            capacity,
+        )
     }
 
     /// Try to acquire a cache; `None` when the pool is exhausted
@@ -51,7 +65,7 @@ impl KvPool {
                 c.reset();
                 c
             }
-            None => KvCache::new(self.n_layers, self.kv_dim, self.max_seq),
+            None => KvCache::new(self.n_layers, self.n_kv_heads, self.head_dim, self.max_seq),
         })
     }
 
@@ -84,7 +98,7 @@ mod tests {
 
     #[test]
     fn acquire_release_cycle() {
-        let mut p = KvPool::new(2, 8, 16, 2);
+        let mut p = KvPool::new(2, 2, 4, 16, 2);
         let a = p.acquire().unwrap();
         let b = p.acquire().unwrap();
         assert!(p.acquire().is_none(), "capacity enforced");
@@ -100,7 +114,7 @@ mod tests {
 
     #[test]
     fn recycling_reuses_buffers() {
-        let mut p = KvPool::new(1, 4, 8, 1);
+        let mut p = KvPool::new(1, 1, 4, 8, 1);
         let mut a = p.acquire().unwrap();
         a.append(0, &[1.0; 4], &[2.0; 4]);
         a.commit();
@@ -112,7 +126,7 @@ mod tests {
 
     #[test]
     fn peak_watermark() {
-        let mut p = KvPool::new(1, 4, 8, 3);
+        let mut p = KvPool::new(1, 1, 4, 8, 3);
         let a = p.acquire().unwrap();
         let b = p.acquire().unwrap();
         p.release(a);

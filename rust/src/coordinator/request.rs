@@ -54,6 +54,10 @@ pub enum FinishReason {
     Length,
     /// Prompt longer than the model context.
     PromptTooLong,
+    /// The sequence's KV cache ran out of positions mid-flight (a
+    /// planner/capacity disagreement) — the request is truncated to
+    /// what was generated instead of panicking the replica.
+    CacheOverflow,
 }
 
 /// Completed request.
@@ -80,6 +84,9 @@ pub struct SequenceState {
     /// Logits from the last step (None until the prompt is consumed).
     pub pending_logits: Option<Vec<f32>>,
     pub first_token_at: Option<std::time::Instant>,
+    /// Set when the sequence's cache filled before its prompt was
+    /// consumed — retired with [`FinishReason::CacheOverflow`].
+    pub overflowed: bool,
 }
 
 impl SequenceState {
@@ -91,6 +98,7 @@ impl SequenceState {
             generated: Vec::new(),
             pending_logits: None,
             first_token_at: None,
+            overflowed: false,
         }
     }
 
@@ -118,7 +126,7 @@ mod tests {
     #[test]
     fn lifecycle_flags() {
         let req = Request::new(1, vec![1, 2, 3], SamplingParams::default());
-        let mut s = SequenceState::new(req, KvCache::new(1, 4, 16));
+        let mut s = SequenceState::new(req, KvCache::new(1, 1, 4, 16));
         assert!(s.in_prefill());
         assert_eq!(s.remaining_prompt(), 3);
         s.prefill_cursor = 3;

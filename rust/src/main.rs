@@ -78,7 +78,7 @@ fn help() -> String {
             ("quantize", "quantize --model X.ptw --method ptqtp --out Q.ptw  (Q.ptw = packed PTW2 artifact + manifest)"),
             ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]  (packed checkpoints skip quantization)"),
             ("serve", "serve --model X.ptw [--method ptqtp] --requests N [--replicas R]  (packed checkpoints skip quantization)"),
-            ("bench", "bench --table N | --fig N | --batched | --kernels  (paper exhibits + perf benches)"),
+            ("bench", "bench --table N | --fig N | --batched | --kernels | --attention  (paper exhibits + perf benches)"),
             ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
         ],
         &[
@@ -361,7 +361,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench --table N | --fig N | --batched | --kernels [--quick]`
+/// `bench --table N | --fig N | --batched | --kernels | --attention [--quick]`
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let quick = args.flag("quick");
     if args.flag("batched") {
@@ -369,6 +369,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("kernels") {
         return bench::kernels::run(quick, args);
+    }
+    if args.flag("attention") {
+        return bench::attention::run(quick, args);
     }
     if let Some(t) = args.get("table") {
         return bench::run_table(t, quick, args);
@@ -385,7 +388,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    anyhow::bail!("bench requires --table N, --fig N, --batched, --kernels, or --all")
+    anyhow::bail!("bench requires --table N, --fig N, --batched, --kernels, --attention, or --all")
 }
 
 /// `runtime --artifacts artifacts/` — PJRT smoke test of the AOT chain.

@@ -2,21 +2,31 @@
 //! benchmarks (`LlamaAttention` latency, FP16 vs PTQTP).
 //!
 //! Two entry points: [`Attention::decode`] is the classic one-token
-//! path (kept as the numerics reference); [`Attention::decode_rows`]
-//! is the fused serving path — it processes a whole [`ForwardBatch`]'s
-//! rows at once, where each row carries its own position and its own
-//! sequence's KV cache, so prefill chunks and decode tokens of many
-//! sequences share one QKV projection over the stacked activations.
+//! path; [`Attention::decode_rows`] is the fused serving path — it
+//! processes a whole [`ForwardBatch`]'s rows at once, where each row
+//! carries its own position and its own sequence's KV cache, so
+//! prefill chunks and decode tokens of many sequences share one QKV
+//! projection over the stacked activations.
+//!
+//! The score/softmax/V-sum stage runs on the tiered head-major kernels
+//! of [`super::attn_kernels`]: SIMD lanes across cached positions for
+//! the scores, head-dim lanes for the V-sum, and [`Pool`] threading
+//! across whole (row, head) output spans — every tier bitwise `==` the
+//! scalar [`Attention::attend_one`] reference (the same parity
+//! discipline as `ternary::simd`), so dispatch is purely a speed
+//! decision.
 //!
 //! [`ForwardBatch`]: super::batch::ForwardBatch
 
+use super::attn_kernels;
 use super::batch::ensure_shape;
 use super::kv::KvCache;
 use super::linear::QuantLinear;
 use super::rope::Rope;
-use crate::tensor::ops::softmax_inplace;
 use crate::tensor::Matrix;
 use crate::ternary::gemm::GemmScratch;
+use crate::ternary::simd;
+use crate::threads::{run_spans, worth_parallel, Pool, SendPtr};
 
 /// One attention block's projections.
 #[derive(Clone, Debug)]
@@ -30,7 +40,11 @@ pub struct Attention {
     pub head_dim: usize,
 }
 
-/// Reusable buffers for the batched attention pass.
+/// Reusable buffers for the batched attention pass. The pool and SIMD
+/// flag of `gemm` also drive the attend stage ([`ForwardScratch`] sets
+/// both through [`AttnScratch::set_pool`]/[`AttnScratch::set_simd`]).
+///
+/// [`ForwardScratch`]: super::batch::ForwardScratch
 #[derive(Clone, Debug, Default)]
 pub struct AttnScratch {
     pub(crate) q: Matrix,
@@ -39,19 +53,104 @@ pub struct AttnScratch {
     pub(crate) attn: Matrix,
     pub(crate) scores: Vec<f32>,
     pub(crate) gemm: GemmScratch,
+    /// Per-lane score buffers for the head-parallel attend stage.
+    lane_scores: Vec<Vec<f32>>,
+    /// Per-row causal horizons (`positions[i] + 1`), rebuilt per pass.
+    horizons: Vec<usize>,
+    /// Attention lane-width override: `None` = auto (detected width
+    /// when SIMD is on, scalar otherwise); `Some(1 | 4 | 8)` pins a
+    /// width for A/B runs — output is bitwise identical either way.
+    lanes: Option<usize>,
+}
+
+impl AttnScratch {
+    /// Bind the worker pool driving the QKV/output projections *and*
+    /// the head-parallel attend stage.
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.gemm.pool = pool;
+    }
+
+    /// Toggle the SIMD tier for the projections and attention kernels
+    /// (default: the process-wide `--simd`/`PTQTP_SIMD` mode). Output
+    /// is bitwise identical either way — perf/debug knob only.
+    pub fn set_simd(&mut self, on: bool) {
+        self.gemm.simd = on;
+    }
+
+    /// Pin the attention kernel lane width (see [`AttnScratch`] field
+    /// docs); tests use this to force the portable tiers. Panics on
+    /// widths without a kernel.
+    pub fn set_lanes(&mut self, lanes: Option<usize>) {
+        if let Some(l) = lanes {
+            assert!(matches!(l, 1 | 4 | 8), "attention lane width must be 1, 4, or 8 (got {l})");
+        }
+        self.lanes = lanes;
+    }
+
+    fn resolved_lanes(&self) -> usize {
+        self.lanes.unwrap_or_else(|| simd::lanes_for(self.gemm.simd))
+    }
 }
 
 /// Reusable buffers for the one-token [`Attention::decode_with`] path —
 /// the same caller-owned pattern as [`GemmScratch`]: a long-context
 /// decode loop holds one across steps, so the per-step q/k/v, head
-/// accumulator, and score buffers stop allocating per token.
-#[derive(Clone, Debug, Default)]
+/// accumulator, and score buffers stop allocating per token. Carries
+/// its own pool/SIMD knobs so the single-row decode path reaches the
+/// same tiered attend stage as the batched one.
+#[derive(Clone, Debug)]
 pub struct DecodeScratch {
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
     attn: Vec<f32>,
     scores: Vec<f32>,
+    lane_scores: Vec<Vec<f32>>,
+    pool: Pool,
+    simd: bool,
+    lanes: Option<usize>,
+}
+
+impl Default for DecodeScratch {
+    fn default() -> DecodeScratch {
+        DecodeScratch {
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            attn: Vec::new(),
+            scores: Vec::new(),
+            lane_scores: Vec::new(),
+            pool: Pool::default(),
+            simd: simd::enabled(),
+            lanes: None,
+        }
+    }
+}
+
+impl DecodeScratch {
+    /// Run the attend stage on `pool`'s lanes (whole-head spans;
+    /// bit-identical for any thread count).
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
+    }
+
+    /// Toggle the SIMD attention kernels (bitwise-identical output).
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on;
+    }
+
+    /// Pin the attention lane width (tests/benches). Panics on widths
+    /// without a kernel.
+    pub fn set_lanes(&mut self, lanes: Option<usize>) {
+        if let Some(l) = lanes {
+            assert!(matches!(l, 1 | 4 | 8), "attention lane width must be 1, 4, or 8 (got {l})");
+        }
+        self.lanes = lanes;
+    }
+
+    fn resolved_lanes(&self) -> usize {
+        self.lanes.unwrap_or_else(|| simd::lanes_for(self.simd))
+    }
 }
 
 impl Attention {
@@ -59,9 +158,8 @@ impl Attention {
     /// appends this position's K/V to `cache[layer]` and returns the
     /// attention output (d_model). `pos` = index of this token.
     ///
-    /// Allocates a fresh [`DecodeScratch`] per call (kept as the simple
-    /// numerics-reference entry); loops should hold a scratch and call
-    /// [`Attention::decode_with`].
+    /// Allocates a fresh [`DecodeScratch`] per call; loops should hold
+    /// a scratch and call [`Attention::decode_with`].
     pub fn decode(
         &self,
         x: &[f32],
@@ -103,52 +201,181 @@ impl Attention {
         rope.apply_heads(&mut scratch.k, pos);
         cache.append(layer, &scratch.k, &scratch.v);
 
-        let keys = cache.keys(layer);
-        let vals = cache.values(layer);
-        let t = keys.len() / kv_dim; // cached positions incl. current
-        // attend_one accumulates into its output: zero the head buffer
+        let t = cache.staged_len(layer); // cached positions incl. current
+        // attend_head accumulates into its output: zero the head buffer
         scratch.attn.clear();
         scratch.attn.resize(q_dim, 0.0);
-        self.attend_one(&scratch.q, keys, vals, t, &mut scratch.scores, &mut scratch.attn);
+        let lanes = scratch.resolved_lanes();
+        let pool = scratch.pool.clone();
+        let ts = [t];
+        let cache_of = [0usize];
+        let caches = [&mut *cache];
+        let s = &mut *scratch;
+        self.attend_stack(
+            1,
+            &s.q,
+            &ts,
+            &cache_of,
+            &caches,
+            layer,
+            lanes,
+            &pool,
+            &mut s.scores,
+            &mut s.lane_scores,
+            &mut s.attn,
+        );
         self.wo.forward_vec(&scratch.attn, out);
     }
 
-    /// Score/softmax/weighted-sum for one query row over `t` cached
-    /// positions — the single numerics body shared by the per-token
-    /// [`Attention::decode`] and the batched [`Attention::decode_rows`]
-    /// paths, so fused/sequential parity cannot drift. `out` must be
-    /// zeroed (`q_dim` long); `keys`/`vals` hold `t · kv_dim` values.
-    fn attend_one(
+    /// Scalar reference: score/softmax/weighted-sum for one query row
+    /// over the first `t` cached positions — the numerics anchor every
+    /// tiered path (SIMD lanes, threads) must match bitwise. `out` must
+    /// be zeroed (`q_dim` long).
+    pub fn attend_one(
         &self,
         q: &[f32],
-        keys: &[f32],
-        vals: &[f32],
+        cache: &KvCache,
+        layer: usize,
         t: usize,
         scores: &mut Vec<f32>,
         out: &mut [f32],
     ) {
         let hd = self.head_dim;
-        let kv_dim = self.n_kv_heads * hd;
         let scale = 1.0 / (hd as f32).sqrt();
         let group = self.n_heads / self.n_kv_heads;
-        scores.clear();
-        scores.resize(t, 0.0);
         for h in 0..self.n_heads {
             let kvh = h / group;
-            let qh = &q[h * hd..(h + 1) * hd];
-            for (ti, score) in scores.iter_mut().enumerate() {
-                let kh = &keys[ti * kv_dim + kvh * hd..ti * kv_dim + (kvh + 1) * hd];
-                *score = crate::tensor::ops::dot(qh, kh) * scale;
-            }
-            softmax_inplace(scores);
-            let oh = &mut out[h * hd..(h + 1) * hd];
-            for (ti, &p) in scores.iter().enumerate() {
-                let vh = &vals[ti * kv_dim + kvh * hd..ti * kv_dim + (kvh + 1) * hd];
-                for i in 0..hd {
-                    oh[i] += p * vh[i];
+            attn_kernels::attend_head(
+                &q[h * hd..(h + 1) * hd],
+                &cache.keys(layer, kvh)[..t * hd],
+                &cache.values(layer, kvh)[..t * hd],
+                t,
+                hd,
+                scale,
+                1,
+                scores,
+                &mut out[h * hd..(h + 1) * hd],
+            );
+        }
+    }
+
+    /// Tiered attend stage over a stack of already-projected,
+    /// already-roped query rows: row `i` of `q` attends over the first
+    /// `ts[i]` cached positions of `caches[cache_of[i]]` at `layer`
+    /// (the caches are only read). Lane width and pool come from
+    /// `scratch`; output is bitwise the per-row
+    /// [`Attention::attend_one`] for every configuration. Public so
+    /// the attention bench and parity tests can race the tiers
+    /// directly against the scalar reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_rows(
+        &self,
+        q: &Matrix,
+        ts: &[usize],
+        cache_of: &[usize],
+        caches: &[&mut KvCache],
+        layer: usize,
+        scratch: &mut AttnScratch,
+        out: &mut Matrix,
+    ) {
+        let q_dim = self.n_heads * self.head_dim;
+        debug_assert_eq!(q.cols, q_dim);
+        debug_assert_eq!(ts.len(), q.rows);
+        debug_assert_eq!(cache_of.len(), q.rows);
+        ensure_shape(out, q.rows, q_dim);
+        let lanes = scratch.resolved_lanes();
+        let pool = scratch.gemm.pool.clone();
+        self.attend_stack(
+            q.rows,
+            &q.data,
+            ts,
+            cache_of,
+            caches,
+            layer,
+            lanes,
+            &pool,
+            &mut scratch.scores,
+            &mut scratch.lane_scores,
+            &mut out.data,
+        );
+    }
+
+    /// The one tiered attend body behind every path: items = (row,
+    /// head) pairs; threaded runs partition items into contiguous
+    /// whole-head output spans via [`run_spans`] (each span a multiple
+    /// of `head_dim`), every item computed in full by one lane with the
+    /// scalar fold order — so threaded × SIMD output is bitwise the
+    /// sequential scalar sweep. `caches` is a shared (read-only) view.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_stack(
+        &self,
+        n: usize,
+        q_data: &[f32],
+        ts: &[usize],
+        cache_of: &[usize],
+        caches: &[&mut KvCache],
+        layer: usize,
+        lanes: usize,
+        pool: &Pool,
+        scores: &mut Vec<f32>,
+        lane_scores: &mut Vec<Vec<f32>>,
+        out: &mut [f32],
+    ) {
+        let hd = self.head_dim;
+        let q_dim = self.n_heads * hd;
+        debug_assert!(q_data.len() >= n * q_dim && out.len() >= n * q_dim);
+        let group = self.n_heads / self.n_kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let items = n * self.n_heads;
+        let max_t = ts.iter().copied().max().unwrap_or(0);
+        if pool.threads() <= 1 || !worth_parallel(items * hd, max_t) {
+            for i in 0..n {
+                let t = ts[i];
+                let cache: &KvCache = &*caches[cache_of[i]];
+                for h in 0..self.n_heads {
+                    let kvh = h / group;
+                    attn_kernels::attend_head(
+                        &q_data[i * q_dim + h * hd..i * q_dim + (h + 1) * hd],
+                        &cache.keys(layer, kvh)[..t * hd],
+                        &cache.values(layer, kvh)[..t * hd],
+                        t,
+                        hd,
+                        scale,
+                        lanes,
+                        scores,
+                        &mut out[i * q_dim + h * hd..i * q_dim + (h + 1) * hd],
+                    );
                 }
             }
+            return;
         }
+        if lane_scores.len() < pool.threads() {
+            lane_scores.resize_with(pool.threads(), Vec::new);
+        }
+        let ls = SendPtr(lane_scores.as_mut_ptr());
+        run_spans(pool, items, hd, &mut out[..items * hd], |lane, item_range, span| {
+            // SAFETY: one score buffer per lane (resized above); the
+            // vec outlives the call because the leader blocks in `run`.
+            let scores = unsafe { &mut *ls.get().add(lane) };
+            for (off, item) in item_range.enumerate() {
+                let i = item / self.n_heads;
+                let h = item % self.n_heads;
+                let t = ts[i];
+                let cache: &KvCache = &*caches[cache_of[i]];
+                let kvh = h / group;
+                attn_kernels::attend_head(
+                    &q_data[i * q_dim + h * hd..i * q_dim + (h + 1) * hd],
+                    &cache.keys(layer, kvh)[..t * hd],
+                    &cache.values(layer, kvh)[..t * hd],
+                    t,
+                    hd,
+                    scale,
+                    lanes,
+                    scores,
+                    &mut span[off * hd..(off + 1) * hd],
+                );
+            }
+        });
     }
 
     /// Fused multi-position attention: row `i` of `normed` is one token
@@ -160,8 +387,8 @@ impl Attention {
     ///
     /// Per row this is bit-identical to [`Attention::decode`]: the QKV
     /// and output projections run the row-exact batched kernels, and
-    /// the score/softmax/weighted-sum loops mirror the decode path's
-    /// operation order.
+    /// the attend stage runs the tiered head-major kernels whose every
+    /// configuration replays the scalar operation order.
     #[allow(clippy::too_many_arguments)]
     pub fn decode_rows(
         &self,
@@ -201,20 +428,25 @@ impl Attention {
                 "batch rows for one cache must be contiguous with ascending positions"
             );
         }
-        for i in 0..n {
-            let cache = &*caches[cache_of[i]];
-            let t = positions[i] + 1; // causal horizon incl. this row
-            let keys = &cache.keys(layer)[..t * kv_dim];
-            let vals = &cache.values(layer)[..t * kv_dim];
-            self.attend_one(
-                scratch.q.row(i),
-                keys,
-                vals,
-                t,
-                &mut scratch.scores,
-                scratch.attn.row_mut(i),
-            );
-        }
+        scratch.horizons.clear();
+        scratch.horizons.extend(positions.iter().map(|&p| p + 1));
+        let lanes = scratch.resolved_lanes();
+        let pool = scratch.gemm.pool.clone();
+        let caches: &[&mut KvCache] = caches; // read-only from here
+        let s = &mut *scratch;
+        self.attend_stack(
+            n,
+            &s.q.data,
+            &s.horizons,
+            cache_of,
+            caches,
+            layer,
+            lanes,
+            &pool,
+            &mut s.scores,
+            &mut s.lane_scores,
+            &mut s.attn.data,
+        );
         self.wo.forward_rows_into(&scratch.attn, out, &mut scratch.gemm);
     }
 }
@@ -243,7 +475,7 @@ mod tests {
     fn decode_shapes_and_cache_growth() {
         let attn = make_attn(32, 4, 2, 1);
         let rope = Rope::new(8, 16, 10_000.0);
-        let mut cache = KvCache::new(1, 16, 16);
+        let mut cache = KvCache::new(1, 2, 8, 16);
         let mut rng = Rng::new(2);
         for pos in 0..5 {
             let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
@@ -260,7 +492,7 @@ mod tests {
         // with a single cached position, attention output = wo·v
         let attn = make_attn(16, 2, 2, 3);
         let rope = Rope::new(8, 8, 10_000.0);
-        let mut cache = KvCache::new(1, 16, 8);
+        let mut cache = KvCache::new(1, 2, 8, 8);
         let mut rng = Rng::new(4);
         let x: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
         let mut out = vec![0.0; 16];
@@ -277,12 +509,12 @@ mod tests {
 
     #[test]
     fn gqa_shares_kv_heads() {
-        // n_heads=4, n_kv=1: all query heads read the same K/V stripe;
-        // output must be finite and deterministic
+        // n_heads=4, n_kv=1: all query heads read the same contiguous
+        // K/V block; output must be finite and deterministic
         let attn = make_attn(32, 4, 1, 5);
         let rope = Rope::new(8, 8, 10_000.0);
-        let mut c1 = KvCache::new(1, 8, 8);
-        let mut c2 = KvCache::new(1, 8, 8);
+        let mut c1 = KvCache::new(1, 1, 8, 8);
+        let mut c2 = KvCache::new(1, 1, 8, 8);
         let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.1).sin()).collect();
         let mut o1 = vec![0.0; 32];
         let mut o2 = vec![0.0; 32];
@@ -298,8 +530,8 @@ mod tests {
         let attn = make_attn(32, 4, 2, 17);
         let rope = Rope::new(8, 32, 10_000.0);
         let mut rng = Rng::new(18);
-        let mut c_ref = KvCache::new(1, 16, 32);
-        let mut c_scr = KvCache::new(1, 16, 32);
+        let mut c_ref = KvCache::new(1, 2, 8, 32);
+        let mut c_scr = KvCache::new(1, 2, 8, 32);
         let mut scratch = DecodeScratch::default();
         for pos in 0..12 {
             let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
@@ -311,8 +543,47 @@ mod tests {
             c_scr.commit();
             assert_eq!(a, b, "pos {pos}");
         }
-        assert_eq!(c_ref.keys(0), c_scr.keys(0));
-        assert_eq!(c_ref.values(0), c_scr.values(0));
+        for kvh in 0..2 {
+            assert_eq!(c_ref.keys(0, kvh), c_scr.keys(0, kvh));
+            assert_eq!(c_ref.values(0, kvh), c_scr.values(0, kvh));
+        }
+    }
+
+    #[test]
+    fn decode_simd_threads_knobs_bit_identical() {
+        // every (lanes, pool) configuration of the one-token path must
+        // reproduce the scalar output exactly
+        let attn = make_attn(32, 4, 2, 19);
+        let rope = Rope::new(8, 32, 10_000.0);
+        let mut rng = Rng::new(20);
+        let xs: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..32).map(|_| rng.normal()).collect())
+            .collect();
+        let run = |lanes: Option<usize>, simd: bool, threads: usize| {
+            let mut cache = KvCache::new(1, 2, 8, 32);
+            let mut scratch = DecodeScratch::default();
+            scratch.set_simd(simd);
+            scratch.set_lanes(lanes);
+            scratch.set_pool(Pool::new(threads));
+            let mut outs = Vec::new();
+            for (pos, x) in xs.iter().enumerate() {
+                let mut out = vec![0.0; 32];
+                attn.decode_with(x, &rope, &mut cache, 0, pos, &mut scratch, &mut out);
+                cache.commit();
+                outs.push(out);
+            }
+            outs
+        };
+        let reference = run(Some(1), false, 1);
+        for lanes in [None, Some(4), Some(8)] {
+            for threads in [1usize, 2] {
+                assert_eq!(
+                    run(lanes, true, threads),
+                    reference,
+                    "lanes={lanes:?} threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -326,7 +597,7 @@ mod tests {
             .collect();
 
         // sequential reference
-        let mut seq_cache = KvCache::new(1, 16, 16);
+        let mut seq_cache = KvCache::new(1, 2, 8, 16);
         let mut expect = Vec::new();
         for (pos, x) in xs.iter().enumerate() {
             let mut out = vec![0.0; 32];
@@ -336,7 +607,7 @@ mod tests {
         }
 
         // fused chunk
-        let mut cache = KvCache::new(1, 16, 16);
+        let mut cache = KvCache::new(1, 2, 8, 16);
         let mut normed = Matrix::zeros(4, 32);
         for (i, x) in xs.iter().enumerate() {
             normed.row_mut(i).copy_from_slice(x);
@@ -353,8 +624,10 @@ mod tests {
             assert_eq!(out.row(i), expect[i].as_slice(), "row {i}");
         }
         assert_eq!(cache.len(), 4);
-        assert_eq!(cache.keys(0), seq_cache.keys(0));
-        assert_eq!(cache.values(0), seq_cache.values(0));
+        for kvh in 0..2 {
+            assert_eq!(cache.keys(0, kvh), seq_cache.keys(0, kvh));
+            assert_eq!(cache.values(0, kvh), seq_cache.values(0, kvh));
+        }
     }
 
     #[test]
@@ -368,11 +641,11 @@ mod tests {
 
         // seq A already has one committed position
         let warm: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
-        let mut ca = KvCache::new(1, 16, 8);
+        let mut ca = KvCache::new(1, 2, 8, 8);
         let mut warm_out = vec![0.0; 16];
         attn.decode(&warm, &rope, &mut ca, 0, 0, &mut warm_out);
         ca.commit();
-        let mut cb = KvCache::new(1, 16, 8);
+        let mut cb = KvCache::new(1, 2, 8, 8);
 
         // sequential reference for both next tokens
         let mut ca_ref = ca.clone();
@@ -410,7 +683,7 @@ mod tests {
         let x0b: Vec<f32> = (0..16).map(|i| -(i as f32) * 0.1).collect();
         let x1: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).cos()).collect();
         let run = |x0: &[f32]| {
-            let mut cache = KvCache::new(1, 16, 8);
+            let mut cache = KvCache::new(1, 2, 8, 8);
             let mut out = vec![0.0; 16];
             attn.decode(x0, &rope, &mut cache, 0, 0, &mut out);
             cache.commit();

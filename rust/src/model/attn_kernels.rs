@@ -1,0 +1,319 @@
+//! SIMD attention kernels over the head-major KV layout
+//! (DESIGN.md §Attention-Kernels).
+//!
+//! [`attend_head`] is the whole per-(query-row, head) attention body —
+//! score dots, softmax, weighted V-sum — over one KV head's contiguous
+//! `[t × head_dim]` blocks. Two vectorization axes, chosen so every
+//! lane replays the scalar floating-point fold order exactly:
+//!
+//! * **Scores** vectorize across lanes of 4/8 **consecutive cached
+//!   positions**: each lane is an independent `dot(q, k_ti) · scale`
+//!   replaying `ops::dot`'s 4-accumulator left fold, so lane `l`'s
+//!   result is bitwise the scalar score of position `ti + l`. The
+//!   head-major layout makes lane `l`'s key row the contiguous slice
+//!   `keys[(ti + l)·hd ..]`.
+//! * **The V-sum** vectorizes across **head-dim lanes**: for each
+//!   position `ti` (in order), `out[i] += p · v[i]` over contiguous
+//!   chunks of `i`. Every output element keeps its sequential fold
+//!   over `ti` — the ops are elementwise, so any chunking of `i` is
+//!   bitwise the scalar double loop.
+//!
+//! Lane width is the caller's dispatch decision (`lanes`: 1 = scalar
+//! reference, 4 = portable row-block, 8 = AVX2 when detected, else the
+//! portable 8-wide block): output is bitwise `==` for every choice —
+//! the same parity discipline as `ternary::simd` — so the dispatcher
+//! picks purely on speed and `--simd off` stays a perf-only knob.
+
+use crate::tensor::ops::softmax_inplace;
+
+/// Score/softmax/V-sum for one query head over `t` cached positions of
+/// one KV head. `q` is the head's query (`hd` long); `keys`/`vals` are
+/// the head's contiguous blocks (`≥ t·hd`); `out` (`hd` long) must be
+/// zeroed — the V-sum accumulates into it. `scores` is caller scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_head(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    t: usize,
+    hd: usize,
+    scale: f32,
+    lanes: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hd);
+    debug_assert_eq!(out.len(), hd);
+    debug_assert!(keys.len() >= t * hd && vals.len() >= t * hd);
+    // only 1/4/8 have kernels; anything else (rejected loudly by the
+    // set_lanes setters) falls back to the scalar path rather than
+    // mis-striding a block
+    let lanes = match lanes {
+        4 | 8 => lanes,
+        _ => 1,
+    };
+
+    scores.clear();
+    scores.resize(t, 0.0);
+    // ---- scores: lane blocks of consecutive positions, scalar tail ----
+    let blocks = if lanes >= 4 { t / lanes } else { 0 };
+    for b in 0..blocks {
+        let ti = b * lanes;
+        let kw = &keys[ti * hd..(ti + lanes) * hd];
+        let ow = &mut scores[ti..ti + lanes];
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        {
+            if lanes == 8 && crate::ternary::simd::avx2_available() {
+                // SAFETY: AVX2 presence just checked; `kw` holds the 8
+                // contiguous position rows the gathers index.
+                unsafe { x86::scores_block8(q, kw, hd, scale, ow) };
+                continue;
+            }
+        }
+        match lanes {
+            8 => scores_block_portable::<8>(q, kw, hd, scale, ow),
+            _ => scores_block_portable::<4>(q, kw, hd, scale, ow),
+        }
+    }
+    for ti in blocks * lanes..t {
+        scores[ti] = crate::tensor::ops::dot(q, &keys[ti * hd..(ti + 1) * hd]) * scale;
+    }
+
+    softmax_inplace(scores);
+
+    // ---- V-sum: head-dim lanes; each out[i] folds over ti in order ----
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if lanes == 8 && crate::ternary::simd::avx2_available() {
+            // SAFETY: AVX2 presence just checked; slice bounds asserted
+            // above.
+            unsafe { x86::vsum8(scores, vals, hd, out) };
+            return;
+        }
+    }
+    if lanes >= 4 {
+        vsum_portable(scores, vals, hd, out);
+    } else {
+        for (ti, &p) in scores.iter().enumerate() {
+            let vh = &vals[ti * hd..(ti + 1) * hd];
+            for i in 0..hd {
+                out[i] += p * vh[i];
+            }
+        }
+    }
+}
+
+/// One N-position score block, portable form: per lane the exact
+/// 4-accumulator fold of [`crate::tensor::ops::dot`] (s0..s3 over
+/// 4-element chunks, `((s0+s1)+s2)+s3`, scalar tail), then `· scale` —
+/// so lane `l` is bitwise `dot(q, keys[l·hd..]) · scale`.
+fn scores_block_portable<const N: usize>(
+    q: &[f32],
+    keys: &[f32],
+    hd: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let chunks = hd / 4;
+    let mut s0 = [0.0f32; N];
+    let mut s1 = [0.0f32; N];
+    let mut s2 = [0.0f32; N];
+    let mut s3 = [0.0f32; N];
+    for c in 0..chunks {
+        let i = c * 4;
+        for l in 0..N {
+            let k = &keys[l * hd + i..l * hd + i + 4];
+            s0[l] += q[i] * k[0];
+            s1[l] += q[i + 1] * k[1];
+            s2[l] += q[i + 2] * k[2];
+            s3[l] += q[i + 3] * k[3];
+        }
+    }
+    let mut s = [0.0f32; N];
+    for l in 0..N {
+        s[l] = s0[l] + s1[l] + s2[l] + s3[l];
+    }
+    for i in chunks * 4..hd {
+        for l in 0..N {
+            s[l] += q[i] * keys[l * hd + i];
+        }
+    }
+    for l in 0..N {
+        out[l] = s[l] * scale;
+    }
+}
+
+/// Weighted V-sum, portable 4-wide head-dim chunks. Elementwise mul +
+/// add per (ti, i) with `ti` outermost — bitwise the scalar double
+/// loop for any chunking of `i`.
+fn vsum_portable(probs: &[f32], vals: &[f32], hd: usize, out: &mut [f32]) {
+    let chunks = hd / 4;
+    for (ti, &p) in probs.iter().enumerate() {
+        let vh = &vals[ti * hd..(ti + 1) * hd];
+        for c in 0..chunks {
+            let i = c * 4;
+            out[i] += p * vh[i];
+            out[i + 1] += p * vh[i + 1];
+            out[i + 2] += p * vh[i + 2];
+            out[i + 3] += p * vh[i + 3];
+        }
+        for i in chunks * 4..hd {
+            out[i] += p * vh[i];
+        }
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86 {
+    //! 8-lane AVX2 attention kernels. Bit-identity argument: every
+    //! vector op is the lanewise IEEE operation the scalar body issues
+    //! (`vmulps`/`vaddps`, no FMA contraction — Rust never contracts),
+    //! gathers load exact key bits at stride `hd`, and accumulator
+    //! structure + fold order replicate `ops::dot` / the scalar V-sum
+    //! per lane exactly.
+    #[cfg(target_arch = "x86")]
+    use core::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// 8 consecutive position dots: lane `l` gathers `keys[l·hd + i]`
+    /// and replays `ops::dot`'s s0..s3 accumulator fold.
+    ///
+    /// Safety: caller verified AVX2; `keys` holds `8·hd` floats.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scores_block8(
+        q: &[f32],
+        keys: &[f32],
+        hd: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert!(keys.len() >= 8 * hd && out.len() == 8);
+        let base = keys.as_ptr();
+        // element index of lane l at chunk offset i is i + l·hd
+        let lane_off = _mm256_mullo_epi32(
+            _mm256_set1_epi32(hd as i32),
+            _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7),
+        );
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut s2 = _mm256_setzero_ps();
+        let mut s3 = _mm256_setzero_ps();
+        let chunks = hd / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            let k0 = _mm256_i32gather_ps::<4>(base.add(i), lane_off);
+            let k1 = _mm256_i32gather_ps::<4>(base.add(i + 1), lane_off);
+            let k2 = _mm256_i32gather_ps::<4>(base.add(i + 2), lane_off);
+            let k3 = _mm256_i32gather_ps::<4>(base.add(i + 3), lane_off);
+            s0 = _mm256_add_ps(s0, _mm256_mul_ps(_mm256_set1_ps(q[i]), k0));
+            s1 = _mm256_add_ps(s1, _mm256_mul_ps(_mm256_set1_ps(q[i + 1]), k1));
+            s2 = _mm256_add_ps(s2, _mm256_mul_ps(_mm256_set1_ps(q[i + 2]), k2));
+            s3 = _mm256_add_ps(s3, _mm256_mul_ps(_mm256_set1_ps(q[i + 3]), k3));
+        }
+        // ((s0 + s1) + s2) + s3 — the exact dot() reduction order
+        let mut s = _mm256_add_ps(_mm256_add_ps(_mm256_add_ps(s0, s1), s2), s3);
+        for i in chunks * 4..hd {
+            let kv = _mm256_i32gather_ps::<4>(base.add(i), lane_off);
+            s = _mm256_add_ps(s, _mm256_mul_ps(_mm256_set1_ps(q[i]), kv));
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), _mm256_mul_ps(s, _mm256_set1_ps(scale)));
+    }
+
+    /// Weighted V-sum over 8-wide head-dim chunks: contiguous loads of
+    /// `v`, broadcast `p`, mul then add (never fused) — per element the
+    /// scalar `out[i] += p · v[i]` in the same `ti` order.
+    ///
+    /// Safety: caller verified AVX2; `vals` holds `t·hd` floats and
+    /// `out` holds `hd`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vsum8(probs: &[f32], vals: &[f32], hd: usize, out: &mut [f32]) {
+        debug_assert!(vals.len() >= probs.len() * hd && out.len() == hd);
+        let chunks = hd / 8;
+        for (ti, &p) in probs.iter().enumerate() {
+            let v = vals.as_ptr().add(ti * hd);
+            let pv = _mm256_set1_ps(p);
+            for c in 0..chunks {
+                let o = out.as_mut_ptr().add(c * 8);
+                let cur = _mm256_loadu_ps(o);
+                let vv = _mm256_loadu_ps(v.add(c * 8));
+                _mm256_storeu_ps(o, _mm256_add_ps(cur, _mm256_mul_ps(pv, vv)));
+            }
+            for i in chunks * 8..hd {
+                out[i] += p * *v.add(i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Scalar reference: the exact pre-tier attention body.
+    fn attend_ref(
+        q: &[f32],
+        keys: &[f32],
+        vals: &[f32],
+        t: usize,
+        hd: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        let mut scores = vec![0.0f32; t];
+        for ti in 0..t {
+            scores[ti] = crate::tensor::ops::dot(q, &keys[ti * hd..(ti + 1) * hd]) * scale;
+        }
+        softmax_inplace(&mut scores);
+        let mut out = vec![0.0f32; hd];
+        for (ti, &p) in scores.iter().enumerate() {
+            let vh = &vals[ti * hd..(ti + 1) * hd];
+            for i in 0..hd {
+                out[i] += p * vh[i];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lane_widths_bit_identical_to_scalar() {
+        let mut rng = Rng::new(5);
+        // t covers: < lanes (all tail), lane multiples, ragged tails;
+        // hd covers 4-chunk-exact and ragged head dims
+        for &hd in &[4usize, 10, 12, 64] {
+            for &t in &[1usize, 3, 4, 8, 17, 64, 257] {
+                let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+                let keys: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+                let vals: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+                let scale = 1.0 / (hd as f32).sqrt();
+                let expect = attend_ref(&q, &keys, &vals, t, hd, scale);
+                let mut scores = Vec::new();
+                for &lanes in &[1usize, 4, 8] {
+                    let mut out = vec![0.0f32; hd];
+                    attend_head(&q, &keys, &vals, t, hd, scale, lanes, &mut scores, &mut out);
+                    assert_eq!(out, expect, "hd={hd} t={t} lanes={lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_out() {
+        // out must be accumulated (callers zero it); seeding out shifts
+        // the result by exactly the seed
+        let mut rng = Rng::new(9);
+        let hd = 8;
+        let t = 5;
+        let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+        let keys: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+        let vals: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+        let mut scores = Vec::new();
+        let mut base = vec![0.0f32; hd];
+        attend_head(&q, &keys, &vals, t, hd, 0.5, 1, &mut scores, &mut base);
+        let mut seeded = vec![1.0f32; hd];
+        attend_head(&q, &keys, &vals, t, hd, 0.5, 1, &mut scores, &mut seeded);
+        for i in 0..hd {
+            assert!((seeded[i] - base[i] - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -138,12 +138,12 @@ impl ForwardScratch {
     }
 
     /// Bind the worker pool driving the row-parallel kernels of every
-    /// pass using this scratch (MLP/LM-head gemms and the attention
-    /// projections each carry their own `GemmScratch`). The default is
-    /// the sequential pool — the exact legacy path; parallel output is
-    /// bit-identical either way (DESIGN.md §Threading).
+    /// pass using this scratch: MLP/LM-head gemms, the attention
+    /// projections, *and* the head-parallel attend stage. The default
+    /// is the sequential pool — the exact legacy path; parallel output
+    /// is bit-identical either way (DESIGN.md §Threading).
     pub fn set_pool(&mut self, pool: crate::threads::Pool) {
-        self.attn.gemm.pool = pool.clone();
+        self.attn.set_pool(pool.clone());
         self.gemm.pool = pool;
     }
 
@@ -152,14 +152,15 @@ impl ForwardScratch {
         &self.gemm.pool
     }
 
-    /// Toggle the SIMD row-block kernel tier for every pass using this
-    /// scratch (MLP/LM-head gemms and the attention projections carry
-    /// their own `GemmScratch`). Default is the process-wide
-    /// `--simd`/`PTQTP_SIMD` mode; output is bit-identical either way
-    /// (DESIGN.md §SIMD-Kernels), so this is a perf/debug knob only.
+    /// Toggle the SIMD kernel tiers for every pass using this scratch:
+    /// the ternary row-block kernels (MLP/LM-head gemms, attention
+    /// projections) and the head-major attention kernels. Default is
+    /// the process-wide `--simd`/`PTQTP_SIMD` mode; output is
+    /// bit-identical either way (DESIGN.md §SIMD-Kernels and
+    /// §Attention-Kernels), so this is a perf/debug knob only.
     pub fn set_simd(&mut self, on: bool) {
         self.gemm.simd = on;
-        self.attn.gemm.simd = on;
+        self.attn.set_simd(on);
     }
 }
 

@@ -1,34 +1,69 @@
-//! KV cache for one sequence: per layer, append-only K/V buffers.
+//! KV cache for one sequence: per layer, append-only K/V buffers in a
+//! **head-major** layout.
 //!
-//! The serving engine pools these (see `coordinator::kv_cache` for the
-//! paged pool with ref-counting); this type is the per-sequence view
-//! the attention kernel consumes.
+//! Each (layer, kv-head) pair owns a contiguous `[len × head_dim]`
+//! block, so every attention kernel streams unit-stride memory: with
+//! GQA, all `n_heads / n_kv_heads` query heads sharing a KV head read
+//! the *same* contiguous block instead of `kv_dim`-strided slices of a
+//! position-interleaved buffer (DESIGN.md §Attention-Kernels has the
+//! byte-offset diagram and the bandwidth math).
+//!
+//! The serving engine pools these (see `coordinator::kv_pool` for the
+//! bounded recycling pool); this type is the per-sequence view the
+//! attention kernels consume.
 
-/// Append-only cache for all layers of one sequence.
+/// Recoverable full-cache signal: an append was requested past
+/// `max_seq`. Surfaced by [`KvCache::try_append`] so the serving
+/// engine can turn capacity exhaustion into a per-request error or
+/// truncation instead of a replica-killing panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheFull {
+    pub max_seq: usize,
+}
+
+impl std::fmt::Display for CacheFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV cache full (max_seq={})", self.max_seq)
+    }
+}
+
+impl std::error::Error for CacheFull {}
+
+/// Append-only cache for all layers of one sequence, head-major.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     pub n_layers: usize,
-    pub kv_dim: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
     pub max_seq: usize,
-    /// k[layer] is a flat (len · kv_dim) buffer.
+    /// k[layer · n_kv_heads + kvh] is a contiguous (len · head_dim)
+    /// block: position `ti`'s key for that head lives at
+    /// `[ti · head_dim .. (ti + 1) · head_dim]`.
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     len: usize,
 }
 
 impl KvCache {
-    pub fn new(n_layers: usize, kv_dim: usize, max_seq: usize) -> KvCache {
+    pub fn new(n_layers: usize, n_kv_heads: usize, head_dim: usize, max_seq: usize) -> KvCache {
+        let blocks = n_layers * n_kv_heads;
         KvCache {
             n_layers,
-            kv_dim,
+            n_kv_heads,
+            head_dim,
             max_seq,
-            k: (0..n_layers).map(|_| Vec::with_capacity(max_seq * kv_dim)).collect(),
-            v: (0..n_layers).map(|_| Vec::with_capacity(max_seq * kv_dim)).collect(),
+            k: (0..blocks).map(|_| Vec::with_capacity(max_seq * head_dim)).collect(),
+            v: (0..blocks).map(|_| Vec::with_capacity(max_seq * head_dim)).collect(),
             len: 0,
         }
     }
 
-    /// Number of cached positions.
+    /// Width of one position's K (or V) across all KV heads.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Number of cached (committed) positions.
     pub fn len(&self) -> usize {
         self.len
     }
@@ -41,29 +76,59 @@ impl KvCache {
         self.len >= self.max_seq
     }
 
-    /// Append one position's K/V for layer `layer`. Multiple positions
-    /// may be staged per layer before a single [`KvCache::commit_n`]
-    /// (the batched prefill path); the classic decode path appends one
+    /// Committed positions still available before the cache is full.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len.min(self.max_seq)
+    }
+
+    #[inline]
+    fn block(&self, layer: usize, kvh: usize) -> usize {
+        debug_assert!(layer < self.n_layers && kvh < self.n_kv_heads);
+        layer * self.n_kv_heads + kvh
+    }
+
+    /// Append one position's K/V for layer `layer` (`k`/`v` are
+    /// `kv_dim` long, `[head0 | head1 | ...]`); each head's chunk goes
+    /// to that head's contiguous block. Multiple positions may be
+    /// staged per layer before a single [`KvCache::commit_n`] (the
+    /// batched prefill path); the classic decode path appends one
     /// position per layer then calls [`KvCache::commit`]. Staged
     /// (uncommitted) positions are already visible through
     /// [`KvCache::keys`]/[`KvCache::values`], which is what lets a
     /// prefill chunk attend to itself causally.
+    ///
+    /// Panics on overflow — callers that plan capacity (the engine)
+    /// guard with [`KvCache::remaining`] or use
+    /// [`KvCache::try_append`] for the recoverable form.
     pub fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
-        debug_assert_eq!(k.len(), self.kv_dim);
-        debug_assert_eq!(v.len(), self.kv_dim);
-        assert!(
-            self.k[layer].len() < self.max_seq * self.kv_dim,
-            "KV cache overflow (max_seq={})",
-            self.max_seq
-        );
-        self.k[layer].extend_from_slice(k);
-        self.v[layer].extend_from_slice(v);
+        if let Err(e) = self.try_append(layer, k, v) {
+            panic!("KV cache overflow ({e})");
+        }
+    }
+
+    /// [`KvCache::append`] returning the recoverable [`CacheFull`]
+    /// signal instead of panicking; the cache is unchanged on `Err`.
+    pub fn try_append(&mut self, layer: usize, k: &[f32], v: &[f32]) -> Result<(), CacheFull> {
+        debug_assert_eq!(k.len(), self.kv_dim());
+        debug_assert_eq!(v.len(), self.kv_dim());
+        if self.staged_len(layer) >= self.max_seq {
+            return Err(CacheFull {
+                max_seq: self.max_seq,
+            });
+        }
+        let hd = self.head_dim;
+        for kvh in 0..self.n_kv_heads {
+            let b = self.block(layer, kvh);
+            self.k[b].extend_from_slice(&k[kvh * hd..(kvh + 1) * hd]);
+            self.v[b].extend_from_slice(&v[kvh * hd..(kvh + 1) * hd]);
+        }
+        Ok(())
     }
 
     /// Staged positions for `layer`: committed length plus any appends
     /// not yet committed.
     pub fn staged_len(&self, layer: usize) -> usize {
-        self.k[layer].len() / self.kv_dim
+        self.k[layer * self.n_kv_heads].len() / self.head_dim
     }
 
     /// Advance the position counter after all layers appended.
@@ -76,19 +141,20 @@ impl KvCache {
     /// prefill chunk at once).
     pub fn commit_n(&mut self, n: usize) {
         self.len += n;
-        for layer in 0..self.n_layers {
-            debug_assert_eq!(self.k[layer].len(), self.len * self.kv_dim);
-            debug_assert_eq!(self.v[layer].len(), self.len * self.kv_dim);
+        for b in 0..self.n_layers * self.n_kv_heads {
+            debug_assert_eq!(self.k[b].len(), self.len * self.head_dim);
+            debug_assert_eq!(self.v[b].len(), self.len * self.head_dim);
         }
     }
 
-    /// K buffer for a layer: `len · kv_dim` values.
-    pub fn keys(&self, layer: usize) -> &[f32] {
-        &self.k[layer]
+    /// K block for one (layer, kv-head): `staged · head_dim` values,
+    /// unit-stride — position `ti`'s key is `[ti·hd .. (ti+1)·hd]`.
+    pub fn keys(&self, layer: usize, kvh: usize) -> &[f32] {
+        &self.k[self.block(layer, kvh)]
     }
 
-    pub fn values(&self, layer: usize) -> &[f32] {
-        &self.v[layer]
+    pub fn values(&self, layer: usize, kvh: usize) -> &[f32] {
+        &self.v[self.block(layer, kvh)]
     }
 
     /// Drop all cached state but keep capacity (sequence reuse).
@@ -103,7 +169,7 @@ impl KvCache {
     pub fn truncate(&mut self, keep: usize) {
         let keep = keep.min(self.len);
         for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
-            buf.truncate(keep * self.kv_dim);
+            buf.truncate(keep * self.head_dim);
         }
         self.len = keep;
     }
@@ -124,7 +190,8 @@ mod tests {
 
     #[test]
     fn append_commit_cycle() {
-        let mut c = KvCache::new(2, 4, 8);
+        // 2 layers, 2 kv-heads × head_dim 2 (kv_dim 4)
+        let mut c = KvCache::new(2, 2, 2, 8);
         for step in 0..3 {
             for layer in 0..2 {
                 let k = vec![step as f32; 4];
@@ -134,40 +201,84 @@ mod tests {
             c.commit();
         }
         assert_eq!(c.len(), 3);
-        assert_eq!(c.keys(0).len(), 12);
-        assert_eq!(c.keys(1)[8], 2.0);
-        assert_eq!(c.values(1)[8], -2.0);
+        assert_eq!(c.kv_dim(), 4);
+        // per-head blocks hold len × head_dim values each
+        assert_eq!(c.keys(0, 0).len(), 6);
+        assert_eq!(c.keys(1, 1).len(), 6);
+        assert_eq!(c.keys(1, 0)[4], 2.0);
+        assert_eq!(c.values(1, 1)[4], -2.0);
+    }
+
+    #[test]
+    fn head_major_blocks_are_contiguous_per_head() {
+        // distinct per-head values must land in distinct contiguous blocks
+        let mut c = KvCache::new(1, 3, 2, 4);
+        for pos in 0..3 {
+            // head h carries value 10·h + pos
+            let k: Vec<f32> = (0..3)
+                .flat_map(|h| [(10 * h + pos) as f32; 2])
+                .collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            c.append(0, &k, &v);
+            c.commit();
+        }
+        for h in 0..3 {
+            let block = c.keys(0, h);
+            assert_eq!(block.len(), 6);
+            for pos in 0..3 {
+                // position ti of head h is the unit-stride slice [ti·hd..]
+                assert_eq!(block[pos * 2], (10 * h + pos) as f32);
+                assert_eq!(block[pos * 2 + 1], (10 * h + pos) as f32);
+                assert_eq!(c.values(0, h)[pos * 2], -((10 * h + pos) as f32));
+            }
+        }
     }
 
     #[test]
     #[should_panic(expected = "overflow")]
     fn overflow_panics() {
-        let mut c = KvCache::new(1, 2, 1);
+        let mut c = KvCache::new(1, 1, 2, 1);
         c.append(0, &[0.0, 0.0], &[0.0, 0.0]);
         c.commit();
         c.append(0, &[1.0, 1.0], &[1.0, 1.0]);
     }
 
     #[test]
+    fn try_append_surfaces_recoverable_cache_full() {
+        let mut c = KvCache::new(1, 1, 2, 1);
+        assert_eq!(c.remaining(), 1);
+        assert!(c.try_append(0, &[0.0, 0.0], &[0.0, 0.0]).is_ok());
+        c.commit();
+        assert_eq!(c.remaining(), 0);
+        // no panic: the full cache reports a typed, recoverable error
+        let err = c.try_append(0, &[1.0, 1.0], &[1.0, 1.0]).unwrap_err();
+        assert_eq!(err, CacheFull { max_seq: 1 });
+        assert!(err.to_string().contains("max_seq=1"));
+        // and the cache is unchanged — still servable
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.keys(0, 0), &[0.0, 0.0]);
+    }
+
+    #[test]
     fn truncate_rolls_back() {
-        let mut c = KvCache::new(1, 2, 8);
+        let mut c = KvCache::new(1, 1, 2, 8);
         for i in 0..4 {
             c.append(0, &[i as f32, 0.0], &[0.0, 0.0]);
             c.commit();
         }
         c.truncate(2);
         assert_eq!(c.len(), 2);
-        assert_eq!(c.keys(0).len(), 4);
+        assert_eq!(c.keys(0, 0).len(), 4);
         // can append again
         c.append(0, &[9.0, 9.0], &[0.0, 0.0]);
         c.commit();
-        assert_eq!(c.keys(0)[4], 9.0);
+        assert_eq!(c.keys(0, 0)[4], 9.0);
     }
 
     #[test]
     fn multi_append_then_commit_n() {
         // batched prefill: stage a whole chunk per layer, commit once
-        let mut c = KvCache::new(2, 2, 8);
+        let mut c = KvCache::new(2, 1, 2, 8);
         for layer in 0..2 {
             for p in 0..3 {
                 c.append(layer, &[p as f32, 0.0], &[0.0, p as f32]);
@@ -176,8 +287,8 @@ mod tests {
         }
         assert_eq!(c.len(), 0, "not yet committed");
         // staged K/V already visible (prefill chunk self-attention)
-        assert_eq!(c.keys(0).len(), 6);
-        assert_eq!(c.keys(1)[4], 2.0);
+        assert_eq!(c.keys(0, 0).len(), 6);
+        assert_eq!(c.keys(1, 0)[4], 2.0);
         c.commit_n(3);
         assert_eq!(c.len(), 3);
         // and the cache keeps working with classic single commits
@@ -190,7 +301,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "overflow")]
     fn staged_overflow_panics() {
-        let mut c = KvCache::new(1, 2, 2);
+        let mut c = KvCache::new(1, 1, 2, 2);
         c.append(0, &[0.0; 2], &[0.0; 2]);
         c.append(0, &[0.0; 2], &[0.0; 2]);
         c.append(0, &[0.0; 2], &[0.0; 2]); // third staged position > max_seq
@@ -198,11 +309,12 @@ mod tests {
 
     #[test]
     fn reset_reuses() {
-        let mut c = KvCache::new(1, 2, 4);
+        let mut c = KvCache::new(1, 1, 2, 4);
         c.append(0, &[1.0, 1.0], &[1.0, 1.0]);
         c.commit();
         c.reset();
         assert!(c.is_empty());
         assert!(!c.is_full());
+        assert_eq!(c.remaining(), 4);
     }
 }

@@ -12,6 +12,7 @@
 //! config sidecar; [`transformer::Transformer::load`] reads both.
 
 pub mod attention;
+pub mod attn_kernels;
 pub mod batch;
 pub mod config;
 pub mod kv;
@@ -20,9 +21,9 @@ pub mod norm;
 pub mod rope;
 pub mod transformer;
 
-pub use attention::DecodeScratch;
+pub use attention::{AttnScratch, DecodeScratch};
 pub use batch::{ForwardBatch, ForwardScratch};
 pub use config::ModelConfig;
-pub use kv::KvCache;
+pub use kv::{CacheFull, KvCache};
 pub use linear::QuantLinear;
 pub use transformer::Transformer;

@@ -14,11 +14,17 @@ impl Rope {
     pub fn new(head_dim: usize, max_seq: usize, theta: f32) -> Rope {
         assert!(head_dim % 2 == 0, "RoPE needs even head_dim");
         let half = head_dim / 2;
+        // frequencies depend only on the pair index, so the powf table
+        // is computed once (`half` calls) instead of max_seq × half
+        // times — same inputs to the same powf, so the cos/sin tables
+        // are bit-identical to the unhoisted form
+        let freqs: Vec<f64> = (0..half)
+            .map(|i| 1.0 / (theta as f64).powf(2.0 * i as f64 / head_dim as f64))
+            .collect();
         let mut cos = Vec::with_capacity(max_seq * half);
         let mut sin = Vec::with_capacity(max_seq * half);
         for pos in 0..max_seq {
-            for i in 0..half {
-                let freq = 1.0 / (theta as f64).powf(2.0 * i as f64 / head_dim as f64);
+            for &freq in &freqs {
                 let angle = pos as f64 * freq;
                 cos.push(angle.cos() as f32);
                 sin.push(angle.sin() as f32);
@@ -102,6 +108,23 @@ mod tests {
                 rope.apply(&mut qp, p);
                 rope.apply(&mut vpk, p + k);
                 assert!((dot(&qp, &vpk) - d_ref).abs() < 1e-3, "p={p} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn hoisted_freq_table_matches_per_position_recompute() {
+        // the table build computes each frequency once; entries must be
+        // bitwise what the per-(pos, i) recompute produces
+        let (head_dim, max_seq, theta) = (8usize, 16usize, 10_000.0f32);
+        let rope = Rope::new(head_dim, max_seq, theta);
+        let half = head_dim / 2;
+        for pos in [0usize, 1, 7, 15] {
+            for i in 0..half {
+                let freq = 1.0 / (theta as f64).powf(2.0 * i as f64 / head_dim as f64);
+                let angle = pos as f64 * freq;
+                assert_eq!(rope.cos[pos * half + i], angle.cos() as f32);
+                assert_eq!(rope.sin[pos * half + i], angle.sin() as f32);
             }
         }
     }

@@ -127,7 +127,8 @@ impl Transformer {
     pub fn new_cache(&self) -> KvCache {
         KvCache::new(
             self.config.n_layers,
-            self.config.kv_dim(),
+            self.config.n_kv_heads,
+            self.config.head_dim(),
             self.config.max_seq,
         )
     }

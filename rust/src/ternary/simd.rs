@@ -104,6 +104,19 @@ pub fn detected_lanes() -> usize {
     if avx2_available() { 8 } else { 4 }
 }
 
+/// Effective kernel lane width for a per-scratch SIMD flag: the
+/// detected width when the flag is on, scalar (1) otherwise. Shared by
+/// the ternary dispatchers and the attention tier
+/// (`model::attn_kernels`) so every kernel family resolves the flag
+/// the same way.
+pub fn lanes_for(simd_flag: bool) -> usize {
+    if simd_flag {
+        detected_lanes()
+    } else {
+        1
+    }
+}
+
 /// Human name of the active kernel tier (dispatch table in
 /// DESIGN.md §SIMD-Kernels).
 pub fn tier_name() -> &'static str {

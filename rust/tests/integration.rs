@@ -424,6 +424,131 @@ fn engine_simd_on_off_token_for_token() {
     }
 }
 
+/// Head-major attention tier parity: for every GQA shape (equal,
+/// grouped, odd-ratio), ragged and chunk-exact head dims, horizons
+/// with `t % lanes != 0` tails, lane widths {scalar, portable-4,
+/// 8-wide, detected} and thread counts {1, 2}, the tiered
+/// `attend_rows` must reproduce the scalar `attend_one` **bitwise** —
+/// the attention mirror of the ternary SIMD parity matrix.
+#[test]
+fn attention_simd_threads_parity() {
+    use ptqtp::model::attention::{Attention, AttnScratch};
+    use ptqtp::model::{KvCache, QuantLinear};
+    use ptqtp::tensor::Matrix;
+    use ptqtp::threads::Pool;
+
+    let mut rng = Rng::new(0xA77E);
+    let mk_cache = |kv_heads: usize, hd: usize, t: usize, rng: &mut Rng| {
+        let mut c = KvCache::new(1, kv_heads, hd, t.max(1));
+        let kv_dim = kv_heads * hd;
+        for _ in 0..t {
+            let k: Vec<f32> = (0..kv_dim).map(|_| rng.normal()).collect();
+            let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal()).collect();
+            c.append(0, &k, &v);
+            c.commit();
+        }
+        c
+    };
+    for &(heads, kv_heads) in &[(8usize, 8usize), (8, 2), (6, 3)] {
+        // hd=10: ragged head-dim tail for both the 4-chunk score fold
+        // and the 8-wide V-sum; hd=64: chunk-exact
+        for &hd in &[10usize, 64] {
+            let q_dim = heads * hd;
+            // projections are not exercised by the attend stage
+            let attn = Attention {
+                wq: QuantLinear::dense(Matrix::zeros(1, 1)),
+                wk: QuantLinear::dense(Matrix::zeros(1, 1)),
+                wv: QuantLinear::dense(Matrix::zeros(1, 1)),
+                wo: QuantLinear::dense(Matrix::zeros(1, 1)),
+                n_heads: heads,
+                n_kv_heads: kv_heads,
+                head_dim: hd,
+            };
+            for &t in &[1usize, 3, 64, 257] {
+                // two rows with different horizons over two caches
+                let t2 = t.div_ceil(2);
+                let mut c0 = mk_cache(kv_heads, hd, t, &mut rng);
+                let mut c1 = mk_cache(kv_heads, hd, t2, &mut rng);
+                let q = Matrix::randn(2, q_dim, 1.0, &mut rng);
+                let ts = [t, t2];
+                let cof = [0usize, 1];
+                let mut scores = Vec::new();
+                let mut expect = Matrix::zeros(2, q_dim);
+                attn.attend_one(q.row(0), &c0, 0, t, &mut scores, expect.row_mut(0));
+                attn.attend_one(q.row(1), &c1, 0, t2, &mut scores, expect.row_mut(1));
+                // None = detected width; Some(8) exercises the portable
+                // 8-lane block on machines without AVX2
+                for lanes in [Some(1usize), Some(4), Some(8), None] {
+                    for threads in [1usize, 2] {
+                        let mut scratch = AttnScratch::default();
+                        scratch.set_simd(true);
+                        scratch.set_lanes(lanes);
+                        scratch.set_pool(Pool::new(threads));
+                        let mut out = Matrix::zeros(2, q_dim);
+                        let refs: Vec<&mut KvCache> = vec![&mut c0, &mut c1];
+                        attn.attend_rows(&q, &ts, &cof, &refs, 0, &mut scratch, &mut out);
+                        assert_eq!(
+                            out.data, expect.data,
+                            "heads={heads}/{kv_heads} hd={hd} t={t} lanes={lanes:?} threads={threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Long-context serving with the attention SIMD tier on vs off (and
+/// threads 1 vs 2) must be token-for-token identical through
+/// `ServeEngine::step` — prompts long enough that the attend stage
+/// dominates and its SIMD blocks + scalar tails + head-parallel spans
+/// all genuinely run.
+#[test]
+fn engine_attention_simd_long_context_token_for_token() {
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = 32;
+    cfg.max_seq = 288;
+    let mut rng = Rng::new(71);
+    let mut model = Transformer::random(cfg, &mut rng);
+    model.quantize_with(
+        quant::by_name("ptqtp", 128).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    let run = |simd_on: bool, threads: usize| {
+        let mut e = ServeEngine::with_threads(model.clone(), Default::default(), threads);
+        e.set_simd(simd_on);
+        for i in 0..3u64 {
+            let prompt: Vec<u32> = (0..200 + i as u32 * 23)
+                .map(|j| (j * 7 + 3 + i as u32) % 32)
+                .collect();
+            let mut params = SamplingParams {
+                max_new_tokens: 6,
+                stop_token: None,
+                ..Default::default()
+            };
+            if i == 1 {
+                params.temperature = 0.6;
+                params.seed = 91;
+            }
+            e.submit(Request::new(i, prompt, params));
+        }
+        let mut out = e.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    let base = run(false, 1);
+    assert!(base.iter().all(|t| t.len() == 6), "all requests generated");
+    for threads in [1usize, 2] {
+        for simd_on in [false, true] {
+            assert_eq!(
+                run(simd_on, threads),
+                base,
+                "attention simd={simd_on} threads={threads} diverged at long context"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Packed checkpoints (PTW2): quantize once, serve many
 // ---------------------------------------------------------------------
