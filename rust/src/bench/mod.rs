@@ -5,16 +5,18 @@
 //! reporting; the `table*` / `fig*` submodules regenerate every exhibit
 //! in the paper's evaluation (see DESIGN.md §5 for the index) and are
 //! invoked through `ptqtp bench --table N` / `--fig N` or `cargo bench`.
-//! [`batched`] (`--batched`), [`kernels`] (`--kernels`), and
-//! [`attention`] (`--attention`) are the perf-trajectory benches:
-//! fused-batch throughput + thread scaling, the ternary kernel-tier
-//! race, and the head-major attention-tier race — all behind
+//! [`batched`] (`--batched`), [`kernels`] (`--kernels`),
+//! [`attention`] (`--attention`), and [`prefix`] (`--prefix`) are the
+//! perf-trajectory benches: fused-batch throughput + thread scaling,
+//! the ternary kernel-tier race, the head-major attention-tier race,
+//! and the paged-KV prefix-cache cold/warm race — all behind
 //! bit-identity parity gates.
 
 pub mod attention;
 pub mod batched;
 pub mod harness;
 pub mod kernels;
+pub mod prefix;
 pub mod workload;
 
 pub mod fig1;

@@ -100,6 +100,23 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Optional unsigned-integer option: `None` when absent (caller
+    /// falls back to its env/default chain), `Some(n)` when present and
+    /// parseable, and a helpful error otherwise — unlike [`usize_or`],
+    /// which silently swallows typos into the default. Used by
+    /// `--page-size` / `--kv-pages`, where a mis-typed value must not
+    /// quietly become a different cache geometry.
+    ///
+    /// [`usize_or`]: Args::usize_or
+    pub fn usize_opt(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                anyhow::anyhow!("invalid --{name} '{v}' (expected an unsigned integer)")
+            }),
+        }
+    }
+
     /// Worker-lane count for the row-parallel kernels. Resolution
     /// order: `--threads N` > `PTQTP_THREADS` env var > available
     /// cores; `1` forces the exact sequential path (the documented
@@ -213,6 +230,18 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("--simd") && e.contains("auto|on|off"), "{e}");
+    }
+
+    #[test]
+    fn usize_opt_distinguishes_absent_from_invalid() {
+        assert_eq!(parse(&["serve"]).usize_opt("page-size").unwrap(), None);
+        let a = parse(&["serve", "--page-size", "64"]);
+        assert_eq!(a.usize_opt("page-size").unwrap(), Some(64));
+        let e = parse(&["serve", "--page-size", "sixty"])
+            .usize_opt("page-size")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--page-size") && e.contains("'sixty'"), "{e}");
     }
 
     #[test]

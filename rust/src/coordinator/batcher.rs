@@ -56,6 +56,14 @@ impl StepPlan {
 
 /// Plan one step given per-slot state snapshots.
 /// `slots[i] = (in_prefill, remaining_prompt, has_pending_logits)`.
+///
+/// The plan is advisory on capacity: the engine re-checks each planned
+/// slot against the paged KV allocator (`KvCache::reserve`) when
+/// building the batch, and a slot that cannot get pages is preempted —
+/// released and re-enqueued for recompute — rather than planned around
+/// here, keeping the planner oblivious to page accounting. A resumed
+/// sequence's recompute tokens ride the normal prefill budget:
+/// `remaining_prompt` covers prompt + prior generation for it.
 pub fn plan_step(policy: &BatchPolicy, slots: &[(bool, usize, bool)]) -> StepPlan {
     let mut plan = StepPlan::default();
     let mut budget = policy.prefill_token_budget;

@@ -10,19 +10,37 @@
 //! state performs no per-token heap allocation.
 
 use super::batcher::{plan_step, BatchPolicy};
-use super::kv_pool::KvPool;
+use super::kv_pool::{KvPool, PagedKvOpts};
 use super::metrics::Metrics;
+use super::prefix_cache::PrefixCache;
 use super::request::{FinishReason, Request, Response, SequenceState};
 use crate::model::{ForwardBatch, ForwardScratch, KvCache, Transformer};
 use crate::rng::Rng;
 use std::collections::VecDeque;
+
+/// A preempted sequence awaiting re-admission: its pages are gone, but
+/// the tokens generated so far are kept and recomputed through the
+/// prefill path on resume (usually mostly adopted from the prefix
+/// tree), after which decoding continues with identical output.
+#[derive(Debug)]
+struct PreemptedSeq {
+    request: Request,
+    generated: Vec<u32>,
+    first_token_at: Option<std::time::Instant>,
+}
 
 /// One model replica + its scheduling state.
 pub struct ServeEngine {
     pub model: Transformer,
     pub policy: BatchPolicy,
     pool: KvPool,
+    /// Radix prefix cache over shared pages (None with
+    /// `--prefix-cache off` — the exact-legacy escape hatch).
+    prefix: Option<PrefixCache>,
     waiting: VecDeque<Request>,
+    /// Preemption victims awaiting re-admission (before `waiting` —
+    /// they were admitted first).
+    preempted_q: VecDeque<PreemptedSeq>,
     running: Vec<SequenceState>,
     pub metrics: Metrics,
     /// Fused batch under construction (reused across steps).
@@ -43,7 +61,12 @@ impl ServeEngine {
     /// [`ServeEngine::with_threads`] for an explicit lane count;
     /// `with_threads(_, _, 1)` forces the exact sequential path.
     pub fn new(model: Transformer, policy: BatchPolicy) -> ServeEngine {
-        Self::with_pool(model, policy, crate::threads::Pool::global().clone())
+        Self::with_pool_opts(
+            model,
+            policy,
+            crate::threads::Pool::global().clone(),
+            PagedKvOpts::default(),
+        )
     }
 
     /// Engine whose model pass runs on its own `threads`-lane pool.
@@ -51,20 +74,42 @@ impl ServeEngine {
     /// row-parallel kernels preserve per-row FP order); `threads == 1`
     /// spawns nothing and is the documented debugging escape hatch.
     pub fn with_threads(model: Transformer, policy: BatchPolicy, threads: usize) -> ServeEngine {
-        Self::with_pool(model, policy, crate::threads::Pool::new(threads))
+        Self::with_pool_opts(
+            model,
+            policy,
+            crate::threads::Pool::new(threads),
+            PagedKvOpts::default(),
+        )
     }
 
-    fn with_pool(
+    /// [`ServeEngine::with_threads`] with explicit paged-KV options
+    /// (page size, prefix cache on/off, page budget). Token output is
+    /// bit-identical for every configuration — paging, prefix adoption,
+    /// and preemption are capacity mechanisms, not numeric ones.
+    pub fn with_opts(
+        model: Transformer,
+        policy: BatchPolicy,
+        threads: usize,
+        kv: PagedKvOpts,
+    ) -> ServeEngine {
+        Self::with_pool_opts(model, policy, crate::threads::Pool::new(threads), kv)
+    }
+
+    fn with_pool_opts(
         model: Transformer,
         policy: BatchPolicy,
         worker_pool: crate::threads::Pool,
+        kv: PagedKvOpts,
     ) -> ServeEngine {
-        let pool = KvPool::for_model(&model.config, policy.max_running);
+        let pool = KvPool::for_model_with(&model.config, policy.max_running, &kv);
+        let prefix = kv.prefix_cache.then(|| PrefixCache::new(pool.page_size()));
         ServeEngine {
             model,
             policy,
             pool,
+            prefix,
             waiting: VecDeque::new(),
+            preempted_q: VecDeque::new(),
             running: Vec::new(),
             metrics: Metrics::default(),
             batch: ForwardBatch::new(),
@@ -108,17 +153,28 @@ impl ServeEngine {
     }
 
     pub fn pending(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting.len() + self.preempted_q.len() + self.running.len()
     }
 
     pub fn running(&self) -> usize {
         self.running.len()
     }
 
-    /// Admit from the waiting queue while KV caches are available.
-    /// Returns immediate rejections (e.g. over-long prompts).
+    /// Admit while KV caches are available: preemption victims first
+    /// (they were admitted earliest), then the waiting queue. Returns
+    /// immediate rejections (e.g. over-long prompts).
     fn admit(&mut self) -> Vec<Response> {
         let mut rejected = Vec::new();
+        while self.running.len() < self.policy.max_running {
+            let Some(p) = self.preempted_q.pop_front() else { break };
+            let Some(cache) = self.pool.acquire() else {
+                self.preempted_q.push_front(p);
+                break;
+            };
+            let mut seq = SequenceState::resume(p.request, p.generated, cache, p.first_token_at);
+            self.adopt_prefix(&mut seq);
+            self.running.push(seq);
+        }
         while self.running.len() < self.policy.max_running {
             let Some(req) = self.waiting.front() else { break };
             // reject over-long prompts outright
@@ -137,9 +193,98 @@ impl ServeEngine {
             }
             let Some(cache) = self.pool.acquire() else { break };
             let req = self.waiting.pop_front().unwrap();
-            self.running.push(SequenceState::new(req, cache));
+            let mut seq = SequenceState::new(req, cache);
+            self.adopt_prefix(&mut seq);
+            self.running.push(seq);
         }
         rejected
+    }
+
+    /// Walk the radix tree for the sequence's prefill tokens and adopt
+    /// the longest page-aligned cached prefix: refcount bumps only —
+    /// zero bytes copied, zero prefill rows for the adopted span.
+    fn adopt_prefix(&mut self, seq: &mut SequenceState) {
+        let Some(pc) = self.prefix.as_mut() else { return };
+        debug_assert!(self.pool.store().ptr_eq(seq.cache.store()));
+        self.metrics.prefix_lookups += 1;
+        let pages = if seq.generated.is_empty() {
+            pc.lookup(&seq.request.prompt)
+        } else {
+            // resumed sequence: the recompute stream is prompt + prior
+            // generation, all adoptable
+            let mut tokens =
+                Vec::with_capacity(seq.request.prompt.len() + seq.generated.len());
+            tokens.extend_from_slice(&seq.request.prompt);
+            tokens.extend_from_slice(&seq.generated);
+            pc.lookup(&tokens)
+        };
+        if pages.is_empty() {
+            return;
+        }
+        let adopted = pages.len() * self.pool.page_size();
+        seq.cache.adopt_pages(pages);
+        seq.prefill_cursor = adopted;
+        self.metrics.prefix_hits += 1;
+        self.metrics.adopted_tokens += adopted as u64;
+    }
+
+    /// Reserve pages so slot `slot` can append `n` positions this step,
+    /// evicting stale prefix-tree pages under pressure. `false` means
+    /// the pool is truly exhausted — the caller preempts.
+    fn try_reserve(&mut self, slot: usize, n: usize) -> bool {
+        loop {
+            match self.running[slot].cache.reserve(n) {
+                Ok(()) => return true,
+                Err(_) => {
+                    let evicted = match self.prefix.as_mut() {
+                        Some(pc) => pc.evict_one(self.pool.store()),
+                        None => false,
+                    };
+                    if !evicted {
+                        return false;
+                    }
+                    self.metrics.prefix_evicted_pages += 1;
+                }
+            }
+        }
+    }
+
+    /// Choose what page exhaustion means for slot `slot`: if any other
+    /// running sequence holds pages, releasing this one frees capacity
+    /// ⇒ preempt (recoverable, recomputed later). If this sequence is
+    /// alone, recompute would hit the same wall ⇒ retire with
+    /// `CacheOverflow` — which also guarantees the preemption loop
+    /// terminates (every round either another sequence finishes with
+    /// its pages freed, or the lone survivor overflows).
+    fn mark_preempt(&mut self, slot: usize) {
+        let others_hold_pages = self
+            .running
+            .iter()
+            .enumerate()
+            .any(|(i, s)| i != slot && s.cache.pages_held() > 0);
+        let seq = &mut self.running[slot];
+        if others_hold_pages {
+            seq.preempted = true;
+        } else {
+            seq.overflowed = true;
+        }
+    }
+
+    /// Donate the sequence's fully-committed, page-aligned prompt pages
+    /// to the prefix tree (refcount bumps — the pages stay live after
+    /// the cache releases them). Called at retirement *and* preemption:
+    /// a victim's donated prompt is what makes its recompute cheap.
+    fn donate_prompt(&mut self, s: &SequenceState) {
+        let Some(pc) = self.prefix.as_mut() else { return };
+        if !self.pool.store().ptr_eq(s.cache.store()) {
+            return; // foreign cache (tests inject these) — not ours to park
+        }
+        let ps = self.pool.page_size();
+        let n = (s.request.prompt.len().min(s.cache.len()) / ps) * ps;
+        if n == 0 {
+            return;
+        }
+        pc.insert(&s.request.prompt[..n], s.cache.shared_pages(n));
     }
 
     /// One engine iteration: admit, plan, fuse all planned prefill
@@ -179,26 +324,35 @@ impl ServeEngine {
         for slot in 0..self.running.len() {
             let mut take = prefill_take[slot];
             if take > 0 {
-                let seq = &mut self.running[slot];
                 // defensive capacity clamp: the KV cache surfaces a
                 // recoverable full signal (`remaining`), so a
                 // planner/capacity disagreement — e.g. a request
                 // admitted past capacity by a buggy scheduler — fails
                 // this request with CacheOverflow instead of hitting
                 // the append panic and killing the replica
-                take = take.min(seq.cache.remaining());
+                take = take.min(self.running[slot].cache.remaining());
                 if take == 0 {
-                    seq.overflowed = true;
+                    self.running[slot].overflowed = true;
                     continue;
                 }
+                // reserve pages up front so the appends inside the
+                // fused pass can never fail; exhaustion here means
+                // preemption, decided before any row is built
+                if !self.try_reserve(slot, take) {
+                    self.mark_preempt(slot);
+                    continue;
+                }
+                let seq = &mut self.running[slot];
                 let ci = n_caches;
                 n_caches += 1;
                 participates[slot] = true;
                 let base = seq.cache.len();
                 for j in 0..take {
-                    let tok = seq.request.prompt[seq.prefill_cursor];
+                    let tok = seq.prefill_token(seq.prefill_cursor);
                     seq.prefill_cursor += 1;
-                    // prompt fully consumed ⇒ this row's logits predict token 1
+                    // prefill fully consumed ⇒ this row's logits predict
+                    // the next (for resumed sequences: the first token
+                    // *after* the recomputed generation)
                     let need = !seq.in_prefill();
                     if need {
                         self.logit_slots.push(slot);
@@ -207,6 +361,21 @@ impl ServeEngine {
                 }
                 self.metrics.prefill_tokens += take as u64;
             } else if decode_slot[slot] {
+                let cache_full = {
+                    let c = &self.running[slot].cache;
+                    c.len() + 1 >= c.max_seq
+                };
+                // a continuation row needs one reserved position; when
+                // the position ceiling already ends the sequence there
+                // is nothing to reserve. Preempt *before* sampling: the
+                // pending logits die with the victim, and the resumed
+                // recompute regenerates them bitwise before sampling
+                // the same token (the per-step RNG is keyed by
+                // generated.len(), unchanged by preemption).
+                if !cache_full && !self.try_reserve(slot, 1) {
+                    self.mark_preempt(slot);
+                    continue;
+                }
                 let seq = &mut self.running[slot];
                 let logits = seq.pending_logits.take().expect("planned decode without logits");
                 let next = sample(&logits, &seq.request.params, seq.generated.len(), &mut self.prob_buf);
@@ -218,7 +387,6 @@ impl ServeEngine {
                 self.metrics.decode_tokens += 1;
                 let stop = Some(next) == seq.request.params.stop_token;
                 let out_of_budget = seq.budget_left() == 0;
-                let cache_full = seq.cache.len() + 1 >= seq.cache.max_seq;
                 if !(stop || out_of_budget || cache_full) {
                     let ci = n_caches;
                     n_caches += 1;
@@ -253,15 +421,33 @@ impl ServeEngine {
             }
         }
 
-        // --- retire finished
+        // --- retire preempted + finished
         let mut i = 0;
         while i < self.running.len() {
+            if self.running[i].preempted {
+                let mut s = self.running.swap_remove(i);
+                if let Some(buf) = s.pending_logits.take() {
+                    self.logit_pool.push(buf);
+                }
+                // park the prompt pages in the tree first: the victim's
+                // own recompute is the likeliest next adopter
+                self.donate_prompt(&s);
+                self.pool.release(s.cache);
+                self.metrics.preemptions += 1;
+                self.preempted_q.push_back(PreemptedSeq {
+                    request: s.request,
+                    generated: s.generated,
+                    first_token_at: s.first_token_at,
+                });
+                continue;
+            }
             let finished = {
                 let s = &self.running[i];
                 s.overflowed || (!s.in_prefill() && s.pending_logits.is_none())
             };
             if finished {
                 let s = self.running.swap_remove(i);
+                self.donate_prompt(&s);
                 self.pool.release(s.cache);
                 let last = s.generated.last().copied();
                 let stop_hit = last.is_some() && last == s.request.params.stop_token;
@@ -293,6 +479,14 @@ impl ServeEngine {
                 i += 1;
             }
         }
+
+        // --- refresh page-pool gauges for the serve-log summary
+        let ps = self.pool.stats();
+        self.metrics.pages_in_use = ps.live;
+        self.metrics.pages_free = ps.free;
+        self.metrics.pages_peak = ps.peak_live;
+        self.metrics.page_budget = ps.budget.unwrap_or(0);
+        self.metrics.cow_pages = ps.cow_pages;
         done
     }
 
@@ -564,6 +758,110 @@ mod tests {
         assert_eq!(out[1].finish, FinishReason::CacheOverflow);
         assert!(out[1].tokens.is_empty(), "prompt never finished prefill");
         assert_eq!(e.running(), 0, "replica still alive and drained");
+    }
+
+    #[test]
+    fn forced_preemption_completes_with_identical_output() {
+        // ISSUE 6 acceptance: a page budget too small for the full
+        // batch forces ≥1 preemption, yet every request completes with
+        // output identical to the unconstrained run
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(41);
+        let model = Transformer::random(cfg, &mut rng);
+        let policy = BatchPolicy {
+            max_running: 3,
+            prefill_token_budget: 16,
+            fcfs_prefill: true,
+        };
+        let submit = |e: &mut ServeEngine| {
+            for i in 0..6u64 {
+                // 10-token prompts + 8 generated ⇒ 18 positions ⇒ 3
+                // pages of 8 per sequence at full length
+                let prompt: Vec<u32> = (0..10).map(|j| 1 + ((i as u32 + j) % 30)).collect();
+                e.submit(req(i, prompt, 8));
+            }
+        };
+        let mut reference = ServeEngine::with_threads(model.clone(), policy, 1);
+        submit(&mut reference);
+        let mut want = reference.run_to_completion();
+        want.sort_by_key(|r| r.id);
+
+        // 4 pages shared by 3 running sequences needing up to 3 each
+        let kv = PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: Some(4),
+        };
+        let mut tight = ServeEngine::with_opts(model, policy, 1, kv);
+        submit(&mut tight);
+        let mut got = tight.run_to_completion();
+        got.sort_by_key(|r| r.id);
+
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.tokens, w.tokens, "req {} differs after preemption", g.id);
+            assert_eq!(g.finish, w.finish, "req {}", g.id);
+        }
+        assert!(
+            tight.metrics.preemptions > 0,
+            "budget of 4 pages must force at least one preemption"
+        );
+        assert_eq!(tight.running(), 0);
+        assert_eq!(tight.pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn prefix_adoption_skips_prefill_compute() {
+        // two waves of the same prompt: the second adopts the donated
+        // prompt pages and prefills only the tail — with identical
+        // tokens (the adopted pages are the same physical bytes)
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(43);
+        let model = Transformer::random(cfg, &mut rng);
+        let policy = BatchPolicy {
+            max_running: 2,
+            prefill_token_budget: 32,
+            fcfs_prefill: true,
+        };
+        let prompt: Vec<u32> = (0..17).map(|j| 1 + (j % 29)).collect();
+        let kv = PagedKvOpts {
+            page_size: 4,
+            prefix_cache: true,
+            page_budget: None,
+        };
+        let mut e = ServeEngine::with_opts(model.clone(), policy, 1, kv);
+        e.submit(req(1, prompt.clone(), 4));
+        let cold = e.run_to_completion();
+        let cold_prefill = e.metrics.prefill_tokens;
+        assert_eq!(e.metrics.adopted_tokens, 0, "nothing cached yet");
+
+        e.submit(req(2, prompt.clone(), 4));
+        let warm = e.run_to_completion();
+        let warm_prefill = e.metrics.prefill_tokens - cold_prefill;
+        // 17-token prompt, page 4 ⇒ 4 pages adopted, 1 token prefilled
+        assert_eq!(e.metrics.adopted_tokens, 16);
+        assert_eq!(warm_prefill, 1);
+        assert_eq!(cold[0].tokens, warm[0].tokens, "adoption must not change output");
+        assert_eq!(e.metrics.prefix_hits, 1);
+        assert_eq!(e.metrics.prefix_lookups, 2);
+
+        // legacy escape hatch produces the same tokens with no sharing
+        let legacy_kv = PagedKvOpts {
+            page_size: 48,
+            prefix_cache: false,
+            page_budget: None,
+        };
+        let mut l = ServeEngine::with_opts(model, policy, 1, legacy_kv);
+        l.submit(req(3, prompt, 4));
+        let legacy = l.run_to_completion();
+        assert_eq!(legacy[0].tokens, cold[0].tokens);
+        assert_eq!(l.metrics.adopted_tokens, 0);
+        assert_eq!(l.metrics.prefix_lookups, 0);
     }
 
     #[test]

@@ -1,13 +1,54 @@
-//! KV-cache pool: bounded, recycling allocator for per-sequence caches.
+//! KV-cache pool: page-granular allocator for per-sequence caches.
 //!
-//! Serving engines live or die on cache memory management; this pool
-//! bounds the number of resident caches (= max concurrent sequences),
-//! recycles freed caches without reallocation, and tracks watermarks
-//! for the metrics endpoint.
+//! Serving engines live or die on cache memory management. Since the
+//! paged refactor the pool no longer recycles whole `max_seq` caches —
+//! it hands out thin paged [`KvCache`]s that draw fixed-size pages from
+//! one shared [`PageStore`], so replica KV memory is bounded and
+//! recycled **in pages**: a sequence that generates 40 tokens holds one
+//! 64-position page, not a whole `max_seq` allocation, and freed pages
+//! are reused by any sequence (or by the radix prefix cache, which
+//! parks donated prompt pages in the same store).
+//!
+//! `capacity` still bounds concurrent sequences (admission control);
+//! the page budget bounds bytes. The default budget — `capacity ×
+//! ⌈max_seq / page_size⌉` pages — can never starve running sequences
+//! on its own (it is exactly the legacy worst case), so preemption only
+//! triggers under an explicit tighter `--kv-pages` budget or when the
+//! prefix tree's parked pages are not yet evicted.
 
-use crate::model::KvCache;
+use crate::model::kv::{KvCache, PageStats, PageStore};
 
-/// Bounded pool of KV caches (head-major layout — see `model::kv`).
+/// Default positions per KV page. Must be ≥ the widest attention lane
+/// kernel (8) so lane blocks never straddle a page; 64 amortizes
+/// page-chain overhead while keeping fragmentation (≤ 1 partial page
+/// per sequence) small.
+pub const DEFAULT_PAGE_SIZE: usize = 64;
+
+/// Knobs for the paged KV allocator, resolved from
+/// `--page-size`/`PTQTP_PAGE_SIZE`, `--prefix-cache`, and `--kv-pages`.
+#[derive(Clone, Copy, Debug)]
+pub struct PagedKvOpts {
+    /// Positions per page (clamped to `[1, max_seq]` per cache).
+    pub page_size: usize,
+    /// Enable the radix prefix cache (`--prefix-cache off` is the
+    /// exact-legacy escape hatch: nothing shared, nothing parked).
+    pub prefix_cache: bool,
+    /// Page budget override; `None` = `capacity × ⌈max_seq/page_size⌉`
+    /// (the legacy worst case — never binding for running sequences).
+    pub page_budget: Option<usize>,
+}
+
+impl Default for PagedKvOpts {
+    fn default() -> PagedKvOpts {
+        PagedKvOpts {
+            page_size: DEFAULT_PAGE_SIZE,
+            prefix_cache: true,
+            page_budget: None,
+        }
+    }
+}
+
+/// Pool of paged KV caches over one shared, budgeted [`PageStore`].
 #[derive(Debug)]
 pub struct KvPool {
     n_layers: usize,
@@ -15,13 +56,16 @@ pub struct KvPool {
     head_dim: usize,
     max_seq: usize,
     capacity: usize,
-    free: Vec<KvCache>,
+    page_size: usize,
+    store: PageStore,
     outstanding: usize,
     /// High-water mark of simultaneously outstanding caches.
     pub peak_outstanding: usize,
 }
 
 impl KvPool {
+    /// Pool with the default paged options (page size
+    /// [`DEFAULT_PAGE_SIZE`], default budget).
     pub fn new(
         n_layers: usize,
         n_kv_heads: usize,
@@ -29,53 +73,88 @@ impl KvPool {
         max_seq: usize,
         capacity: usize,
     ) -> KvPool {
+        KvPool::with_opts(
+            n_layers,
+            n_kv_heads,
+            head_dim,
+            max_seq,
+            capacity,
+            &PagedKvOpts::default(),
+        )
+    }
+
+    pub fn with_opts(
+        n_layers: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        capacity: usize,
+        opts: &PagedKvOpts,
+    ) -> KvPool {
+        let page_size = opts.page_size.min(max_seq).max(1);
+        let budget = opts
+            .page_budget
+            .unwrap_or_else(|| capacity * max_seq.div_ceil(page_size).max(1));
         KvPool {
             n_layers,
             n_kv_heads,
             head_dim,
             max_seq,
             capacity,
-            free: Vec::with_capacity(capacity),
+            page_size,
+            store: PageStore::for_geometry(n_layers, n_kv_heads, head_dim, page_size, Some(budget)),
             outstanding: 0,
             peak_outstanding: 0,
         }
     }
 
-    /// For a model configuration.
+    /// For a model configuration (default paged options).
     pub fn for_model(config: &crate::model::ModelConfig, capacity: usize) -> KvPool {
-        KvPool::new(
+        KvPool::for_model_with(config, capacity, &PagedKvOpts::default())
+    }
+
+    pub fn for_model_with(
+        config: &crate::model::ModelConfig,
+        capacity: usize,
+        opts: &PagedKvOpts,
+    ) -> KvPool {
+        KvPool::with_opts(
             config.n_layers,
             config.n_kv_heads,
             config.head_dim(),
             config.max_seq,
             capacity,
+            opts,
         )
     }
 
     /// Try to acquire a cache; `None` when the pool is exhausted
-    /// (admission control backpressure).
+    /// (admission control backpressure). The cache holds no pages yet —
+    /// pages are allocated lazily by `KvCache::reserve`/append, so an
+    /// idle admitted sequence costs nothing.
     pub fn acquire(&mut self) -> Option<KvCache> {
         if self.outstanding >= self.capacity {
             return None;
         }
         self.outstanding += 1;
         self.peak_outstanding = self.peak_outstanding.max(self.outstanding);
-        Some(match self.free.pop() {
-            Some(mut c) => {
-                c.reset();
-                c
-            }
-            None => KvCache::new(self.n_layers, self.n_kv_heads, self.head_dim, self.max_seq),
-        })
+        Some(KvCache::paged(
+            self.n_layers,
+            self.n_kv_heads,
+            self.head_dim,
+            self.max_seq,
+            self.page_size,
+            self.store.clone(),
+        ))
     }
 
-    /// Return a cache to the pool.
+    /// Return a cache to the pool. Its pages flow back to the shared
+    /// store's free list on drop (minus any still shared with the
+    /// prefix tree or a forked sequence, which stay live).
     pub fn release(&mut self, cache: KvCache) {
         debug_assert!(self.outstanding > 0, "release without acquire");
         self.outstanding = self.outstanding.saturating_sub(1);
-        if self.free.len() < self.capacity {
-            self.free.push(cache);
-        }
+        drop(cache);
     }
 
     pub fn outstanding(&self) -> usize {
@@ -86,9 +165,25 @@ impl KvPool {
         self.capacity - self.outstanding
     }
 
-    /// Total bytes held by pooled (free) caches.
+    /// The shared page store (the engine hands this to the prefix cache
+    /// for eviction, and reads gauges from it).
+    pub fn store(&self) -> &PageStore {
+        &self.store
+    }
+
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Page-level accounting of the shared store.
+    pub fn stats(&self) -> PageStats {
+        self.store.stats()
+    }
+
+    /// Total bytes held by pooled (free-list) pages awaiting reuse.
     pub fn pooled_bytes(&self) -> usize {
-        self.free.iter().map(KvCache::bytes).sum()
+        self.stats().free * 2 * self.store.page_floats() * 4
     }
 }
 
@@ -106,7 +201,7 @@ mod tests {
         p.release(a);
         assert_eq!(p.available(), 1);
         let c = p.acquire().unwrap();
-        assert!(c.is_empty(), "recycled cache must be reset");
+        assert!(c.is_empty(), "fresh cache starts empty");
         p.release(b);
         p.release(c);
         assert_eq!(p.outstanding(), 0);
@@ -119,9 +214,14 @@ mod tests {
         a.append(0, &[1.0; 4], &[2.0; 4]);
         a.commit();
         p.release(a);
-        assert!(p.pooled_bytes() > 0);
-        let b = p.acquire().unwrap();
+        assert!(p.pooled_bytes() > 0, "released pages sit on the free list");
+        let allocs = p.stats().page_allocs;
+        let mut b = p.acquire().unwrap();
         assert_eq!(b.len(), 0);
+        b.append(0, &[3.0; 4], &[4.0; 4]);
+        b.commit();
+        assert_eq!(p.stats().page_allocs, allocs, "page buffer recycled, not reallocated");
+        p.release(b);
     }
 
     #[test]
@@ -134,5 +234,40 @@ mod tests {
         assert_eq!(p.peak_outstanding, 2);
         p.release(b);
         p.release(c);
+    }
+
+    #[test]
+    fn default_budget_covers_legacy_worst_case() {
+        // capacity 2 × ⌈10/4⌉ = 6 pages: both sequences can reach
+        // max_seq simultaneously, exactly like two legacy caches
+        let opts = PagedKvOpts {
+            page_size: 4,
+            ..PagedKvOpts::default()
+        };
+        let mut p = KvPool::with_opts(1, 1, 2, 10, 2, &opts);
+        assert_eq!(p.stats().budget, Some(6));
+        let mut a = p.acquire().unwrap();
+        let mut b = p.acquire().unwrap();
+        assert!(a.reserve(10).is_ok());
+        assert!(b.reserve(10).is_ok());
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn explicit_budget_binds_and_recovers() {
+        let opts = PagedKvOpts {
+            page_size: 4,
+            page_budget: Some(2),
+            ..PagedKvOpts::default()
+        };
+        let mut p = KvPool::with_opts(1, 1, 2, 32, 2, &opts);
+        let mut a = p.acquire().unwrap();
+        let mut b = p.acquire().unwrap();
+        assert!(a.reserve(8).is_ok(), "a takes both pages");
+        assert!(b.reserve(1).is_err(), "budget exhausted");
+        p.release(a); // pages return to the store
+        assert!(b.reserve(1).is_ok());
+        p.release(b);
     }
 }

@@ -12,6 +12,23 @@ pub struct Metrics {
     pub rejected: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
+    /// Prompt tokens satisfied by prefix-cache page adoption instead of
+    /// prefill compute.
+    pub adopted_tokens: u64,
+    /// Prefix-cache admissions that adopted ≥ 1 page / total lookups.
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+    /// Prefix-tree pages evicted under page-pool pressure.
+    pub prefix_evicted_pages: u64,
+    /// Sequences evicted for recompute under page exhaustion.
+    pub preemptions: u64,
+    /// Copy-on-write page copies (forks writing into shared pages).
+    pub cow_pages: u64,
+    /// Page-pool gauges, refreshed by the engine each step.
+    pub pages_in_use: usize,
+    pub pages_free: usize,
+    pub pages_peak: usize,
+    pub page_budget: usize,
     /// Completed responses retained for percentile queries (bounded).
     pub finished: Vec<Response>,
     ttft_samples: Vec<Duration>,
@@ -45,10 +62,22 @@ impl Metrics {
         self.decode_tokens as f64 / wall.as_secs_f64().max(1e-9)
     }
 
+    /// Prefix-cache hit rate over admissions (0 when the cache is off
+    /// or nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
     pub fn render(&self, wall: Duration) -> String {
         format!(
             "requests: {} submitted, {} completed, {} rejected\n\
              tokens:   {} prefill, {} decode ({:.1} tok/s decode)\n\
+             paged-kv: {}/{} pages in use (peak {}, {} free), {} adopted tokens, \
+             prefix hit rate {:.0}%, {} tree evictions, {} cow copies, preemptions: {}\n\
              ttft:     p50 {:?}  p95 {:?}\n\
              e2e:      p50 {:?}  p95 {:?}",
             self.submitted,
@@ -57,6 +86,15 @@ impl Metrics {
             self.prefill_tokens,
             self.decode_tokens,
             self.throughput(wall),
+            self.pages_in_use,
+            self.page_budget,
+            self.pages_peak,
+            self.pages_free,
+            self.adopted_tokens,
+            self.prefix_hit_rate() * 100.0,
+            self.prefix_evicted_pages,
+            self.cow_pages,
+            self.preemptions,
             self.ttft_percentile(0.50).unwrap_or_default(),
             self.ttft_percentile(0.95).unwrap_or_default(),
             self.total_percentile(0.50).unwrap_or_default(),
@@ -110,6 +148,24 @@ mod tests {
         assert_eq!(m.throughput(Duration::from_secs(1)), 0.0);
         let s = m.render(Duration::from_secs(1));
         assert!(s.contains("0 submitted"));
+        assert!(s.contains("preemptions: 0"));
+    }
+
+    #[test]
+    fn paged_counters_render() {
+        let mut m = Metrics::default();
+        m.prefix_lookups = 4;
+        m.prefix_hits = 3;
+        m.adopted_tokens = 192;
+        m.preemptions = 2;
+        m.pages_in_use = 5;
+        m.page_budget = 8;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.render(Duration::from_secs(1));
+        assert!(s.contains("5/8 pages in use"));
+        assert!(s.contains("192 adopted tokens"));
+        assert!(s.contains("prefix hit rate 75%"));
+        assert!(s.contains("preemptions: 2"));
     }
 
     #[test]

@@ -24,10 +24,12 @@ pub mod batcher;
 pub mod engine;
 pub mod kv_pool;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use engine::ServeEngine;
+pub use kv_pool::PagedKvOpts;
 pub use request::{Request, RequestId, Response, SamplingParams};
 pub use server::Server;

@@ -1,0 +1,349 @@
+//! Radix-tree prefix cache over shared KV pages (per replica).
+//!
+//! The tree is keyed by **page-aligned token chunks**: each edge from a
+//! node carries exactly `page_size` token ids and the [`KvPage`]
+//! holding those positions' K/V for every (layer, kv-head). A cached
+//! prefix of `n` pages is the path of `n` edges whose concatenated
+//! keys equal the first `n · page_size` prompt tokens.
+//!
+//! On admission the engine calls [`PrefixCache::lookup`]: the walk
+//! adopts the longest matching page-aligned prefix by cloning the
+//! `Arc<KvPage>`s (refcount bump — zero bytes copied), and the engine
+//! prefills only the suffix. Completed sequences donate their prompt
+//! pages back via [`PrefixCache::insert`]. Under page-pool pressure the
+//! engine calls [`PrefixCache::evict_one`], which releases the
+//! least-recently-used **unreferenced leaf** page back to the store —
+//! pages still shared with a live sequence are never evicted (their
+//! refcount keeps them alive regardless).
+//!
+//! Adoption is capped so at least one prompt token always prefills:
+//! the engine needs logits for the last prompt token to sample the
+//! first generated one, and a forward pass must process ≥ 1 row.
+//!
+//! Per-replica by design: `coordinator::router` session affinity pins
+//! sessions to replicas, so a replica's tree sees its tenants' repeat
+//! traffic (DESIGN.md §Paged-KV).
+
+use crate::model::kv::{KvPage, PageStore};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[derive(Debug, Default)]
+struct Node {
+    children: HashMap<Box<[u32]>, Edge>,
+}
+
+#[derive(Debug)]
+struct Edge {
+    page: Arc<KvPage>,
+    node: Node,
+    /// Logical timestamp of the last lookup/insert touching this edge.
+    last_used: u64,
+}
+
+/// Hit/miss counters, read by the engine into `coordinator::metrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub adopted_tokens: u64,
+    pub inserted_pages: u64,
+    pub evicted_pages: u64,
+}
+
+/// Radix prefix cache: token-keyed tree of shared KV pages (module
+/// docs). One per replica, owned by the serve engine.
+#[derive(Debug)]
+pub struct PrefixCache {
+    page_size: usize,
+    root: Node,
+    clock: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(page_size: usize) -> PrefixCache {
+        assert!(page_size > 0, "page_size must be positive");
+        PrefixCache {
+            page_size,
+            root: Node::default(),
+            clock: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached page-aligned prefix of `tokens`, capped at
+    /// `(tokens.len() − 1) / page_size` pages so ≥ 1 token remains to
+    /// prefill. Returns the pages to adopt (refcount-bumped, in
+    /// position order); the adopted token count is `len · page_size`.
+    pub fn lookup(&mut self, tokens: &[u32]) -> Vec<Arc<KvPage>> {
+        self.stats.lookups += 1;
+        let max_pages = if tokens.is_empty() {
+            0
+        } else {
+            (tokens.len() - 1) / self.page_size
+        };
+        let now = self.tick();
+        let mut pages = Vec::new();
+        let mut node = &mut self.root;
+        for chunk in tokens.chunks_exact(self.page_size).take(max_pages) {
+            match node.children.get_mut(chunk) {
+                Some(edge) => {
+                    edge.last_used = now;
+                    pages.push(edge.page.clone());
+                    node = &mut edge.node;
+                }
+                None => break,
+            }
+        }
+        if !pages.is_empty() {
+            self.stats.hits += 1;
+            self.stats.adopted_tokens += (pages.len() * self.page_size) as u64;
+        }
+        pages
+    }
+
+    /// Donate `pages` as the cached K/V of `tokens` (both page-aligned:
+    /// `tokens.len() == pages.len() · page_size`). Existing edges keep
+    /// their pages (first donor wins — the bytes are bit-identical by
+    /// the parity discipline, so there is nothing to replace); missing
+    /// edges take one extra reference to the donor's page.
+    pub fn insert(&mut self, tokens: &[u32], pages: &[Arc<KvPage>]) {
+        debug_assert_eq!(tokens.len(), pages.len() * self.page_size);
+        let now = self.tick();
+        let mut node = &mut self.root;
+        for (chunk, page) in tokens.chunks_exact(self.page_size).zip(pages) {
+            let inserted = &mut self.stats.inserted_pages;
+            let edge = node
+                .children
+                .entry(chunk.to_vec().into_boxed_slice())
+                .or_insert_with(|| {
+                    *inserted += 1;
+                    Edge {
+                        page: page.clone(),
+                        node: Node::default(),
+                        last_used: now,
+                    }
+                });
+            edge.last_used = now;
+            node = &mut edge.node;
+        }
+    }
+
+    /// Evict the least-recently-used **unreferenced leaf** page,
+    /// releasing it to `store`. Returns `false` when nothing is
+    /// evictable (every leaf is still shared with a live sequence, or
+    /// the tree is empty). The engine calls this in a loop under page
+    /// exhaustion before falling back to preemption.
+    pub fn evict_one(&mut self, store: &PageStore) -> bool {
+        let mut path: Vec<Box<[u32]>> = Vec::new();
+        if !find_lru_leaf(&self.root, &mut path) {
+            return false;
+        }
+        // detach the edge at `path` from the tree
+        let mut node = &mut self.root;
+        for key in &path[..path.len() - 1] {
+            node = &mut node.children.get_mut(key).expect("path just found").node;
+        }
+        let edge = node
+            .children
+            .remove(path.last().expect("non-empty path"))
+            .expect("path just found");
+        store.release(edge.page);
+        self.stats.evicted_pages += 1;
+        true
+    }
+
+    /// Pages currently held by the tree.
+    pub fn pages_held(&self) -> usize {
+        fn count(node: &Node) -> usize {
+            node.children.values().map(|e| 1 + count(&e.node)).sum()
+        }
+        count(&self.root)
+    }
+}
+
+/// Depth-first search for the evictable leaf edge (no children, page
+/// refcount 1 — held only by the tree) with the smallest `last_used`.
+/// On success `path` holds the edge keys from the root; returns whether
+/// one was found.
+fn find_lru_leaf(node: &Node, path: &mut Vec<Box<[u32]>>) -> bool {
+    fn walk(node: &Node, prefix: &mut Vec<Box<[u32]>>, best: &mut Option<(u64, Vec<Box<[u32]>>)>) {
+        for (key, edge) in &node.children {
+            prefix.push(key.clone());
+            let evictable = edge.node.children.is_empty() && Arc::strong_count(&edge.page) == 1;
+            let improves = match best {
+                Some((t, _)) => edge.last_used < *t,
+                None => true,
+            };
+            if evictable && improves {
+                *best = Some((edge.last_used, prefix.clone()));
+            }
+            walk(&edge.node, prefix, best);
+            prefix.pop();
+        }
+    }
+    let mut best = None;
+    let mut prefix = Vec::new();
+    walk(node, &mut prefix, &mut best);
+    match best {
+        Some((_, p)) => {
+            *path = p;
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kv::{KvCache, PageStore};
+
+    const PS: usize = 4; // page_size in positions == tokens per edge
+
+    fn store() -> PageStore {
+        PageStore::for_geometry(1, 1, 2, PS, None)
+    }
+
+    /// Build a donor cache holding `n_tokens` positions (page-aligned).
+    fn donor(st: &PageStore, n_tokens: usize, tag: f32) -> KvCache {
+        let mut c = KvCache::paged(1, 1, 2, 64, PS, st.clone());
+        for i in 0..n_tokens {
+            let x = tag + i as f32;
+            c.append(0, &[x, x], &[-x, -x]);
+            c.commit();
+        }
+        c
+    }
+
+    #[test]
+    fn insert_then_lookup_adopts_page_aligned_prefix() {
+        let st = store();
+        let mut pc = PrefixCache::new(PS);
+        let tokens: Vec<u32> = (0..8).collect();
+        let d = donor(&st, 8, 0.0);
+        pc.insert(&tokens, d.shared_pages(8));
+        assert_eq!(pc.pages_held(), 2);
+
+        // full-prefix query: capped at (len-1)/PS pages ⇒ if the query
+        // IS the cached prompt, the last page is left to prefill…
+        let hit = pc.lookup(&tokens);
+        assert_eq!(hit.len(), 1, "adoption leaves ≥1 token to prefill");
+        // …but a longer query adopts both pages
+        let longer: Vec<u32> = (0..10).collect();
+        let hit = pc.lookup(&longer);
+        assert_eq!(hit.len(), 2);
+        assert!(Arc::ptr_eq(&hit[0], &d.shared_pages(8)[0]), "same physical page");
+
+        // diverging suffix only matches the shared first page
+        let fork: Vec<u32> = vec![0, 1, 2, 3, 99, 98, 97, 96, 95];
+        assert_eq!(pc.lookup(&fork).len(), 1);
+        // diverging first page matches nothing
+        let miss: Vec<u32> = (100..110).collect();
+        assert!(pc.lookup(&miss).is_empty());
+        let s = pc.stats();
+        assert_eq!(s.lookups, 4);
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.adopted_tokens, (1 + 2 + 1) as u64 * PS as u64);
+    }
+
+    #[test]
+    fn insert_keeps_existing_pages_and_branches() {
+        let st = store();
+        let mut pc = PrefixCache::new(PS);
+        let a: Vec<u32> = (0..8).collect();
+        let da = donor(&st, 8, 0.0);
+        pc.insert(&a, da.shared_pages(8));
+        let first_page = pc.lookup(&(0..9).collect::<Vec<u32>>())[0].clone();
+
+        // a second donor with the same first chunk but different tail:
+        // the shared edge keeps its original page, the tail branches
+        let b: Vec<u32> = vec![0, 1, 2, 3, 50, 51, 52, 53];
+        let db = donor(&st, 8, 100.0);
+        pc.insert(&b, db.shared_pages(8));
+        assert_eq!(pc.pages_held(), 3, "one shared + two tails");
+        let again = pc.lookup(&(0..9).collect::<Vec<u32>>())[0].clone();
+        assert!(Arc::ptr_eq(&first_page, &again), "first donor wins");
+    }
+
+    #[test]
+    fn evicts_lru_unreferenced_leaf_only() {
+        let st = store();
+        let mut pc = PrefixCache::new(PS);
+        let a: Vec<u32> = (0..8).collect();
+        {
+            let da = donor(&st, 8, 0.0);
+            pc.insert(&a, da.shared_pages(8));
+        } // donor dropped: tree holds the only refs
+        let live_before = st.stats().live;
+        assert_eq!(live_before, 2);
+
+        // an inner edge with children is never evicted — only the leaf
+        assert!(pc.evict_one(&st));
+        assert_eq!(pc.pages_held(), 1);
+        // now the ex-inner edge is a leaf and goes too
+        assert!(pc.evict_one(&st));
+        assert_eq!(pc.pages_held(), 0);
+        assert!(!pc.evict_one(&st), "empty tree has nothing to evict");
+        let s = st.stats();
+        assert_eq!(s.live, 0);
+        assert_eq!(s.free, 2, "evicted pages returned to the store");
+        assert_eq!(pc.stats().evicted_pages, 2);
+    }
+
+    #[test]
+    fn eviction_skips_pages_shared_with_live_sequences() {
+        let st = store();
+        let mut pc = PrefixCache::new(PS);
+        let a: Vec<u32> = (0..4).collect();
+        let da = donor(&st, 4, 0.0);
+        pc.insert(&a, da.shared_pages(4));
+        // the donor still holds a ref ⇒ refcount 2 ⇒ not evictable
+        assert!(!pc.evict_one(&st));
+        drop(da);
+        assert!(pc.evict_one(&st));
+    }
+
+    #[test]
+    fn lru_order_prefers_stalest_leaf() {
+        let st = store();
+        let mut pc = PrefixCache::new(PS);
+        let a: Vec<u32> = (0..4).collect();
+        let b: Vec<u32> = (10..14).collect();
+        {
+            let da = donor(&st, 4, 0.0);
+            pc.insert(&a, da.shared_pages(4));
+            let db = donor(&st, 4, 50.0);
+            pc.insert(&b, db.shared_pages(4));
+        }
+        // touch `a` so `b` becomes the LRU leaf
+        assert_eq!(pc.lookup(&(0..5).collect::<Vec<u32>>()).len(), 1);
+        assert!(pc.evict_one(&st));
+        // `a` must still be resident, `b` gone
+        assert_eq!(pc.lookup(&(0..5).collect::<Vec<u32>>()).len(), 1);
+        assert!(pc.lookup(&(10..15).collect::<Vec<u32>>()).is_empty());
+    }
+
+    #[test]
+    fn short_prompts_never_adopt_everything() {
+        let mut pc = PrefixCache::new(PS);
+        // prompt shorter than one page: nothing to adopt
+        assert!(pc.lookup(&[1, 2, 3]).is_empty());
+        // prompt of exactly one page: still nothing (≥1 token must prefill)
+        assert!(pc.lookup(&[1, 2, 3, 4]).is_empty());
+    }
+}

@@ -56,7 +56,12 @@ pub enum FinishReason {
     PromptTooLong,
     /// The sequence's KV cache ran out of positions mid-flight (a
     /// planner/capacity disagreement) — the request is truncated to
-    /// what was generated instead of panicking the replica.
+    /// what was generated instead of panicking the replica. Since the
+    /// paged allocator, *page-pool* exhaustion no longer lands here:
+    /// the engine preempts (release pages, re-enqueue, recompute) and
+    /// the request still completes; this reason survives only for the
+    /// unsatisfiable case where a lone request cannot fit even with
+    /// every other sequence evicted.
     CacheOverflow,
 }
 
@@ -74,12 +79,22 @@ pub struct Response {
 }
 
 /// Lifecycle of an admitted sequence inside the engine.
+///
+/// The prefill phase covers `prefill_len` tokens: normally the prompt;
+/// for a sequence resumed after preemption ([`SequenceState::resume`])
+/// it is prompt **plus** the tokens already generated before eviction,
+/// which are recomputed through [`SequenceState::prefill_token`] —
+/// greedy/seeded sampling then replays the remaining tokens exactly
+/// (the per-step RNG is keyed by `generated.len()`, which resumes at
+/// its pre-preemption value).
 #[derive(Debug)]
 pub struct SequenceState {
     pub request: Request,
     pub cache: crate::model::KvCache,
-    /// Prompt tokens not yet prefilled.
+    /// Prefill tokens consumed so far (`< prefill_len` ⇒ prefilling).
     pub prefill_cursor: usize,
+    /// Tokens the prefill phase must cover (see type docs).
+    pub prefill_len: usize,
     pub generated: Vec<u32>,
     /// Logits from the last step (None until the prompt is consumed).
     pub pending_logits: Option<Vec<f32>>,
@@ -87,27 +102,70 @@ pub struct SequenceState {
     /// Set when the sequence's cache filled before its prompt was
     /// consumed — retired with [`FinishReason::CacheOverflow`].
     pub overflowed: bool,
+    /// Set by the engine when this sequence is chosen as a preemption
+    /// victim: its pages are released at the end of the step and the
+    /// request re-enqueues for recompute.
+    pub preempted: bool,
 }
 
 impl SequenceState {
     pub fn new(request: Request, cache: crate::model::KvCache) -> SequenceState {
+        let prefill_len = request.prompt.len();
         SequenceState {
             request,
             cache,
             prefill_cursor: 0,
+            prefill_len,
             generated: Vec::new(),
             pending_logits: None,
             first_token_at: None,
             overflowed: false,
+            preempted: false,
+        }
+    }
+
+    /// Re-admit a preempted sequence: everything generated before
+    /// eviction joins the prefill phase (prompt + generated recompute
+    /// into the fresh cache; the prefix tree usually still holds the
+    /// prompt's pages, so most of it is adopted rather than recomputed)
+    /// and decoding continues from where it stopped.
+    pub fn resume(
+        request: Request,
+        generated: Vec<u32>,
+        cache: crate::model::KvCache,
+        first_token_at: Option<std::time::Instant>,
+    ) -> SequenceState {
+        let prefill_len = request.prompt.len() + generated.len();
+        SequenceState {
+            request,
+            cache,
+            prefill_cursor: 0,
+            prefill_len,
+            generated,
+            pending_logits: None,
+            first_token_at,
+            overflowed: false,
+            preempted: false,
         }
     }
 
     pub fn in_prefill(&self) -> bool {
-        self.prefill_cursor < self.request.prompt.len()
+        self.prefill_cursor < self.prefill_len
     }
 
     pub fn remaining_prompt(&self) -> usize {
-        self.request.prompt.len() - self.prefill_cursor
+        self.prefill_len - self.prefill_cursor
+    }
+
+    /// The `i`-th prefill token: the prompt, then (resumed sequences
+    /// only) the previously generated tokens being recomputed.
+    pub fn prefill_token(&self, i: usize) -> u32 {
+        debug_assert!(i < self.prefill_len);
+        if i < self.request.prompt.len() {
+            self.request.prompt[i]
+        } else {
+            self.generated[i - self.request.prompt.len()]
+        }
     }
 
     pub fn budget_left(&self) -> usize {
@@ -134,6 +192,18 @@ mod tests {
         assert_eq!(s.budget_left(), 32);
         s.generated = vec![9; 30];
         assert_eq!(s.budget_left(), 2);
+    }
+
+    #[test]
+    fn resume_recomputes_prompt_plus_generated() {
+        let req = Request::new(1, vec![1, 2, 3], SamplingParams::default());
+        let s = SequenceState::resume(req, vec![7, 8], KvCache::new(1, 1, 4, 16), None);
+        assert!(s.in_prefill());
+        assert_eq!(s.remaining_prompt(), 5, "prompt + prior generation");
+        let replay: Vec<u32> = (0..5).map(|i| s.prefill_token(i)).collect();
+        assert_eq!(replay, vec![1, 2, 3, 7, 8]);
+        // decode budget picks up where it left off
+        assert_eq!(s.budget_left(), 30);
     }
 
     #[test]

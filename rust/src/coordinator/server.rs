@@ -76,9 +76,32 @@ impl Server {
         route: RoutePolicy,
         threads: usize,
     ) -> Server {
+        Server::start_replicas_with(
+            model,
+            replicas,
+            policy,
+            route,
+            threads,
+            super::kv_pool::PagedKvOpts::default(),
+        )
+    }
+
+    /// [`Server::start_replicas`] with explicit paged-KV options
+    /// (`--page-size` / `--prefix-cache` / `--kv-pages`). Each replica
+    /// gets its own page store and radix prefix tree — prefix reuse is
+    /// per-replica, which is why session-affinity routing pairs well
+    /// with the cache.
+    pub fn start_replicas_with(
+        model: crate::model::Transformer,
+        replicas: usize,
+        policy: super::batcher::BatchPolicy,
+        route: RoutePolicy,
+        threads: usize,
+        kv: super::kv_pool::PagedKvOpts,
+    ) -> Server {
         assert!(replicas >= 1, "need at least one replica");
         let engines = (0..replicas)
-            .map(|_| ServeEngine::with_threads(model.clone(), policy, threads))
+            .map(|_| ServeEngine::with_opts(model.clone(), policy, threads, kv))
             .collect();
         Server::start(engines, route)
     }
@@ -265,6 +288,53 @@ mod tests {
         assert_eq!(seq.len(), 6);
         assert_eq!(par.len(), 6);
         for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn paged_prefix_replicas_match_legacy_layout() {
+        // shared-prefix workload through the full server stack: paged
+        // pages + prefix adoption must serve token-identical responses
+        // to the legacy contiguous layout
+        use crate::coordinator::kv_pool::PagedKvOpts;
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 32;
+        let mut rng = Rng::new(9);
+        let model = Transformer::random(cfg, &mut rng);
+        let serve = |kv: PagedKvOpts| {
+            let mut server = Server::start_replicas_with(
+                model.clone(),
+                1,
+                BatchPolicy::default(),
+                RoutePolicy::RoundRobin,
+                1,
+                kv,
+            );
+            let shared: Vec<u32> = (0..12).map(|j| 1 + (j % 7)).collect();
+            for i in 0..6u64 {
+                let mut prompt = shared.clone();
+                prompt.push(10 + (i % 4) as u32); // distinct suffixes
+                server.submit(prompt, params(4), 0);
+            }
+            let mut out = server.wait_for(6, Duration::from_secs(30));
+            server.shutdown();
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let legacy = serve(PagedKvOpts {
+            page_size: 32,
+            prefix_cache: false,
+            page_budget: None,
+        });
+        let paged = serve(PagedKvOpts {
+            page_size: 4,
+            prefix_cache: true,
+            page_budget: None,
+        });
+        assert_eq!(legacy.len(), 6);
+        for (a, b) in paged.iter().zip(&legacy) {
             assert_eq!(a.tokens, b.tokens, "req {}", a.id);
         }
     }

@@ -200,6 +200,33 @@ impl CorpusGen {
         out
     }
 
+    /// `n` serving prompts that share one `prefix_words`-word prefix
+    /// (a synthetic system prompt) and diverge in a short per-prompt
+    /// question — the radix-prefix-cache workload (`gen-corpus
+    /// --shared-prefix`, `ptqtp bench --prefix`). Deterministic for a
+    /// given generator state.
+    pub fn shared_prefix_prompts(&mut self, prefix_words: usize, n: usize) -> Vec<String> {
+        let mut prefix = String::from("system:");
+        for i in 0..prefix_words {
+            if i > 0 {
+                prefix.push(' ');
+            }
+            // reuse the fixed wiki banks so the tokenizer already
+            // covers every word
+            prefix.push_str(match i % 3 {
+                0 => self.rng.choose(SUBJECTS),
+                1 => self.rng.choose(VERBS),
+                _ => self.rng.choose(OBJECTS),
+            });
+        }
+        (0..n)
+            .map(|_| {
+                let (q, _) = self.math_line();
+                format!("{prefix} {q}")
+            })
+            .collect()
+    }
+
     /// The full training mixture: all three domains + facts + math +
     /// code, interleaved. This is what `python/compile/train.py`
     /// consumes.
@@ -256,6 +283,23 @@ mod tests {
         let (w, p, c) = (avg_line(&wiki), avg_line(&ptb), avg_line(&c4));
         assert!((w - p).abs() > 2.0, "wiki {w} vs ptb {p}");
         assert!((w - c).abs() > 2.0 || (p - c).abs() > 2.0);
+    }
+
+    #[test]
+    fn shared_prefix_prompts_share_exact_prefix() {
+        let prompts = CorpusGen::new(5).shared_prefix_prompts(24, 8);
+        assert_eq!(prompts.len(), 8);
+        let prefix = prompts[0].rsplit_once(" Q:").unwrap().0;
+        assert!(prefix.starts_with("system:"));
+        for p in &prompts {
+            assert!(p.starts_with(prefix), "{p}");
+            assert!(p.contains("=? A:"), "divergent question present: {p}");
+        }
+        // deterministic across generators with the same seed
+        assert_eq!(prompts, CorpusGen::new(5).shared_prefix_prompts(24, 8));
+        // zero-length prefix degenerates to bare questions
+        let bare = CorpusGen::new(5).shared_prefix_prompts(0, 2);
+        assert!(bare[0].starts_with("system: Q:"), "{}", bare[0]);
     }
 
     #[test]

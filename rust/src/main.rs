@@ -16,7 +16,8 @@
 
 use ptqtp::bench;
 use ptqtp::cli::{usage, Args, OptSpec};
-use ptqtp::coordinator::{SamplingParams, ServeEngine};
+use ptqtp::coordinator::kv_pool::DEFAULT_PAGE_SIZE;
+use ptqtp::coordinator::{PagedKvOpts, SamplingParams, ServeEngine};
 use ptqtp::data::{CorpusDomain, CorpusGen, TaskSuite, Tokenizer};
 use ptqtp::eval;
 use ptqtp::model::{ModelConfig, Transformer};
@@ -73,12 +74,12 @@ fn help() -> String {
         "ptqtp",
         "Post-Training Quantization to Trit-Planes — full-system reproduction",
         &[
-            ("gen-corpus", "generate synthetic corpora + tokenizer into --out"),
+            ("gen-corpus", "generate synthetic corpora + tokenizer into --out [--shared-prefix W: also write prompts_shared.txt]"),
             ("gen-ckpt", "gen-ckpt --out X.ptw [--family tiny] [--data DIR|--vocab N]  (random FP32 checkpoint)"),
             ("quantize", "quantize --model X.ptw --method ptqtp --out Q.ptw  (Q.ptw = packed PTW2 artifact + manifest)"),
             ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]  (packed checkpoints skip quantization)"),
             ("serve", "serve --model X.ptw [--method ptqtp] --requests N [--replicas R]  (packed checkpoints skip quantization)"),
-            ("bench", "bench --table N | --fig N | --batched | --kernels | --attention  (paper exhibits + perf benches)"),
+            ("bench", "bench --table N | --fig N | --batched | --kernels | --attention | --prefix  (paper exhibits + perf benches)"),
             ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
         ],
         &[
@@ -89,16 +90,22 @@ fn help() -> String {
             OptSpec { name: "threads", help: "worker lanes for row-parallel kernels/quantization (1 = exact sequential path; env PTQTP_THREADS)", default: Some("cores") },
             OptSpec { name: "simd", help: "SIMD kernel tier: auto|on|off (off = exact scalar path; env PTQTP_SIMD); bit-identical output either way", default: Some("auto") },
             OptSpec { name: "replicas", help: "serve: engine replicas, each with its own pool", default: Some("1") },
+            OptSpec { name: "page-size", help: "serve: KV positions per page, ≥ 8 (0 = one max_seq page, i.e. contiguous; env PTQTP_PAGE_SIZE)", default: Some("64") },
+            OptSpec { name: "prefix-cache", help: "serve: radix prefix cache on|off (off = exact legacy layout: contiguous, nothing shared)", default: Some("on") },
+            OptSpec { name: "kv-pages", help: "serve: per-replica KV page budget; exhaustion preempts + recomputes", default: Some("capacity×⌈max_seq/page⌉") },
+            OptSpec { name: "prompts", help: "serve: prompt file (one per line, cycled to --requests; e.g. prompts_shared.txt)", default: None },
         ],
     )
 }
 
-/// `gen-corpus --out data/ [--train-lines N] [--eval-sentences N]`
+/// `gen-corpus --out data/ [--train-lines N] [--eval-sentences N]
+/// [--shared-prefix W [--prefix-prompts N]]`
 fn cmd_gen_corpus(args: &Args) -> anyhow::Result<()> {
     let out = args.str_or("out", "data");
     let seed = args.u64_or("seed", 0);
     let train_lines = args.usize_or("train-lines", 20_000);
     let eval_sentences = args.usize_or("eval-sentences", 400);
+    let shared_prefix = args.usize_opt("shared-prefix")?;
     std::fs::create_dir_all(out)?;
 
     let mut gen = CorpusGen::new(seed);
@@ -112,6 +119,18 @@ fn cmd_gen_corpus(args: &Args) -> anyhow::Result<()> {
         let text = eval_gen.domain_text(domain, eval_sentences);
         std::fs::write(format!("{out}/eval_{}.txt", domain.name()), &text)?;
         all_text.push_str(&text);
+    }
+    // shared-prefix serving prompts (the prefix-cache workload) are
+    // generated *before* the tokenizer is built so their vocabulary is
+    // covered
+    if let Some(prefix_words) = shared_prefix {
+        let n = args.usize_or("prefix-prompts", 16);
+        let mut prompt_gen = CorpusGen::new(seed ^ 0x5A3D);
+        let prompts = prompt_gen.shared_prefix_prompts(prefix_words, n);
+        let joined = prompts.join("\n");
+        std::fs::write(format!("{out}/prompts_shared.txt"), &joined)?;
+        all_text.push_str(&joined);
+        println!("wrote {n} shared-prefix prompts ({prefix_words} prefix words) to {out}/prompts_shared.txt");
     }
     let tok = Tokenizer::from_text(&all_text);
     tok.save(format!("{out}/tokenizer.json"))?;
@@ -289,8 +308,53 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the paged-KV serving knobs.
+///
+/// Page size: `--page-size N` > `PTQTP_PAGE_SIZE` env > default. The
+/// default is [`DEFAULT_PAGE_SIZE`] (64), except that `--prefix-cache
+/// off` with no explicit size picks one `max_seq` page per sequence —
+/// the exact legacy contiguous layout, byte-for-byte. `0` also means
+/// "one max_seq page". Explicit sizes must be ≥ 8 so the widest SIMD
+/// attention lane block never straddles a page boundary.
+fn resolve_kv_opts(args: &Args, max_seq: usize) -> anyhow::Result<PagedKvOpts> {
+    let prefix_cache = match args.choice("prefix-cache", &["on", "off"])? {
+        Some(v) => v == "on",
+        None => true,
+    };
+    let cli = args.usize_opt("page-size")?;
+    let env = match std::env::var("PTQTP_PAGE_SIZE") {
+        Ok(v) => Some(v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("invalid PTQTP_PAGE_SIZE '{v}' (expected an unsigned integer)")
+        })?),
+        Err(_) => None,
+    };
+    let page_size = match cli.or(env) {
+        Some(0) => max_seq, // contiguous: one page spans the whole context
+        Some(n) if n < 8 => {
+            anyhow::bail!(
+                "--page-size {n} too small: pages must hold ≥ 8 positions so SIMD \
+                 attention lane blocks never straddle a page (use 0 for one \
+                 max_seq-sized page)"
+            )
+        }
+        Some(n) => n,
+        None if !prefix_cache => max_seq, // legacy escape hatch
+        None => DEFAULT_PAGE_SIZE,
+    };
+    let page_budget = args.usize_opt("kv-pages")?;
+    if page_budget == Some(0) {
+        anyhow::bail!("--kv-pages must be ≥ 1");
+    }
+    Ok(PagedKvOpts {
+        page_size,
+        prefix_cache,
+        page_budget,
+    })
+}
+
 /// `serve --model X.ptw [--method M] [--requests N] [--data data/]
-/// [--threads T] [--replicas R]`
+/// [--threads T] [--replicas R] [--page-size N] [--prefix-cache on|off]
+/// [--kv-pages N] [--prompts FILE]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let lm = load_and_quantize(args)?;
     let (model, method) = (lm.model, lm.method);
@@ -310,27 +374,57 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         model.simd_layers()
     );
     let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
+    let kv = resolve_kv_opts(args, model.config.max_seq)?;
+    eprintln!(
+        "paged-kv: page size {} ({}), prefix cache {}, page budget {}",
+        kv.page_size,
+        if kv.page_size >= model.config.max_seq { "contiguous" } else { "paged" },
+        if kv.prefix_cache { "on" } else { "off" },
+        match kv.page_budget {
+            Some(b) => b.to_string(),
+            None => "default".to_string(),
+        }
+    );
 
-    // workload: math prompts (realistic mixed lengths)
-    let suite = TaskSuite::standard(args.u64_or("seed", 2), n_requests, 0, 0);
+    // workload: prompts from --prompts FILE (cycled to --requests, the
+    // shared-prefix serving path) or generated math tasks (realistic
+    // mixed lengths)
+    let prompts: Vec<String> = match args.get("prompts") {
+        Some(path) => {
+            let lines: Vec<String> = std::fs::read_to_string(path)?
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(str::to_string)
+                .collect();
+            anyhow::ensure!(!lines.is_empty(), "no prompts in {path}");
+            (0..n_requests)
+                .map(|i| lines[i % lines.len()].clone())
+                .collect()
+        }
+        None => {
+            let suite = TaskSuite::standard(args.u64_or("seed", 2), n_requests, 0, 0);
+            suite.math.iter().map(|t| t.prompt.clone()).collect()
+        }
+    };
     let params = SamplingParams {
         max_new_tokens: 8,
         ..Default::default()
     };
     if replicas > 1 {
         // threaded front-end: each replica worker owns a threads-lane pool
-        let mut server = ptqtp::coordinator::Server::start_replicas(
+        let mut server = ptqtp::coordinator::Server::start_replicas_with(
             model,
             replicas,
             Default::default(),
             ptqtp::coordinator::router::RoutePolicy::LeastLoaded,
             threads,
+            kv,
         );
         let t0 = std::time::Instant::now();
-        for task in suite.math.iter() {
-            server.submit(tok.encode(&task.prompt), params, 0);
+        for prompt in &prompts {
+            server.submit(tok.encode(prompt), params, 0);
         }
-        let responses = server.wait_for(suite.math.len(), std::time::Duration::from_secs(600));
+        let responses = server.wait_for(prompts.len(), std::time::Duration::from_secs(600));
         let wall = t0.elapsed();
         let metrics = server.shutdown();
         println!(
@@ -342,12 +436,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    let mut engine = ServeEngine::with_threads(model, Default::default(), threads);
+    let mut engine = ServeEngine::with_opts(model, Default::default(), threads, kv);
     let t0 = std::time::Instant::now();
-    for (i, task) in suite.math.iter().enumerate() {
+    for (i, prompt) in prompts.iter().enumerate() {
         engine.submit(ptqtp::coordinator::Request::new(
             i as u64,
-            tok.encode(&task.prompt),
+            tok.encode(prompt),
             params,
         ));
     }
@@ -361,7 +455,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench --table N | --fig N | --batched | --kernels | --attention [--quick]`
+/// `bench --table N | --fig N | --batched | --kernels | --attention |
+/// --prefix [--quick]`
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let quick = args.flag("quick");
     if args.flag("batched") {
@@ -372,6 +467,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("attention") {
         return bench::attention::run(quick, args);
+    }
+    if args.flag("prefix") {
+        return bench::prefix::run(quick, args);
     }
     if let Some(t) = args.get("table") {
         return bench::run_table(t, quick, args);
@@ -388,7 +486,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    anyhow::bail!("bench requires --table N, --fig N, --batched, --kernels, --attention, or --all")
+    anyhow::bail!(
+        "bench requires --table N, --fig N, --batched, --kernels, --attention, --prefix, or --all"
+    )
 }
 
 /// `runtime --artifacts artifacts/` — PJRT smoke test of the AOT chain.

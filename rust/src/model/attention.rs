@@ -23,10 +23,49 @@ use super::batch::ensure_shape;
 use super::kv::KvCache;
 use super::linear::QuantLinear;
 use super::rope::Rope;
+use crate::tensor::ops::softmax_inplace;
 use crate::tensor::Matrix;
 use crate::ternary::gemm::GemmScratch;
 use crate::ternary::simd;
 use crate::threads::{run_spans, worth_parallel, Pool, SendPtr};
+
+/// Attention body for one (query-row, head) over a **paged** KV chain:
+/// per page [`attn_kernels::scores_into`] writes that page's slice of
+/// the full score buffer, one softmax runs over the whole buffer, then
+/// per page (ascending) [`attn_kernels::vsum_into`] folds into `out`.
+/// Every score is an independent dot and the V-sum folds positions in
+/// ascending order across pages — bitwise [`attn_kernels::attend_head`]
+/// over a contiguous block, for any page size (DESIGN.md §Paged-KV).
+/// `out` (`hd` long) must be zeroed; `scores` is caller scratch.
+#[allow(clippy::too_many_arguments)]
+fn attend_head_paged(
+    q: &[f32],
+    cache: &KvCache,
+    layer: usize,
+    kvh: usize,
+    t: usize,
+    hd: usize,
+    scale: f32,
+    lanes: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    scores.clear();
+    scores.resize(t, 0.0);
+    let mut base = 0;
+    for (ks, _) in cache.page_streams(layer, kvh, t) {
+        let fill = ks.len() / hd;
+        attn_kernels::scores_into(q, ks, fill, hd, scale, lanes, &mut scores[base..base + fill]);
+        base += fill;
+    }
+    softmax_inplace(scores);
+    let mut base = 0;
+    for (_, vs) in cache.page_streams(layer, kvh, t) {
+        let fill = vs.len() / hd;
+        attn_kernels::vsum_into(&scores[base..base + fill], vs, hd, lanes, out);
+        base += fill;
+    }
+}
 
 /// One attention block's projections.
 #[derive(Clone, Debug)]
@@ -245,10 +284,11 @@ impl Attention {
         let group = self.n_heads / self.n_kv_heads;
         for h in 0..self.n_heads {
             let kvh = h / group;
-            attn_kernels::attend_head(
+            attend_head_paged(
                 &q[h * hd..(h + 1) * hd],
-                &cache.keys(layer, kvh)[..t * hd],
-                &cache.values(layer, kvh)[..t * hd],
+                cache,
+                layer,
+                kvh,
                 t,
                 hd,
                 scale,
@@ -334,10 +374,11 @@ impl Attention {
                 let cache: &KvCache = &*caches[cache_of[i]];
                 for h in 0..self.n_heads {
                     let kvh = h / group;
-                    attn_kernels::attend_head(
+                    attend_head_paged(
                         &q_data[i * q_dim + h * hd..i * q_dim + (h + 1) * hd],
-                        &cache.keys(layer, kvh)[..t * hd],
-                        &cache.values(layer, kvh)[..t * hd],
+                        cache,
+                        layer,
+                        kvh,
                         t,
                         hd,
                         scale,
@@ -363,10 +404,11 @@ impl Attention {
                 let t = ts[i];
                 let cache: &KvCache = &*caches[cache_of[i]];
                 let kvh = h / group;
-                attn_kernels::attend_head(
+                attend_head_paged(
                     &q_data[i * q_dim + h * hd..i * q_dim + (h + 1) * hd],
-                    &cache.keys(layer, kvh)[..t * hd],
-                    &cache.values(layer, kvh)[..t * hd],
+                    cache,
+                    layer,
+                    kvh,
                     t,
                     hd,
                     scale,
@@ -672,6 +714,50 @@ mod tests {
         );
         assert_eq!(out.row(0), ea.as_slice());
         assert_eq!(out.row(1), eb.as_slice());
+    }
+
+    #[test]
+    fn paged_attend_bit_identical_to_single_page() {
+        // the same decode stream over a page_size-4 paged cache must be
+        // bitwise the legacy single-page cache for every (lanes,
+        // threads) configuration — ISSUE 6's core parity gate
+        use super::super::kv::PageStore;
+        let attn = make_attn(32, 4, 2, 23);
+        let rope = Rope::new(8, 32, 10_000.0);
+        let mut rng = Rng::new(24);
+        let xs: Vec<Vec<f32>> = (0..11)
+            .map(|_| (0..32).map(|_| rng.normal()).collect())
+            .collect();
+        let run = |paged: bool, lanes: Option<usize>, threads: usize| {
+            let mut cache = if paged {
+                let store = PageStore::for_geometry(1, 2, 8, 4, None);
+                KvCache::paged(1, 2, 8, 32, 4, store)
+            } else {
+                KvCache::new(1, 2, 8, 32)
+            };
+            let mut scratch = DecodeScratch::default();
+            scratch.set_simd(lanes != Some(1));
+            scratch.set_lanes(lanes);
+            scratch.set_pool(Pool::new(threads));
+            let mut outs = Vec::new();
+            for (pos, x) in xs.iter().enumerate() {
+                let mut out = vec![0.0; 32];
+                attn.decode_with(x, &rope, &mut cache, 0, pos, &mut scratch, &mut out);
+                cache.commit();
+                outs.push(out);
+            }
+            outs
+        };
+        let reference = run(false, Some(1), 1);
+        for lanes in [Some(1), Some(4), Some(8), None] {
+            for threads in [1usize, 2] {
+                assert_eq!(
+                    run(true, lanes, threads),
+                    reference,
+                    "paged lanes={lanes:?} threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,11 @@ use crate::tensor::ops::softmax_inplace;
 /// one KV head. `q` is the head's query (`hd` long); `keys`/`vals` are
 /// the head's contiguous blocks (`≥ t·hd`); `out` (`hd` long) must be
 /// zeroed — the V-sum accumulates into it. `scores` is caller scratch.
+///
+/// The paged attention path ([`super::attention`]) calls the two
+/// stages separately — [`scores_into`] per page, one softmax, then
+/// [`vsum_into`] per page — which is bitwise this function when the
+/// chain is a single page.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_head(
     q: &[f32],
@@ -42,9 +47,32 @@ pub fn attend_head(
     scores: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    debug_assert_eq!(q.len(), hd);
-    debug_assert_eq!(out.len(), hd);
     debug_assert!(keys.len() >= t * hd && vals.len() >= t * hd);
+    scores.clear();
+    scores.resize(t, 0.0);
+    scores_into(q, keys, t, hd, scale, lanes, scores);
+    softmax_inplace(scores);
+    vsum_into(scores, vals, hd, lanes, out);
+}
+
+/// Stage 1: raw (pre-softmax) scores for `t` consecutive cached
+/// positions of one KV head, written to `out[..t]` — `out[ti] =
+/// dot(q, keys[ti·hd..]) · scale`, lane-vectorized in blocks with a
+/// scalar tail. Each score is an independent dot, so computing a page's
+/// scores into that page's sub-slice of the full score buffer is
+/// bitwise the contiguous computation — the paged attend's stage-1
+/// identity (DESIGN.md §Paged-KV).
+pub fn scores_into(
+    q: &[f32],
+    keys: &[f32],
+    t: usize,
+    hd: usize,
+    scale: f32,
+    lanes: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hd);
+    debug_assert!(keys.len() >= t * hd && out.len() >= t);
     // only 1/4/8 have kernels; anything else (rejected loudly by the
     // set_lanes setters) falls back to the scalar path rather than
     // mis-striding a block
@@ -52,15 +80,12 @@ pub fn attend_head(
         4 | 8 => lanes,
         _ => 1,
     };
-
-    scores.clear();
-    scores.resize(t, 0.0);
     // ---- scores: lane blocks of consecutive positions, scalar tail ----
     let blocks = if lanes >= 4 { t / lanes } else { 0 };
     for b in 0..blocks {
         let ti = b * lanes;
         let kw = &keys[ti * hd..(ti + lanes) * hd];
-        let ow = &mut scores[ti..ti + lanes];
+        let ow = &mut out[ti..ti + lanes];
         #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
         {
             if lanes == 8 && crate::ternary::simd::avx2_available() {
@@ -76,25 +101,36 @@ pub fn attend_head(
         }
     }
     for ti in blocks * lanes..t {
-        scores[ti] = crate::tensor::ops::dot(q, &keys[ti * hd..(ti + 1) * hd]) * scale;
+        out[ti] = crate::tensor::ops::dot(q, &keys[ti * hd..(ti + 1) * hd]) * scale;
     }
+}
 
-    softmax_inplace(scores);
-
-    // ---- V-sum: head-dim lanes; each out[i] folds over ti in order ----
+/// Stage 2: weighted V-sum — `out[i] += probs[ti] · vals[ti·hd + i]`
+/// folded over `ti` in ascending order (`out` accumulates; callers
+/// zero it first). The ops are elementwise with `ti` outermost, so
+/// calling this once per page with that page's `probs` sub-slice, in
+/// page order, replays the contiguous left fold exactly — the paged
+/// attend's stage-2 identity (DESIGN.md §Paged-KV).
+pub fn vsum_into(probs: &[f32], vals: &[f32], hd: usize, lanes: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), hd);
+    debug_assert!(vals.len() >= probs.len() * hd);
+    let lanes = match lanes {
+        4 | 8 => lanes,
+        _ => 1,
+    };
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if lanes == 8 && crate::ternary::simd::avx2_available() {
             // SAFETY: AVX2 presence just checked; slice bounds asserted
             // above.
-            unsafe { x86::vsum8(scores, vals, hd, out) };
+            unsafe { x86::vsum8(probs, vals, hd, out) };
             return;
         }
     }
     if lanes >= 4 {
-        vsum_portable(scores, vals, hd, out);
+        vsum_portable(probs, vals, hd, out);
     } else {
-        for (ti, &p) in scores.iter().enumerate() {
+        for (ti, &p) in probs.iter().enumerate() {
             let vh = &vals[ti * hd..(ti + 1) * hd];
             for i in 0..hd {
                 out[i] += p * vh[i];
@@ -292,6 +328,58 @@ mod tests {
                     let mut out = vec![0.0f32; hd];
                     attend_head(&q, &keys, &vals, t, hd, scale, lanes, &mut scores, &mut out);
                     assert_eq!(out, expect, "hd={hd} t={t} lanes={lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_stage_split_bit_identical_to_fused() {
+        // computing scores per page-chunk into sub-slices, one softmax,
+        // then per-chunk V-sums in order must be bitwise attend_head
+        let mut rng = Rng::new(11);
+        let hd = 12;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for &t in &[5usize, 16, 33] {
+            for &page in &[4usize, 8, 64] {
+                let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+                let keys: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+                let vals: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+                for &lanes in &[1usize, 4, 8] {
+                    let mut scores = Vec::new();
+                    let mut expect = vec![0.0f32; hd];
+                    attend_head(&q, &keys, &vals, t, hd, scale, lanes, &mut scores, &mut expect);
+
+                    let mut ps = vec![0.0f32; t];
+                    let mut base = 0;
+                    while base < t {
+                        let fill = page.min(t - base);
+                        scores_into(
+                            &q,
+                            &keys[base * hd..(base + fill) * hd],
+                            fill,
+                            hd,
+                            scale,
+                            lanes,
+                            &mut ps[base..base + fill],
+                        );
+                        base += fill;
+                    }
+                    softmax_inplace(&mut ps);
+                    let mut out = vec![0.0f32; hd];
+                    let mut base = 0;
+                    while base < t {
+                        let fill = page.min(t - base);
+                        vsum_into(
+                            &ps[base..base + fill],
+                            &vals[base * hd..(base + fill) * hd],
+                            hd,
+                            lanes,
+                            &mut out,
+                        );
+                        base += fill;
+                    }
+                    assert_eq!(out, expect, "t={t} page={page} lanes={lanes}");
                 }
             }
         }

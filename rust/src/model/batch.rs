@@ -27,7 +27,10 @@ use crate::ternary::gemm::GemmScratch;
 /// Invariant (checked in debug builds by the attention pass): rows that
 /// share a `cache_idx` are contiguous and their positions ascend by 1 —
 /// i.e. each sequence contributes one ordered chunk. Rows of different
-/// sequences may appear in any order.
+/// sequences may appear in any order. With the paged KV allocator the
+/// engine additionally calls `KvCache::reserve` for every sequence's
+/// row count *before* building the batch, so the appends inside the
+/// pass can never hit page-pool exhaustion mid-forward.
 #[derive(Clone, Debug, Default)]
 pub struct ForwardBatch {
     pub tokens: Vec<u32>,

@@ -1,16 +1,30 @@
-//! KV cache for one sequence: per layer, append-only K/V buffers in a
-//! **head-major** layout.
+//! Paged KV cache: per (layer, kv-head) **head-major** streams stored
+//! as chains of fixed-size, refcounted pages.
 //!
-//! Each (layer, kv-head) pair owns a contiguous `[len × head_dim]`
-//! block, so every attention kernel streams unit-stride memory: with
-//! GQA, all `n_heads / n_kv_heads` query heads sharing a KV head read
-//! the *same* contiguous block instead of `kv_dim`-strided slices of a
-//! position-interleaved buffer (DESIGN.md §Attention-Kernels has the
-//! byte-offset diagram and the bandwidth math).
+//! Each page ([`KvPage`]) holds `page_size` cached positions for *all*
+//! (layer, kv-head) blocks of one sequence segment: within a page, the
+//! block for (layer, kvh) is the contiguous `[page_size × head_dim]`
+//! slice starting at `(layer · n_kv_heads + kvh) · page_size ·
+//! head_dim`, and position `pos` lives at offset `(pos % page_size) ·
+//! head_dim` inside it. The page table is simply `pages[pos /
+//! page_size]`. Within a page every attention kernel still streams
+//! unit-stride memory exactly as the contiguous PR-5 layout did
+//! (DESIGN.md §Paged-KV has the byte-offset diagram).
 //!
-//! The serving engine pools these (see `coordinator::kv_pool` for the
-//! bounded recycling pool); this type is the per-sequence view the
-//! attention kernels consume.
+//! Pages are `Arc`-refcounted so multiple sequences can share a
+//! physical prefix (the radix prefix cache in
+//! `coordinator::prefix_cache` hands out extra references). Writes go
+//! through copy-on-write: a cache only ever mutates a page it holds
+//! exclusively, cloning the payload first when the page is shared.
+//!
+//! All pages come from a shared [`PageStore`] — a free-list pool sized
+//! in pages with an optional budget, so a serving replica bounds its
+//! total KV memory across sequences rather than per sequence. The
+//! legacy single-allocation behavior is preserved exactly by
+//! [`KvCache::new`], which builds a one-page cache (`page_size =
+//! max_seq`) over a private unbounded store.
+
+use std::sync::{Arc, Mutex};
 
 /// Recoverable full-cache signal: an append was requested past
 /// `max_seq`. Surfaced by [`KvCache::try_append`] so the serving
@@ -29,32 +43,287 @@ impl std::fmt::Display for CacheFull {
 
 impl std::error::Error for CacheFull {}
 
-/// Append-only cache for all layers of one sequence, head-major.
+/// Recoverable page-pool exhaustion: a [`KvCache::reserve`] could not
+/// allocate because the shared [`PageStore`] hit its page budget. The
+/// serving engine turns this into preemption (release a victim's pages,
+/// re-enqueue it for recompute) instead of failing the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagesExhausted {
+    /// The store's page budget at the time of the failed allocation.
+    pub budget: usize,
+}
+
+impl std::fmt::Display for PagesExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV page pool exhausted (budget={} pages)", self.budget)
+    }
+}
+
+impl std::error::Error for PagesExhausted {}
+
+/// One fixed-size page of cached positions for every (layer, kv-head)
+/// block of a sequence segment. `k`/`v` are `n_layers · n_kv_heads ·
+/// page_size · head_dim` floats; see the module docs for the offset
+/// math. Shared between sequences via `Arc` — mutation is only allowed
+/// through [`KvCache`]'s copy-on-write path.
+#[derive(Debug)]
+pub struct KvPage {
+    pub(crate) k: Box<[f32]>,
+    pub(crate) v: Box<[f32]>,
+}
+
+/// Snapshot of a [`PageStore`]'s accounting, for metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageStats {
+    /// Pages currently alive (held by caches or the prefix cache).
+    pub live: usize,
+    /// Recycled page buffers waiting on the free list.
+    pub free: usize,
+    /// High-water mark of `live`.
+    pub peak_live: usize,
+    /// Copy-on-write page copies performed.
+    pub cow_pages: u64,
+    /// Total fresh (non-recycled) page buffer allocations.
+    pub page_allocs: u64,
+    /// Page budget, if bounded.
+    pub budget: Option<usize>,
+}
+
+#[derive(Debug)]
+struct StoreInner {
+    /// Floats per page per K (or V) buffer:
+    /// `n_layers · n_kv_heads · page_size · head_dim`.
+    page_floats: usize,
+    /// Max live pages, `None` = unbounded.
+    budget: Option<usize>,
+    /// Recycled page buffers (k, v) awaiting reuse.
+    free: Vec<(Box<[f32]>, Box<[f32]>)>,
+    live: usize,
+    peak_live: usize,
+    cow_pages: u64,
+    page_allocs: u64,
+}
+
+/// Shared page allocator: a free-list pool of fixed-geometry pages with
+/// an optional budget. Cheap to clone (`Arc` handle); all caches of one
+/// serving replica share one store so the budget bounds replica-wide KV
+/// memory.
 #[derive(Clone, Debug)]
+pub struct PageStore {
+    inner: Arc<Mutex<StoreInner>>,
+}
+
+impl PageStore {
+    /// Store for pages of the given geometry. `budget` bounds the
+    /// number of simultaneously live pages (`None` = unbounded).
+    pub fn for_geometry(
+        n_layers: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        page_size: usize,
+        budget: Option<usize>,
+    ) -> PageStore {
+        PageStore {
+            inner: Arc::new(Mutex::new(StoreInner {
+                page_floats: n_layers * n_kv_heads * page_size * head_dim,
+                budget,
+                free: Vec::new(),
+                live: 0,
+                peak_live: 0,
+                cow_pages: 0,
+                page_allocs: 0,
+            })),
+        }
+    }
+
+    /// Allocate one zero-filled page (recycling a free buffer when one
+    /// is available). Fails only when a budget is set and exhausted.
+    pub fn alloc(&self) -> Result<Arc<KvPage>, PagesExhausted> {
+        let mut s = self.inner.lock().unwrap();
+        if let Some(b) = s.budget {
+            if s.live >= b {
+                return Err(PagesExhausted { budget: b });
+            }
+        }
+        let (k, v) = match s.free.pop() {
+            Some((mut k, mut v)) => {
+                // Recycled buffers keep stale floats; that's fine —
+                // readers never look past the staged horizon.
+                debug_assert_eq!(k.len(), s.page_floats);
+                k.fill(0.0);
+                v.fill(0.0);
+                (k, v)
+            }
+            None => {
+                s.page_allocs += 1;
+                let n = s.page_floats;
+                (
+                    vec![0.0f32; n].into_boxed_slice(),
+                    vec![0.0f32; n].into_boxed_slice(),
+                )
+            }
+        };
+        s.live += 1;
+        s.peak_live = s.peak_live.max(s.live);
+        Ok(Arc::new(KvPage { k, v }))
+    }
+
+    /// Return one reference to a page. Only when this was the *last*
+    /// reference does the page die and its buffers join the free list;
+    /// shared pages just drop the refcount. Every page handed out by
+    /// [`PageStore::alloc`] must eventually come back through here (or
+    /// the store under-counts frees — [`KvCache`]'s `Drop` does this).
+    pub fn release(&self, page: Arc<KvPage>) {
+        if let Ok(p) = Arc::try_unwrap(page) {
+            let mut s = self.inner.lock().unwrap();
+            s.live -= 1;
+            s.free.push((p.k, p.v));
+        }
+    }
+
+    /// Record one copy-on-write page copy (metrics only).
+    pub fn note_cow(&self) {
+        self.inner.lock().unwrap().cow_pages += 1;
+    }
+
+    pub fn stats(&self) -> PageStats {
+        let s = self.inner.lock().unwrap();
+        PageStats {
+            live: s.live,
+            free: s.free.len(),
+            peak_live: s.peak_live,
+            cow_pages: s.cow_pages,
+            page_allocs: s.page_allocs,
+            budget: s.budget,
+        }
+    }
+
+    /// Floats per page per K (or V) buffer.
+    pub fn page_floats(&self) -> usize {
+        self.inner.lock().unwrap().page_floats
+    }
+
+    /// Whether two handles point at the same underlying store.
+    pub fn ptr_eq(&self, other: &PageStore) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+}
+
+/// Zero-alloc iterator over the page chain of one (layer, kv-head)
+/// block: yields `(keys, values)` slices of `fill · head_dim` floats
+/// per page, in ascending position order. Produced by
+/// [`KvCache::page_streams`].
+pub struct PageStreams<'a> {
+    pages: &'a [Arc<KvPage>],
+    base: usize,
+    page_positions: usize,
+    head_dim: usize,
+    remaining: usize,
+    idx: usize,
+}
+
+impl<'a> Iterator for PageStreams<'a> {
+    /// `(keys, values)` for one page: `fill · head_dim` floats each.
+    type Item = (&'a [f32], &'a [f32]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let page = &self.pages[self.idx];
+        let fill = self.remaining.min(self.page_positions);
+        let lo = self.base;
+        let hi = lo + fill * self.head_dim;
+        self.idx += 1;
+        self.remaining -= fill;
+        Some((&page.k[lo..hi], &page.v[lo..hi]))
+    }
+}
+
+/// Append-only cache for all layers of one sequence, head-major within
+/// fixed-size refcounted pages (module docs have the layout).
+///
+/// `Clone` is a copy-on-write fork: the clone shares every page by
+/// refcount; whichever side appends into a shared page first pays one
+/// page copy. Forks at non-page-aligned boundaries are therefore safe —
+/// the partially-filled tail page is duplicated lazily on first write.
+#[derive(Debug)]
 pub struct KvCache {
     pub n_layers: usize,
     pub n_kv_heads: usize,
     pub head_dim: usize,
     pub max_seq: usize,
-    /// k[layer · n_kv_heads + kvh] is a contiguous (len · head_dim)
-    /// block: position `ti`'s key for that head lives at
-    /// `[ti · head_dim .. (ti + 1) · head_dim]`.
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    page_size: usize,
+    store: PageStore,
+    /// Page table: position `pos` lives in `pages[pos / page_size]`.
+    pages: Vec<Arc<KvPage>>,
     len: usize,
+    /// Staged (appended, possibly uncommitted) positions per layer.
+    staged: Vec<usize>,
+}
+
+impl Clone for KvCache {
+    fn clone(&self) -> KvCache {
+        KvCache {
+            n_layers: self.n_layers,
+            n_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim,
+            max_seq: self.max_seq,
+            page_size: self.page_size,
+            store: self.store.clone(),
+            // Refcount bump only; store accounting is unchanged (the
+            // pages stay live) and release() frees on last-ref drop.
+            pages: self.pages.clone(),
+            len: self.len,
+            staged: self.staged.clone(),
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        for page in self.pages.drain(..) {
+            self.store.release(page);
+        }
+    }
 }
 
 impl KvCache {
+    /// Legacy single-allocation cache: one page spanning `max_seq`
+    /// positions over a private unbounded store. Byte layout inside
+    /// that page is exactly the PR-5 contiguous head-major layout.
     pub fn new(n_layers: usize, n_kv_heads: usize, head_dim: usize, max_seq: usize) -> KvCache {
-        let blocks = n_layers * n_kv_heads;
+        let store = PageStore::for_geometry(n_layers, n_kv_heads, head_dim, max_seq.max(1), None);
+        KvCache::paged(n_layers, n_kv_heads, head_dim, max_seq, max_seq, store)
+    }
+
+    /// Paged cache drawing pages of `page_size` positions from the
+    /// shared `store` (whose geometry must match). `page_size` is
+    /// clamped to `[1, max_seq]`.
+    pub fn paged(
+        n_layers: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        page_size: usize,
+        store: PageStore,
+    ) -> KvCache {
+        let page_size = page_size.min(max_seq).max(1);
+        debug_assert_eq!(
+            store.page_floats(),
+            n_layers * n_kv_heads * page_size * head_dim,
+            "PageStore geometry must match the cache geometry"
+        );
         KvCache {
             n_layers,
             n_kv_heads,
             head_dim,
             max_seq,
-            k: (0..blocks).map(|_| Vec::with_capacity(max_seq * head_dim)).collect(),
-            v: (0..blocks).map(|_| Vec::with_capacity(max_seq * head_dim)).collect(),
+            page_size,
+            store,
+            pages: Vec::new(),
             len: 0,
+            staged: vec![0; n_layers],
         }
     }
 
@@ -81,24 +350,79 @@ impl KvCache {
         self.max_seq - self.len.min(self.max_seq)
     }
 
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages currently held (shared or exclusive).
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// The store this cache allocates from.
+    pub fn store(&self) -> &PageStore {
+        &self.store
+    }
+
+    /// Offset of (layer, kvh)'s block inside a page's k/v buffer.
     #[inline]
-    fn block(&self, layer: usize, kvh: usize) -> usize {
+    fn block_base(&self, layer: usize, kvh: usize) -> usize {
         debug_assert!(layer < self.n_layers && kvh < self.n_kv_heads);
-        layer * self.n_kv_heads + kvh
+        (layer * self.n_kv_heads + kvh) * self.page_size * self.head_dim
+    }
+
+    /// Make `pages[idx]` exclusively owned, cloning the payload first
+    /// when it is shared (copy-on-write).
+    fn ensure_writable(&mut self, idx: usize) -> Result<(), PagesExhausted> {
+        if Arc::get_mut(&mut self.pages[idx]).is_some() {
+            return Ok(());
+        }
+        let fresh = self.store.alloc()?;
+        let old = std::mem::replace(&mut self.pages[idx], fresh);
+        {
+            // Freshly allocated ⇒ uniquely owned; copy the shared payload.
+            let dst = Arc::get_mut(&mut self.pages[idx]).expect("fresh page is unshared");
+            dst.k.copy_from_slice(&old.k);
+            dst.v.copy_from_slice(&old.v);
+        }
+        self.store.release(old);
+        self.store.note_cow();
+        Ok(())
+    }
+
+    /// Pre-allocate pages (and un-share the partially-filled tail page)
+    /// so the next `n` appended positions cannot fail mid-pass. The
+    /// engine calls this at scheduling time and treats `Err` as a
+    /// preemption signal; `append` itself then never allocates under a
+    /// budget it could miss.
+    pub fn reserve(&mut self, n: usize) -> Result<(), PagesExhausted> {
+        let target = (self.len + n).min(self.max_seq);
+        let need = target.div_ceil(self.page_size);
+        while self.pages.len() < need {
+            let page = self.store.alloc()?;
+            self.pages.push(page);
+        }
+        // A fork may share the tail page; pay the COW copy now, under
+        // the same budget, rather than inside the forward pass.
+        if n > 0 && self.len % self.page_size != 0 {
+            self.ensure_writable(self.len / self.page_size)?;
+        }
+        Ok(())
     }
 
     /// Append one position's K/V for layer `layer` (`k`/`v` are
     /// `kv_dim` long, `[head0 | head1 | ...]`); each head's chunk goes
-    /// to that head's contiguous block. Multiple positions may be
-    /// staged per layer before a single [`KvCache::commit_n`] (the
-    /// batched prefill path); the classic decode path appends one
+    /// to that head's block of the position's page. Multiple positions
+    /// may be staged per layer before a single [`KvCache::commit_n`]
+    /// (the batched prefill path); the classic decode path appends one
     /// position per layer then calls [`KvCache::commit`]. Staged
     /// (uncommitted) positions are already visible through
-    /// [`KvCache::keys`]/[`KvCache::values`], which is what lets a
-    /// prefill chunk attend to itself causally.
+    /// [`KvCache::page_streams`], which is what lets a prefill chunk
+    /// attend to itself causally.
     ///
     /// Panics on overflow — callers that plan capacity (the engine)
-    /// guard with [`KvCache::remaining`] or use
+    /// guard with [`KvCache::remaining`] + [`KvCache::reserve`] or use
     /// [`KvCache::try_append`] for the recoverable form.
     pub fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
         if let Err(e) = self.try_append(layer, k, v) {
@@ -108,27 +432,53 @@ impl KvCache {
 
     /// [`KvCache::append`] returning the recoverable [`CacheFull`]
     /// signal instead of panicking; the cache is unchanged on `Err`.
+    /// Both the `max_seq` ceiling and (when the caller skipped
+    /// [`KvCache::reserve`]) page-pool exhaustion surface as
+    /// `CacheFull` — capacity is capacity.
     pub fn try_append(&mut self, layer: usize, k: &[f32], v: &[f32]) -> Result<(), CacheFull> {
         debug_assert_eq!(k.len(), self.kv_dim());
         debug_assert_eq!(v.len(), self.kv_dim());
-        if self.staged_len(layer) >= self.max_seq {
+        let pos = self.staged[layer];
+        if pos >= self.max_seq {
             return Err(CacheFull {
                 max_seq: self.max_seq,
             });
         }
-        let hd = self.head_dim;
-        for kvh in 0..self.n_kv_heads {
-            let b = self.block(layer, kvh);
-            self.k[b].extend_from_slice(&k[kvh * hd..(kvh + 1) * hd]);
-            self.v[b].extend_from_slice(&v[kvh * hd..(kvh + 1) * hd]);
+        let page_idx = pos / self.page_size;
+        if page_idx >= self.pages.len() || Arc::get_mut(&mut self.pages[page_idx]).is_none() {
+            // Un-reserved path (standalone callers): allocate / COW
+            // here; a budget miss degrades to the CacheFull signal.
+            if page_idx >= self.pages.len() {
+                match self.store.alloc() {
+                    Ok(p) => self.pages.push(p),
+                    Err(_) => {
+                        return Err(CacheFull {
+                            max_seq: self.max_seq,
+                        })
+                    }
+                }
+            } else if self.ensure_writable(page_idx).is_err() {
+                return Err(CacheFull {
+                    max_seq: self.max_seq,
+                });
+            }
         }
+        let hd = self.head_dim;
+        let off = (pos % self.page_size) * hd;
+        for kvh in 0..self.n_kv_heads {
+            let base = self.block_base(layer, kvh) + off;
+            let page = Arc::get_mut(&mut self.pages[page_idx]).expect("page made writable above");
+            page.k[base..base + hd].copy_from_slice(&k[kvh * hd..(kvh + 1) * hd]);
+            page.v[base..base + hd].copy_from_slice(&v[kvh * hd..(kvh + 1) * hd]);
+        }
+        self.staged[layer] = pos + 1;
         Ok(())
     }
 
     /// Staged positions for `layer`: committed length plus any appends
     /// not yet committed.
     pub fn staged_len(&self, layer: usize) -> usize {
-        self.k[layer * self.n_kv_heads].len() / self.head_dim
+        self.staged[layer]
     }
 
     /// Advance the position counter after all layers appended.
@@ -141,46 +491,127 @@ impl KvCache {
     /// prefill chunk at once).
     pub fn commit_n(&mut self, n: usize) {
         self.len += n;
-        for b in 0..self.n_layers * self.n_kv_heads {
-            debug_assert_eq!(self.k[b].len(), self.len * self.head_dim);
-            debug_assert_eq!(self.v[b].len(), self.len * self.head_dim);
+        for layer in 0..self.n_layers {
+            debug_assert_eq!(self.staged[layer], self.len);
         }
     }
 
-    /// K block for one (layer, kv-head): `staged · head_dim` values,
-    /// unit-stride — position `ti`'s key is `[ti·hd .. (ti+1)·hd]`.
+    /// K block for one (layer, kv-head) when the whole sequence fits in
+    /// one page (always true for [`KvCache::new`] caches): `staged ·
+    /// head_dim` values, unit-stride — position `ti`'s key is `[ti·hd
+    /// .. (ti+1)·hd]`. Paged callers iterate
+    /// [`KvCache::page_streams`] instead.
     pub fn keys(&self, layer: usize, kvh: usize) -> &[f32] {
-        &self.k[self.block(layer, kvh)]
+        let staged = self.staged[layer];
+        assert!(
+            staged <= self.page_size,
+            "keys()/values() require a single-page cache (staged={staged} > page_size={})",
+            self.page_size
+        );
+        if staged == 0 {
+            return &[];
+        }
+        let base = self.block_base(layer, kvh);
+        &self.pages[0].k[base..base + staged * self.head_dim]
     }
 
     pub fn values(&self, layer: usize, kvh: usize) -> &[f32] {
-        &self.v[self.block(layer, kvh)]
+        let staged = self.staged[layer];
+        assert!(
+            staged <= self.page_size,
+            "keys()/values() require a single-page cache (staged={staged} > page_size={})",
+            self.page_size
+        );
+        if staged == 0 {
+            return &[];
+        }
+        let base = self.block_base(layer, kvh);
+        &self.pages[0].v[base..base + staged * self.head_dim]
     }
 
-    /// Drop all cached state but keep capacity (sequence reuse).
+    /// Iterate the page chain of one (layer, kv-head) block over the
+    /// first `t` positions: `(keys, values)` slices per page, ascending
+    /// position order. `t` may include staged positions. The attention
+    /// pass folds these **in yielded order**, which preserves the exact
+    /// left-fold of the contiguous layout across page boundaries
+    /// (DESIGN.md §Paged-KV bit-identity argument).
+    pub fn page_streams(&self, layer: usize, kvh: usize, t: usize) -> PageStreams<'_> {
+        debug_assert!(t <= self.staged[layer]);
+        PageStreams {
+            pages: &self.pages,
+            base: self.block_base(layer, kvh),
+            page_positions: self.page_size,
+            head_dim: self.head_dim,
+            remaining: t,
+            idx: 0,
+        }
+    }
+
+    /// Adopt fully-filled pages (a prefix-cache hit) into an empty
+    /// cache: the cache now starts at `pages.len() · page_size`
+    /// committed positions without prefilling them.
+    pub fn adopt_pages(&mut self, pages: Vec<Arc<KvPage>>) {
+        assert!(
+            self.pages.is_empty() && self.len == 0,
+            "adopt_pages requires an empty cache"
+        );
+        debug_assert!(pages
+            .iter()
+            .all(|p| p.k.len() == self.store.page_floats()));
+        let n = pages.len() * self.page_size;
+        debug_assert!(n <= self.max_seq);
+        self.pages = pages;
+        self.len = n;
+        for s in self.staged.iter_mut() {
+            *s = n;
+        }
+    }
+
+    /// The first `n_positions` worth of pages, for donation to the
+    /// prefix cache (`n_positions` must be page-aligned and committed).
+    pub fn shared_pages(&self, n_positions: usize) -> &[Arc<KvPage>] {
+        debug_assert_eq!(n_positions % self.page_size, 0);
+        debug_assert!(n_positions <= self.len);
+        &self.pages[..n_positions / self.page_size]
+    }
+
+    /// Copy-on-write fork: shares every page by refcount; either side
+    /// pays one page copy on its first write into a shared page.
+    pub fn fork(&self) -> KvCache {
+        self.clone()
+    }
+
+    /// Drop all cached state (pages go back to the store).
     pub fn reset(&mut self) {
-        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
-            buf.clear();
+        for page in self.pages.drain(..) {
+            self.store.release(page);
         }
         self.len = 0;
+        for s in self.staged.iter_mut() {
+            *s = 0;
+        }
     }
 
     /// Truncate to the first `keep` positions (speculative rollback).
+    /// Pages past the new tail go back to the store; stale floats
+    /// beyond `keep` inside the tail page are never read (all reads are
+    /// bounded by the staged horizon).
     pub fn truncate(&mut self, keep: usize) {
         let keep = keep.min(self.len);
-        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
-            buf.truncate(keep * self.head_dim);
+        let keep_pages = keep.div_ceil(self.page_size);
+        while self.pages.len() > keep_pages {
+            let page = self.pages.pop().expect("len checked");
+            self.store.release(page);
         }
         self.len = keep;
+        for s in self.staged.iter_mut() {
+            *s = keep;
+        }
     }
 
-    /// Resident bytes.
+    /// Resident bytes (pages held by this cache, shared or not).
     pub fn bytes(&self) -> usize {
-        self.k
-            .iter()
-            .chain(self.v.iter())
-            .map(|b| b.capacity() * 4)
-            .sum()
+        self.pages.len() * 2 * self.store.page_floats() * 4
     }
 }
 
@@ -316,5 +747,154 @@ mod tests {
         assert!(c.is_empty());
         assert!(!c.is_full());
         assert_eq!(c.remaining(), 4);
+    }
+
+    // ---- paged-specific coverage ----
+
+    fn paged_cache(page_size: usize, max_seq: usize, budget: Option<usize>) -> KvCache {
+        let store = PageStore::for_geometry(1, 1, 2, page_size, budget);
+        KvCache::paged(1, 1, 2, max_seq, page_size, store)
+    }
+
+    fn fill(c: &mut KvCache, n: usize, tag: f32) {
+        for i in 0..n {
+            let x = tag + i as f32;
+            c.append(0, &[x, x], &[-x, -x]);
+            c.commit();
+        }
+    }
+
+    #[test]
+    fn page_table_math_spans_pages() {
+        // page_size 2, 5 positions ⇒ pages [2, 2, 1]
+        let mut c = paged_cache(2, 8, None);
+        fill(&mut c, 5, 0.0);
+        assert_eq!(c.pages_held(), 3);
+        let chunks: Vec<(Vec<f32>, Vec<f32>)> = c
+            .page_streams(0, 0, 5)
+            .map(|(k, v)| (k.to_vec(), v.to_vec()))
+            .collect();
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].0, vec![0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(chunks[1].0, vec![2.0, 2.0, 3.0, 3.0]);
+        assert_eq!(chunks[2].0, vec![4.0, 4.0]); // partial tail page
+        assert_eq!(chunks[2].1, vec![-4.0, -4.0]);
+        // a shorter horizon stops mid-chain
+        let short: Vec<usize> = c.page_streams(0, 0, 3).map(|(k, _)| k.len()).collect();
+        assert_eq!(short, vec![4, 2]);
+    }
+
+    #[test]
+    fn cow_fork_isolates_writers_at_unaligned_boundary() {
+        // fork at position 3 with page_size 2: tail page is half full
+        let mut a = paged_cache(2, 8, None);
+        fill(&mut a, 3, 0.0);
+        let mut b = a.fork();
+        let stats_before = a.store().stats();
+        assert_eq!(stats_before.live, 2, "fork shares pages physically");
+        // both sides write into the shared tail page → one COW copy each side at most
+        fill(&mut a, 1, 100.0);
+        fill(&mut b, 1, 200.0);
+        let a_tail: Vec<f32> = a.page_streams(0, 0, 4).last().unwrap().0.to_vec();
+        let b_tail: Vec<f32> = b.page_streams(0, 0, 4).last().unwrap().0.to_vec();
+        assert_eq!(a_tail, vec![2.0, 2.0, 100.0, 100.0]);
+        assert_eq!(b_tail, vec![2.0, 2.0, 200.0, 200.0]);
+        // shared full first page untouched and still shared
+        let a_head: Vec<f32> = a.page_streams(0, 0, 2).next().unwrap().0.to_vec();
+        let b_head: Vec<f32> = b.page_streams(0, 0, 2).next().unwrap().0.to_vec();
+        assert_eq!(a_head, b_head);
+        assert!(a.store().stats().cow_pages >= 1);
+    }
+
+    #[test]
+    fn drop_returns_pages_to_free_list() {
+        let store = PageStore::for_geometry(1, 1, 2, 2, None);
+        let mut c = KvCache::paged(1, 1, 2, 8, 2, store.clone());
+        fill(&mut c, 4, 0.0);
+        assert_eq!(store.stats().live, 2);
+        drop(c);
+        let s = store.stats();
+        assert_eq!(s.live, 0);
+        assert_eq!(s.free, 2, "buffers recycled, not leaked");
+        // a new cache reuses the freed buffers without fresh allocs
+        let allocs_before = s.page_allocs;
+        let mut c2 = KvCache::paged(1, 1, 2, 8, 2, store.clone());
+        fill(&mut c2, 4, 0.0);
+        assert_eq!(store.stats().page_allocs, allocs_before);
+    }
+
+    #[test]
+    fn budget_exhaustion_is_recoverable_and_reserve_preflights() {
+        let mut c = paged_cache(2, 64, Some(2));
+        assert!(c.reserve(4).is_ok()); // exactly 2 pages
+        fill(&mut c, 4, 0.0);
+        // a 5th position needs a 3rd page: reserve fails, cache unchanged
+        let err = c.reserve(1).unwrap_err();
+        assert_eq!(err, PagesExhausted { budget: 2 });
+        assert!(err.to_string().contains("budget=2"));
+        assert_eq!(c.len(), 4);
+        // un-reserved append degrades to the CacheFull signal
+        let err = c.try_append(0, &[9.0, 9.0], &[9.0, 9.0]).unwrap_err();
+        assert_eq!(err.max_seq, 64);
+        // freeing a page makes progress possible again
+        c.truncate(2);
+        assert!(c.reserve(1).is_ok());
+    }
+
+    #[test]
+    fn adopt_pages_skips_prefill_and_matches_donor() {
+        let store = PageStore::for_geometry(1, 1, 2, 2, None);
+        let mut donor = KvCache::paged(1, 1, 2, 8, 2, store.clone());
+        fill(&mut donor, 4, 7.0);
+        let shared: Vec<_> = donor.shared_pages(4).to_vec();
+        let mut adopter = KvCache::paged(1, 1, 2, 8, 2, store.clone());
+        adopter.adopt_pages(shared);
+        assert_eq!(adopter.len(), 4);
+        assert_eq!(adopter.staged_len(0), 4);
+        let d: Vec<f32> = donor.page_streams(0, 0, 4).flat_map(|(k, _)| k.to_vec()).collect();
+        let a: Vec<f32> = adopter.page_streams(0, 0, 4).flat_map(|(k, _)| k.to_vec()).collect();
+        assert_eq!(d, a, "adopted prefix is the same physical bytes");
+        // adopter can extend past the adopted prefix independently
+        fill(&mut adopter, 1, 50.0);
+        assert_eq!(adopter.len(), 5);
+        assert_eq!(donor.len(), 4);
+    }
+
+    #[test]
+    fn single_page_streams_match_keys_values() {
+        let mut c = KvCache::new(2, 2, 3, 6);
+        for layer in 0..2 {
+            for p in 0..4 {
+                let k: Vec<f32> = (0..6).map(|j| (layer * 100 + p * 10 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+                c.append(layer, &k, &v);
+            }
+        }
+        c.commit_n(4);
+        for layer in 0..2 {
+            for kvh in 0..2 {
+                let mut it = c.page_streams(layer, kvh, 4);
+                let (k, v) = it.next().unwrap();
+                assert!(it.next().is_none(), "single page for legacy caches");
+                assert_eq!(k, &c.keys(layer, kvh)[..4 * 3]);
+                assert_eq!(v, &c.values(layer, kvh)[..4 * 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_releases_whole_pages() {
+        let store = PageStore::for_geometry(1, 1, 2, 2, None);
+        let mut c = KvCache::paged(1, 1, 2, 16, 2, store.clone());
+        fill(&mut c, 7, 0.0); // 4 pages
+        assert_eq!(c.pages_held(), 4);
+        c.truncate(3); // keeps 2 pages (positions 0..3)
+        assert_eq!(c.pages_held(), 2);
+        assert_eq!(store.stats().live, 2);
+        assert_eq!(store.stats().free, 2);
+        // appending after truncate overwrites the stale tail slot
+        fill(&mut c, 1, 30.0);
+        let tail: Vec<f32> = c.page_streams(0, 0, 4).last().unwrap().0.to_vec();
+        assert_eq!(tail, vec![2.0, 2.0, 30.0, 30.0]);
     }
 }

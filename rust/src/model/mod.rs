@@ -24,6 +24,6 @@ pub mod transformer;
 pub use attention::{AttnScratch, DecodeScratch};
 pub use batch::{ForwardBatch, ForwardScratch};
 pub use config::ModelConfig;
-pub use kv::{CacheFull, KvCache};
+pub use kv::{CacheFull, KvCache, KvPage, PageStats, PageStore, PagesExhausted};
 pub use linear::QuantLinear;
 pub use transformer::Transformer;

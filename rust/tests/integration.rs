@@ -782,6 +782,194 @@ fn packed_checkpoint_disk_footprint_within_eighth() {
 }
 
 // ---------------------------------------------------------------------
+// Paged KV + prefix cache parity (the ISSUE 6 tentpole guarantee)
+// ---------------------------------------------------------------------
+
+/// Random shared-prefix workloads served on the paged allocator with
+/// copy-on-write pages and radix prefix adoption must be
+/// token-for-token identical to a fresh contiguous cache — across
+/// thread counts {1, 2} × SIMD on/off, with non-page-aligned prefix
+/// forks, greedy and seeded temperature sampling, and a second warm
+/// wave that adopts donated pages.
+#[test]
+fn paged_prefix_serving_matches_contiguous_property() {
+    use ptqtp::coordinator::batcher::BatchPolicy;
+    use ptqtp::coordinator::PagedKvOpts;
+    use ptqtp::proptest::{check_seeded, prop_assert, Gen};
+
+    check_seeded(0xFA6ED, 8, |g: &mut Gen| {
+        let vocab = 32usize;
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = vocab;
+        cfg.max_seq = 64;
+        let mut rng = Rng::new(g.rng.next_u64());
+        let mut model = Transformer::random(cfg, &mut rng);
+        if g.usize_in(0, 1) == 1 {
+            // ragged group: packed ternary tier in play
+            model.quantize_with(
+                quant::by_name("ptqtp", 10).unwrap().as_ref(),
+                &QuantCtx::default(),
+            );
+        }
+
+        // a few prefix families with non-page-aligned lengths (page
+        // size 8 below), so forks land mid-page and exercise COW
+        let n_families = g.usize_in(1, 3);
+        let families: Vec<Vec<u32>> = (0..n_families)
+            .map(|_| {
+                let plen = g.usize_in(3, 21);
+                (0..plen).map(|_| g.rng.below(vocab) as u32).collect()
+            })
+            .collect();
+        let n_req = g.usize_in(2, 6);
+        let reqs: Vec<(Vec<u32>, usize, f32, u64)> = (0..n_req)
+            .map(|_| {
+                let mut prompt = g.pick(&families).clone();
+                let suffix = g.usize_in(0, 5);
+                prompt.extend((0..suffix).map(|_| g.rng.below(vocab) as u32));
+                (prompt, g.usize_in(1, 6), *g.pick(&[0.0f32, 0.8]), g.rng.next_u64())
+            })
+            .collect();
+        let policy = BatchPolicy {
+            max_running: *g.pick(&[2usize, 4]),
+            prefill_token_budget: *g.pick(&[5usize, 64]),
+            fcfs_prefill: true,
+        };
+
+        let serve = |kv: PagedKvOpts, threads: usize, simd: bool, waves: usize| {
+            let mut e = ServeEngine::with_opts(model.clone(), policy, threads, kv);
+            e.set_simd(simd);
+            let mut all = Vec::new();
+            for wave in 0..waves {
+                for (i, (prompt, max_new, temperature, seed)) in reqs.iter().enumerate() {
+                    e.submit(Request::new(
+                        (wave * 100 + i) as u64,
+                        prompt.clone(),
+                        SamplingParams {
+                            temperature: *temperature,
+                            max_new_tokens: *max_new,
+                            stop_token: None,
+                            seed: *seed,
+                        },
+                    ));
+                }
+                let mut out = e.run_to_completion();
+                out.sort_by_key(|r| r.id);
+                // waves are identical workloads ⇒ identical tokens; keep
+                // only token vectors for comparison
+                all.push(out.into_iter().map(|r| r.tokens).collect::<Vec<_>>());
+            }
+            all
+        };
+
+        let legacy = PagedKvOpts {
+            page_size: 64,
+            prefix_cache: false,
+            page_budget: None,
+        };
+        let want = serve(legacy, 1, false, 1).remove(0);
+        let paged = PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: None,
+        };
+        for &threads in &[1usize, 2] {
+            for &simd in &[false, true] {
+                let waves = serve(paged, threads, simd, 2);
+                for (w, wave_toks) in waves.iter().enumerate() {
+                    if *wave_toks != want {
+                        return Err(format!(
+                            "paged serve diverged (threads={threads} simd={simd} wave={w}): \
+                             {wave_toks:?} vs {want:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        prop_assert(true, "unreachable")
+    });
+}
+
+/// Forced preemption end-to-end: a page budget far below the workload's
+/// working set preempts sequences mid-decode, and every request still
+/// completes with output identical to an unconstrained serve — greedy
+/// and seeded-temperature sampling replay bitwise through the
+/// recompute.
+#[test]
+fn preempted_requests_complete_identically() {
+    use ptqtp::coordinator::batcher::BatchPolicy;
+    use ptqtp::coordinator::PagedKvOpts;
+
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = 32;
+    cfg.max_seq = 64;
+    let mut rng = Rng::new(44);
+    let mut model = Transformer::random(cfg, &mut rng);
+    model.quantize_with(
+        quant::by_name("ptqtp", 10).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    let policy = BatchPolicy {
+        max_running: 3,
+        prefill_token_budget: 16,
+        fcfs_prefill: true,
+    };
+    let submit = |e: &mut ServeEngine| {
+        for i in 0..6u64 {
+            let prompt: Vec<u32> = (0..12).map(|j| 1 + ((3 * i as u32 + j) % 30)).collect();
+            let mut params = SamplingParams {
+                max_new_tokens: 6,
+                stop_token: None,
+                ..Default::default()
+            };
+            if i % 2 == 1 {
+                params.temperature = 0.8;
+                params.seed = 17 + i;
+            }
+            e.submit(Request::new(i, prompt, params));
+        }
+    };
+    let mut free = ServeEngine::with_opts(
+        model.clone(),
+        policy,
+        1,
+        PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: None,
+        },
+    );
+    submit(&mut free);
+    let mut want = free.run_to_completion();
+    want.sort_by_key(|r| r.id);
+    assert_eq!(free.metrics.preemptions, 0, "unconstrained run never preempts");
+
+    // 12-token prompts + 6 generated ⇒ 18 positions ⇒ 3 pages of 8;
+    // 4 shared pages cannot hold 3 such sequences
+    let mut tight = ServeEngine::with_opts(
+        model,
+        policy,
+        1,
+        PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: Some(4),
+        },
+    );
+    submit(&mut tight);
+    let mut got = tight.run_to_completion();
+    got.sort_by_key(|r| r.id);
+
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {} changed under preemption", a.id);
+        assert_eq!(a.finish, b.finish, "req {}", a.id);
+    }
+    assert!(tight.metrics.preemptions > 0, "tiny budget must force preemption");
+}
+
+// ---------------------------------------------------------------------
 // PJRT integration (requires `make artifacts`)
 // ---------------------------------------------------------------------
 
