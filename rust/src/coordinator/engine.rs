@@ -249,25 +249,39 @@ impl ServeEngine {
         }
     }
 
-    /// Choose what page exhaustion means for slot `slot`: if any other
-    /// running sequence holds pages, releasing this one frees capacity
-    /// ⇒ preempt (recoverable, recomputed later). If this sequence is
-    /// alone, recompute would hit the same wall ⇒ retire with
-    /// `CacheOverflow` — which also guarantees the preemption loop
-    /// terminates (every round either another sequence finishes with
-    /// its pages freed, or the lone survivor overflows).
+    /// Choose what page exhaustion means for slot `slot`, and act on it
+    /// *immediately*. If another running sequence still holds pages —
+    /// victims already marked this step don't count, theirs are gone —
+    /// the slot self-preempts: its prompt pages are donated to the
+    /// prefix tree and every page it holds is released **now**, not at
+    /// retirement. Eager release is what keeps multi-victim steps live:
+    /// slots evaluated later in the same step reserve from the freed
+    /// pages (or evict the victim's now-unreferenced tree pages)
+    /// instead of all failing together, re-adopting the same shared
+    /// pages on resume, and mutually preempting forever. If no other
+    /// sequence holds pages, recompute would hit the same wall ⇒ retire
+    /// with `CacheOverflow`. Every exhausted step therefore either
+    /// lets some sequence make progress on the freed capacity or
+    /// overflows the last holder standing — the preemption loop
+    /// terminates (pinned by
+    /// `lockstep_preemption_under_tight_budget_stays_live`).
     fn mark_preempt(&mut self, slot: usize) {
         let others_hold_pages = self
             .running
             .iter()
             .enumerate()
-            .any(|(i, s)| i != slot && s.cache.pages_held() > 0);
-        let seq = &mut self.running[slot];
-        if others_hold_pages {
-            seq.preempted = true;
-        } else {
-            seq.overflowed = true;
+            .any(|(i, s)| i != slot && !s.preempted && s.cache.pages_held() > 0);
+        if !others_hold_pages {
+            self.running[slot].overflowed = true;
+            return;
         }
+        let seq = &mut self.running[slot];
+        seq.preempted = true;
+        // park the prompt pages in the tree first (refcount bumps keep
+        // them alive past the release): the victim's own resume is the
+        // likeliest next adopter
+        Self::donate_prompt_to(&mut self.prefix, &self.pool, &seq.request.prompt, &seq.cache);
+        seq.cache.reset(); // pages back to the store, this step
     }
 
     /// Donate the sequence's fully-committed, page-aligned prompt pages
@@ -275,16 +289,28 @@ impl ServeEngine {
     /// the cache releases them). Called at retirement *and* preemption:
     /// a victim's donated prompt is what makes its recompute cheap.
     fn donate_prompt(&mut self, s: &SequenceState) {
-        let Some(pc) = self.prefix.as_mut() else { return };
-        if !self.pool.store().ptr_eq(s.cache.store()) {
+        Self::donate_prompt_to(&mut self.prefix, &self.pool, &s.request.prompt, &s.cache);
+    }
+
+    /// [`ServeEngine::donate_prompt`] body as an associated fn over
+    /// split borrows, so `mark_preempt` can donate while holding the
+    /// victim's slot mutably.
+    fn donate_prompt_to(
+        prefix: &mut Option<PrefixCache>,
+        pool: &KvPool,
+        prompt: &[u32],
+        cache: &KvCache,
+    ) {
+        let Some(pc) = prefix.as_mut() else { return };
+        if !pool.store().ptr_eq(cache.store()) {
             return; // foreign cache (tests inject these) — not ours to park
         }
-        let ps = self.pool.page_size();
-        let n = (s.request.prompt.len().min(s.cache.len()) / ps) * ps;
+        let ps = pool.page_size();
+        let n = (prompt.len().min(cache.len()) / ps) * ps;
         if n == 0 {
             return;
         }
-        pc.insert(&s.request.prompt[..n], s.cache.shared_pages(n));
+        pc.insert(&prompt[..n], cache.shared_pages(n));
     }
 
     /// One engine iteration: admit, plan, fuse all planned prefill
@@ -429,9 +455,9 @@ impl ServeEngine {
                 if let Some(buf) = s.pending_logits.take() {
                     self.logit_pool.push(buf);
                 }
-                // park the prompt pages in the tree first: the victim's
-                // own recompute is the likeliest next adopter
-                self.donate_prompt(&s);
+                // pages were donated + released eagerly at mark_preempt
+                // time; only the page-less cache handle returns here
+                debug_assert_eq!(s.cache.pages_held(), 0);
                 self.pool.release(s.cache);
                 self.metrics.preemptions += 1;
                 self.preempted_q.push_back(PreemptedSeq {
@@ -808,6 +834,75 @@ mod tests {
         assert!(
             tight.metrics.preemptions > 0,
             "budget of 4 pages must force at least one preemption"
+        );
+        assert_eq!(tight.running(), 0);
+        assert_eq!(tight.pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn lockstep_preemption_under_tight_budget_stays_live() {
+        // regression: two sequences whose adopted prefix pages fill the
+        // whole budget and which need their next page in the *same*
+        // step used to mutually preempt forever — each saw the other
+        // (also marked that step) as "holding pages", both re-adopted
+        // the same tree-shared (refcount-2, unevictable) pages on
+        // resume, and the lone-survivor CacheOverflow fallback never
+        // fired. Eager page release at mark_preempt time lets the
+        // later slot reserve from the victim's freed pages, so the
+        // pair now alternates progress and both complete — with
+        // output identical to an unconstrained run.
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(47);
+        let model = Transformer::random(cfg, &mut rng);
+        let policy = BatchPolicy {
+            max_running: 2,
+            prefill_token_budget: 32,
+            fcfs_prefill: true,
+        };
+        // two *distinct* 9-token prompts, 8 new tokens each: at page
+        // size 8 every sequence wants 3 pages (positions 0..17), and
+        // both cross into page 3 at position 16 in the same step
+        let submit = |e: &mut ServeEngine| {
+            for i in 0..2u64 {
+                let prompt: Vec<u32> = (0..9).map(|j| 1 + ((7 * i as u32 + j) % 30)).collect();
+                e.submit(req(i, prompt, 8));
+            }
+        };
+        let mut reference = ServeEngine::with_threads(model.clone(), policy, 1);
+        submit(&mut reference);
+        let mut want = reference.run_to_completion();
+        want.sort_by_key(|r| r.id);
+
+        let kv = PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: Some(4),
+        };
+        let mut tight = ServeEngine::with_opts(model, policy, 1, kv);
+        // cold wave seeds the prefix tree with both prompts' first pages
+        submit(&mut tight);
+        let mut cold = tight.run_to_completion();
+        cold.sort_by_key(|r| r.id);
+        // warm wave: both adopt one tree page (refcount 2 ⇒ unevictable
+        // while held) + one tail page = 4 live pages, then hit the
+        // page-3 wall in lockstep — the reviewed livelock shape
+        submit(&mut tight);
+        let mut warm = tight.run_to_completion();
+        warm.sort_by_key(|r| r.id);
+
+        for wave in [&cold, &warm] {
+            assert_eq!(wave.len(), want.len());
+            for (g, w) in wave.iter().zip(&want) {
+                assert_eq!(g.id, w.id);
+                assert_eq!(g.tokens, w.tokens, "req {} differs under preemption", g.id);
+                assert_eq!(g.finish, w.finish, "req {}", g.id);
+            }
+        }
+        assert!(
+            tight.metrics.preemptions > 0,
+            "a 4-page budget must force preemption for 2×3-page sequences"
         );
         assert_eq!(tight.running(), 0);
         assert_eq!(tight.pool.outstanding(), 0);

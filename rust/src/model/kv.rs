@@ -24,7 +24,7 @@
 //! [`KvCache::new`], which builds a one-page cache (`page_size =
 //! max_seq`) over a private unbounded store.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
 /// Recoverable full-cache signal: an append was requested past
 /// `max_seq`. Surfaced by [`KvCache::try_append`] so the serving
@@ -70,6 +70,32 @@ impl std::error::Error for PagesExhausted {}
 pub struct KvPage {
     pub(crate) k: Box<[f32]>,
     pub(crate) v: Box<[f32]>,
+    /// Back-reference to the allocating store for `Drop` accounting.
+    /// Weak so outstanding pages never keep a dead store alive.
+    store: Weak<Mutex<StoreInner>>,
+}
+
+impl Drop for KvPage {
+    /// Deallocation accounting lives HERE, on the last strong-ref drop,
+    /// not in [`PageStore::release`]: `Arc` guarantees exactly one
+    /// `Drop` runs however many threads race their final releases, so
+    /// `live` can never leak the way a failed `Arc::try_unwrap` pair
+    /// could (both racers see strong_count > 1, neither recycles).
+    fn drop(&mut self) {
+        let Some(store) = self.store.upgrade() else {
+            return; // store already gone — nothing to account to
+        };
+        // No `unwrap()`: a drop during a panicking unwind must not
+        // escalate into an abort. A poisoned store still has sound
+        // accounting state (plain counters + a buffer list), so take
+        // the guard either way.
+        let mut s = match store.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        s.live -= 1;
+        s.free.push((std::mem::take(&mut self.k), std::mem::take(&mut self.v)));
+    }
 }
 
 /// Snapshot of a [`PageStore`]'s accounting, for metrics.
@@ -165,20 +191,22 @@ impl PageStore {
         };
         s.live += 1;
         s.peak_live = s.peak_live.max(s.live);
-        Ok(Arc::new(KvPage { k, v }))
+        Ok(Arc::new(KvPage {
+            k,
+            v,
+            store: Arc::downgrade(&self.inner),
+        }))
     }
 
     /// Return one reference to a page. Only when this was the *last*
     /// reference does the page die and its buffers join the free list;
-    /// shared pages just drop the refcount. Every page handed out by
-    /// [`PageStore::alloc`] must eventually come back through here (or
-    /// the store under-counts frees — [`KvCache`]'s `Drop` does this).
+    /// shared pages just drop the refcount. The accounting itself runs
+    /// in [`KvPage`]'s `Drop` (each page carries a weak store handle),
+    /// so even a plain `Arc` drop — including two threads racing their
+    /// final references — recycles correctly; this method is the
+    /// semantic API, not the mechanism.
     pub fn release(&self, page: Arc<KvPage>) {
-        if let Ok(p) = Arc::try_unwrap(page) {
-            let mut s = self.inner.lock().unwrap();
-            s.live -= 1;
-            s.free.push((p.k, p.v));
-        }
+        drop(page);
     }
 
     /// Record one copy-on-write page copy (metrics only).
@@ -821,6 +849,33 @@ mod tests {
         let mut c2 = KvCache::paged(1, 1, 2, 8, 2, store.clone());
         fill(&mut c2, 4, 0.0);
         assert_eq!(store.stats().page_allocs, allocs_before);
+    }
+
+    #[test]
+    fn racing_final_releases_never_leak_live_count() {
+        // regression: release() used Arc::try_unwrap, so two threads
+        // dropping the last two references concurrently could BOTH see
+        // strong_count > 1, neither recycled, and `live` leaked —
+        // permanently shrinking a budgeted store. Accounting now runs
+        // in KvPage::Drop (exactly one drop runs per page, whichever
+        // thread loses the race), so live returns to 0 every time.
+        let st = PageStore::for_geometry(1, 1, 2, 4, Some(8));
+        for _ in 0..200 {
+            let p = st.alloc().unwrap();
+            let q = Arc::clone(&p);
+            let (s1, s2) = (st.clone(), st.clone());
+            let t1 = std::thread::spawn(move || s1.release(p));
+            let t2 = std::thread::spawn(move || s2.release(q));
+            t1.join().unwrap();
+            t2.join().unwrap();
+            let s = st.stats();
+            assert_eq!(s.live, 0, "racing final releases must not leak live pages");
+            assert_eq!(s.free, 1, "the dead page's buffers were recycled");
+        }
+        // the budget never spuriously binds afterwards
+        for _ in 0..8 {
+            assert!(st.alloc().is_ok());
+        }
     }
 
     #[test]
