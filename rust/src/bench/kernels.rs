@@ -7,18 +7,26 @@
 //! against `gemv_packed` — so running this bench in release mode (where
 //! `debug_assert!`s are off) doubles as the kernel-parity regression
 //! smoke CI runs; a SIMD/scalar mismatch aborts the bench (hard parity
-//! gate). Results go to stdout and `BENCH_kernels.json` (`--out` to
-//! relocate) together with the detected CPU features and active SIMD
-//! tier, so baselines are interpretable across machines.
+//! gate). The int8-activation tier is value-changing, so its gate is
+//! *self*-parity instead: every (threads × SIMD) configuration must be
+//! bitwise identical to the sequential-scalar int reference, and a
+//! whole-model ppl A/B must stay within
+//! [`ACT_QUANT_PPL_TOL`](crate::eval::ACT_QUANT_PPL_TOL) — both hard
+//! asserts, so CI fails on drift. Results go to stdout and
+//! `BENCH_kernels.json` (`--out` to relocate) together with the
+//! detected CPU features and active SIMD tier, so baselines are
+//! interpretable across machines.
 
 use super::harness::bench_fn;
-use super::workload::random_ternary;
+use super::workload::{quantized, random_ternary, Zoo};
 use crate::cli::Args;
+use crate::eval::{act_quant_ppl_delta, ACT_QUANT_PPL_TOL};
 use crate::rng::Rng;
 use crate::serialize::Json;
 use crate::tensor::Matrix;
 use crate::ternary::gemm::{gemm_packed_blocked, gemm_packed_blocked_par_into, GemmScratch};
 use crate::ternary::gemv::{gemv_fused, gemv_packed, gemv_packed_par};
+use crate::ternary::int_act::{gemm_int_into, gemv_int_into};
 use crate::ternary::lut::{gemm_lut_into, gemv_lut, gemv_lut_into};
 use crate::ternary::simd;
 use crate::threads::Pool;
@@ -82,6 +90,35 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
             simd::gemv_packed_simd(&packed, &il, &x, &mut y, &Pool::sequential());
             assert_eq!(y, y_ref, "SIMD packed tier drifted ({rows}x{cols})");
         }
+        // int8-activation tier determinism gates: value-changing vs
+        // y_ref, so parity is against its own sequential-scalar run —
+        // exact `==` across threads and SIMD widths, no tolerance
+        let mut scratch_int_seq = GemmScratch::new();
+        scratch_int_seq.simd = false;
+        scratch_int_seq.act_quant = true;
+        let mut y_int = vec![0.0f32; rows];
+        gemv_int_into(&packed, &x, &mut y_int, &mut scratch_int_seq);
+        assert_ne!(y_int, y_ref, "int8 tier failed to engage ({rows}x{cols})");
+        let mut scratch_int_par = GemmScratch::new();
+        scratch_int_par.pool = pool.clone();
+        scratch_int_par.simd = false;
+        scratch_int_par.act_quant = true;
+        let mut scratch_int_simd_seq = GemmScratch::new();
+        scratch_int_simd_seq.simd = true;
+        scratch_int_simd_seq.act_quant = true;
+        let mut scratch_int_simd_par = GemmScratch::new();
+        scratch_int_simd_par.pool = pool.clone();
+        scratch_int_simd_par.simd = true;
+        scratch_int_simd_par.act_quant = true;
+        for (cfg, s) in [
+            ("threads", &mut scratch_int_par),
+            ("simd", &mut scratch_int_simd_seq),
+            ("simd+threads", &mut scratch_int_simd_par),
+        ] {
+            y.fill(0.0);
+            gemv_int_into(&packed, &x, &mut y, s);
+            assert_eq!(y, y_int, "int8 tier drifted under {cfg} ({rows}x{cols})");
+        }
 
         let fused = bench_fn(&format!("gemv/fused/{rows}x{cols}"), 3, iters, budget, || {
             gemv_fused(&lin, &x, &mut y)
@@ -111,17 +148,22 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                     None => gemv_packed(&packed, &x, &mut y),
                 }
             });
+        let int8_t = bench_fn(&format!("gemv/int8/{rows}x{cols}"), 3, iters, budget, || {
+            gemv_int_into(&packed, &x, &mut y, &mut scratch_int_simd_seq)
+        });
         let lut_speedup = packed_t.median.as_secs_f64() / lut_t.median.as_secs_f64();
         let simd_speedup = lut_t.median.as_secs_f64() / simd_t.median.as_secs_f64();
         let par_speedup = simd_t.median.as_secs_f64() / simd_par_t.median.as_secs_f64();
+        let int8_speedup = simd_t.median.as_secs_f64() / int8_t.median.as_secs_f64();
         println!(
-            "  {rows:>4}x{cols:<4}  fused {:>8.1}us  packed {:>8.1}us  lut {:>8.1}us ({lut_speedup:>4.2}x)  simd {:>8.1}us ({simd_speedup:>4.2}x)  simd@{threads}t {:>8.1}us ({par_speedup:>4.2}x)  simd-packed {:>8.1}us",
+            "  {rows:>4}x{cols:<4}  fused {:>8.1}us  packed {:>8.1}us  lut {:>8.1}us ({lut_speedup:>4.2}x)  simd {:>8.1}us ({simd_speedup:>4.2}x)  simd@{threads}t {:>8.1}us ({par_speedup:>4.2}x)  simd-packed {:>8.1}us  int8 {:>8.1}us ({int8_speedup:>4.2}x)",
             fused.median_us(),
             packed_t.median_us(),
             lut_t.median_us(),
             simd_t.median_us(),
             simd_par_t.median_us(),
             simd_packed_t.median_us(),
+            int8_t.median_us(),
         );
         decode_rows.push(
             Json::obj()
@@ -133,9 +175,11 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                 .set("simd_us", simd_t.median_us())
                 .set("simd_par_us", simd_par_t.median_us())
                 .set("simd_packed_us", simd_packed_t.median_us())
+                .set("int8_us", int8_t.median_us())
                 .set("lut_speedup_vs_packed", lut_speedup)
                 .set("simd_speedup_vs_lut", simd_speedup)
-                .set("par_speedup_vs_simd", par_speedup),
+                .set("par_speedup_vs_simd", par_speedup)
+                .set("int8_speedup_vs_simd", int8_speedup),
         );
     }
 
@@ -184,6 +228,34 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
             simd::gemm_packed_simd(&packed, &il, &x, &mut y, &pool);
             assert_eq!(y.data, y_ref.data, "SIMD packed gemm drifted ({rows}x{cols})");
         }
+        // int8 tier self-parity (see the decode-side note): every
+        // configuration exactly equals the sequential-scalar int run
+        let mut scratch_int_seq = GemmScratch::new();
+        scratch_int_seq.simd = false;
+        scratch_int_seq.act_quant = true;
+        let mut y_int = Matrix::zeros(m, rows);
+        gemm_int_into(&packed, &x, &mut y_int, &mut scratch_int_seq);
+        assert_ne!(y_int.data, y_ref.data, "int8 gemm failed to engage ({rows}x{cols})");
+        let mut scratch_int_par = GemmScratch::new();
+        scratch_int_par.pool = pool.clone();
+        scratch_int_par.simd = false;
+        scratch_int_par.act_quant = true;
+        let mut scratch_int_simd_seq = GemmScratch::new();
+        scratch_int_simd_seq.simd = true;
+        scratch_int_simd_seq.act_quant = true;
+        let mut scratch_int_simd_par = GemmScratch::new();
+        scratch_int_simd_par.pool = pool.clone();
+        scratch_int_simd_par.simd = true;
+        scratch_int_simd_par.act_quant = true;
+        for (cfg, s) in [
+            ("threads", &mut scratch_int_par),
+            ("simd", &mut scratch_int_simd_seq),
+            ("simd+threads", &mut scratch_int_simd_par),
+        ] {
+            y.data.fill(0.0);
+            gemm_int_into(&packed, &x, &mut y, s);
+            assert_eq!(y.data, y_int.data, "int8 gemm drifted under {cfg} ({rows}x{cols})");
+        }
 
         let blocked = bench_fn(&format!("gemm/blocked/{rows}x{cols}"), 2, iters, budget, || {
             gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_scalar_seq)
@@ -207,14 +279,18 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                     None => gemm_packed_blocked_par_into(&packed, &x, &mut y, &mut scratch_scalar_par),
                 }
             });
+        let int8_t = bench_fn(&format!("gemm/int8/{rows}x{cols}"), 2, iters, budget, || {
+            gemm_int_into(&packed, &x, &mut y, &mut scratch_int_simd_par)
+        });
         let tps = |b: &crate::bench::BenchResult| b.throughput(m as f64);
         println!(
-            "  {rows:>4}x{cols:<4}  blocked {:>9.0} tok/s  lut {:>9.0} tok/s  simd {:>9.0} tok/s  simd@{threads}t {:>9.0} tok/s  simd-packed {:>9.0} tok/s",
+            "  {rows:>4}x{cols:<4}  blocked {:>9.0} tok/s  lut {:>9.0} tok/s  simd {:>9.0} tok/s  simd@{threads}t {:>9.0} tok/s  simd-packed {:>9.0} tok/s  int8@{threads}t {:>9.0} tok/s",
             tps(&blocked),
             tps(&lut_t),
             tps(&simd_t),
             tps(&simd_par),
             tps(&simd_packed_t),
+            tps(&int8_t),
         );
         prefill_rows.push(
             Json::obj()
@@ -226,11 +302,31 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
                 .set("simd_tps", tps(&simd_t))
                 .set("simd_par_tps", tps(&simd_par))
                 .set("simd_packed_tps", tps(&simd_packed_t))
+                .set("int8_tps", tps(&int8_t))
                 .set("lut_speedup_vs_blocked", tps(&lut_t) / tps(&blocked))
                 .set("simd_speedup_vs_lut", tps(&simd_t) / tps(&lut_t))
-                .set("par_speedup_vs_simd", tps(&simd_par) / tps(&simd_t)),
+                .set("par_speedup_vs_simd", tps(&simd_par) / tps(&simd_t))
+                .set("int8_speedup_vs_simd_par", tps(&int8_t) / tps(&simd_par)),
         );
     }
+
+    // ---- int8-activation accuracy: the hard CI gate ----
+    // A/B one whole quantized model, f32 vs int8 activations, on the
+    // bench corpus. The assert below *is* the CI gate: `bench
+    // --kernels` aborts when the tier's relative ppl drift exceeds
+    // the documented tolerance, so a quantization regression cannot
+    // land while the bench is green.
+    let zoo = Zoo::load(&["tiny"]);
+    let (mut qmodel, _) = quantized(&zoo.models[0].1, "ptqtp", 128);
+    let text: String = zoo.eval_texts["wiki-syn"].chars().take(800).collect();
+    let (ppl_f32, ppl_int8, ppl_delta) = act_quant_ppl_delta(&mut qmodel, &zoo.tok, &text);
+    println!(
+        "== act-quant ppl gate: f32 {ppl_f32:.3} vs int8 {ppl_int8:.3} (delta {ppl_delta:+.4}, tol ±{ACT_QUANT_PPL_TOL}) =="
+    );
+    assert!(
+        ppl_delta.is_finite() && ppl_delta.abs() <= ACT_QUANT_PPL_TOL,
+        "int8-activation ppl drift {ppl_delta:+.4} exceeds tolerance ±{ACT_QUANT_PPL_TOL}"
+    );
 
     let out_path = args.str_or("out", "BENCH_kernels.json");
     let json = Json::obj()
@@ -245,8 +341,14 @@ pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
         .set("cpu_features", cpu_features)
         .set(
             "parity",
-            "all tiers (incl. SIMD row-block) asserted bit-identical to gemv_packed before timing",
+            "f32 tiers (incl. SIMD row-block) asserted bit-identical to gemv_packed before \
+             timing; int8 tier asserted bit-identical to its own sequential-scalar run \
+             across threads/SIMD, plus the ppl gate below",
         )
+        .set("act_quant_ppl_f32", ppl_f32)
+        .set("act_quant_ppl_int8", ppl_int8)
+        .set("act_quant_ppl_delta", ppl_delta)
+        .set("act_quant_ppl_tol", ACT_QUANT_PPL_TOL)
         .set("decode", Json::Arr(decode_rows))
         .set("prefill", Json::Arr(prefill_rows));
     std::fs::write(out_path, json.pretty())?;
@@ -277,8 +379,13 @@ mod tests {
         assert!(!j.req_str("simd_tier").unwrap().is_empty());
         let decode = j.get("decode").and_then(Json::as_arr).unwrap();
         assert_eq!(decode.len(), 1);
+        assert!(decode[0].get("int8_us").is_some(), "int8 decode column stamped");
         let prefill = j.get("prefill").and_then(Json::as_arr).unwrap();
         assert_eq!(prefill.len(), 1);
+        assert!(prefill[0].get("int8_tps").is_some(), "int8 prefill column stamped");
+        // the accuracy gate ran and stamped its numbers
+        let delta = j.get("act_quant_ppl_delta").and_then(Json::as_f64).unwrap();
+        assert!(delta.abs() <= crate::eval::ACT_QUANT_PPL_TOL);
         std::fs::remove_file(out).ok();
     }
 }

@@ -45,6 +45,7 @@ fn wave(engine: &mut ServeEngine, prompts: &[Vec<u32>], id_base: u64) -> (Vec<Ve
         max_new_tokens: MAX_NEW,
         stop_token: None,
         seed: 0,
+        n: 1,
     };
     let prefill0 = engine.metrics.prefill_tokens;
     let adopted0 = engine.metrics.adopted_tokens;

@@ -146,11 +146,52 @@ impl Args {
         }
     }
 
+    /// Three-valued switch option shared by `--simd`, `--act-quant`,
+    /// and `--prefix-cache`: `None` when absent (caller falls back to
+    /// its env/default chain), `Some(state)` when present and legal,
+    /// and the [`Args::choice`] error naming the allowed values
+    /// otherwise. `allow_auto` is `false` for strictly binary switches
+    /// (`--prefix-cache` has no process-detected default to defer to).
+    pub fn tri_state_opt(&self, name: &str, allow_auto: bool) -> anyhow::Result<Option<TriState>> {
+        let allowed: &[&str] = if allow_auto {
+            &["auto", "on", "off"]
+        } else {
+            &["on", "off"]
+        };
+        Ok(self.choice(name, allowed)?.map(|v| match v {
+            "auto" => TriState::Auto,
+            "on" => TriState::On,
+            _ => TriState::Off,
+        }))
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
             Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
             None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Resolved value of a three-valued switch option (see
+/// [`Args::tri_state_opt`]). `Auto` defers to the option's
+/// env-var/detection chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TriState {
+    Auto,
+    On,
+    Off,
+}
+
+impl TriState {
+    /// The canonical spelling (`"auto"`/`"on"`/`"off"`), e.g. for
+    /// forwarding into an env-var style mode parser.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TriState::Auto => "auto",
+            TriState::On => "on",
+            TriState::Off => "off",
         }
     }
 }
@@ -242,6 +283,36 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("--page-size") && e.contains("'sixty'"), "{e}");
+    }
+
+    #[test]
+    fn tri_state_accepts_legal_values_and_rejects_typos() {
+        // absent → None (env/default chain decides)
+        assert_eq!(parse(&["serve"]).tri_state_opt("act-quant", true).unwrap(), None);
+        // each legal spelling maps to its state
+        for (v, want) in [("auto", TriState::Auto), ("on", TriState::On), ("off", TriState::Off)] {
+            let a = parse(&["serve", "--act-quant", v]);
+            assert_eq!(a.tri_state_opt("act-quant", true).unwrap(), Some(want));
+            assert_eq!(want.as_str(), v);
+        }
+        // invalid value: a helpful error, not a silent default
+        let e = parse(&["serve", "--act-quant", "int8"])
+            .tri_state_opt("act-quant", true)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--act-quant") && e.contains("auto|on|off"), "{e}");
+    }
+
+    #[test]
+    fn tri_state_binary_form_rejects_auto() {
+        // --prefix-cache has no detection chain, so "auto" is illegal
+        let a = parse(&["serve", "--prefix-cache", "off"]);
+        assert_eq!(a.tri_state_opt("prefix-cache", false).unwrap(), Some(TriState::Off));
+        let e = parse(&["serve", "--prefix-cache", "auto"])
+            .tri_state_opt("prefix-cache", false)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("on|off") && !e.contains("auto|"), "{e}");
     }
 
     #[test]

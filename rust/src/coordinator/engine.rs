@@ -103,6 +103,10 @@ impl ServeEngine {
     ) -> ServeEngine {
         let pool = KvPool::for_model_with(&model.config, policy.max_running, &kv);
         let prefix = kv.prefix_cache.then(|| PrefixCache::new(pool.page_size()));
+        let mut scratch = ForwardScratch::with_pool(worker_pool);
+        // inherit the (value-changing) int8-activation tier from the
+        // model — set by the CLI front-ends, off by default
+        scratch.set_act_quant(model.exec_act_quant);
         ServeEngine {
             model,
             policy,
@@ -113,7 +117,7 @@ impl ServeEngine {
             running: Vec::new(),
             metrics: Metrics::default(),
             batch: ForwardBatch::new(),
-            scratch: ForwardScratch::with_pool(worker_pool),
+            scratch,
             logit_slots: Vec::new(),
             logit_pool: Vec::new(),
             prob_buf: Vec::new(),
@@ -144,6 +148,22 @@ impl ServeEngine {
     /// that state).
     pub fn set_simd(&mut self, on: bool) {
         self.scratch.set_simd(on);
+    }
+
+    /// Toggle the int8-activation tier for this engine's model pass.
+    /// Unlike [`ServeEngine::set_simd`] this is **value-changing** —
+    /// int8 output is bit-identical across thread counts, SIMD widths,
+    /// and paged-vs-contiguous KV (DESIGN.md §Integer-Kernels), but
+    /// not to the f32 tiers. Default: inherited from the model's
+    /// `exec_act_quant` at construction (off unless the CLI resolved
+    /// `--act-quant`/`PTQTP_ACT_QUANT` to on).
+    pub fn set_act_quant(&mut self, on: bool) {
+        self.scratch.set_act_quant(on);
+    }
+
+    /// Whether the int8-activation tier is active for this engine.
+    pub fn act_quant(&self) -> bool {
+        self.scratch.act_quant()
     }
 
     /// Enqueue a request (admission happens during [`ServeEngine::step`]).
@@ -183,6 +203,7 @@ impl ServeEngine {
                 self.metrics.rejected += 1;
                 rejected.push(Response {
                     id: req.id,
+                    sample: req.sample,
                     tokens: Vec::new(),
                     finish: FinishReason::PromptTooLong,
                     ttft: req.submitted_at.elapsed(),
@@ -447,6 +468,43 @@ impl ServeEngine {
             }
         }
 
+        // --- phase 3½: fan out `n > 1` requests whose prompt just
+        // finished prefilling. The prompt was computed once; each of
+        // the n-1 forks shares its pages copy-on-write
+        // (`KvCache::fork`), clones the prompt logits, and decodes as
+        // an independent sequence under a per-sample derived seed.
+        // The primary's `n` drops to 1 so a later preemption-resume
+        // cycle can never fan out a second time.
+        let mut forks: Vec<SequenceState> = Vec::new();
+        for s in self.running.iter_mut() {
+            let n = s.request.params.n;
+            // preempted/overflowed slots released their pages already —
+            // never fork a reset cache
+            if n <= 1
+                || s.preempted
+                || s.overflowed
+                || s.in_prefill()
+                || !s.generated.is_empty()
+                || s.pending_logits.is_none()
+            {
+                continue;
+            }
+            for k in 1..n {
+                let mut request = s.request.clone();
+                request.sample = k;
+                request.params = s.request.params.for_sample(k);
+                let mut fork = SequenceState::new(request, s.cache.fork());
+                fork.prefill_cursor = fork.prefill_len; // prompt is in the forked cache
+                fork.pending_logits = s.pending_logits.clone();
+                forks.push(fork);
+            }
+            s.request.params = s.request.params.for_sample(0); // keep seed, n → 1
+        }
+        for fork in forks {
+            self.pool.register_fork();
+            self.running.push(fork);
+        }
+
         // --- retire preempted + finished
         let mut i = 0;
         while i < self.running.len() {
@@ -490,6 +548,7 @@ impl ServeEngine {
                 };
                 let resp = Response {
                     id: s.request.id,
+                    sample: s.request.sample,
                     ttft: s
                         .first_token_at
                         .map(|t| t - s.request.submitted_at)
@@ -957,6 +1016,145 @@ mod tests {
         assert_eq!(legacy[0].tokens, cold[0].tokens);
         assert_eq!(l.metrics.adopted_tokens, 0);
         assert_eq!(l.metrics.prefix_lookups, 0);
+    }
+
+    #[test]
+    fn fork_sampling_matches_separate_requests() {
+        // `--n K`: one prompt prefill + K COW-forked decode streams
+        // must produce token-for-token what K separate requests with
+        // the per-sample derived params produce — greedy and seeded
+        // temperature — while keeping fewer pages live (the K
+        // sequences share the prompt's pages by refcount)
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 64;
+        let mut rng = Rng::new(53);
+        let model = Transformer::random(cfg, &mut rng);
+        let policy = BatchPolicy {
+            max_running: 4,
+            prefill_token_budget: 32,
+            fcfs_prefill: true,
+        };
+        // prefix cache off so the separate-request run can't share
+        // prompt pages through the tree — the page comparison below
+        // then isolates what forking alone saves
+        let kv = PagedKvOpts {
+            page_size: 8,
+            prefix_cache: false,
+            page_budget: None,
+        };
+        let prompt: Vec<u32> = (0..16).map(|j| 1 + (j % 29)).collect();
+        for temperature in [0.0f32, 0.8] {
+            let base = SamplingParams {
+                temperature,
+                max_new_tokens: 4,
+                stop_token: None,
+                seed: 77,
+                n: 1,
+            };
+            let mut forked = ServeEngine::with_opts(model.clone(), policy, 1, kv);
+            forked.submit(Request::new(
+                1,
+                prompt.clone(),
+                SamplingParams { n: 3, ..base },
+            ));
+            let mut got = forked.run_to_completion();
+            got.sort_by_key(|r| r.sample);
+            assert_eq!(got.len(), 3, "one response per sample");
+            assert_eq!(got[0].id, got[2].id, "samples share the request id");
+
+            let mut separate = ServeEngine::with_opts(model.clone(), policy, 1, kv);
+            for k in 0..3usize {
+                let mut r = Request::new(10 + k as u64, prompt.clone(), base.for_sample(k));
+                r.sample = k;
+                separate.submit(r);
+            }
+            let mut want = separate.run_to_completion();
+            want.sort_by_key(|r| r.sample);
+
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.sample, w.sample);
+                assert_eq!(
+                    g.tokens, w.tokens,
+                    "sample {} at temperature {temperature}",
+                    g.sample
+                );
+            }
+            if temperature > 0.0 {
+                assert_ne!(
+                    got[1].tokens, got[2].tokens,
+                    "derived seeds must decorrelate samples"
+                );
+            }
+            assert!(
+                forked.pool.stats().peak_live < separate.pool.stats().peak_live,
+                "forks must share prompt pages: {} vs {} live at peak",
+                forked.pool.stats().peak_live,
+                separate.pool.stats().peak_live
+            );
+            assert_eq!(forked.pool.outstanding(), 0, "fork accounting balanced");
+        }
+    }
+
+    #[test]
+    fn act_quant_engine_parity_across_threads_and_paging() {
+        // the int8-activation tier end-to-end: value-changing vs f32,
+        // but its own output must be identical across thread counts
+        // and KV layouts (paged + prefix sharing vs contiguous pages)
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 32;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(59);
+        let mut model = Transformer::random(cfg, &mut rng);
+        model.quantize_with(
+            crate::quant::by_name("ptqtp", 8).unwrap().as_ref(),
+            &crate::quant::QuantCtx::default(),
+        );
+        assert!(model.act_quant_layers() > 0, "tier must have eligible layers");
+        model.set_act_quant(true);
+        let policy = BatchPolicy {
+            max_running: 3,
+            prefill_token_budget: 8,
+            fcfs_prefill: true,
+        };
+        let run = |threads: usize, kv: PagedKvOpts| {
+            let mut e = ServeEngine::with_opts(model.clone(), policy, threads, kv);
+            assert!(e.act_quant(), "engine inherits the model's knob");
+            for i in 0..4u64 {
+                let mut r = req(i, vec![1 + i as u32, 4, 7, 2, 9], 5);
+                if i % 2 == 1 {
+                    r.params.temperature = 0.7;
+                    r.params.seed = 5 + i;
+                }
+                e.submit(r);
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out
+        };
+        let paged = PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: None,
+        };
+        let contiguous = PagedKvOpts {
+            page_size: 48,
+            prefix_cache: false,
+            page_budget: None,
+        };
+        let want = run(1, contiguous);
+        for threads in [1usize, 2, 4] {
+            for kv in [paged, contiguous] {
+                let got = run(threads, kv);
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(
+                        g.tokens, w.tokens,
+                        "threads={threads} page_size={} req {}",
+                        kv.page_size, g.id
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -157,12 +157,26 @@ impl KvPool {
         drop(cache);
     }
 
+    /// Account for a cache created by `KvCache::fork()` rather than
+    /// [`KvPool::acquire`]: the fork shares its parent's pages
+    /// copy-on-write but is an outstanding cache like any other, and
+    /// must be paired with [`KvPool::release`] when retired. Fork
+    /// admission bypasses the capacity gate deliberately — the engine
+    /// only fans out a request it has already admitted, and `n` is
+    /// bounded per request, so capacity stays an admission-control
+    /// knob for *requests*, not samples.
+    pub fn register_fork(&mut self) {
+        self.outstanding += 1;
+        self.peak_outstanding = self.peak_outstanding.max(self.outstanding);
+    }
+
     pub fn outstanding(&self) -> usize {
         self.outstanding
     }
 
     pub fn available(&self) -> usize {
-        self.capacity - self.outstanding
+        // saturating: forks can push `outstanding` past `capacity`
+        self.capacity.saturating_sub(self.outstanding)
     }
 
     /// The shared page store (the engine hands this to the prefix cache

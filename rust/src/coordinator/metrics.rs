@@ -121,6 +121,7 @@ mod tests {
     fn resp(ms: u64) -> Response {
         Response {
             id: 0,
+            sample: 0,
             tokens: vec![1],
             finish: FinishReason::Length,
             ttft: Duration::from_millis(ms),

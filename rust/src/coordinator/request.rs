@@ -11,6 +11,13 @@ pub struct SamplingParams {
     /// Stop at this token id (usually EOS).
     pub stop_token: Option<u32>,
     pub seed: u64,
+    /// Parallel samples per request (`--n`). The engine prefills the
+    /// prompt **once**, then forks the KV cache `n - 1` times
+    /// (copy-on-write page sharing), so `n` completions cost one
+    /// prompt pass plus `n` decode streams. Each fork samples with
+    /// [`SamplingParams::for_sample`]'s derived seed; `n = 1` (the
+    /// default) is the exact legacy path.
+    pub n: usize,
 }
 
 impl Default for SamplingParams {
@@ -20,6 +27,21 @@ impl Default for SamplingParams {
             max_new_tokens: 32,
             stop_token: Some(crate::data::tokenizer::EOS),
             seed: 0,
+            n: 1,
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Parameters for fork `k` of an `n > 1` request: same budget and
+    /// temperature, seed decorrelated per sample (k = 0 keeps the base
+    /// seed, so single-sample behaviour is unchanged), `n` forced back
+    /// to 1 so a resumed fork never fans out again.
+    pub fn for_sample(&self, k: usize) -> SamplingParams {
+        SamplingParams {
+            seed: self.seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            n: 1,
+            ..*self
         }
     }
 }
@@ -32,6 +54,9 @@ pub struct Request {
     pub params: SamplingParams,
     /// Session key for router affinity (0 = none).
     pub session: u64,
+    /// Which parallel sample this sequence produces (0 for the primary
+    /// and for ordinary `n = 1` requests; forks get 1..n).
+    pub sample: usize,
     pub submitted_at: std::time::Instant,
 }
 
@@ -42,6 +67,7 @@ impl Request {
             prompt,
             params,
             session: 0,
+            sample: 0,
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -69,6 +95,9 @@ pub enum FinishReason {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: RequestId,
+    /// Which parallel sample this is (see [`Request::sample`]); an
+    /// `n`-sample request yields `n` responses sharing its `id`.
+    pub sample: usize,
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
     /// Time from submit to first generated token.

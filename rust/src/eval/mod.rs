@@ -5,4 +5,4 @@ pub mod ppl;
 pub mod suite;
 
 pub use ppl::perplexity;
-pub use suite::{eval_suite, SuiteScores};
+pub use suite::{act_quant_ppl_delta, eval_suite, SuiteScores, ACT_QUANT_PPL_TOL};

@@ -70,6 +70,32 @@ pub fn eval_choices(model: &Transformer, tok: &Tokenizer, tasks: &[ChoiceTask]) 
     correct as f64 / tasks.len() as f64
 }
 
+/// CI tolerance for the int8-activation tier's **relative** perplexity
+/// drift: `|ppl_int8 − ppl_f32| / ppl_f32` must stay within this bound
+/// on the bench corpus. The kernel bench stamps the measured delta into
+/// `BENCH_kernels.json` and asserts it under this constant, so a
+/// quantization regression in the tier fails CI rather than shipping
+/// silently (DESIGN.md §Integer-Kernels).
+pub const ACT_QUANT_PPL_TOL: f64 = 0.05;
+
+/// A/B the int8-activation tier end-to-end on held-out text. Returns
+/// `(ppl_f32, ppl_int8, relative delta)`, where the delta is signed
+/// (`> 0` ⇒ int8 is worse). The model's `exec_act_quant` knob is
+/// toggled for each leg and restored before returning.
+pub fn act_quant_ppl_delta(
+    model: &mut Transformer,
+    tok: &Tokenizer,
+    text: &str,
+) -> (f64, f64, f64) {
+    let was = model.exec_act_quant;
+    model.set_act_quant(false);
+    let ppl_f32 = super::ppl::perplexity(model, tok, text);
+    model.set_act_quant(true);
+    let ppl_int8 = super::ppl::perplexity(model, tok, text);
+    model.set_act_quant(was);
+    (ppl_f32, ppl_int8, (ppl_int8 - ppl_f32) / ppl_f32)
+}
+
 /// Run the full suite.
 pub fn eval_suite(model: &Transformer, tok: &Tokenizer, suite: &TaskSuite) -> SuiteScores {
     SuiteScores {
@@ -140,6 +166,28 @@ mod tests {
         for v in [s.math_acc, s.cloze_acc, s.code_acc, s.mean()] {
             assert!((0.0..=1.0).contains(&v));
         }
+    }
+
+    #[test]
+    fn act_quant_ppl_delta_measures_and_restores() {
+        let (mut m, tok) = setup();
+        m.quantize_with(
+            crate::quant::by_name("ptqtp", 8).unwrap().as_ref(),
+            &crate::quant::QuantCtx::default(),
+        );
+        assert!(m.act_quant_layers() > 0, "tiny/G=8 must have eligible layers");
+        let text = "abc def ghij abc def ghij abc def ghij abc";
+        let (f32_ppl, int8_ppl, delta) = act_quant_ppl_delta(&mut m, &tok, text);
+        assert!(f32_ppl.is_finite() && int8_ppl.is_finite());
+        assert_eq!(delta, (int8_ppl - f32_ppl) / f32_ppl);
+        assert!(!m.exec_act_quant, "knob restored to its prior value");
+        // int8 activations perturb but must not wreck a tiny model's
+        // ppl; this loose bound catches sign/scale bugs, the tight
+        // CI gate lives in the kernel bench
+        assert!(delta.abs() < 0.5, "delta {delta}");
+        m.set_act_quant(true);
+        let _ = act_quant_ppl_delta(&mut m, &tok, text);
+        assert!(m.exec_act_quant, "restore works from the on state too");
     }
 
     #[test]

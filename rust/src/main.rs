@@ -40,9 +40,24 @@ fn main() {
     // Pin the SIMD kernel-tier mode before any packed layer is built:
     // --simd > PTQTP_SIMD > auto. `off` is the exact scalar escape
     // hatch (output is bit-identical either way).
-    match args.choice("simd", &["auto", "on", "off"]) {
+    match args.tri_state_opt("simd", true) {
         Ok(Some(v)) => ptqtp::ternary::simd::set_mode(
-            ptqtp::ternary::simd::SimdMode::parse(v).expect("validated by choice()"),
+            ptqtp::ternary::simd::SimdMode::parse(v.as_str()).expect("tri-state spellings parse"),
+        ),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+    // Pin the int8-activation tier mode the same way: --act-quant >
+    // PTQTP_ACT_QUANT > auto. Unlike --simd this tier is
+    // value-changing, so auto resolves *off*; `on` is an explicit
+    // accuracy/speed trade (DESIGN.md §Integer-Kernels).
+    match args.tri_state_opt("act-quant", true) {
+        Ok(Some(v)) => ptqtp::ternary::int_act::set_mode(
+            ptqtp::ternary::int_act::ActQuantMode::parse(v.as_str())
+                .expect("tri-state spellings parse"),
         ),
         Ok(None) => {}
         Err(e) => {
@@ -89,6 +104,8 @@ fn help() -> String {
             OptSpec { name: "method", help: "fp16|rtn*|gptq*|awq*|pbllm|billm|arb|absmean|ptqtp", default: Some("ptqtp") },
             OptSpec { name: "threads", help: "worker lanes for row-parallel kernels/quantization (1 = exact sequential path; env PTQTP_THREADS)", default: Some("cores") },
             OptSpec { name: "simd", help: "SIMD kernel tier: auto|on|off (off = exact scalar path; env PTQTP_SIMD); bit-identical output either way", default: Some("auto") },
+            OptSpec { name: "act-quant", help: "int8-activation kernel tier: auto|on|off (auto resolves off — value-changing; env PTQTP_ACT_QUANT)", default: Some("auto") },
+            OptSpec { name: "n", help: "serve: parallel samples per request (prompt prefilled once, KV forked copy-on-write)", default: Some("1") },
             OptSpec { name: "replicas", help: "serve: engine replicas, each with its own pool", default: Some("1") },
             OptSpec { name: "page-size", help: "serve: KV positions per page, ≥ 8 (0 = one max_seq page, i.e. contiguous; env PTQTP_PAGE_SIZE)", default: Some("64") },
             OptSpec { name: "prefix-cache", help: "serve: radix prefix cache on|off (off = exact legacy layout: contiguous, nothing shared)", default: Some("on") },
@@ -169,6 +186,9 @@ struct LoadedModel {
 fn load_and_quantize(args: &Args) -> anyhow::Result<LoadedModel> {
     let model_path = args.require("model")?;
     let mut model = Transformer::load(model_path)?;
+    // the resolved int8-activation mode rides on the model: every
+    // scratch and engine built from it inherits the knob
+    model.set_act_quant(ptqtp::ternary::int_act::enabled());
     let threads = args.threads_or_default();
     let requested = args.str_or("method", "fp16").to_string();
     let group = args.usize_or("group-size", 128);
@@ -317,8 +337,8 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// "one max_seq page". Explicit sizes must be ≥ 8 so the widest SIMD
 /// attention lane block never straddles a page boundary.
 fn resolve_kv_opts(args: &Args, max_seq: usize) -> anyhow::Result<PagedKvOpts> {
-    let prefix_cache = match args.choice("prefix-cache", &["on", "off"])? {
-        Some(v) => v == "on",
+    let prefix_cache = match args.tri_state_opt("prefix-cache", false)? {
+        Some(v) => v == ptqtp::cli::TriState::On,
         None => true,
     };
     let cli = args.usize_opt("page-size")?;
@@ -373,6 +393,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ptqtp::ternary::simd::label(),
         model.simd_layers()
     );
+    // active activation-quant tier + how many layers it can actually
+    // serve (ragged/short layers stay f32 even when the tier is on)
+    eprintln!(
+        "act-quant: {} ({} layers int8-eligible)",
+        ptqtp::ternary::int_act::label(),
+        model.act_quant_layers()
+    );
     let tok = Tokenizer::load(format!("{data_dir}/tokenizer.json"))?;
     let kv = resolve_kv_opts(args, model.config.max_seq)?;
     eprintln!(
@@ -406,8 +433,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             suite.math.iter().map(|t| t.prompt.clone()).collect()
         }
     };
+    let n_samples = args.usize_or("n", 1).max(1);
     let params = SamplingParams {
         max_new_tokens: 8,
+        n: n_samples,
         ..Default::default()
     };
     if replicas > 1 {
@@ -424,7 +453,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         for prompt in &prompts {
             server.submit(tok.encode(prompt), params, 0);
         }
-        let responses = server.wait_for(prompts.len(), std::time::Duration::from_secs(600));
+        let responses =
+            server.wait_for(prompts.len() * n_samples, std::time::Duration::from_secs(600));
         let wall = t0.elapsed();
         let metrics = server.shutdown();
         println!(

@@ -116,6 +116,14 @@ impl AttnScratch {
         self.gemm.simd = on;
     }
 
+    /// Toggle the int8-activation tier for the QKV/output projections
+    /// (the attend stage itself stays f32 — scores and V-sums read the
+    /// KV cache, not ternary planes). Value-changing; off by default
+    /// (DESIGN.md §Integer-Kernels).
+    pub fn set_act_quant(&mut self, on: bool) {
+        self.gemm.act_quant = on;
+    }
+
     /// Pin the attention kernel lane width (see [`AttnScratch`] field
     /// docs); tests use this to force the portable tiers. Panics on
     /// widths without a kernel.
@@ -148,6 +156,11 @@ pub struct DecodeScratch {
     pool: Pool,
     simd: bool,
     lanes: Option<usize>,
+    /// Int8-activation tier for the QKV/O projections (value-changing,
+    /// off by default — DESIGN.md §Integer-Kernels).
+    act_quant: bool,
+    /// Quantized-activation scratch for the int tier.
+    int_act: crate::ternary::int_act::IntActScratch,
 }
 
 impl Default for DecodeScratch {
@@ -162,6 +175,8 @@ impl Default for DecodeScratch {
             pool: Pool::default(),
             simd: simd::enabled(),
             lanes: None,
+            act_quant: false,
+            int_act: Default::default(),
         }
     }
 }
@@ -176,6 +191,12 @@ impl DecodeScratch {
     /// Toggle the SIMD attention kernels (bitwise-identical output).
     pub fn set_simd(&mut self, on: bool) {
         self.simd = on;
+    }
+
+    /// Toggle the int8-activation tier for the QKV/O projections
+    /// (value-changing; `==`-exact to the batched int-tier paths).
+    pub fn set_act_quant(&mut self, on: bool) {
+        self.act_quant = on;
     }
 
     /// Pin the attention lane width (tests/benches). Panics on widths
@@ -233,9 +254,9 @@ impl Attention {
         scratch.q.resize(q_dim, 0.0);
         scratch.k.resize(kv_dim, 0.0);
         scratch.v.resize(kv_dim, 0.0);
-        self.wq.forward_vec(x, &mut scratch.q);
-        self.wk.forward_vec(x, &mut scratch.k);
-        self.wv.forward_vec(x, &mut scratch.v);
+        self.wq.forward_vec_act(x, &mut scratch.q, scratch.act_quant, &mut scratch.int_act);
+        self.wk.forward_vec_act(x, &mut scratch.k, scratch.act_quant, &mut scratch.int_act);
+        self.wv.forward_vec_act(x, &mut scratch.v, scratch.act_quant, &mut scratch.int_act);
         rope.apply_heads(&mut scratch.q, pos);
         rope.apply_heads(&mut scratch.k, pos);
         cache.append(layer, &scratch.k, &scratch.v);
@@ -263,7 +284,7 @@ impl Attention {
             &mut s.lane_scores,
             &mut s.attn,
         );
-        self.wo.forward_vec(&scratch.attn, out);
+        self.wo.forward_vec_act(&scratch.attn, out, scratch.act_quant, &mut scratch.int_act);
     }
 
     /// Scalar reference: score/softmax/weighted-sum for one query row

@@ -165,6 +165,22 @@ impl ForwardScratch {
         self.gemm.simd = on;
         self.attn.set_simd(on);
     }
+
+    /// Toggle the int8-activation tier for every ternary projection
+    /// using this scratch (MLP/LM-head gemms and the attention QKV/O
+    /// projections). Unlike [`ForwardScratch::set_simd`] this tier is
+    /// **value-changing**, so it defaults to off and is only switched
+    /// on by the CLI / serve entry points or explicit A/B callers
+    /// (DESIGN.md §Integer-Kernels).
+    pub fn set_act_quant(&mut self, on: bool) {
+        self.gemm.act_quant = on;
+        self.attn.set_act_quant(on);
+    }
+
+    /// The int8-activation tier setting carried by this scratch.
+    pub fn act_quant(&self) -> bool {
+        self.gemm.act_quant
+    }
 }
 
 /// Resize a scratch matrix, reusing its allocation. Contents zeroed.

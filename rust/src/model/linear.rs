@@ -9,6 +9,7 @@ use crate::quant::{QuantCtx, QuantRepr, Quantizer};
 use crate::tensor::{ops, Matrix};
 use crate::ternary::gemm::{gemm_packed_blocked_par_into, GemmScratch};
 use crate::ternary::gemv::{gemv_packed, gemv_packed_par};
+use crate::ternary::int_act;
 use crate::ternary::linear::PackedTernaryLinear;
 use crate::ternary::lut;
 use crate::ternary::simd;
@@ -69,6 +70,30 @@ impl QuantLinear {
         }
     }
 
+    /// Decode-path forward with the int8-activation tier opt-in:
+    /// eligible ternary layers (same gate as the batched dispatch)
+    /// quantize `x` into `act` and run the scalar int sweep — which is
+    /// `==`-exact to every other int-tier path — everything else falls
+    /// through to [`QuantLinear::forward_vec`].
+    pub fn forward_vec_act(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        act_quant: bool,
+        act: &mut int_act::IntActScratch,
+    ) {
+        if act_quant {
+            if let Backend::Ternary(t) = &self.backend {
+                if lut::is_aligned(t) && t.rows >= lut::LUT_MIN_ROWS {
+                    act.prepare(x, t.group);
+                    int_act::int_rows_span(t, &act.tables, &act.scales, 0..t.rows, y);
+                    return;
+                }
+            }
+        }
+        self.forward_vec(x, y);
+    }
+
     /// Batch forward: Y = X·Wᵀ (allocating convenience wrapper).
     ///
     /// Routed through [`QuantLinear::forward_rows_into`], so it is
@@ -113,7 +138,18 @@ impl QuantLinear {
                 } else {
                     None
                 };
-                if x.rows == 1 {
+                // The int8-activation tier shares the LUT tier's gate
+                // (table builds amortize identically); ragged or short
+                // layers stay on the exact f32 tiers even when the
+                // knob is on. Value-changing, so strictly opt-in via
+                // `scratch.act_quant` (DESIGN.md §Integer-Kernels).
+                if scratch.act_quant && use_lut {
+                    if x.rows == 1 {
+                        int_act::gemv_int_into(t, x.row(0), y.row_mut(0), scratch);
+                    } else {
+                        int_act::gemm_int_into(t, x, y, scratch);
+                    }
+                } else if x.rows == 1 {
                     if use_lut {
                         lut::gemv_lut_into(t, x.row(0), y.row_mut(0), scratch);
                     } else if let Some(il) = il {
@@ -315,6 +351,50 @@ mod tests {
                         }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn act_quant_ignored_where_ineligible_and_off_by_default() {
+        // dense backends, ragged groups (G % 4 != 0), and short layers
+        // (rows < LUT_MIN_ROWS) must produce bitwise-identical output
+        // with the act_quant knob on or off; and a fresh scratch must
+        // default to off so pre-existing outputs never change silently
+        use crate::quant::ptqtp::PtqtpOpts;
+        let mut rng = Rng::new(15);
+        assert!(!GemmScratch::new().act_quant, "act_quant must default off");
+        for (rows, group, quantize) in [
+            (96usize, 10usize, true),
+            (12, 8, true),
+            (96, 8, false),
+            (96, 8, true),
+        ] {
+            let mut lin = QuantLinear::dense(Matrix::rand_heavy(rows, 40, 0.05, &mut rng));
+            if quantize {
+                lin.quantize_with(
+                    &Ptqtp::new(PtqtpOpts {
+                        group,
+                        ..Default::default()
+                    }),
+                    &QuantCtx::default(),
+                );
+            }
+            let eligible = quantize && group % 4 == 0 && rows >= crate::ternary::lut::LUT_MIN_ROWS;
+            let x = Matrix::randn(3, 40, 1.0, &mut rng);
+            let mut y_off = Matrix::zeros(3, rows);
+            let mut y_on = Matrix::zeros(3, rows);
+            let mut scratch = GemmScratch::new();
+            lin.forward_rows_into(&x, &mut y_off, &mut scratch);
+            scratch.act_quant = true;
+            lin.forward_rows_into(&x, &mut y_on, &mut scratch);
+            if eligible {
+                // 96×40 aligned layer genuinely switches tiers; the
+                // quantized activations must actually change something
+                // (guards against the gate silently never firing)
+                assert_ne!(y_on.data, y_off.data, "rows={rows} G={group}");
+            } else {
+                assert_eq!(y_on.data, y_off.data, "rows={rows} G={group} q={quantize}");
             }
         }
     }

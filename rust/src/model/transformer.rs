@@ -120,6 +120,13 @@ pub struct Transformer {
     /// (never serialized; [`Transformer::set_threads`] to change).
     /// Output is bit-identical for any lane count.
     pub exec_pool: crate::threads::Pool,
+    /// Int8-activation tier for every self-managed pass (and inherited
+    /// by engines at construction). **Value-changing** — unlike
+    /// `exec_pool`/SIMD this perturbs outputs, so it defaults to off
+    /// everywhere and is only flipped by the CLI front-ends
+    /// (`--act-quant`/`PTQTP_ACT_QUANT`) or explicit A/B callers
+    /// (DESIGN.md §Integer-Kernels).
+    pub exec_act_quant: bool,
 }
 
 impl Transformer {
@@ -137,7 +144,9 @@ impl Transformer {
     /// per thread); every buffer inside is reused across steps. Bound
     /// to [`Transformer::exec_pool`].
     pub fn new_scratch(&self) -> ForwardScratch {
-        ForwardScratch::with_pool(self.exec_pool.clone())
+        let mut s = ForwardScratch::with_pool(self.exec_pool.clone());
+        s.set_act_quant(self.exec_act_quant);
+        s
     }
 
     /// Run this model's self-managed passes (eval, NLL, greedy
@@ -145,6 +154,16 @@ impl Transformer {
     /// sequential path; results are bit-identical either way.
     pub fn set_threads(&mut self, threads: usize) {
         self.exec_pool = crate::threads::Pool::new(threads);
+    }
+
+    /// Enable/disable the int8-activation tier for every self-managed
+    /// pass and every scratch created by [`Transformer::new_scratch`]
+    /// from here on (engines inherit it at construction). Off by
+    /// default — the tier is value-changing (DESIGN.md
+    /// §Integer-Kernels), so only the CLI front-ends or explicit A/B
+    /// callers flip it.
+    pub fn set_act_quant(&mut self, on: bool) {
+        self.exec_act_quant = on;
     }
 
     /// One fused pass over `batch`: embed all rows, run every layer
@@ -434,6 +453,24 @@ impl Transformer {
             .count()
     }
 
+    /// Linear layers the int8-activation tier can actually serve:
+    /// packed ternary backends with a LUT-aligned layout (`G % 4 == 0`,
+    /// `cols % 4 == 0`) and enough rows to amortize table builds.
+    /// Ragged or short layers silently stay on the f32 tiers even when
+    /// the knob is on; the serve front-end prints this next to the tier
+    /// name so "act-quant int8" can't mislead when every dispatch ran
+    /// f32.
+    pub fn act_quant_layers(&self) -> usize {
+        self.linear_layers()
+            .iter()
+            .filter(|(_, l)| {
+                matches!(&l.backend, Backend::Ternary(t)
+                    if crate::ternary::lut::is_aligned(t)
+                        && t.rows >= crate::ternary::lut::LUT_MIN_ROWS)
+            })
+            .count()
+    }
+
     /// Container revision [`Transformer::save`] will emit for the
     /// current backends.
     pub fn checkpoint_format(&self) -> &'static str {
@@ -519,6 +556,7 @@ impl Transformer {
             lm_head: None,
             config,
             exec_pool: crate::threads::Pool::sequential(),
+            exec_act_quant: false,
         }
     }
 
@@ -693,6 +731,7 @@ impl Transformer {
             lm_head,
             config,
             exec_pool: crate::threads::Pool::sequential(),
+            exec_act_quant: false,
         })
     }
 }

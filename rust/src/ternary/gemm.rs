@@ -31,6 +31,9 @@ pub struct GemmScratch {
     pub(crate) lane_dec: Vec<(Vec<f32>, Vec<f32>)>,
     /// Per-lane activation-indexed tables for the LUT tier.
     pub(crate) lut_tables: Vec<Vec<f32>>,
+    /// Per-lane int8 activation scratch (codes + scales + i32 tables)
+    /// for the integer-activation tier.
+    pub(crate) int_lanes: Vec<crate::ternary::int_act::IntActScratch>,
     /// Worker pool driving the row-parallel kernels. `threads == 1`
     /// forces the exact sequential path.
     pub pool: Pool,
@@ -39,6 +42,13 @@ pub struct GemmScratch {
     /// (`--simd`/`PTQTP_SIMD`); flip per scratch for exact A/B runs —
     /// outputs are bit-identical either way (DESIGN.md §SIMD-Kernels).
     pub simd: bool,
+    /// Integer-activation tier toggle (DESIGN.md §Integer-Kernels).
+    /// Unlike `simd` this tier is **value-changing** (activations are
+    /// quantized to int8), so it defaults to off unconditionally — the
+    /// process-wide `--act-quant`/`PTQTP_ACT_QUANT` mode is applied
+    /// only at the CLI / serve entry points, never by library defaults,
+    /// keeping every existing output bitwise unchanged unless asked.
+    pub act_quant: bool,
 }
 
 impl Default for GemmScratch {
@@ -48,8 +58,10 @@ impl Default for GemmScratch {
             dec2: Vec::new(),
             lane_dec: Vec::new(),
             lut_tables: Vec::new(),
+            int_lanes: Vec::new(),
             pool: Pool::default(),
             simd: crate::ternary::simd::enabled(),
+            act_quant: false,
         }
     }
 }
@@ -66,6 +78,9 @@ impl GemmScratch {
         }
         if self.lut_tables.len() < lanes {
             self.lut_tables.resize_with(lanes, Vec::new);
+        }
+        if self.int_lanes.len() < lanes {
+            self.int_lanes.resize_with(lanes, Default::default);
         }
     }
 }

@@ -23,10 +23,14 @@
 //!   SSE2 / NEON / scalar fallback) over a row-interleaved plane
 //!   layout; N lanes = N consecutive output rows, bit-identical to
 //!   the scalar tiers.
+//! * [`int_act`] — opt-in integer-activation tier: int8 activations ×
+//!   ternary planes with exact i32 accumulation; value-changing but
+//!   deterministic by construction for any thread count / SIMD width.
 
 pub mod gemm;
 pub mod gemv;
 pub mod int4;
+pub mod int_act;
 pub mod linear;
 pub mod lut;
 pub mod pack;

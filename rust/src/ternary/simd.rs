@@ -323,6 +323,50 @@ fn packed_block_portable<const N: usize>(
     out.copy_from_slice(&acc);
 }
 
+/// One N-row block of the int8 sweep, portable form: per lane the
+/// exact i32 group sums plus the fixed rescale epilogue of
+/// `int_act::int_rows_span`. The integer sums need no fold-order
+/// argument; the epilogue is evaluated lanewise in the scalar order.
+#[allow(clippy::too_many_arguments)]
+fn int_block_portable<const N: usize>(
+    tables: &[i32],
+    scales: &[f32],
+    p1: &[u8],
+    p2: &[u8],
+    a1: &[f32],
+    a2: &[f32],
+    group: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    let gpr = cols.div_ceil(group);
+    let mut acc = [0.0f32; N];
+    for g in 0..gpr {
+        let start = g * group;
+        let end = (start + group).min(cols);
+        let mut s1 = [0i32; N];
+        let mut s2 = [0i32; N];
+        for b in start / 4..end / 4 {
+            let seg = &tables[b * 256..b * 256 + 256];
+            let q1 = &p1[b * N..b * N + N];
+            let q2 = &p2[b * N..b * N + N];
+            for (s, &q) in s1.iter_mut().zip(q1) {
+                *s += seg[q as usize];
+            }
+            for (s, &q) in s2.iter_mut().zip(q2) {
+                *s += seg[q as usize];
+            }
+        }
+        let ga1 = &a1[g * N..g * N + N];
+        let ga2 = &a2[g * N..g * N + N];
+        let sc = scales[g];
+        for l in 0..N {
+            acc[l] += sc * (ga1[l] * s1[l] as f32 + ga2[l] * s2[l] as f32);
+        }
+    }
+    out.copy_from_slice(&acc);
+}
+
 #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
 mod x86 {
     //! 8-lane AVX2 row-block kernels. Bit-identity argument: every
@@ -380,6 +424,61 @@ mod x86 {
             acc = _mm256_add_ps(
                 acc,
                 _mm256_add_ps(_mm256_mul_ps(va1, s1), _mm256_mul_ps(va2, s2)),
+            );
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+
+    /// Int8-tier block: one i32 gather + integer add per byte per
+    /// plane (exact — no ordering argument needed), then per group the
+    /// lanewise rescale `acc += sc·(α₁·s₁ + α₂·s₂)` in the scalar
+    /// epilogue's operation order. `_mm256_cvtepi32_ps` is exact for
+    /// |s| < 2²⁴, which holds up to ~132 K columns per group
+    /// (DESIGN.md §Integer-Kernels). The tables store i16-range values
+    /// as i32 because AVX2 has no 16-bit gather.
+    ///
+    /// Safety: caller must have verified AVX2; `p1`/`p2` hold
+    /// `(cols/4)·8` interleaved bytes, `a1`/`a2` hold `gpr·8`
+    /// interleaved scales, `tables` holds `(cols/4)·256` i32 entries,
+    /// `scales` holds `gpr` activation scales, `out` holds 8 rows.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn int_block8(
+        tables: &[i32],
+        scales: &[f32],
+        p1: &[u8],
+        p2: &[u8],
+        a1: &[f32],
+        a2: &[f32],
+        group: usize,
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        let gpr = cols.div_ceil(group);
+        let mut acc = _mm256_setzero_ps();
+        for g in 0..gpr {
+            let start = g * group;
+            let end = (start + group).min(cols);
+            let mut s1 = _mm256_setzero_si256();
+            let mut s2 = _mm256_setzero_si256();
+            for b in start / 4..end / 4 {
+                let seg = tables.as_ptr().add(b * 256);
+                let i1 = load_indices(p1.as_ptr().add(b * 8));
+                let i2 = load_indices(p2.as_ptr().add(b * 8));
+                s1 = _mm256_add_epi32(s1, _mm256_i32gather_epi32::<4>(seg, i1));
+                s2 = _mm256_add_epi32(s2, _mm256_i32gather_epi32::<4>(seg, i2));
+            }
+            let s1f = _mm256_cvtepi32_ps(s1);
+            let s2f = _mm256_cvtepi32_ps(s2);
+            let va1 = _mm256_loadu_ps(a1.as_ptr().add(g * 8));
+            let va2 = _mm256_loadu_ps(a2.as_ptr().add(g * 8));
+            let sc = _mm256_set1_ps(scales[g]);
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(
+                    sc,
+                    _mm256_add_ps(_mm256_mul_ps(va1, s1f), _mm256_mul_ps(va2, s2f)),
+                ),
             );
         }
         _mm256_storeu_ps(out.as_mut_ptr(), acc);
@@ -481,6 +580,39 @@ fn lut_block_one(
         _ => {
             debug_assert_eq!(lanes, 4, "unsupported interleave lane width");
             lut_block_portable::<4>(table, p1, p2, a1, a2, group, cols, out)
+        }
+    }
+}
+
+/// Dispatch one int8 block to the widest kernel its lane count allows.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn int_block_one(
+    lanes: usize,
+    tables: &[i32],
+    scales: &[f32],
+    p1: &[u8],
+    p2: &[u8],
+    a1: &[f32],
+    a2: &[f32],
+    group: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if lanes == 8 && avx2_available() {
+            // SAFETY: AVX2 presence just checked; slices carry the
+            // 8-lane block shapes `build_interleave` produced.
+            unsafe { x86::int_block8(tables, scales, p1, p2, a1, a2, group, cols, out) };
+            return;
+        }
+    }
+    match lanes {
+        8 => int_block_portable::<8>(tables, scales, p1, p2, a1, a2, group, cols, out),
+        _ => {
+            debug_assert_eq!(lanes, 4, "unsupported interleave lane width");
+            int_block_portable::<4>(tables, scales, p1, p2, a1, a2, group, cols, out)
         }
     }
 }
@@ -621,6 +753,52 @@ pub(crate) fn packed_blocks(
     blocks_by(lin, il, blks, y_span, |p1, p2, a1, a2, out| {
         packed_block_one(il.lanes, x, p1, p2, a1, a2, lin.group, lin.cols, out)
     });
+}
+
+/// Int8 sweep over interleaved blocks `blks`.
+pub(crate) fn int_blocks(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    tables: &[i32],
+    scales: &[f32],
+    blks: Range<usize>,
+    y_span: &mut [f32],
+) {
+    blocks_by(lin, il, blks, y_span, |p1, p2, a1, a2, out| {
+        int_block_one(il.lanes, tables, scales, p1, p2, a1, a2, lin.group, lin.cols, out)
+    });
+}
+
+/// Full-row int8 sweep: SIMD blocks then scalar tail — sequential.
+pub fn int_rows_all(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    tables: &[i32],
+    scales: &[f32],
+    y: &mut [f32],
+) {
+    int_sweep(lin, il, tables, scales, y, &Pool::sequential());
+}
+
+/// Pool-partitioned int8 sweep — `==`-exact to the scalar sweep for
+/// any thread count and lane width, because the group sums are integer
+/// and the rescale epilogue is shared (DESIGN.md §Integer-Kernels).
+pub fn int_sweep(
+    lin: &PackedTernaryLinear,
+    il: &InterleavedPlanes,
+    tables: &[i32],
+    scales: &[f32],
+    y: &mut [f32],
+    pool: &Pool,
+) {
+    sweep_by(
+        lin,
+        il,
+        y,
+        pool,
+        |blks, span| int_blocks(lin, il, tables, scales, blks, span),
+        |rows, span| super::int_act::int_rows_span(lin, tables, scales, rows, span),
+    );
 }
 
 /// Full-row LUT sweep: SIMD blocks then scalar tail — sequential.
@@ -860,6 +1038,42 @@ mod tests {
                     let mut y = Matrix::zeros(m, rows);
                     gemm_packed_simd(&packed, &il, &x, &mut y, &pool);
                     assert_eq!(y.data, y_ref.data, "lanes={lanes} threads={threads} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_sweep_exact_across_lanes_and_threads() {
+        use crate::ternary::int_act::{fill_tables_int, int_rows_span, quantize_row_groups};
+        let mut rng = Rng::new(17);
+        // ragged row tails at both lane widths; 370×96 clears the
+        // PAR_MIN_WORK gate so the block-partitioned pool path runs.
+        // On AVX2 machines lanes=8 exercises the i32-gather kernel
+        // against the same scalar reference the portable lanes hit.
+        for (rows, cols, group) in [(37usize, 32usize, 8usize), (370, 96, 32), (8, 16, 16)] {
+            let packed = random_packed(rows, cols, group, 170 + rows as u64);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal()).collect();
+            let mut q = Vec::new();
+            let mut scales = Vec::new();
+            quantize_row_groups(&x, group, &mut q, &mut scales);
+            let mut tables = Vec::new();
+            fill_tables_int(&q, &mut tables);
+            let mut y_ref = vec![0.0f32; rows];
+            int_rows_span(&packed, &tables, &scales, 0..rows, &mut y_ref);
+            for lanes in [4usize, 8] {
+                let Some(il) = build_interleave(&packed, lanes) else {
+                    assert!(rows < lanes, "rows={rows} lanes={lanes}");
+                    continue;
+                };
+                let mut y = vec![9.0f32; rows];
+                int_rows_all(&packed, &il, &tables, &scales, &mut y);
+                assert_eq!(y, y_ref, "seq rows={rows} lanes={lanes}");
+                for threads in [2usize, 3] {
+                    let pool = Pool::new(threads);
+                    let mut y = vec![9.0f32; rows];
+                    int_sweep(&packed, &il, &tables, &scales, &mut y, &pool);
+                    assert_eq!(y, y_ref, "rows={rows} lanes={lanes} threads={threads}");
                 }
             }
         }

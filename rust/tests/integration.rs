@@ -182,6 +182,7 @@ fn fused_batch_matches_sequential_property() {
                         max_new_tokens: *max_new,
                         stop_token: None,
                         seed: *seed,
+                        n: 1,
                     },
                 ));
             }
@@ -676,6 +677,7 @@ fn quantize_once_serve_many_bit_identical() {
         temperature,
         seed,
         stop_token: None,
+        n: 1,
     };
 
     // threads > 1 single engine
@@ -850,6 +852,7 @@ fn paged_prefix_serving_matches_contiguous_property() {
                             max_new_tokens: *max_new,
                             stop_token: None,
                             seed: *seed,
+                            n: 1,
                         },
                     ));
                 }
