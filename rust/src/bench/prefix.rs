@@ -40,13 +40,7 @@ fn prompts(plen: usize, bs: usize) -> Vec<Vec<u32>> {
 /// Serve one wave and return `(tokens sorted by id, prefill-token
 /// delta, adopted-token delta, wall seconds)`.
 fn wave(engine: &mut ServeEngine, prompts: &[Vec<u32>], id_base: u64) -> (Vec<Vec<u32>>, u64, u64, f64) {
-    let params = SamplingParams {
-        temperature: 0.0,
-        max_new_tokens: MAX_NEW,
-        stop_token: None,
-        seed: 0,
-        n: 1,
-    };
+    let params = SamplingParams::greedy(MAX_NEW).with_stop(None);
     let prefill0 = engine.metrics.prefill_tokens;
     let adopted0 = engine.metrics.adopted_tokens;
     let t0 = std::time::Instant::now();

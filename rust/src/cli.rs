@@ -117,6 +117,19 @@ impl Args {
         }
     }
 
+    /// Optional millisecond-duration option built on [`usize_opt`]:
+    /// `None` when absent, `Some(duration)` when present and
+    /// parseable, and the same helpful error on typos. Used by
+    /// `--deadline-ms`, where a silent fallback would quietly serve
+    /// without any deadline at all.
+    ///
+    /// [`usize_opt`]: Args::usize_opt
+    pub fn duration_ms_opt(&self, name: &str) -> anyhow::Result<Option<std::time::Duration>> {
+        Ok(self
+            .usize_opt(name)?
+            .map(|ms| std::time::Duration::from_millis(ms as u64)))
+    }
+
     /// Worker-lane count for the row-parallel kernels. Resolution
     /// order: `--threads N` > `PTQTP_THREADS` env var > available
     /// cores; `1` forces the exact sequential path (the documented
@@ -283,6 +296,21 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("--page-size") && e.contains("'sixty'"), "{e}");
+    }
+
+    #[test]
+    fn duration_ms_opt_parses_millis() {
+        assert_eq!(parse(&["serve"]).duration_ms_opt("deadline-ms").unwrap(), None);
+        let a = parse(&["serve", "--deadline-ms", "2500"]);
+        assert_eq!(
+            a.duration_ms_opt("deadline-ms").unwrap(),
+            Some(std::time::Duration::from_millis(2500))
+        );
+        let e = parse(&["serve", "--deadline-ms", "soon"])
+            .duration_ms_opt("deadline-ms")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--deadline-ms") && e.contains("'soon'"), "{e}");
     }
 
     #[test]

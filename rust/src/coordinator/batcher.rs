@@ -33,6 +33,21 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Chainable override (`BatchPolicy::default().with_max_running(1)`
+    /// — the saturation knob the deadline/cancel tests lean on).
+    pub fn with_max_running(mut self, n: usize) -> BatchPolicy {
+        self.max_running = n;
+        self
+    }
+
+    /// Chainable override of the per-step prefill token budget.
+    pub fn with_prefill_budget(mut self, tokens: usize) -> BatchPolicy {
+        self.prefill_token_budget = tokens;
+        self
+    }
+}
+
 /// What one engine step should do: `(sequence index, tokens to prefill)`
 /// for prefill work; decode is implicit for all non-prefill sequences.
 #[derive(Clone, Debug, Default, PartialEq)]

@@ -13,10 +13,15 @@ use super::batcher::{plan_step, BatchPolicy};
 use super::kv_pool::{KvPool, PagedKvOpts};
 use super::metrics::Metrics;
 use super::prefix_cache::PrefixCache;
-use super::request::{FinishReason, Request, Response, SequenceState};
+use super::request::{
+    FinishReason, Request, Response, SequenceState, ServerEvent, SubmitError,
+};
 use crate::model::{ForwardBatch, ForwardScratch, KvCache, Transformer};
 use crate::rng::Rng;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// A preempted sequence awaiting re-admission: its pages are gone, but
 /// the tokens generated so far are kept and recomputed through the
@@ -53,6 +58,11 @@ pub struct ServeEngine {
     logit_pool: Vec<Vec<f32>>,
     /// Sampling probability scratch.
     prob_buf: Vec<f32>,
+    /// Server-side intake gauge for this replica: accepted-but-not-
+    /// finished requests. The engine decrements it as requests retire
+    /// so `Server::submit`'s admission check sees live occupancy.
+    /// `None` when the engine is driven directly (no admission front).
+    intake_depth: Option<Arc<AtomicUsize>>,
 }
 
 impl ServeEngine {
@@ -121,7 +131,20 @@ impl ServeEngine {
             logit_slots: Vec::new(),
             logit_pool: Vec::new(),
             prob_buf: Vec::new(),
+            intake_depth: None,
         }
+    }
+
+    /// Install the server's per-replica intake gauge (see
+    /// [`ServeEngine::note_request_retired`]'s decrement).
+    pub fn set_intake_depth(&mut self, gauge: Arc<AtomicUsize>) {
+        self.intake_depth = Some(gauge);
+    }
+
+    /// Page-level accounting of this engine's KV pool — gauges for the
+    /// serve log and the cancellation page-release assertions.
+    pub fn page_stats(&self) -> crate::model::PageStats {
+        self.pool.stats()
     }
 
     /// Worker lanes driving this engine's model pass.
@@ -167,9 +190,28 @@ impl ServeEngine {
     }
 
     /// Enqueue a request (admission happens during [`ServeEngine::step`]).
+    /// Panics on invalid [`SamplingParams`] — callers that can't
+    /// guarantee validity use [`ServeEngine::try_submit`]; the server
+    /// front-end validates at `Server::submit` and rejects with a typed
+    /// error instead.
     pub fn submit(&mut self, req: Request) {
+        if let Err(e) = self.try_submit(req) {
+            panic!("invalid request reached ServeEngine::submit: {e}");
+        }
+    }
+
+    /// Enqueue after validating the sampling parameters; invalid
+    /// requests bounce with a typed [`SubmitError`] and touch no
+    /// engine state.
+    pub fn try_submit(&mut self, req: Request) -> Result<(), SubmitError> {
+        req.params.validate()?;
         self.metrics.submitted += 1;
         self.waiting.push_back(req);
+        let depth = self.waiting.len();
+        if depth > self.metrics.queue_depth_peak {
+            self.metrics.queue_depth_peak = depth;
+        }
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
@@ -181,10 +223,10 @@ impl ServeEngine {
     }
 
     /// Admit while KV caches are available: preemption victims first
-    /// (they were admitted earliest), then the waiting queue. Returns
-    /// immediate rejections (e.g. over-long prompts).
-    fn admit(&mut self) -> Vec<Response> {
-        let mut rejected = Vec::new();
+    /// (they were admitted earliest), then the waiting queue. Immediate
+    /// rejections (e.g. over-long prompts) emit their `Done` events
+    /// into `out`.
+    fn admit(&mut self, out: &mut Vec<ServerEvent>) {
         while self.running.len() < self.policy.max_running {
             let Some(p) = self.preempted_q.pop_front() else { break };
             let Some(cache) = self.pool.acquire() else {
@@ -201,24 +243,132 @@ impl ServeEngine {
             if req.prompt.len() + 1 >= self.model.config.max_seq {
                 let req = self.waiting.pop_front().unwrap();
                 self.metrics.rejected += 1;
-                rejected.push(Response {
-                    id: req.id,
-                    sample: req.sample,
-                    tokens: Vec::new(),
-                    finish: FinishReason::PromptTooLong,
-                    ttft: req.submitted_at.elapsed(),
-                    total: req.submitted_at.elapsed(),
-                    prompt_len: req.prompt.len(),
-                });
+                self.retire_early(req, Vec::new(), None, FinishReason::PromptTooLong, out);
                 continue;
             }
             let Some(cache) = self.pool.acquire() else { break };
             let req = self.waiting.pop_front().unwrap();
+            req.ctl.mark_running();
             let mut seq = SequenceState::new(req, cache);
             self.adopt_prefix(&mut seq);
             self.running.push(seq);
         }
-        rejected
+    }
+
+    /// Cancel/deadline reason for a request, if its lifetime has
+    /// lapsed at `now` (cancel wins when both apply).
+    fn lapse(req: &Request, now: Instant) -> Option<FinishReason> {
+        if req.ctl.is_cancelled() {
+            Some(FinishReason::Cancelled)
+        } else if req.expired_at(now) {
+            Some(FinishReason::DeadlineExceeded)
+        } else {
+            None
+        }
+    }
+
+    /// Step-boundary lifecycle sweep: retire cancelled and
+    /// deadline-expired requests from every queue *before* admission
+    /// and planning, so a lapsed request never costs another model
+    /// pass. Running victims release their KV pages eagerly — the
+    /// same step-time release path preemption uses — but donate
+    /// nothing to the prefix tree (nobody asked for this output);
+    /// `PageStats.live` returns to its pre-request baseline.
+    fn sweep_lifecycle(&mut self, out: &mut Vec<ServerEvent>) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.waiting.len() {
+            match Self::lapse(&self.waiting[i], now) {
+                Some(reason) => {
+                    let req = self.waiting.remove(i).expect("index in bounds");
+                    self.retire_early(req, Vec::new(), None, reason, out);
+                }
+                None => i += 1,
+            }
+        }
+        let mut i = 0;
+        while i < self.preempted_q.len() {
+            match Self::lapse(&self.preempted_q[i].request, now) {
+                Some(reason) => {
+                    let p = self.preempted_q.remove(i).expect("index in bounds");
+                    self.retire_early(p.request, p.generated, p.first_token_at, reason, out);
+                }
+                None => i += 1,
+            }
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            let Some(reason) = Self::lapse(&self.running[i].request, now) else {
+                i += 1;
+                continue;
+            };
+            let mut s = self.running.swap_remove(i);
+            if let Some(buf) = s.pending_logits.take() {
+                self.logit_pool.push(buf); // recycle the allocation
+            }
+            s.cache.reset(); // pages back to the store, this step
+            self.pool.release(s.cache);
+            self.retire_early(s.request, s.generated, s.first_token_at, reason, out);
+        }
+    }
+
+    /// Retire a request outside the normal decode path (rejection,
+    /// cancel, deadline): build the terminal [`Response`] — keeping
+    /// whatever was generated — and emit its `Done` event.
+    fn retire_early(
+        &mut self,
+        req: Request,
+        tokens: Vec<u32>,
+        first_token_at: Option<Instant>,
+        finish: FinishReason,
+        out: &mut Vec<ServerEvent>,
+    ) {
+        let resp = Response {
+            id: req.id,
+            sample: req.sample,
+            ttft: first_token_at
+                .map(|t| t - req.submitted_at)
+                .unwrap_or_default(),
+            total: req.submitted_at.elapsed(),
+            prompt_len: req.prompt.len(),
+            tokens,
+            finish,
+        };
+        self.note_request_retired(&req, finish);
+        out.push(ServerEvent::Done(resp));
+    }
+
+    /// Request-granular bookkeeping when one of a request's sequences
+    /// retires: once **no** sequence sharing the id remains anywhere in
+    /// the engine, the request is over — flip its control block to
+    /// `Finished`, free its intake slot, and classify it into exactly
+    /// one of the request-level counters (`requests_finished` /
+    /// `cancelled` / `deadline_expired`; `PromptTooLong` was already
+    /// counted in `rejected` at the rejection site). Per-response
+    /// accounting (`completed`, latency reservoirs) stays separate in
+    /// [`Metrics::record_response`].
+    fn note_request_retired(&mut self, req: &Request, finish: FinishReason) {
+        let id = req.id;
+        let live = self.running.iter().any(|s| s.request.id == id)
+            || self.waiting.iter().any(|r| r.id == id)
+            || self.preempted_q.iter().any(|p| p.request.id == id);
+        if live {
+            return;
+        }
+        req.ctl.mark_finished();
+        if let Some(depth) = &self.intake_depth {
+            let _ = depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                d.checked_sub(1)
+            });
+        }
+        match finish {
+            FinishReason::Cancelled => self.metrics.cancelled += 1,
+            FinishReason::DeadlineExceeded => self.metrics.deadline_expired += 1,
+            FinishReason::PromptTooLong => {}
+            FinishReason::Stop | FinishReason::Length | FinishReason::CacheOverflow => {
+                self.metrics.requests_finished += 1;
+            }
+        }
     }
 
     /// Walk the radix tree for the sequence's prefill tokens and adopt
@@ -334,16 +484,36 @@ impl ServeEngine {
         pc.insert(&prompt[..n], cache.shared_pages(n));
     }
 
-    /// One engine iteration: admit, plan, fuse all planned prefill
-    /// chunks + decode tokens into **one** [`ForwardBatch`], execute it
-    /// with a single model pass, scatter the logits back, retire
-    /// finished sequences. Returns completed responses.
+    /// One engine iteration returning only completed [`Response`]s —
+    /// a thin adapter over [`ServeEngine::step_events`] that drops the
+    /// per-token stream. Every pre-streaming caller keeps working
+    /// through this wrapper unchanged.
+    pub fn step(&mut self) -> Vec<Response> {
+        let mut events = Vec::new();
+        self.step_events(&mut events);
+        events
+            .into_iter()
+            .filter_map(|ev| match ev {
+                ServerEvent::Done(resp) => Some(resp),
+                ServerEvent::Token { .. } => None,
+            })
+            .collect()
+    }
+
+    /// One engine iteration: sweep lapsed lifetimes, admit, plan, fuse
+    /// all planned prefill chunks + decode tokens into **one**
+    /// [`ForwardBatch`], execute it with a single model pass, scatter
+    /// the logits back, retire finished sequences. Events — one
+    /// `Token` per decoded token, one `Done` per finished sequence —
+    /// are appended to `out` in emission order; see [`ServerEvent`]
+    /// for the stream-equals-final-tokens guarantee.
     ///
     /// Produces token-for-token the same per-sequence output as
     /// stepping each sequence alone (`max_running == 1`): the batched
     /// model path is bit-identical per row to sequential decoding.
-    pub fn step(&mut self) -> Vec<Response> {
-        let mut done = self.admit();
+    pub fn step_events(&mut self, out: &mut Vec<ServerEvent>) {
+        self.sweep_lifecycle(out);
+        self.admit(out);
         let slots: Vec<(bool, usize, bool)> = self
             .running
             .iter()
@@ -433,6 +603,17 @@ impl ServeEngine {
                 seq.generated.push(next);
                 self.metrics.decode_tokens += 1;
                 let stop = Some(next) == seq.request.params.stop_token;
+                // a matched stop token never reaches the wire — the
+                // retirement below pops it from Response::tokens too,
+                // keeping stream == final tokens exactly
+                if !stop {
+                    out.push(ServerEvent::Token {
+                        id: seq.request.id,
+                        sample: seq.request.sample,
+                        token: next,
+                        index: seq.generated.len() - 1,
+                    });
+                }
                 let out_of_budget = seq.budget_left() == 0;
                 if !(stop || out_of_budget || cache_full) {
                     let ci = n_caches;
@@ -559,20 +740,21 @@ impl ServeEngine {
                     finish,
                 };
                 self.metrics.record_response(&resp);
-                done.push(resp);
+                self.note_request_retired(&s.request, finish);
+                out.push(ServerEvent::Done(resp));
             } else {
                 i += 1;
             }
         }
 
-        // --- refresh page-pool gauges for the serve-log summary
+        // --- refresh pool + queue gauges for the serve-log summary
         let ps = self.pool.stats();
         self.metrics.pages_in_use = ps.live;
         self.metrics.pages_free = ps.free;
         self.metrics.pages_peak = ps.peak_live;
         self.metrics.page_budget = ps.budget.unwrap_or(0);
         self.metrics.cow_pages = ps.cow_pages;
-        done
+        self.metrics.queue_depth = self.waiting.len();
     }
 
     /// Drive until every submitted request completes (test/batch mode).
@@ -1209,5 +1391,174 @@ mod tests {
         let out = e.run_to_completion();
         assert_eq!(out[0].finish, FinishReason::Stop);
         assert!(out[0].tokens.is_empty(), "stop on first token");
+    }
+
+    #[test]
+    fn try_submit_rejects_invalid_params() {
+        use crate::coordinator::request::SubmitError;
+        let mut e = engine(2);
+        let bad = Request::new(1, vec![1, 2], SamplingParams::greedy(0));
+        assert_eq!(e.try_submit(bad), Err(SubmitError::ZeroBudget));
+        assert_eq!(e.metrics.submitted, 0, "rejected before any accounting");
+        assert_eq!(e.pending(), 0);
+        let good = Request::new(2, vec![1, 2], SamplingParams::greedy(3));
+        assert!(e.try_submit(good).is_ok());
+        assert_eq!(e.metrics.queue_depth_peak, 1);
+        assert_eq!(e.run_to_completion().len(), 1);
+    }
+
+    #[test]
+    fn step_events_stream_matches_step_responses() {
+        // the adapter contract in miniature: step_events' Token stream
+        // concatenated == the Response tokens step() would return,
+        // including the popped stop token (see stop_token_ends_generation
+        // for how the probe stop is found)
+        let mut e = engine(4);
+        e.submit(req(1, vec![1, 2, 3], 5));
+        let mut r = req(2, vec![4, 5], 7);
+        r.params.temperature = 0.7;
+        r.params.seed = 13;
+        e.submit(r);
+        let mut events = Vec::new();
+        let mut guard = 0;
+        while e.pending() > 0 {
+            e.step_events(&mut events);
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        let mut streams: std::collections::HashMap<(u64, usize), Vec<u32>> =
+            std::collections::HashMap::new();
+        let mut dones = 0;
+        for ev in &events {
+            match ev {
+                ServerEvent::Token { id, sample, token, index } => {
+                    let s = streams.entry((*id, *sample)).or_default();
+                    assert_eq!(*index, s.len(), "indexes contiguous from 0");
+                    s.push(*token);
+                }
+                ServerEvent::Done(resp) => {
+                    dones += 1;
+                    let s = streams.remove(&(resp.id, resp.sample)).unwrap_or_default();
+                    assert_eq!(s, resp.tokens, "stream == final tokens, req {}", resp.id);
+                }
+            }
+        }
+        assert_eq!(dones, 2);
+        assert!(streams.is_empty(), "every stream terminated by a Done");
+    }
+
+    #[test]
+    fn cancel_before_admission_costs_no_compute() {
+        let mut e = engine(2);
+        let r = req(1, vec![1, 2, 3], 50);
+        let handle = r.handle(0);
+        e.submit(r);
+        handle.cancel();
+        let out = e.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Cancelled);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(e.metrics.prefill_tokens, 0, "swept before any model pass");
+        assert_eq!(e.metrics.cancelled, 1);
+        assert_eq!(e.metrics.completed, 0, "not a normal completion");
+        use crate::coordinator::request::RequestStatus;
+        assert_eq!(handle.try_status(), RequestStatus::Finished);
+    }
+
+    #[test]
+    fn cancel_mid_decode_keeps_generated_and_frees_pages() {
+        let mut e = engine(2);
+        let r = req(1, vec![1, 2, 3], 50);
+        let handle = r.handle(0);
+        e.submit(r);
+        let mut events = Vec::new();
+        // decode a few tokens, then cancel at a step boundary
+        let mut decoded = 0usize;
+        let mut guard = 0;
+        while decoded < 3 {
+            e.step_events(&mut events);
+            decoded = events
+                .iter()
+                .filter(|ev| matches!(ev, ServerEvent::Token { .. }))
+                .count();
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert!(e.page_stats().live > 0, "sequence holds pages mid-decode");
+        handle.cancel();
+        e.step_events(&mut events);
+        let resp = events
+            .iter()
+            .find_map(|ev| match ev {
+                ServerEvent::Done(r) => Some(r.clone()),
+                _ => None,
+            })
+            .expect("cancel retires within one step");
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        let stream: Vec<u32> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                ServerEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(stream, resp.tokens, "cancel keeps every emitted token");
+        assert_eq!(e.page_stats().live, 0, "all pages released eagerly");
+        assert_eq!(e.pool.outstanding(), 0);
+        assert_eq!(e.metrics.cancelled, 1);
+    }
+
+    #[test]
+    fn deadline_expires_waiting_requests_under_saturation() {
+        // max_running 1 saturates the batcher: the queued requests
+        // with a zero deadline expire at the sweep without ever being
+        // admitted, while the running request finishes normally
+        let mut e = engine(1);
+        e.submit(req(1, vec![1, 2], 4));
+        e.submit(req(2, vec![3, 4], 4).with_deadline(std::time::Duration::ZERO));
+        e.submit(req(3, vec![5, 6], 4).with_deadline(std::time::Duration::ZERO));
+        let mut out = e.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(out[0].tokens.len(), 4);
+        assert_eq!(out[1].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(out[2].finish, FinishReason::DeadlineExceeded);
+        assert_eq!(e.metrics.deadline_expired, 2);
+        assert_eq!(e.metrics.requests_finished, 1);
+    }
+
+    #[test]
+    fn deadline_expires_running_sequence_and_frees_pages() {
+        let mut e = engine(2);
+        e.submit(req(1, vec![1, 2, 3], 500).with_deadline(std::time::Duration::from_millis(30)));
+        let mut events = Vec::new();
+        e.step_events(&mut events); // admit + prefill
+        assert_eq!(e.running(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        let mut guard = 0;
+        while e.pending() > 0 {
+            e.step_events(&mut events);
+            guard += 1;
+            assert!(guard < 1000, "expiry must retire the sequence");
+        }
+        let resp = events
+            .iter()
+            .find_map(|ev| match ev {
+                ServerEvent::Done(r) => Some(r.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(resp.finish, FinishReason::DeadlineExceeded);
+        let stream: Vec<u32> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                ServerEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(stream, resp.tokens, "expiry keeps every emitted token");
+        assert_eq!(e.page_stats().live, 0);
+        assert_eq!(e.metrics.deadline_expired, 1);
     }
 }

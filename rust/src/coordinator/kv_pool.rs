@@ -195,6 +195,14 @@ impl KvPool {
         self.store.stats()
     }
 
+    /// Pages currently referenced by live caches or the prefix tree —
+    /// the gauge the cancellation tests pin to its pre-request
+    /// baseline (cancel/deadline retirement releases eagerly and
+    /// donates nothing, so this returns exactly to where it was).
+    pub fn live_pages(&self) -> usize {
+        self.store.stats().live
+    }
+
     /// Total bytes held by pooled (free-list) pages awaiting reuse.
     pub fn pooled_bytes(&self) -> usize {
         self.stats().free * 2 * self.store.page_floats() * 4

@@ -1,15 +1,90 @@
-//! Serving metrics: counters + latency reservoirs, rendered for the
-//! `ptqtp serve --report` output and the Table 5/6-style benches.
+//! Serving metrics: counters + latency reservoirs + histograms,
+//! rendered for the `ptqtp serve --report` output and the Table 5/6
+//! style benches, and exported as the `serve-metrics.json` artifact
+//! (`--metrics-json`).
 
 use super::request::Response;
+use crate::serialize::Json;
 use std::time::Duration;
+
+/// Log-spaced bucket upper bounds (milliseconds) for the latency
+/// histograms; the implicit last bucket is +∞ overflow.
+pub const LATENCY_BUCKET_BOUNDS_MS: [u64; 12] =
+    [1, 2, 5, 10, 25, 50, 100, 250, 500, 1000, 2500, 5000];
+
+const N_BUCKETS: usize = LATENCY_BUCKET_BOUNDS_MS.len() + 1;
+
+/// Fixed-bucket latency histogram. Unlike the percentile reservoirs it
+/// never saturates — every sample lands in a bucket — so it stays
+/// faithful under long serves, and merging across replicas is exact
+/// (bucket-wise addition).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; N_BUCKETS],
+    samples: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: [0; N_BUCKETS],
+            samples: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let ms = u64::try_from(d.as_millis()).unwrap_or(u64::MAX);
+        let idx = LATENCY_BUCKET_BOUNDS_MS
+            .iter()
+            .position(|&bound| ms <= bound)
+            .unwrap_or(LATENCY_BUCKET_BOUNDS_MS.len());
+        self.counts[idx] += 1;
+        self.samples += 1;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Bucket counts, bound-aligned with
+    /// [`LATENCY_BUCKET_BOUNDS_MS`] plus the trailing overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Exact bucket-wise merge (replica aggregation).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.samples += other.samples;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("bounds_ms", LATENCY_BUCKET_BOUNDS_MS.to_vec())
+            .set("counts", self.counts.to_vec())
+    }
+}
 
 /// Engine-level metrics.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub submitted: u64,
+    /// Finished **responses** (an `n`-sample request contributes `n`).
     pub completed: u64,
     pub rejected: u64,
+    /// Requests cancelled via their handle (request-granular).
+    pub cancelled: u64,
+    /// Requests retired by deadline expiry (request-granular).
+    pub deadline_expired: u64,
+    /// Requests (not samples) that ran to a normal finish — stop,
+    /// length, or cache overflow. Together with `rejected`,
+    /// `cancelled`, and `deadline_expired` this partitions every
+    /// request the engine accepted.
+    pub requests_finished: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     /// Prompt tokens satisfied by prefix-cache page adoption instead of
@@ -29,6 +104,13 @@ pub struct Metrics {
     pub pages_free: usize,
     pub pages_peak: usize,
     pub page_budget: usize,
+    /// Intake-queue gauges: depth at the last step, and the deepest
+    /// the queue has ever been.
+    pub queue_depth: usize,
+    pub queue_depth_peak: usize,
+    /// TTFT / end-to-end latency histograms over completed responses.
+    pub ttft_hist: LatencyHistogram,
+    pub total_hist: LatencyHistogram,
     /// Completed responses retained for percentile queries (bounded).
     pub finished: Vec<Response>,
     ttft_samples: Vec<Duration>,
@@ -40,6 +122,8 @@ const RESERVOIR: usize = 4096;
 impl Metrics {
     pub fn record_response(&mut self, r: &Response) {
         self.completed += 1;
+        self.ttft_hist.record(r.ttft);
+        self.total_hist.record(r.total);
         if self.ttft_samples.len() < RESERVOIR {
             self.ttft_samples.push(r.ttft);
             self.total_samples.push(r.total);
@@ -72,9 +156,80 @@ impl Metrics {
         }
     }
 
+    /// Sum counters / merge histograms across replica snapshots.
+    /// Gauges (`pages_*`, `queue_depth*`) sum too, reading as
+    /// fleet-wide totals; the percentile reservoirs concatenate up to
+    /// their bound.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.cancelled += other.cancelled;
+        self.deadline_expired += other.deadline_expired;
+        self.requests_finished += other.requests_finished;
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_tokens += other.decode_tokens;
+        self.adopted_tokens += other.adopted_tokens;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_evicted_pages += other.prefix_evicted_pages;
+        self.preemptions += other.preemptions;
+        self.cow_pages += other.cow_pages;
+        self.pages_in_use += other.pages_in_use;
+        self.pages_free += other.pages_free;
+        self.pages_peak += other.pages_peak;
+        self.page_budget += other.page_budget;
+        self.queue_depth += other.queue_depth;
+        self.queue_depth_peak += other.queue_depth_peak;
+        self.ttft_hist.merge(&other.ttft_hist);
+        self.total_hist.merge(&other.total_hist);
+        let room = RESERVOIR.saturating_sub(self.ttft_samples.len());
+        self.ttft_samples
+            .extend(other.ttft_samples.iter().take(room).copied());
+        let room = RESERVOIR.saturating_sub(self.total_samples.len());
+        self.total_samples
+            .extend(other.total_samples.iter().take(room).copied());
+        let room = RESERVOIR.saturating_sub(self.finished.len());
+        self.finished.extend(other.finished.iter().take(room).cloned());
+    }
+
+    /// Fleet aggregate of per-replica snapshots.
+    pub fn aggregate(replicas: &[Metrics]) -> Metrics {
+        let mut agg = Metrics::default();
+        for m in replicas {
+            agg.merge_from(m);
+        }
+        agg
+    }
+
+    /// One replica snapshot as JSON (a `per_replica` entry of the
+    /// serve-metrics artifact).
+    pub fn to_json(&self, wall: Duration) -> Json {
+        Json::obj()
+            .set("submitted", self.submitted)
+            .set("responses", self.completed)
+            .set("requests_finished", self.requests_finished)
+            .set("rejected", self.rejected)
+            .set("cancelled", self.cancelled)
+            .set("expired", self.deadline_expired)
+            .set("prefill_tokens", self.prefill_tokens)
+            .set("decode_tokens", self.decode_tokens)
+            .set("adopted_tokens", self.adopted_tokens)
+            .set("preemptions", self.preemptions)
+            .set("cow_pages", self.cow_pages)
+            .set("pages_in_use", self.pages_in_use)
+            .set("pages_peak", self.pages_peak)
+            .set("queue_depth", self.queue_depth)
+            .set("queue_depth_peak", self.queue_depth_peak)
+            .set("decode_tok_per_s", self.throughput(wall))
+            .set("ttft_ms", latency_json(self, true))
+            .set("total_ms", latency_json(self, false))
+    }
+
     pub fn render(&self, wall: Duration) -> String {
         format!(
-            "requests: {} submitted, {} completed, {} rejected\n\
+            "requests: {} submitted, {} completed, {} rejected, {} cancelled, \
+             {} expired (queue depth {}, peak {})\n\
              tokens:   {} prefill, {} decode ({:.1} tok/s decode)\n\
              paged-kv: {}/{} pages in use (peak {}, {} free), {} adopted tokens, \
              prefix hit rate {:.0}%, {} tree evictions, {} cow copies, preemptions: {}\n\
@@ -83,6 +238,10 @@ impl Metrics {
             self.submitted,
             self.completed,
             self.rejected,
+            self.cancelled,
+            self.deadline_expired,
+            self.queue_depth,
+            self.queue_depth_peak,
             self.prefill_tokens,
             self.decode_tokens,
             self.throughput(wall),
@@ -101,6 +260,69 @@ impl Metrics {
             self.total_percentile(0.95).unwrap_or_default(),
         )
     }
+}
+
+/// Server-level admission counters. Requests the front-end rejects
+/// (queue full, server stopped, invalid params) never reach an engine,
+/// so the engine's [`Metrics`] can't count them — the server does.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// Submission attempts (accepted + every rejection class).
+    pub submitted: u64,
+    pub accepted: u64,
+    pub queue_full: u64,
+    pub server_stopped: u64,
+    pub invalid_params: u64,
+}
+
+/// The `serve-metrics.json` artifact: server-level admission counters
+/// + the fleet aggregate + per-replica snapshots. After a
+/// `Server::drain()` (no requests in flight) the exported counters
+/// satisfy the request-granular identity
+/// `completed + rejected + cancelled + expired == submitted`.
+pub fn serve_metrics_json(stats: &ServerStats, replicas: &[Metrics], wall: Duration) -> Json {
+    let agg = Metrics::aggregate(replicas);
+    let rejected =
+        stats.queue_full + stats.server_stopped + stats.invalid_params + agg.rejected;
+    Json::obj()
+        .set("schema", "ptqtp-serve-metrics/1")
+        .set("submitted", stats.submitted)
+        .set("accepted", stats.accepted)
+        .set("rejected", rejected)
+        .set("queue_full", stats.queue_full)
+        .set("server_stopped", stats.server_stopped)
+        .set("invalid_params", stats.invalid_params)
+        .set("completed", agg.requests_finished)
+        .set("cancelled", agg.cancelled)
+        .set("expired", agg.deadline_expired)
+        .set("responses", agg.completed)
+        .set("prefill_tokens", agg.prefill_tokens)
+        .set("decode_tokens", agg.decode_tokens)
+        .set("adopted_tokens", agg.adopted_tokens)
+        .set("preemptions", agg.preemptions)
+        .set("queue_depth_peak", agg.queue_depth_peak)
+        .set("wall_ms", wall.as_secs_f64() * 1e3)
+        .set("decode_tok_per_s", agg.throughput(wall))
+        .set("ttft_ms", latency_json(&agg, true))
+        .set("total_ms", latency_json(&agg, false))
+        .set(
+            "per_replica",
+            Json::Arr(replicas.iter().map(|m| m.to_json(wall)).collect()),
+        )
+}
+
+/// `{p50_ms, p95_ms, histogram}` for one latency dimension.
+fn latency_json(m: &Metrics, ttft: bool) -> Json {
+    let (p50, p95, hist) = if ttft {
+        (m.ttft_percentile(0.50), m.ttft_percentile(0.95), &m.ttft_hist)
+    } else {
+        (m.total_percentile(0.50), m.total_percentile(0.95), &m.total_hist)
+    };
+    let ms = |d: Option<Duration>| d.unwrap_or_default().as_secs_f64() * 1e3;
+    Json::obj()
+        .set("p50_ms", ms(p50))
+        .set("p95_ms", ms(p95))
+        .set("histogram", hist.to_json())
 }
 
 fn percentile(samples: &[Duration], p: f64) -> Option<Duration> {
@@ -140,6 +362,7 @@ mod tests {
         let p95 = m.ttft_percentile(0.95).unwrap();
         assert!(p50 <= p95);
         assert_eq!(m.completed, 5);
+        assert_eq!(m.ttft_hist.samples(), 5);
     }
 
     #[test]
@@ -170,9 +393,86 @@ mod tests {
     }
 
     #[test]
+    fn lifecycle_counters_render() {
+        let mut m = Metrics::default();
+        m.cancelled = 3;
+        m.deadline_expired = 1;
+        m.queue_depth_peak = 7;
+        let s = m.render(Duration::from_secs(1));
+        assert!(s.contains("3 cancelled"));
+        assert!(s.contains("1 expired"));
+        assert!(s.contains("peak 7"));
+    }
+
+    #[test]
     fn throughput_math() {
         let mut m = Metrics::default();
         m.decode_tokens = 100;
         assert!((m.throughput(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets_and_merge() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_millis(0)); // -> bound 1
+        h.record(Duration::from_millis(1)); // inclusive upper bound
+        h.record(Duration::from_millis(3)); // -> bound 5
+        h.record(Duration::from_secs(60)); // -> overflow
+        assert_eq!(h.samples(), 4);
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[2], 1);
+        assert_eq!(h.counts()[N_BUCKETS - 1], 1);
+        let mut other = LatencyHistogram::default();
+        other.record(Duration::from_millis(3));
+        h.merge(&other);
+        assert_eq!(h.counts()[2], 2);
+        assert_eq!(h.samples(), 5);
+    }
+
+    #[test]
+    fn serve_metrics_json_identity_and_roundtrip() {
+        let mut a = Metrics::default();
+        a.submitted = 3;
+        a.requests_finished = 3;
+        for ms in [5u64, 40, 900] {
+            a.record_response(&resp(ms));
+        }
+        let mut b = Metrics::default();
+        b.submitted = 2;
+        b.requests_finished = 1;
+        b.cancelled = 1;
+        b.record_response(&resp(10));
+        let stats = ServerStats {
+            submitted: 7,
+            accepted: 5,
+            queue_full: 2,
+            server_stopped: 0,
+            invalid_params: 0,
+        };
+        let j = serve_metrics_json(&stats, &[a, b], Duration::from_secs(1));
+        // round-trip through the hand-rolled parser, as CI will
+        let j = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(j.req_str("schema").unwrap(), "ptqtp-serve-metrics/1");
+        let get = |k: &str| j.req_f64(k).unwrap() as u64;
+        assert_eq!(
+            get("completed") + get("rejected") + get("cancelled") + get("expired"),
+            get("submitted"),
+            "request-granular identity"
+        );
+        assert_eq!(get("responses"), 4);
+        assert_eq!(j.get("per_replica").unwrap().as_arr().unwrap().len(), 2);
+        let ttft = j.get("ttft_ms").unwrap();
+        assert!(ttft.req_f64("p95_ms").unwrap() >= ttft.req_f64("p50_ms").unwrap());
+        let counts: f64 = ttft
+            .get("histogram")
+            .unwrap()
+            .get("counts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_f64().unwrap())
+            .sum();
+        assert_eq!(counts as u64, 4, "every response landed in a bucket");
     }
 }

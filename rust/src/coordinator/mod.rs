@@ -1,23 +1,29 @@
 //! The L3 serving coordinator — a vLLM-router-style engine around the
 //! quantized model: request router, continuous batcher, KV-cache pool,
-//! prefill/decode scheduler, metrics, and a threaded server front-end.
+//! prefill/decode scheduler, metrics, and a threaded, event-driven
+//! server front-end with admission control.
 //!
 //! The offline crate cache has no tokio, so the event loop is built on
 //! `std::thread` + `mpsc` (documented substitution, DESIGN.md §2); the
-//! architecture — admission control by token budget, interleaved
-//! prefill/decode, per-request streaming state — matches the async
-//! original move-for-move.
+//! architecture — bounded intake, interleaved prefill/decode,
+//! per-token streaming events, cancellation/deadlines at step
+//! boundaries — matches the async original move-for-move.
 //!
 //! Data flow:
 //!
 //! ```text
-//! submit() ─→ Router ─→ per-worker queue ─→ Scheduler/Batcher
-//!                                          │   admit prefills (budget)
-//!                                          ▼
-//!                                     Engine.step(): decode all active
-//!                                          │   + prefill admitted
-//!                                          ▼
-//!                                  responses (finished sequences)
+//! submit() ─→ admission (intake window) ─→ Router ─→ per-worker queue
+//!     │ Rejected(QueueFull/…)                              │
+//!     ▼                                                    ▼
+//! SubmitOutcome                           Scheduler/Batcher + lifecycle
+//!                                         sweep (cancel/deadline)
+//!                                                          │
+//!                                                          ▼
+//!                                         Engine.step_events(): decode
+//!                                         all active + prefill admitted
+//!                                                          │
+//!                                                          ▼
+//!                                  ServerEvent::Token* → ::Done(Response)
 //! ```
 
 pub mod batcher;
@@ -31,5 +37,9 @@ pub mod server;
 
 pub use engine::ServeEngine;
 pub use kv_pool::PagedKvOpts;
-pub use request::{Request, RequestId, Response, SamplingParams};
-pub use server::Server;
+pub use metrics::{serve_metrics_json, LatencyHistogram, Metrics, ServerStats};
+pub use request::{
+    FinishReason, Request, RequestHandle, RequestId, RequestStatus, Response, SamplingParams,
+    ServerEvent, SubmitError,
+};
+pub use server::{DrainReport, Server, ServerBuilder, SubmitOutcome};

@@ -1,4 +1,23 @@
-//! Request/response types and per-sequence lifecycle state.
+//! Request/response types, per-sequence lifecycle state, and the
+//! event vocabulary of the streaming serve front-end.
+//!
+//! The front-end API is built from four pieces defined here:
+//!
+//! * [`SamplingParams`] — validated at submit time ([`SamplingParams::
+//!   validate`]) and constructed through a chainable builder
+//!   ([`SamplingParams::greedy`] / `with_*`).
+//! * [`Request`] — carries an optional wall-clock [`Request::deadline`]
+//!   and a shared [`RequestCtl`] block through which callers cancel and
+//!   observe status without touching the worker thread.
+//! * [`ServerEvent`] — the wire vocabulary: one `Token` per decoded
+//!   token, one `Done` per finished sequence. The concatenated `Token`
+//!   stream is bit-identical to the final [`Response::tokens`].
+//! * [`SubmitError`] — typed rejection reasons surfaced by
+//!   `Server::submit` instead of panics or silent drops.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
@@ -33,6 +52,52 @@ impl Default for SamplingParams {
 }
 
 impl SamplingParams {
+    /// Builder root: greedy decoding with a token budget (stop token
+    /// and everything else from [`Default`]). Chain `with_*` calls to
+    /// refine — the type is `Copy`, so the builder is non-consuming in
+    /// practice: `SamplingParams::greedy(8).with_n(3)`.
+    pub fn greedy(max_new_tokens: usize) -> SamplingParams {
+        SamplingParams {
+            max_new_tokens,
+            ..Default::default()
+        }
+    }
+
+    /// Seeded stochastic sampling (softmax at `temperature`).
+    pub fn with_temperature(mut self, temperature: f32, seed: u64) -> SamplingParams {
+        self.temperature = temperature;
+        self.seed = seed;
+        self
+    }
+
+    /// Parallel samples per request (prefill once, fork `n` streams).
+    pub fn with_n(mut self, n: usize) -> SamplingParams {
+        self.n = n;
+        self
+    }
+
+    /// Override the stop token (`None` ⇒ run to the budget).
+    pub fn with_stop(mut self, stop_token: Option<u32>) -> SamplingParams {
+        self.stop_token = stop_token;
+        self
+    }
+
+    /// Reject parameter combinations the engine cannot serve. Run at
+    /// submit time so bad requests bounce with a typed [`SubmitError`]
+    /// instead of debug-asserting or looping inside a worker thread.
+    pub fn validate(&self) -> Result<(), SubmitError> {
+        if self.n == 0 {
+            return Err(SubmitError::ZeroSamples);
+        }
+        if self.max_new_tokens == 0 {
+            return Err(SubmitError::ZeroBudget);
+        }
+        if self.temperature.is_nan() || self.temperature < 0.0 {
+            return Err(SubmitError::InvalidTemperature(self.temperature));
+        }
+        Ok(())
+    }
+
     /// Parameters for fork `k` of an `n > 1` request: same budget and
     /// temperature, seed decorrelated per sample (k = 0 keeps the base
     /// seed, so single-sample behaviour is unchanged), `n` forced back
@@ -43,6 +108,134 @@ impl SamplingParams {
             n: 1,
             ..*self
         }
+    }
+}
+
+/// Why a submission was refused (see `Server::submit` /
+/// `ServeEngine::try_submit`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubmitError {
+    /// `params.n == 0` — no samples requested.
+    ZeroSamples,
+    /// `params.max_new_tokens == 0` — nothing to decode.
+    ZeroBudget,
+    /// Negative or NaN temperature.
+    InvalidTemperature(f32),
+    /// The routed replica's intake is at `--intake-limit` (and, for
+    /// sessionless requests, so is every other replica's).
+    QueueFull { replica: usize },
+    /// The worker threads have exited; previously this case silently
+    /// dropped the request while returning a live-looking id.
+    ServerStopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::ZeroSamples => write!(f, "n must be >= 1"),
+            SubmitError::ZeroBudget => write!(f, "max_new_tokens must be >= 1"),
+            SubmitError::InvalidTemperature(t) => {
+                write!(f, "temperature must be finite and >= 0 (got {t})")
+            }
+            SubmitError::QueueFull { replica } => {
+                write!(f, "intake queue full (replica {replica})")
+            }
+            SubmitError::ServerStopped => write!(f, "server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Where a request currently is in its lifecycle, as observed through
+/// [`RequestHandle::try_status`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Accepted but not yet admitted into a running batch.
+    Queued,
+    /// At least one of its sequences is (or has been) in the batch.
+    Running,
+    /// Every sequence has retired; all its events have been emitted.
+    Finished,
+}
+
+const PHASE_QUEUED: u8 = 0;
+const PHASE_RUNNING: u8 = 1;
+const PHASE_FINISHED: u8 = 2;
+
+/// Shared control block between a [`RequestHandle`] and the engine.
+///
+/// All flags are advisory and `Relaxed`: the engine reads them at step
+/// boundaries, so a cancel takes effect within one step — there is no
+/// ordering-sensitive data guarded by these atomics (request transfer
+/// itself happens-before via the intake channel).
+#[derive(Debug, Default)]
+pub struct RequestCtl {
+    cancelled: AtomicBool,
+    phase: AtomicU8,
+}
+
+impl RequestCtl {
+    /// Ask the engine to retire this request at the next step boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn mark_running(&self) {
+        self.phase.store(PHASE_RUNNING, Ordering::Relaxed);
+    }
+
+    pub(crate) fn mark_finished(&self) {
+        self.phase.store(PHASE_FINISHED, Ordering::Relaxed);
+    }
+
+    pub fn status(&self) -> RequestStatus {
+        match self.phase.load(Ordering::Relaxed) {
+            PHASE_RUNNING => RequestStatus::Running,
+            PHASE_FINISHED => RequestStatus::Finished,
+            _ => RequestStatus::Queued,
+        }
+    }
+}
+
+/// Caller-side handle for an accepted request: identity, cancellation,
+/// and non-blocking status. Clonable and sendable; does not keep the
+/// server alive.
+#[derive(Clone, Debug)]
+pub struct RequestHandle {
+    id: RequestId,
+    replica: usize,
+    ctl: Arc<RequestCtl>,
+}
+
+impl RequestHandle {
+    pub fn new(id: RequestId, replica: usize, ctl: Arc<RequestCtl>) -> RequestHandle {
+        RequestHandle { id, replica, ctl }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Which replica the request was admitted to.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Retire the request at the engine's next step boundary with
+    /// [`FinishReason::Cancelled`], releasing its KV pages eagerly.
+    /// Tokens already generated are kept in the final [`Response`].
+    pub fn cancel(&self) {
+        self.ctl.cancel();
+    }
+
+    /// Non-blocking lifecycle probe.
+    pub fn try_status(&self) -> RequestStatus {
+        self.ctl.status()
     }
 }
 
@@ -57,7 +250,15 @@ pub struct Request {
     /// Which parallel sample this sequence produces (0 for the primary
     /// and for ordinary `n = 1` requests; forks get 1..n).
     pub sample: usize,
-    pub submitted_at: std::time::Instant,
+    pub submitted_at: Instant,
+    /// Retire with [`FinishReason::DeadlineExceeded`] once this much
+    /// wall-clock time has elapsed since `submitted_at` (checked at
+    /// step boundaries; `None` = unbounded).
+    pub deadline: Option<Duration>,
+    /// Control block shared with every [`RequestHandle`] clone and —
+    /// via `Request::clone` — with every fork and preemption resume of
+    /// this request, so one cancel reaches all of its sequences.
+    pub ctl: Arc<RequestCtl>,
 }
 
 impl Request {
@@ -68,7 +269,28 @@ impl Request {
             params,
             session: 0,
             sample: 0,
-            submitted_at: std::time::Instant::now(),
+            submitted_at: Instant::now(),
+            deadline: None,
+            ctl: Arc::new(RequestCtl::default()),
+        }
+    }
+
+    /// Builder-style deadline attachment.
+    pub fn with_deadline(mut self, deadline: Duration) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// A handle for direct-engine callers (the server builds its own).
+    pub fn handle(&self, replica: usize) -> RequestHandle {
+        RequestHandle::new(self.id, replica, self.ctl.clone())
+    }
+
+    /// True once the deadline has lapsed at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        match self.deadline {
+            Some(d) => now.saturating_duration_since(self.submitted_at) >= d,
+            None => false,
         }
     }
 }
@@ -89,6 +311,12 @@ pub enum FinishReason {
     /// unsatisfiable case where a lone request cannot fit even with
     /// every other sequence evicted.
     CacheOverflow,
+    /// Retired by [`RequestHandle::cancel`]; tokens generated so far
+    /// are kept, KV pages are released eagerly.
+    Cancelled,
+    /// Retired because [`Request::deadline`] lapsed; tokens generated
+    /// so far are kept, KV pages are released eagerly.
+    DeadlineExceeded,
 }
 
 /// Completed request.
@@ -101,10 +329,35 @@ pub struct Response {
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
     /// Time from submit to first generated token.
-    pub ttft: std::time::Duration,
+    pub ttft: Duration,
     /// Time from submit to completion.
-    pub total: std::time::Duration,
+    pub total: Duration,
     pub prompt_len: usize,
+}
+
+/// One event on the serve wire. Per sequence (`(id, sample)` pair) the
+/// stream is `Token* Done`, and the `token` fields concatenated in
+/// `index` order are exactly the final [`Response::tokens`] — the
+/// repo's bit-parity discipline extended to the wire:
+///
+/// * a matched stop token is never emitted as a `Token` (retirement
+///   pops it from `Response::tokens` too);
+/// * preemption never rolls back `generated` (victims are chosen
+///   *before* sampling), so a resumed sequence never re-emits;
+/// * cancel/deadline retirement keeps all generated tokens.
+#[derive(Clone, Debug)]
+pub enum ServerEvent {
+    /// One decoded token, emitted the step it was sampled.
+    Token {
+        id: RequestId,
+        /// Parallel-sample tag (see [`Request::sample`]).
+        sample: usize,
+        token: u32,
+        /// Position in the sequence's output, from 0, contiguous.
+        index: usize,
+    },
+    /// Terminal event for one sequence.
+    Done(Response),
 }
 
 /// Lifecycle of an admitted sequence inside the engine.
@@ -127,7 +380,7 @@ pub struct SequenceState {
     pub generated: Vec<u32>,
     /// Logits from the last step (None until the prompt is consumed).
     pub pending_logits: Option<Vec<f32>>,
-    pub first_token_at: Option<std::time::Instant>,
+    pub first_token_at: Option<Instant>,
     /// Set when the sequence's cache filled before its prompt was
     /// consumed — retired with [`FinishReason::CacheOverflow`].
     pub overflowed: bool,
@@ -162,7 +415,7 @@ impl SequenceState {
         request: Request,
         generated: Vec<u32>,
         cache: crate::model::KvCache,
-        first_token_at: Option<std::time::Instant>,
+        first_token_at: Option<Instant>,
     ) -> SequenceState {
         let prefill_len = request.prompt.len() + generated.len();
         SequenceState {
@@ -240,5 +493,71 @@ mod tests {
         let p = SamplingParams::default();
         assert_eq!(p.temperature, 0.0);
         assert!(p.stop_token.is_some());
+    }
+
+    #[test]
+    fn builder_chains_from_greedy() {
+        let p = SamplingParams::greedy(8).with_temperature(0.7, 42).with_n(3);
+        assert_eq!(p.max_new_tokens, 8);
+        assert_eq!(p.temperature, 0.7);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.n, 3);
+        assert!(p.stop_token.is_some(), "greedy keeps the default stop");
+        assert_eq!(p.with_stop(None).stop_token, None);
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(SamplingParams::greedy(8).validate().is_ok());
+        assert_eq!(
+            SamplingParams::greedy(8).with_n(0).validate(),
+            Err(SubmitError::ZeroSamples)
+        );
+        assert_eq!(
+            SamplingParams::greedy(0).validate(),
+            Err(SubmitError::ZeroBudget)
+        );
+        assert!(matches!(
+            SamplingParams::greedy(8)
+                .with_temperature(-1.0, 0)
+                .validate(),
+            Err(SubmitError::InvalidTemperature(_))
+        ));
+        assert!(matches!(
+            SamplingParams::greedy(8)
+                .with_temperature(f32::NAN, 0)
+                .validate(),
+            Err(SubmitError::InvalidTemperature(_))
+        ));
+    }
+
+    #[test]
+    fn ctl_cancel_and_status() {
+        let req = Request::new(7, vec![1], SamplingParams::default());
+        let h = req.handle(0);
+        assert_eq!(h.id(), 7);
+        assert_eq!(h.try_status(), RequestStatus::Queued);
+        assert!(!req.ctl.is_cancelled());
+        h.cancel();
+        assert!(req.ctl.is_cancelled());
+        req.ctl.mark_running();
+        assert_eq!(h.try_status(), RequestStatus::Running);
+        req.ctl.mark_finished();
+        assert_eq!(h.try_status(), RequestStatus::Finished);
+        // clones (forks, resumes) share the same control block
+        let fork = req.clone();
+        assert!(fork.ctl.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let req = Request::new(1, vec![1], SamplingParams::default());
+        let now = Instant::now();
+        assert!(!req.expired_at(now), "no deadline never expires");
+        let req = req.with_deadline(Duration::ZERO);
+        assert!(req.expired_at(now));
+        let req = Request::new(2, vec![1], SamplingParams::default())
+            .with_deadline(Duration::from_secs(3600));
+        assert!(!req.expired_at(Instant::now()));
     }
 }

@@ -70,6 +70,21 @@ impl Router {
         self.inflight[replica] = self.inflight[replica].saturating_sub(1);
     }
 
+    /// Undo a [`Router::route`] assignment that was never delivered —
+    /// the server's admission control rejected the request after
+    /// routing it. Distinct from [`Router::complete`], which retires
+    /// work that actually ran.
+    pub fn unroute(&mut self, replica: usize) {
+        self.inflight[replica] = self.inflight[replica].saturating_sub(1);
+    }
+
+    /// Record an assignment made outside [`Router::route`]: admission
+    /// spill-over lands a sessionless request on a replica with intake
+    /// room rather than the routed pick.
+    pub fn assign(&mut self, replica: usize) {
+        self.inflight[replica] += 1;
+    }
+
     pub fn load(&self, replica: usize) -> usize {
         self.inflight[replica]
     }
@@ -128,5 +143,20 @@ mod tests {
         let mut r = Router::new(1, RoutePolicy::RoundRobin);
         r.complete(0);
         assert_eq!(r.load(0), 0);
+    }
+
+    #[test]
+    fn unroute_and_assign_rebalance() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        let a = r.route(&req(1, 0));
+        assert_eq!(r.load(a), 1);
+        // admission rejected the routed pick and spilled to the other
+        r.unroute(a);
+        let other = 1 - a;
+        r.assign(other);
+        assert_eq!(r.load(a), 0);
+        assert_eq!(r.load(other), 1);
+        // the next sessionless request prefers the now-idle replica
+        assert_eq!(r.route(&req(2, 0)), a);
     }
 }

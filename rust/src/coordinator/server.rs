@@ -1,16 +1,34 @@
-//! Threaded server front-end: intake channel → router → per-replica
-//! worker threads → response channel.
+//! Threaded serve front-end: admission-controlled intake → router →
+//! per-replica worker threads → event channel.
 //!
 //! tokio is unavailable offline (DESIGN.md §2), so concurrency is
 //! std::thread + mpsc: one worker thread per engine replica runs the
-//! continuous-batching loop; the handle submits requests and collects
-//! responses without blocking workers.
+//! continuous-batching loop and forwards every [`ServerEvent`] it
+//! emits; the handle submits requests and consumes the event stream
+//! without blocking workers.
+//!
+//! The API surface (DESIGN.md §Serve-Frontend):
+//!
+//! * [`ServerBuilder`] — the one constructor; [`Server::start`]
+//!   survives as a shim.
+//! * [`Server::submit`] → [`SubmitOutcome`]: `Accepted(RequestHandle)`
+//!   or a typed rejection (queue full / invalid params / stopped) —
+//!   admission is a bounded per-replica intake window, so callers see
+//!   backpressure instead of unbounded channel growth.
+//! * [`Server::next_event`] / [`Server::poll_events`] — the streaming
+//!   consumption path; [`Server::poll`] / [`Server::wait_for`] remain
+//!   as adapters that keep only the `Done` responses.
+//! * [`Server::drain`] — stop intake, finish in-flight work, return
+//!   every leftover event + final metrics; [`Server::shutdown`] stays
+//!   abortive (workers exit at the next step boundary).
 
 use super::engine::ServeEngine;
-use super::metrics::Metrics;
-use super::request::{Request, RequestId, Response, SamplingParams};
+use super::metrics::{Metrics, ServerStats};
+use super::request::{
+    Request, RequestHandle, Response, SamplingParams, ServerEvent, SubmitError,
+};
 use super::router::{RoutePolicy, Router};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,140 +36,397 @@ use std::time::Duration;
 
 enum WorkerMsg {
     Submit(Request),
+    /// Stop intake, keep stepping until the engine is empty, then exit.
+    Drain,
+    /// Exit at the next loop iteration, abandoning queued work.
     Shutdown,
+}
+
+/// Default per-replica intake window: effectively "no backpressure"
+/// for test workloads, while still bounding a runaway producer.
+pub const DEFAULT_INTAKE_LIMIT: usize = 1024;
+
+/// Accept/reject verdict from [`Server::submit`].
+#[must_use]
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    Accepted(RequestHandle),
+    Rejected(SubmitError),
+}
+
+impl SubmitOutcome {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, SubmitOutcome::Accepted(_))
+    }
+
+    /// The accepted handle, or `None` on rejection.
+    pub fn handle(self) -> Option<RequestHandle> {
+        match self {
+            SubmitOutcome::Accepted(h) => Some(h),
+            SubmitOutcome::Rejected(_) => None,
+        }
+    }
+
+    /// The rejection reason, if any.
+    pub fn err(&self) -> Option<SubmitError> {
+        match self {
+            SubmitOutcome::Accepted(_) => None,
+            SubmitOutcome::Rejected(e) => Some(*e),
+        }
+    }
+
+    /// The accepted request id; panics on a rejection. For call sites
+    /// (mostly tests) that know admission cannot fail.
+    pub fn id(&self) -> super::request::RequestId {
+        match self {
+            SubmitOutcome::Accepted(h) => h.id(),
+            SubmitOutcome::Rejected(e) => panic!("submit rejected: {e}"),
+        }
+    }
+}
+
+/// Everything a graceful [`Server::drain`] hands back: the events that
+/// had not been consumed yet (in per-replica emission order) and each
+/// replica's final [`Metrics`] snapshot, sorted by replica index.
+#[derive(Debug)]
+pub struct DrainReport {
+    pub events: Vec<ServerEvent>,
+    pub metrics: Vec<Metrics>,
+}
+
+impl DrainReport {
+    /// Just the terminal responses among the leftover events.
+    pub fn responses(&self) -> Vec<Response> {
+        self.events
+            .iter()
+            .filter_map(|ev| match ev {
+                ServerEvent::Done(r) => Some(r.clone()),
+                ServerEvent::Token { .. } => None,
+            })
+            .collect()
+    }
+}
+
+/// Builder for a running multi-replica [`Server`] — replaces the old
+/// `start` / `start_replicas` / `start_replicas_with` constructor trio.
+#[derive(Clone, Debug)]
+pub struct ServerBuilder {
+    replicas: usize,
+    route: RoutePolicy,
+    batch: super::batcher::BatchPolicy,
+    threads: usize,
+    kv: super::kv_pool::PagedKvOpts,
+    intake_limit: usize,
+    default_deadline: Option<Duration>,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder {
+            replicas: 1,
+            route: RoutePolicy::LeastLoaded,
+            batch: super::batcher::BatchPolicy::default(),
+            threads: crate::threads::default_threads(),
+            kv: super::kv_pool::PagedKvOpts::default(),
+            intake_limit: DEFAULT_INTAKE_LIMIT,
+            default_deadline: None,
+        }
+    }
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder::default()
+    }
+
+    /// Engine replicas (≥ 1), each on its own worker thread.
+    pub fn replicas(mut self, n: usize) -> ServerBuilder {
+        self.replicas = n.max(1);
+        self
+    }
+
+    pub fn route(mut self, policy: RoutePolicy) -> ServerBuilder {
+        self.route = policy;
+        self
+    }
+
+    pub fn batch(mut self, policy: super::batcher::BatchPolicy) -> ServerBuilder {
+        self.batch = policy;
+        self
+    }
+
+    /// Kernel-pool lanes **per replica** (so replicas never contend on
+    /// a shared pool's dispatch lock); `1` forces the exact sequential
+    /// kernel path — the debugging escape hatch `--threads 1` plumbs
+    /// through here.
+    pub fn threads(mut self, threads: usize) -> ServerBuilder {
+        self.threads = threads;
+        self
+    }
+
+    /// Paged-KV options (`--page-size` / `--prefix-cache` /
+    /// `--kv-pages`). Each replica gets its own page store and radix
+    /// prefix tree — prefix reuse is per-replica, which is why
+    /// session-affinity routing pairs well with the cache.
+    pub fn paged_kv(mut self, kv: super::kv_pool::PagedKvOpts) -> ServerBuilder {
+        self.kv = kv;
+        self
+    }
+
+    /// Bound on accepted-but-unfinished requests per replica; beyond
+    /// it [`Server::submit`] rejects with [`SubmitError::QueueFull`].
+    pub fn intake_limit(mut self, n: usize) -> ServerBuilder {
+        self.intake_limit = n.max(1);
+        self
+    }
+
+    /// Deadline applied to every request submitted without its own
+    /// (`--deadline-ms`).
+    pub fn default_deadline(mut self, deadline: Duration) -> ServerBuilder {
+        self.default_deadline = Some(deadline);
+        self
+    }
+
+    /// Spawn `replicas` engines cloned from one model and start a
+    /// worker thread per replica.
+    pub fn start(self, model: crate::model::Transformer) -> Server {
+        let engines = (0..self.replicas)
+            .map(|_| ServeEngine::with_opts(model.clone(), self.batch, self.threads, self.kv))
+            .collect();
+        self.start_engines(engines)
+    }
+
+    /// Start over caller-built engines (heterogeneous replicas, tests).
+    /// `replicas`/`batch`/`threads`/`paged_kv` settings are ignored —
+    /// the engines carry their own.
+    pub fn start_engines(self, engines: Vec<ServeEngine>) -> Server {
+        assert!(!engines.is_empty(), "need at least one engine replica");
+        let n = engines.len();
+        let (event_tx, event_rx) = channel::<(usize, ServerEvent)>();
+        let (metrics_tx, metrics_rx) = channel::<(usize, Metrics)>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        let mut intake = Vec::with_capacity(n);
+        for (replica, mut engine) in engines.into_iter().enumerate() {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let event_tx = event_tx.clone();
+            let metrics_tx = metrics_tx.clone();
+            let stop = shutdown.clone();
+            let gauge = Arc::new(AtomicUsize::new(0));
+            intake.push(gauge.clone());
+            handles.push(std::thread::spawn(move || {
+                engine.set_intake_depth(gauge);
+                worker_loop(replica, &mut engine, rx, event_tx, metrics_tx, stop);
+            }));
+            workers.push(tx);
+        }
+        Server {
+            router: Router::new(n, self.route),
+            workers,
+            events: event_rx,
+            metrics_rx,
+            handles,
+            next_id: AtomicU64::new(1),
+            shutdown,
+            intake,
+            intake_limit: self.intake_limit,
+            default_deadline: self.default_deadline,
+            stats: ServerStats::default(),
+        }
+    }
 }
 
 /// A running multi-replica server.
 pub struct Server {
     router: Router,
     workers: Vec<Sender<WorkerMsg>>,
-    responses: Receiver<(usize, Response)>,
+    events: Receiver<(usize, ServerEvent)>,
     /// Final per-replica metrics snapshots, sent as workers exit.
     metrics_rx: Receiver<(usize, Metrics)>,
     handles: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     shutdown: Arc<AtomicBool>,
+    /// Per-replica accepted-but-unfinished gauges, decremented by the
+    /// engines as requests retire (see `ServeEngine::set_intake_depth`).
+    intake: Vec<Arc<AtomicUsize>>,
+    intake_limit: usize,
+    default_deadline: Option<Duration>,
+    /// Admission counters for the serve-metrics artifact.
+    pub stats: ServerStats,
 }
 
 impl Server {
-    /// Spawn one worker thread per engine replica.
+    /// Pre-builder shim, kept so old call sites read unchanged.
+    /// **Deprecated in favour of [`ServerBuilder`]**:
+    /// `ServerBuilder::new().route(policy).start_engines(engines)`.
     pub fn start(engines: Vec<ServeEngine>, policy: RoutePolicy) -> Server {
-        assert!(!engines.is_empty());
-        let n = engines.len();
-        let (resp_tx, resp_rx) = channel::<(usize, Response)>();
-        let (metrics_tx, metrics_rx) = channel::<(usize, Metrics)>();
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let mut workers = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-        for (replica, mut engine) in engines.into_iter().enumerate() {
-            let (tx, rx) = channel::<WorkerMsg>();
-            let resp_tx = resp_tx.clone();
-            let metrics_tx = metrics_tx.clone();
-            let stop = shutdown.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(replica, &mut engine, rx, resp_tx, metrics_tx, stop);
-            }));
-            workers.push(tx);
+        ServerBuilder::new().route(policy).start_engines(engines)
+    }
+
+    /// Submit a prompt under the server's default deadline (if any).
+    pub fn submit(
+        &mut self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        session: u64,
+    ) -> SubmitOutcome {
+        self.submit_with_deadline(prompt, params, session, self.default_deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (`None` =
+    /// unbounded, overriding the server default).
+    ///
+    /// Admission: parameters are validated first; then the routed
+    /// replica must have intake room. Sessionless requests may spill
+    /// to any replica with room before rejecting; session-pinned
+    /// requests never spill (their KV/prefix locality is the point of
+    /// the pin). A worker whose thread has exited surfaces as
+    /// [`SubmitError::ServerStopped`] — previously that request was
+    /// dropped silently while returning a live-looking id.
+    pub fn submit_with_deadline(
+        &mut self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        session: u64,
+        deadline: Option<Duration>,
+    ) -> SubmitOutcome {
+        self.stats.submitted += 1;
+        if let Err(e) = params.validate() {
+            self.stats.invalid_params += 1;
+            return SubmitOutcome::Rejected(e);
         }
-        Server {
-            router: Router::new(n, policy),
-            workers,
-            responses: resp_rx,
-            metrics_rx,
-            handles,
-            next_id: AtomicU64::new(1),
-            shutdown,
-        }
-    }
-
-    /// Spawn `replicas` engines cloned from one model, each replica
-    /// worker with its **own** `threads`-lane kernel pool (so replicas
-    /// never contend on a shared pool's dispatch lock). `threads == 1`
-    /// forces every replica onto the exact sequential kernel path —
-    /// the debugging escape hatch `--threads 1` plumbs through here.
-    pub fn start_replicas(
-        model: crate::model::Transformer,
-        replicas: usize,
-        policy: super::batcher::BatchPolicy,
-        route: RoutePolicy,
-        threads: usize,
-    ) -> Server {
-        Server::start_replicas_with(
-            model,
-            replicas,
-            policy,
-            route,
-            threads,
-            super::kv_pool::PagedKvOpts::default(),
-        )
-    }
-
-    /// [`Server::start_replicas`] with explicit paged-KV options
-    /// (`--page-size` / `--prefix-cache` / `--kv-pages`). Each replica
-    /// gets its own page store and radix prefix tree — prefix reuse is
-    /// per-replica, which is why session-affinity routing pairs well
-    /// with the cache.
-    pub fn start_replicas_with(
-        model: crate::model::Transformer,
-        replicas: usize,
-        policy: super::batcher::BatchPolicy,
-        route: RoutePolicy,
-        threads: usize,
-        kv: super::kv_pool::PagedKvOpts,
-    ) -> Server {
-        assert!(replicas >= 1, "need at least one replica");
-        let engines = (0..replicas)
-            .map(|_| ServeEngine::with_opts(model.clone(), policy, threads, kv))
-            .collect();
-        Server::start(engines, route)
-    }
-
-    /// Submit a prompt; returns the assigned request id.
-    pub fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams, session: u64) -> RequestId {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = Request::new(id, prompt, params);
         req.session = session;
-        let replica = self.router.route(&req);
-        // worker thread gone ⇒ server shut down; drop silently
-        let _ = self.workers[replica].send(WorkerMsg::Submit(req));
-        id
+        req.deadline = deadline;
+        let primary = self.router.route(&req);
+        let n = self.workers.len();
+        let mut replica = None;
+        for k in 0..n {
+            let candidate = (primary + k) % n;
+            if k > 0 && session != 0 {
+                break; // pinned sessions don't spill
+            }
+            if try_acquire(&self.intake[candidate], self.intake_limit) {
+                replica = Some(candidate);
+                break;
+            }
+        }
+        let Some(replica) = replica else {
+            self.router.unroute(primary);
+            self.stats.queue_full += 1;
+            return SubmitOutcome::Rejected(SubmitError::QueueFull { replica: primary });
+        };
+        if replica != primary {
+            self.router.unroute(primary);
+            self.router.assign(replica);
+        }
+        let handle = req.handle(replica);
+        if self.workers[replica].send(WorkerMsg::Submit(req)).is_err() {
+            release(&self.intake[replica]);
+            self.router.unroute(replica);
+            self.stats.server_stopped += 1;
+            return SubmitOutcome::Rejected(SubmitError::ServerStopped);
+        }
+        self.stats.accepted += 1;
+        SubmitOutcome::Accepted(handle)
     }
 
-    /// Non-blocking poll for finished responses.
-    pub fn poll(&mut self) -> Vec<Response> {
-        let mut out = Vec::new();
-        loop {
-            match self.responses.try_recv() {
-                Ok((replica, resp)) => {
-                    self.router.complete(replica);
-                    out.push(resp);
-                }
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+    /// Non-blocking: next queued event, if any.
+    pub fn try_next_event(&mut self) -> Option<ServerEvent> {
+        match self.events.try_recv() {
+            Ok((replica, ev)) => {
+                self.note_event(replica, &ev);
+                Some(ev)
             }
+            Err(_) => None,
+        }
+    }
+
+    /// Block up to `timeout` for the next event.
+    pub fn next_event(&mut self, timeout: Duration) -> Option<ServerEvent> {
+        match self.events.recv_timeout(timeout) {
+            Ok((replica, ev)) => {
+                self.note_event(replica, &ev);
+                Some(ev)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Non-blocking: drain every event currently queued.
+    pub fn poll_events(&mut self) -> Vec<ServerEvent> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.try_next_event() {
+            out.push(ev);
         }
         out
     }
 
-    /// Block until `n` responses arrive or `timeout` elapses.
+    fn note_event(&mut self, replica: usize, ev: &ServerEvent) {
+        if let ServerEvent::Done(_) = ev {
+            self.router.complete(replica);
+        }
+    }
+
+    /// Non-blocking poll for finished responses — the pre-streaming
+    /// API, now an adapter that keeps only `Done` events. Token events
+    /// drained here are dropped; streaming consumers use
+    /// [`Server::poll_events`] / [`Server::next_event`] instead.
+    pub fn poll(&mut self) -> Vec<Response> {
+        self.poll_events()
+            .into_iter()
+            .filter_map(|ev| match ev {
+                ServerEvent::Done(r) => Some(r),
+                ServerEvent::Token { .. } => None,
+            })
+            .collect()
+    }
+
+    /// Block until `n` responses arrive or `timeout` elapses (adapter
+    /// over the event stream, like [`Server::poll`]).
     pub fn wait_for(&mut self, n: usize, timeout: Duration) -> Vec<Response> {
         let deadline = std::time::Instant::now() + timeout;
         let mut out = Vec::new();
         while out.len() < n && std::time::Instant::now() < deadline {
-            match self.responses.recv_timeout(Duration::from_millis(10)) {
-                Ok((replica, resp)) => {
-                    self.router.complete(replica);
-                    out.push(resp);
-                }
-                Err(_) => {}
+            if let Some(ServerEvent::Done(r)) = self.next_event(Duration::from_millis(10)) {
+                out.push(r);
             }
         }
         out
     }
 
-    /// Graceful shutdown: drain workers, join threads, and return each
-    /// replica's final [`Metrics`] snapshot (sorted by replica index)
-    /// so multi-replica serves can report the same stats as a single
-    /// engine.
+    /// Graceful drain: stop intake, let every replica finish its
+    /// in-flight and queued work, then hand back all unconsumed events
+    /// plus final per-replica metrics. The event channel is unbounded,
+    /// so joining the workers before collecting cannot deadlock —
+    /// everything they emitted is still buffered.
+    pub fn drain(mut self) -> DrainReport {
+        for w in &self.workers {
+            let _ = w.send(WorkerMsg::Drain);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let mut events = Vec::new();
+        while let Ok((replica, ev)) = self.events.try_recv() {
+            self.note_event(replica, &ev);
+            events.push(ev);
+        }
+        let mut metrics: Vec<(usize, Metrics)> = self.metrics_rx.try_iter().collect();
+        metrics.sort_by_key(|(replica, _)| *replica);
+        DrainReport {
+            events,
+            metrics: metrics.into_iter().map(|(_, m)| m).collect(),
+        }
+    }
+
+    /// Abortive shutdown: workers exit at their next loop iteration,
+    /// abandoning queued work (contrast [`Server::drain`]). Returns
+    /// each replica's final [`Metrics`] snapshot (sorted by replica
+    /// index) so multi-replica serves can report the same stats as a
+    /// single engine.
     pub fn shutdown(mut self) -> Vec<Metrics> {
         self.shutdown.store(true, Ordering::SeqCst);
         for w in &self.workers {
@@ -164,21 +439,52 @@ impl Server {
         out.sort_by_key(|(replica, _)| *replica);
         out.into_iter().map(|(_, m)| m).collect()
     }
+
+    /// Kill the worker threads while keeping the front-end alive, to
+    /// exercise the [`SubmitError::ServerStopped`] path.
+    #[cfg(test)]
+    fn abandon_workers(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for w in &self.workers {
+            let _ = w.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Increment `gauge` unless it is already at `limit`.
+fn try_acquire(gauge: &AtomicUsize, limit: usize) -> bool {
+    gauge
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            (d < limit).then_some(d + 1)
+        })
+        .is_ok()
+}
+
+/// Give back an intake slot acquired by [`try_acquire`] (send failed —
+/// the request never reached the engine).
+fn release(gauge: &AtomicUsize) {
+    let _ = gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
 }
 
 fn worker_loop(
     replica: usize,
     engine: &mut ServeEngine,
     rx: Receiver<WorkerMsg>,
-    resp_tx: Sender<(usize, Response)>,
+    event_tx: Sender<(usize, ServerEvent)>,
     metrics_tx: Sender<(usize, Metrics)>,
     stop: Arc<AtomicBool>,
 ) {
+    let mut draining = false;
+    let mut events: Vec<ServerEvent> = Vec::new();
     'serve: loop {
         // drain intake without blocking while work is pending
         loop {
             match rx.try_recv() {
                 Ok(WorkerMsg::Submit(req)) => engine.submit(req),
+                Ok(WorkerMsg::Drain) => draining = true,
                 Ok(WorkerMsg::Shutdown) => break 'serve,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => break 'serve,
@@ -188,20 +494,28 @@ fn worker_loop(
             break 'serve;
         }
         if engine.pending() == 0 {
+            if draining {
+                break 'serve; // drained dry: exit after in-flight work
+            }
             // idle: block briefly for new work
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(WorkerMsg::Submit(req)) => engine.submit(req),
+                Ok(WorkerMsg::Drain) => {
+                    draining = true;
+                    continue;
+                }
                 Ok(WorkerMsg::Shutdown) => break 'serve,
                 Err(_) => continue,
             }
         }
-        for resp in engine.step() {
-            if resp_tx.send((replica, resp)).is_err() {
+        engine.step_events(&mut events);
+        for ev in events.drain(..) {
+            if event_tx.send((replica, ev)).is_err() {
                 break 'serve;
             }
         }
     }
-    // final snapshot for Server::shutdown's aggregate report
+    // final snapshot for the drain/shutdown aggregate report
     let _ = metrics_tx.send((replica, engine.metrics.clone()));
 }
 
@@ -209,29 +523,30 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::request::{FinishReason, RequestStatus};
     use crate::model::{ModelConfig, Transformer};
     use crate::rng::Rng;
 
-    fn mk_engine(seed: u64) -> ServeEngine {
+    fn mk_model(seed: u64) -> Transformer {
         let mut cfg = ModelConfig::family("tiny").unwrap();
         cfg.vocab_size = 32;
         cfg.max_seq = 32;
         let mut rng = Rng::new(seed);
-        ServeEngine::new(Transformer::random(cfg, &mut rng), BatchPolicy::default())
+        Transformer::random(cfg, &mut rng)
+    }
+
+    fn mk_engine(seed: u64) -> ServeEngine {
+        ServeEngine::new(mk_model(seed), BatchPolicy::default())
     }
 
     fn params(n: usize) -> SamplingParams {
-        SamplingParams {
-            max_new_tokens: n,
-            stop_token: None,
-            ..Default::default()
-        }
+        SamplingParams::greedy(n).with_stop(None)
     }
 
     #[test]
     fn single_replica_end_to_end() {
         let mut server = Server::start(vec![mk_engine(1)], RoutePolicy::LeastLoaded);
-        let id = server.submit(vec![1, 2, 3], params(4), 0);
+        let id = server.submit(vec![1, 2, 3], params(4), 0).id();
         let out = server.wait_for(1, Duration::from_secs(10));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].id, id);
@@ -245,7 +560,7 @@ mod tests {
         let mut server = Server::start(engines, RoutePolicy::LeastLoaded);
         let mut ids = Vec::new();
         for i in 0..8 {
-            ids.push(server.submit(vec![1 + i % 5, 2], params(3), 0));
+            ids.push(server.submit(vec![1 + i % 5, 2], params(3), 0).id());
         }
         let out = server.wait_for(8, Duration::from_secs(20));
         assert_eq!(out.len(), 8);
@@ -260,21 +575,17 @@ mod tests {
     fn threaded_replicas_match_sequential_replicas() {
         // replica workers with 2-lane kernel pools must serve the same
         // tokens as sequential replicas (determinism across --threads)
-        let mut cfg = ModelConfig::family("tiny").unwrap();
-        cfg.vocab_size = 32;
-        cfg.max_seq = 32;
-        let mut rng = Rng::new(5);
-        let model = Transformer::random(cfg, &mut rng);
+        let model = mk_model(5);
         let serve = |threads: usize| {
-            let mut server = Server::start_replicas(
-                model.clone(),
-                2,
-                BatchPolicy::default(),
-                RoutePolicy::RoundRobin,
-                threads,
-            );
+            let mut server = ServerBuilder::new()
+                .replicas(2)
+                .route(RoutePolicy::RoundRobin)
+                .threads(threads)
+                .start(model.clone());
             for i in 0..6u64 {
-                server.submit(vec![1 + (i % 5) as u32, 2, 3], params(4), 0);
+                let _ = server
+                    .submit(vec![1 + (i % 5) as u32, 2, 3], params(4), 0)
+                    .id();
             }
             let mut out = server.wait_for(6, Duration::from_secs(30));
             let metrics = server.shutdown();
@@ -298,25 +609,18 @@ mod tests {
         // pages + prefix adoption must serve token-identical responses
         // to the legacy contiguous layout
         use crate::coordinator::kv_pool::PagedKvOpts;
-        let mut cfg = ModelConfig::family("tiny").unwrap();
-        cfg.vocab_size = 32;
-        cfg.max_seq = 32;
-        let mut rng = Rng::new(9);
-        let model = Transformer::random(cfg, &mut rng);
+        let model = mk_model(9);
         let serve = |kv: PagedKvOpts| {
-            let mut server = Server::start_replicas_with(
-                model.clone(),
-                1,
-                BatchPolicy::default(),
-                RoutePolicy::RoundRobin,
-                1,
-                kv,
-            );
+            let mut server = ServerBuilder::new()
+                .route(RoutePolicy::RoundRobin)
+                .threads(1)
+                .paged_kv(kv)
+                .start(model.clone());
             let shared: Vec<u32> = (0..12).map(|j| 1 + (j % 7)).collect();
             for i in 0..6u64 {
                 let mut prompt = shared.clone();
                 prompt.push(10 + (i % 4) as u32); // distinct suffixes
-                server.submit(prompt, params(4), 0);
+                let _ = server.submit(prompt, params(4), 0).id();
             }
             let mut out = server.wait_for(6, Duration::from_secs(30));
             server.shutdown();
@@ -352,6 +656,139 @@ mod tests {
         let out = server.poll();
         assert!(out.is_empty());
         assert!(t0.elapsed() < Duration::from_millis(100));
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_after_worker_death_surfaces_server_stopped() {
+        let mut server = Server::start(vec![mk_engine(4)], RoutePolicy::RoundRobin);
+        server.abandon_workers();
+        let out = server.submit(vec![1, 2], params(3), 0);
+        assert_eq!(out.err(), Some(SubmitError::ServerStopped));
+        assert_eq!(server.stats.server_stopped, 1);
+        assert_eq!(server.stats.accepted, 0);
+    }
+
+    #[test]
+    fn invalid_params_rejected_at_submit() {
+        let mut server = Server::start(vec![mk_engine(6)], RoutePolicy::RoundRobin);
+        let out = server.submit(vec![1], SamplingParams::greedy(0), 0);
+        assert_eq!(out.err(), Some(SubmitError::ZeroBudget));
+        let out = server.submit(vec![1], params(4).with_n(0), 0);
+        assert_eq!(out.err(), Some(SubmitError::ZeroSamples));
+        assert_eq!(server.stats.invalid_params, 2);
+        assert_eq!(server.stats.submitted, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn drain_completes_in_flight_work() {
+        let mut server = ServerBuilder::new()
+            .replicas(2)
+            .route(RoutePolicy::RoundRobin)
+            .threads(1)
+            .start(mk_model(7));
+        for i in 0..6u64 {
+            let _ = server.submit(vec![1 + (i % 5) as u32, 2], params(3), 0).id();
+        }
+        // drain without waiting: every response must still arrive
+        let report = server.drain();
+        let responses = report.responses();
+        assert_eq!(responses.len(), 6, "drain finishes queued + running work");
+        assert!(responses.iter().all(|r| r.finish == FinishReason::Length));
+        assert_eq!(report.metrics.len(), 2);
+        let agg = Metrics::aggregate(&report.metrics);
+        assert_eq!(agg.requests_finished, 6);
+        assert_eq!(agg.submitted, 6);
+    }
+
+    #[test]
+    fn queue_full_rejects_then_recovers() {
+        let mut server = ServerBuilder::new()
+            .threads(1)
+            .intake_limit(2)
+            .start(mk_model(8));
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        for i in 0..6u64 {
+            match server.submit(vec![1 + (i % 5) as u32, 2], params(4), 0) {
+                SubmitOutcome::Accepted(_) => accepted += 1,
+                SubmitOutcome::Rejected(SubmitError::QueueFull { .. }) => rejected += 1,
+                SubmitOutcome::Rejected(e) => panic!("unexpected rejection: {e}"),
+            }
+        }
+        assert!(accepted >= 2, "the intake window admits up to its limit");
+        assert!(rejected >= 1, "submitting 6 at once must overflow a window of 2");
+        let out = server.wait_for(accepted, Duration::from_secs(30));
+        assert_eq!(out.len(), accepted, "accepted requests all complete");
+        // the window freed up: a new submit is accepted again
+        let retry = server.submit(vec![3, 4], params(2), 0);
+        assert!(retry.is_accepted(), "intake recovers after completions");
+        let out = server.wait_for(1, Duration::from_secs(10));
+        assert_eq!(out.len(), 1);
+        let stats = server.stats.clone();
+        let report = server.drain();
+        assert_eq!(stats.submitted, 7);
+        assert_eq!(stats.queue_full, rejected as u64);
+        let agg = Metrics::aggregate(&report.metrics);
+        // request-granular identity over the whole run
+        assert_eq!(
+            agg.requests_finished + stats.queue_full,
+            stats.submitted,
+            "completed + rejected == submitted"
+        );
+    }
+
+    #[test]
+    fn cancel_via_handle_roundtrip() {
+        // a single-slot batcher keeps the target queued behind a
+        // blocker, so the cancel deterministically lands before the
+        // target can run to completion
+        let mut server = ServerBuilder::new()
+            .threads(1)
+            .batch(BatchPolicy::default().with_max_running(1))
+            .start(mk_model(10));
+        let blocker = server.submit(vec![9, 8], params(20), 0).id();
+        let handle = server
+            .submit(vec![1, 2, 3], params(20), 0)
+            .handle()
+            .expect("accepted");
+        handle.cancel();
+        let out = server.wait_for(2, Duration::from_secs(20));
+        assert_eq!(out.len(), 2);
+        for r in &out {
+            if r.id == blocker {
+                assert_eq!(r.finish, FinishReason::Length, "blocker unaffected");
+            } else {
+                assert_eq!(r.id, handle.id());
+                assert_eq!(r.finish, FinishReason::Cancelled);
+            }
+        }
+        assert_eq!(handle.try_status(), RequestStatus::Finished);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.iter().map(|m| m.cancelled).sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn streamed_tokens_match_final_response() {
+        let mut server = ServerBuilder::new().threads(1).start(mk_model(12));
+        let id = server.submit(vec![1, 2, 3], params(5), 0).id();
+        let mut stream = Vec::new();
+        let mut finished = None;
+        let t0 = std::time::Instant::now();
+        while finished.is_none() && t0.elapsed() < Duration::from_secs(20) {
+            match server.next_event(Duration::from_millis(10)) {
+                Some(ServerEvent::Token { id: eid, token, index, .. }) => {
+                    assert_eq!(eid, id);
+                    assert_eq!(index, stream.len(), "indexes contiguous from 0");
+                    stream.push(token);
+                }
+                Some(ServerEvent::Done(r)) => finished = Some(r),
+                None => {}
+            }
+        }
+        let resp = finished.expect("request finished");
+        assert_eq!(stream, resp.tokens, "stream == final tokens");
         server.shutdown();
     }
 }

@@ -17,7 +17,9 @@
 use ptqtp::bench;
 use ptqtp::cli::{usage, Args, OptSpec};
 use ptqtp::coordinator::kv_pool::DEFAULT_PAGE_SIZE;
-use ptqtp::coordinator::{PagedKvOpts, SamplingParams, ServeEngine};
+use ptqtp::coordinator::{
+    serve_metrics_json, PagedKvOpts, SamplingParams, ServerBuilder, SubmitOutcome,
+};
 use ptqtp::data::{CorpusDomain, CorpusGen, TaskSuite, Tokenizer};
 use ptqtp::eval;
 use ptqtp::model::{ModelConfig, Transformer};
@@ -111,6 +113,9 @@ fn help() -> String {
             OptSpec { name: "prefix-cache", help: "serve: radix prefix cache on|off (off = exact legacy layout: contiguous, nothing shared)", default: Some("on") },
             OptSpec { name: "kv-pages", help: "serve: per-replica KV page budget; exhaustion preempts + recomputes", default: Some("capacity×⌈max_seq/page⌉") },
             OptSpec { name: "prompts", help: "serve: prompt file (one per line, cycled to --requests; e.g. prompts_shared.txt)", default: None },
+            OptSpec { name: "intake-limit", help: "serve: max accepted-but-unfinished requests per replica; beyond it submit rejects (QueueFull)", default: Some("1024") },
+            OptSpec { name: "deadline-ms", help: "serve: per-request deadline in ms; queued or running requests past it finish DeadlineExceeded", default: None },
+            OptSpec { name: "metrics-json", help: "serve: write the serve-metrics artifact (admission counters + per-replica metrics + latency histograms) to PATH", default: Some("serve-metrics.json when bare") },
         ],
     )
 }
@@ -374,7 +379,8 @@ fn resolve_kv_opts(args: &Args, max_seq: usize) -> anyhow::Result<PagedKvOpts> {
 
 /// `serve --model X.ptw [--method M] [--requests N] [--data data/]
 /// [--threads T] [--replicas R] [--page-size N] [--prefix-cache on|off]
-/// [--kv-pages N] [--prompts FILE]`
+/// [--kv-pages N] [--prompts FILE] [--intake-limit N] [--deadline-ms MS]
+/// [--metrics-json [PATH]]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let lm = load_and_quantize(args)?;
     let (model, method) = (lm.model, lm.method);
@@ -434,54 +440,62 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     };
     let n_samples = args.usize_or("n", 1).max(1);
-    let params = SamplingParams {
-        max_new_tokens: 8,
-        n: n_samples,
-        ..Default::default()
-    };
-    if replicas > 1 {
-        // threaded front-end: each replica worker owns a threads-lane pool
-        let mut server = ptqtp::coordinator::Server::start_replicas_with(
-            model,
-            replicas,
-            Default::default(),
-            ptqtp::coordinator::router::RoutePolicy::LeastLoaded,
-            threads,
-            kv,
-        );
-        let t0 = std::time::Instant::now();
-        for prompt in &prompts {
-            server.submit(tok.encode(prompt), params, 0);
-        }
-        let responses =
-            server.wait_for(prompts.len() * n_samples, std::time::Duration::from_secs(600));
-        let wall = t0.elapsed();
-        let metrics = server.shutdown();
-        println!(
-            "served {} requests with method {method} ({replicas} replicas × {threads} threads, simd {simd_desc}, wall {wall:.2?})",
-            responses.len()
-        );
-        for (i, m) in metrics.iter().enumerate() {
-            println!("replica {i}:\n{}", m.render(wall));
-        }
-        return Ok(());
+    let params = SamplingParams::greedy(8).with_n(n_samples);
+    let deadline = args.duration_ms_opt("deadline-ms")?;
+    let intake_limit = args.usize_opt("intake-limit")?;
+    // `--metrics-json PATH` writes the artifact there; the bare flag
+    // uses the default path; absent writes nothing
+    let metrics_path: Option<String> = args
+        .get("metrics-json")
+        .map(str::to_string)
+        .or_else(|| args.flag("metrics-json").then(|| "serve-metrics.json".to_string()));
+
+    // event-driven front-end: one worker thread per replica, bounded
+    // intake, per-request deadlines — the single-replica path goes
+    // through the same server so admission metrics always exist
+    let mut builder = ServerBuilder::new()
+        .replicas(replicas)
+        .route(ptqtp::coordinator::router::RoutePolicy::LeastLoaded)
+        .threads(threads)
+        .paged_kv(kv);
+    if let Some(limit) = intake_limit {
+        builder = builder.intake_limit(limit);
     }
-    let mut engine = ServeEngine::with_opts(model, Default::default(), threads, kv);
+    if let Some(d) = deadline {
+        builder = builder.default_deadline(d);
+    }
+    let mut server = builder.start(model);
     let t0 = std::time::Instant::now();
-    for (i, prompt) in prompts.iter().enumerate() {
-        engine.submit(ptqtp::coordinator::Request::new(
-            i as u64,
-            tok.encode(prompt),
-            params,
-        ));
+    let mut rejected = 0usize;
+    for prompt in &prompts {
+        match server.submit(tok.encode(prompt), params, 0) {
+            SubmitOutcome::Accepted(_) => {}
+            SubmitOutcome::Rejected(e) => {
+                rejected += 1;
+                eprintln!("rejected: {e}");
+            }
+        }
     }
-    let responses = engine.run_to_completion();
+    // graceful drain is the completion barrier: stop intake, finish (or
+    // deadline-expire) everything in flight, join the workers
+    let stats = server.stats.clone();
+    let report = server.drain();
     let wall = t0.elapsed();
     println!(
-        "served {} requests with method {method} ({threads} threads, simd {simd_desc})",
-        responses.len()
+        "served {} requests with method {method} ({replicas} replicas × {threads} threads, simd {simd_desc}, wall {wall:.2?})",
+        report.responses().len()
     );
-    println!("{}", engine.metrics.render(wall));
+    if rejected > 0 {
+        println!("rejected {rejected} of {} submissions at admission", prompts.len());
+    }
+    for (i, m) in report.metrics.iter().enumerate() {
+        println!("replica {i}:\n{}", m.render(wall));
+    }
+    if let Some(path) = metrics_path {
+        let artifact = serve_metrics_json(&stats, &report.metrics, wall);
+        std::fs::write(&path, artifact.pretty())?;
+        println!("wrote serve metrics to {path}");
+    }
     Ok(())
 }
 

@@ -67,11 +67,7 @@ fn serve_quantized_model_end_to_end() {
         engine.submit(Request::new(
             i,
             tok.encode("Q:2+2=? A:"),
-            SamplingParams {
-                max_new_tokens: 4,
-                stop_token: None,
-                ..Default::default()
-            },
+            SamplingParams::greedy(4).with_stop(None),
         ));
     }
     let out = engine.run_to_completion();
@@ -177,13 +173,9 @@ fn fused_batch_matches_sequential_property() {
                 e.submit(Request::new(
                     i as u64,
                     prompt.clone(),
-                    SamplingParams {
-                        temperature: *temperature,
-                        max_new_tokens: *max_new,
-                        stop_token: None,
-                        seed: *seed,
-                        n: 1,
-                    },
+                    SamplingParams::greedy(*max_new)
+                        .with_stop(None)
+                        .with_temperature(*temperature, *seed),
                 ));
             }
             let mut out = e.run_to_completion();
@@ -241,11 +233,7 @@ fn threaded_pipeline_matches_sequential_end_to_end() {
                 e.submit(Request::new(
                     i,
                     tok.encode("Q:2+2=? A:"),
-                    SamplingParams {
-                        max_new_tokens: 5,
-                        stop_token: None,
-                        ..Default::default()
-                    },
+                    SamplingParams::greedy(5).with_stop(None),
                 ));
             }
             let mut out = e.run_to_completion();
@@ -397,14 +385,9 @@ fn engine_simd_on_off_token_for_token() {
         let mut e = ServeEngine::with_threads(model.clone(), Default::default(), threads);
         e.set_simd(simd_on);
         for i in 0..5u64 {
-            let mut params = SamplingParams {
-                max_new_tokens: 5,
-                stop_token: None,
-                ..Default::default()
-            };
+            let mut params = SamplingParams::greedy(5).with_stop(None);
             if i % 2 == 1 {
-                params.temperature = 0.7;
-                params.seed = 21 + i;
+                params = params.with_temperature(0.7, 21 + i);
             }
             let prompt: Vec<u32> = (0..=(i % 3) + 1).map(|j| (j as u32 * 5 + i as u32) % 32).collect();
             e.submit(Request::new(i, prompt, params));
@@ -522,14 +505,9 @@ fn engine_attention_simd_long_context_token_for_token() {
             let prompt: Vec<u32> = (0..200 + i as u32 * 23)
                 .map(|j| (j * 7 + 3 + i as u32) % 32)
                 .collect();
-            let mut params = SamplingParams {
-                max_new_tokens: 6,
-                stop_token: None,
-                ..Default::default()
-            };
+            let mut params = SamplingParams::greedy(6).with_stop(None);
             if i == 1 {
-                params.temperature = 0.6;
-                params.seed = 91;
+                params = params.with_temperature(0.6, 91);
             }
             e.submit(Request::new(i, prompt, params));
         }
@@ -639,7 +617,7 @@ fn packed_checkpoint_roundtrip_property() {
 fn quantize_once_serve_many_bit_identical() {
     use ptqtp::coordinator::batcher::BatchPolicy;
     use ptqtp::coordinator::router::RoutePolicy;
-    use ptqtp::coordinator::Server;
+    use ptqtp::coordinator::ServerBuilder;
 
     let mut cfg = ModelConfig::family("tiny").unwrap();
     cfg.vocab_size = 32;
@@ -672,12 +650,10 @@ fn quantize_once_serve_many_bit_identical() {
             (prompt, temperature, 31 + i)
         })
         .collect();
-    let params = |temperature: f32, seed: u64| SamplingParams {
-        max_new_tokens: 5,
-        temperature,
-        seed,
-        stop_token: None,
-        n: 1,
+    let params = |temperature: f32, seed: u64| {
+        SamplingParams::greedy(5)
+            .with_stop(None)
+            .with_temperature(temperature, seed)
     };
 
     // threads > 1 single engine
@@ -701,16 +677,15 @@ fn quantize_once_serve_many_bit_identical() {
     // replicas > 1 server front-end (each replica clones the ONE
     // loaded model — no per-replica quantization)
     let server_tokens = |m: &Transformer| {
-        let mut server = Server::start_replicas(
-            m.clone(),
-            2,
-            BatchPolicy::default(),
-            RoutePolicy::RoundRobin,
-            2,
-        );
+        let mut server = ServerBuilder::new()
+            .replicas(2)
+            .batch(BatchPolicy::default())
+            .route(RoutePolicy::RoundRobin)
+            .threads(2)
+            .start(m.clone());
         let mut ids = Vec::new();
         for (prompt, temp, seed) in reqs.iter() {
-            ids.push(server.submit(prompt.clone(), params(*temp, *seed), 0));
+            ids.push(server.submit(prompt.clone(), params(*temp, *seed), 0).id());
         }
         let mut out = server.wait_for(ids.len(), std::time::Duration::from_secs(60));
         server.shutdown();
@@ -847,13 +822,9 @@ fn paged_prefix_serving_matches_contiguous_property() {
                     e.submit(Request::new(
                         (wave * 100 + i) as u64,
                         prompt.clone(),
-                        SamplingParams {
-                            temperature: *temperature,
-                            max_new_tokens: *max_new,
-                            stop_token: None,
-                            seed: *seed,
-                            n: 1,
-                        },
+                        SamplingParams::greedy(*max_new)
+                            .with_stop(None)
+                            .with_temperature(*temperature, *seed),
                     ));
                 }
                 let mut out = e.run_to_completion();
@@ -920,14 +891,9 @@ fn preempted_requests_complete_identically() {
     let submit = |e: &mut ServeEngine| {
         for i in 0..6u64 {
             let prompt: Vec<u32> = (0..12).map(|j| 1 + ((3 * i as u32 + j) % 30)).collect();
-            let mut params = SamplingParams {
-                max_new_tokens: 6,
-                stop_token: None,
-                ..Default::default()
-            };
+            let mut params = SamplingParams::greedy(6).with_stop(None);
             if i % 2 == 1 {
-                params.temperature = 0.8;
-                params.seed = 17 + i;
+                params = params.with_temperature(0.8, 17 + i);
             }
             e.submit(Request::new(i, prompt, params));
         }

@@ -1,0 +1,201 @@
+//! Streaming front-end integration tests: the per-token event stream
+//! must be a faithful prefix view of the final [`Response`] under every
+//! execution configuration — threads × SIMD × KV layout — and through
+//! the threaded [`Server`] front-end, including `n > 1` fork streams
+//! and the exported serve-metrics accounting identity.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use ptqtp::coordinator::batcher::BatchPolicy;
+use ptqtp::coordinator::router::RoutePolicy;
+use ptqtp::coordinator::{
+    serve_metrics_json, PagedKvOpts, Request, Response, SamplingParams, ServeEngine,
+    ServerBuilder, ServerEvent, SubmitOutcome,
+};
+use ptqtp::model::{ModelConfig, Transformer};
+use ptqtp::quant::{self, QuantCtx};
+use ptqtp::rng::Rng;
+use ptqtp::serialize::Json;
+
+fn quantized_model(seed: u64) -> Transformer {
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = 32;
+    cfg.max_seq = 48;
+    let mut rng = Rng::new(seed);
+    let mut model = Transformer::random(cfg, &mut rng);
+    // ragged group keeps the packed kernel tier in play
+    model.quantize_with(
+        quant::by_name("ptqtp", 10).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    model
+}
+
+/// Per-`(id, sample)` token streams accumulated from `Token` events.
+type Streams = HashMap<(u64, usize), Vec<u32>>;
+
+/// Drive an engine to completion through `step_events`, checking the
+/// stream invariants along the way. Returns per-`(id, sample)` token
+/// streams and the final responses.
+fn drain_events(e: &mut ServeEngine) -> (Streams, Vec<Response>) {
+    let mut streams: Streams = HashMap::new();
+    let mut done = Vec::new();
+    let mut events = Vec::new();
+    let mut guard = 0usize;
+    while e.pending() > 0 {
+        e.step_events(&mut events);
+        for ev in events.drain(..) {
+            match ev {
+                ServerEvent::Token { id, sample, token, index } => {
+                    let s = streams.entry((id, sample)).or_default();
+                    assert_eq!(index, s.len(), "req {id}/{sample}: token index gap");
+                    s.push(token);
+                }
+                ServerEvent::Done(r) => done.push(r),
+            }
+        }
+        guard += 1;
+        assert!(guard < 100_000, "engine livelock");
+    }
+    (streams, done)
+}
+
+/// Tentpole acceptance: concatenating a request's `Token` events equals
+/// `Response.tokens` exactly, for every cell of the execution matrix —
+/// threads {1, 2} × SIMD {off, on} × KV {contiguous, paged} — and the
+/// token streams themselves are bit-identical across all cells.
+#[test]
+fn stream_matches_final_across_threads_simd_kv() {
+    let model = quantized_model(61);
+    let contiguous = PagedKvOpts {
+        page_size: 48, // one max_seq page = the legacy contiguous layout
+        prefix_cache: false,
+        page_budget: None,
+    };
+    let paged = PagedKvOpts {
+        page_size: 8,
+        prefix_cache: true,
+        page_budget: None,
+    };
+
+    let run = |threads: usize, simd: bool, kv: PagedKvOpts| {
+        let mut e = ServeEngine::with_opts(model.clone(), BatchPolicy::default(), threads, kv);
+        e.set_simd(simd);
+        for i in 0..5u64 {
+            let prompt: Vec<u32> = (0..=(i % 3) + 2).map(|j| (j as u32 * 5 + i as u32) % 32).collect();
+            let mut params = SamplingParams::greedy(5).with_stop(None);
+            if i % 2 == 1 {
+                params = params.with_temperature(0.7, 33 + i);
+            }
+            e.submit(Request::new(i, prompt, params));
+        }
+        let (streams, mut done) = drain_events(&mut e);
+        assert_eq!(done.len(), 5, "threads={threads} simd={simd}: lost responses");
+        for r in &done {
+            assert_eq!(
+                streams.get(&(r.id, r.sample)).map(Vec::as_slice),
+                Some(r.tokens.as_slice()),
+                "threads={threads} simd={simd}: stream for req {} diverged from final tokens",
+                r.id
+            );
+        }
+        done.sort_by_key(|r| r.id);
+        done.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+
+    let base = run(1, false, contiguous);
+    for &threads in &[1usize, 2] {
+        for &simd in &[false, true] {
+            for (kv_name, kv) in [("contiguous", contiguous), ("paged", paged)] {
+                assert_eq!(
+                    run(threads, simd, kv),
+                    base,
+                    "threads={threads} simd={simd} kv={kv_name} diverged from scalar baseline"
+                );
+            }
+        }
+    }
+}
+
+/// `n > 1` fork streams: one request fans out into `n` interleaved
+/// token streams distinguished by the `sample` tag; each stream must
+/// equal its own final response, and at temperature > 0 the per-sample
+/// seeds make the streams diverge.
+#[test]
+fn fork_streams_carry_sample_tags() {
+    let model = quantized_model(62);
+    let mut e = ServeEngine::new(model, BatchPolicy::default());
+    e.submit(Request::new(
+        7,
+        vec![3, 9, 4, 1],
+        SamplingParams::greedy(6)
+            .with_stop(None)
+            .with_temperature(0.9, 123)
+            .with_n(3),
+    ));
+    let (streams, done) = drain_events(&mut e);
+    assert_eq!(done.len(), 3, "n=3 produces three responses");
+    let mut samples: Vec<usize> = done.iter().map(|r| r.sample).collect();
+    samples.sort_unstable();
+    assert_eq!(samples, vec![0, 1, 2]);
+    assert!(done.iter().all(|r| r.id == 7), "forks share the request id");
+    for r in &done {
+        assert_eq!(
+            streams.get(&(r.id, r.sample)).map(Vec::as_slice),
+            Some(r.tokens.as_slice()),
+            "sample {} stream diverged from its response",
+            r.sample
+        );
+    }
+    let first = &done[0].tokens;
+    assert!(
+        done.iter().any(|r| &r.tokens != first),
+        "temperature sampling with per-sample seeds should diverge: {done:?}"
+    );
+}
+
+/// The exported serve-metrics artifact round-trips through the JSON
+/// parser and satisfies the request-granular accounting identity
+/// `completed + rejected + cancelled + expired == submitted` after a
+/// graceful drain.
+#[test]
+fn serve_metrics_artifact_identity_through_server() {
+    let model = quantized_model(63);
+    let mut server = ServerBuilder::new()
+        .replicas(2)
+        .route(RoutePolicy::RoundRobin)
+        .threads(1)
+        .start(model);
+    let t0 = std::time::Instant::now();
+    let mut accepted = 0usize;
+    for i in 0..8u64 {
+        let prompt: Vec<u32> = (0..3).map(|j| (j * 7 + i as u32) % 32).collect();
+        match server.submit(prompt, SamplingParams::greedy(4).with_stop(None), 0) {
+            SubmitOutcome::Accepted(_) => accepted += 1,
+            SubmitOutcome::Rejected(e) => panic!("default intake limit rejected: {e}"),
+        }
+    }
+    let responses = server.wait_for(accepted, Duration::from_secs(60));
+    assert_eq!(responses.len(), accepted);
+    let wall = t0.elapsed();
+    let stats = server.stats.clone();
+    let report = server.drain();
+
+    let artifact = serve_metrics_json(&stats, &report.metrics, wall);
+    let parsed = Json::parse(&artifact.pretty()).expect("artifact parses back");
+    assert_eq!(parsed.req_str("schema").unwrap(), "ptqtp-serve-metrics/1");
+    let f = |k: &str| parsed.req_f64(k).unwrap();
+    assert_eq!(
+        f("completed") + f("rejected") + f("cancelled") + f("expired"),
+        f("submitted"),
+        "accounting identity violated: {parsed:?}"
+    );
+    assert_eq!(f("submitted") as usize, 8);
+    assert_eq!(f("completed") as usize, 8);
+    let per_replica = parsed.get("per_replica").and_then(Json::as_arr).expect("per_replica array");
+    assert_eq!(per_replica.len(), 2, "one per-replica snapshot each");
+    // latency blocks exist and carry the samples we served
+    let ttft = parsed.get("ttft_ms").expect("ttft block");
+    assert!(ttft.req_f64("p50_ms").unwrap() >= 0.0);
+}
