@@ -17,6 +17,7 @@ pub mod batched;
 pub mod harness;
 pub mod kernels;
 pub mod prefix;
+pub mod speculative;
 pub mod workload;
 
 pub mod fig1;

@@ -1,0 +1,236 @@
+//! Speculative-decoding serving bench (`ptqtp bench --speculative`):
+//! prompt-lookup drafting vs plain one-token-per-step decode.
+//!
+//! Two workloads over the same tiny quantized model: a **repetitive**
+//! corpus (one templated, pattern-cycled prompt served batch-wide —
+//! the n-gram-reuse regime prompt-lookup feeds on) and a **random**
+//! corpus (per-request random prompts — the adversarial regime where
+//! drafting rarely fires). Each corpus is served twice on identical
+//! engines, `--spec-decode off` then on, and the two waves are
+//! asserted **token-for-token identical** before any number is
+//! reported — speculation is a scheduling optimization, never a
+//! sampling change. On the repetitive corpus the spec wave must also
+//! finish in ≥ 1.3× fewer engine steps (a deterministic stand-in for
+//! the tokens/sec bar that is immune to CI machine load; the measured
+//! wall-clock speedup is additionally gated in full runs). Results go
+//! to stdout and `BENCH_speculative.json` (`--out` to relocate).
+
+use crate::cli::Args;
+use crate::coordinator::speculator::SpecDecodeOpts;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{PagedKvOpts, Request, SamplingParams, ServeEngine};
+use crate::model::{ModelConfig, Transformer};
+use crate::rng::Rng;
+use crate::serialize::Json;
+use crate::ternary::simd;
+
+const PAGE_SIZE: usize = 8;
+const PROMPT_LEN: usize = 16;
+const MAX_NEW: usize = 64;
+
+/// The repetitive workload: one pattern-cycled prompt (`[a b c d]`
+/// repeated to [`PROMPT_LEN`]) served `bs` times — batch-identical
+/// trajectories with maximal n-gram reuse.
+fn repetitive_prompts(bs: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let period = 4;
+    let pattern: Vec<u32> = (0..period).map(|_| 1 + rng.below(30) as u32).collect();
+    let prompt: Vec<u32> = (0..PROMPT_LEN).map(|j| pattern[j % period]).collect();
+    vec![prompt; bs]
+}
+
+/// The adversarial workload: `bs` distinct prompts of uniform random
+/// tokens — no n-gram structure for the drafter to match.
+fn random_prompts(bs: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..bs)
+        .map(|_| (0..PROMPT_LEN).map(|_| 1 + rng.below(30) as u32).collect())
+        .collect()
+}
+
+/// Serve one wave, counting engine steps ourselves, and return
+/// `(tokens sorted by id, steps, committed decode tokens, wall secs)`.
+fn wave(engine: &mut ServeEngine, prompts: &[Vec<u32>], max_new: usize) -> (Vec<Vec<u32>>, u64, u64, f64) {
+    let params = SamplingParams::greedy(max_new).with_stop(None);
+    let decode0 = engine.metrics.decode_tokens;
+    let t0 = std::time::Instant::now();
+    for (i, p) in prompts.iter().enumerate() {
+        engine.submit(Request::new(i as u64, p.clone(), params));
+    }
+    let mut out = Vec::new();
+    let mut steps = 0u64;
+    while engine.pending() > 0 {
+        out.extend(engine.step());
+        steps += 1;
+        assert!(steps < 1_000_000, "bench livelock");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(out.len(), prompts.len(), "wave dropped requests");
+    out.sort_by_key(|r| r.id);
+    let tokens = out.into_iter().map(|r| r.tokens).collect();
+    (tokens, steps, engine.metrics.decode_tokens - decode0, wall)
+}
+
+pub fn run(quick: bool, args: &Args) -> anyhow::Result<()> {
+    let threads = args.threads_or_default();
+    // small batch on purpose: speculation is a low-batch latency
+    // optimization — its win comes from amortizing per-step fixed cost
+    // (pool dispatch, weight-plane streaming) across draft rows, and
+    // large decode batches already amortize that across sequences
+    let bs = 4;
+    let max_new = if quick { 48 } else { MAX_NEW };
+    let spec = SpecDecodeOpts::default();
+    let simd_label = simd::label();
+
+    let mut cfg = ModelConfig::family("tiny")?;
+    cfg.vocab_size = 32;
+    cfg.max_seq = PROMPT_LEN + MAX_NEW + PAGE_SIZE;
+    let mut rng = Rng::new(29);
+    let mut model = Transformer::random(cfg, &mut rng);
+    // ragged group so both ternary kernel tiers are exercised
+    model.quantize_with(
+        crate::quant::by_name("ptqtp", 10)?.as_ref(),
+        &crate::quant::QuantCtx::default(),
+    );
+    println!(
+        "== speculative decode: prompt-lookup k={} vs plain, batch {bs} × {max_new} new \
+         (threads={threads}, simd={simd_label}) ==",
+        spec.k
+    );
+
+    let policy = BatchPolicy {
+        max_running: bs,
+        prefill_token_budget: 256,
+        fcfs_prefill: true,
+    };
+    let kv = PagedKvOpts {
+        page_size: PAGE_SIZE,
+        prefix_cache: true,
+        page_budget: None,
+    };
+
+    let mut rows = Vec::new();
+    for (corpus, prompts) in [
+        ("repetitive", repetitive_prompts(bs, &mut Rng::new(31))),
+        ("random", random_prompts(bs, &mut Rng::new(37))),
+    ] {
+        let mut plain = ServeEngine::with_opts(model.clone(), policy, threads, kv);
+        let (want, plain_steps, plain_decode, plain_wall) = wave(&mut plain, &prompts, max_new);
+
+        let mut fast = ServeEngine::with_opts(model.clone(), policy, threads, kv);
+        fast.set_spec_decode(Some(spec));
+        let (got, spec_steps, spec_decode, spec_wall) = wave(&mut fast, &prompts, max_new);
+        let (drafted, accepted, rollback) = (
+            fast.metrics.spec_drafted,
+            fast.metrics.spec_accepted,
+            fast.metrics.spec_rollback_pages,
+        );
+
+        // hard parity gates before any number is reported: speculation
+        // must be invisible in the output
+        assert_eq!(got, want, "speculative decode drifted from plain ({corpus})");
+        assert_eq!(spec_decode, plain_decode, "committed-token accounting drifted ({corpus})");
+
+        let step_ratio = plain_steps as f64 / spec_steps as f64;
+        let speedup = plain_wall / spec_wall.max(1e-9);
+        let accept_rate = if drafted == 0 { 0.0 } else { accepted as f64 / drafted as f64 };
+        if corpus == "repetitive" {
+            // the ISSUE 9 acceptance bar, in its deterministic form:
+            // accepted drafts collapse decode steps ≥ 1.3× (steps are a
+            // pure function of model + workload, so this cannot flake
+            // on a loaded CI machine the way wall time can)
+            assert!(
+                step_ratio >= 1.3,
+                "speculative steps not ≥1.3x fewer on the repetitive corpus: \
+                 plain {plain_steps} vs spec {spec_steps} ({step_ratio:.2}x, \
+                 accept rate {accept_rate:.2})"
+            );
+            if !quick {
+                // full runs also hold the wall-clock tokens/sec bar
+                assert!(
+                    speedup >= 1.3,
+                    "speculative decode not ≥1.3x faster on the repetitive corpus: \
+                     {speedup:.2}x (steps {step_ratio:.2}x, accept rate {accept_rate:.2})"
+                );
+            }
+        }
+
+        let plain_tok_s = plain_decode as f64 / plain_wall.max(1e-9);
+        let spec_tok_s = spec_decode as f64 / spec_wall.max(1e-9);
+        println!(
+            "  {corpus:>10}  plain {plain_steps:>4} steps {:>8.1}ms   spec {spec_steps:>4} steps \
+             {:>8.1}ms  ({step_ratio:>4.2}x fewer steps, {speedup:>4.2}x faster, \
+             accept {:.0}%, {rollback} rollback pages)",
+            plain_wall * 1e3,
+            spec_wall * 1e3,
+            accept_rate * 100.0,
+        );
+        rows.push(
+            Json::obj()
+                .set("corpus", corpus)
+                .set("requests", bs)
+                .set("plain_steps", plain_steps)
+                .set("spec_steps", spec_steps)
+                .set("step_ratio", step_ratio)
+                .set("plain_ms", plain_wall * 1e3)
+                .set("spec_ms", spec_wall * 1e3)
+                .set("plain_tok_s", plain_tok_s)
+                .set("spec_tok_s", spec_tok_s)
+                .set("speedup", speedup)
+                .set("drafted", drafted)
+                .set("accepted", accepted)
+                .set("accept_rate", accept_rate)
+                .set("rollback_pages", rollback),
+        );
+    }
+
+    let out_path = args.str_or("out", "BENCH_speculative.json");
+    let json = Json::obj()
+        .set("bench", "speculative")
+        // real measured numbers (the committed placeholder says
+        // "pending-first-toolchain-run"; CI's bench-baselines job
+        // rejects that marker in generated output)
+        .set("status", "measured")
+        .set("threads", threads)
+        .set("quick", quick)
+        .set("simd_tier", simd_label)
+        .set("cpu_features", simd::cpu_features().join(","))
+        .set("spec_k", spec.k)
+        .set("min_match", spec.min_match)
+        .set("max_new", max_new)
+        .set("page_size", PAGE_SIZE)
+        .set(
+            "parity",
+            "spec-on serves asserted token-for-token identical to spec-off before timing; \
+             repetitive corpus asserted ≥1.3x fewer engine steps (and ≥1.3x wall speedup in \
+             full runs)",
+        )
+        .set("results", Json::Arr(rows));
+    std::fs::write(out_path, json.pretty())?;
+    println!("  wrote {out_path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_quick_and_emits_json() {
+        let dir = std::env::temp_dir().join("ptqtp_bench_speculative");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("s.json");
+        let raw = vec![
+            "--out".to_string(),
+            out.to_string_lossy().to_string(),
+            "--threads".to_string(),
+            "2".to_string(),
+        ];
+        let args = Args::parse("ptqtp", raw, &[]);
+        run(true, &args).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.req_str("bench").unwrap(), "speculative");
+        assert_eq!(j.req_str("status").unwrap(), "measured");
+        let rows = j.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2); // repetitive + random
+        std::fs::remove_file(out).ok();
+    }
+}

@@ -178,6 +178,28 @@ impl Args {
         }))
     }
 
+    /// Binary on/off switch with an env-var fallback, the resolution
+    /// chain `--{name} on|off` > `{env_var}` > `None` (caller applies
+    /// its default). The env var accepts the same spellings the other
+    /// `PTQTP_*` switches do (`on`/`1`/`true`, `off`/`0`/`false`,
+    /// case-insensitive); anything else is a helpful error, never a
+    /// silent default. Used by `--spec-decode` / `PTQTP_SPEC_DECODE`.
+    pub fn on_off_env(&self, name: &str, env_var: &str) -> anyhow::Result<Option<bool>> {
+        if let Some(state) = self.tri_state_opt(name, false)? {
+            return Ok(Some(state == TriState::On));
+        }
+        match std::env::var(env_var) {
+            Err(_) => Ok(None),
+            Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "on" | "1" | "true" => Ok(Some(true)),
+                "off" | "0" | "false" => Ok(Some(false)),
+                other => Err(anyhow::anyhow!(
+                    "invalid {env_var} '{other}' (expected on|off)"
+                )),
+            },
+        }
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
@@ -341,6 +363,38 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("on|off") && !e.contains("auto|"), "{e}");
+    }
+
+    #[test]
+    fn on_off_env_resolution_chain() {
+        // unique var name: tests run in parallel and env is process-global
+        let var = "PTQTP_TEST_SPEC_SWITCH";
+        std::env::remove_var(var);
+        // absent everywhere → None (caller's default decides)
+        assert_eq!(parse(&["serve"]).on_off_env("spec-decode", var).unwrap(), None);
+        // CLI alone
+        let a = parse(&["serve", "--spec-decode", "on"]);
+        assert_eq!(a.on_off_env("spec-decode", var).unwrap(), Some(true));
+        // env alone, all accepted spellings
+        for (v, want) in [("on", true), ("1", true), ("TRUE", true), ("off", false), ("0", false), ("False", false)] {
+            std::env::set_var(var, v);
+            assert_eq!(parse(&["serve"]).on_off_env("spec-decode", var).unwrap(), Some(want), "{v}");
+        }
+        // CLI beats env
+        std::env::set_var(var, "on");
+        let a = parse(&["serve", "--spec-decode", "off"]);
+        assert_eq!(a.on_off_env("spec-decode", var).unwrap(), Some(false));
+        // junk env is an error, not a silent default
+        std::env::set_var(var, "maybe");
+        let e = parse(&["serve"]).on_off_env("spec-decode", var).unwrap_err().to_string();
+        assert!(e.contains(var) && e.contains("'maybe'"), "{e}");
+        // junk CLI is the tri_state error
+        std::env::remove_var(var);
+        let e = parse(&["serve", "--spec-decode", "fast"])
+            .on_off_env("spec-decode", var)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--spec-decode") && e.contains("on|off"), "{e}");
     }
 
     #[test]

@@ -65,7 +65,20 @@ impl StepPlan {
     /// sampling but no continuation row, so the realized batch can be
     /// smaller). The engine pre-sizes its `ForwardBatch` with this.
     pub fn batch_rows(&self) -> usize {
-        self.prefill.iter().map(|&(_, take)| take).sum::<usize>() + self.decode.len()
+        self.batch_rows_with_drafts(0)
+    }
+
+    /// [`StepPlan::batch_rows`] under speculative decoding: every
+    /// decoding sequence may add up to `spec_k` draft rows to its one
+    /// committed row, so the fused pass holds `1..=1 + spec_k` rows
+    /// per decode slot (`--spec-decode off` ⇒ `spec_k = 0`, the exact
+    /// plain bound). Still an upper bound — the speculator drafts
+    /// fewer or zero tokens when the context has no matching n-gram,
+    /// and the engine clamps drafts to the sequence's remaining token
+    /// budget and KV positions.
+    pub fn batch_rows_with_drafts(&self, spec_k: usize) -> usize {
+        self.prefill.iter().map(|&(_, take)| take).sum::<usize>()
+            + self.decode.len() * (1 + spec_k)
     }
 }
 
@@ -149,6 +162,9 @@ mod tests {
         let plan = plan_step(&policy, &slots);
         // 6 + 4 prefill rows + 1 decode row
         assert_eq!(plan.batch_rows(), 11);
+        // with k=3 speculative drafts the decode slot may hold 4 rows
+        assert_eq!(plan.batch_rows_with_drafts(3), 14);
+        assert_eq!(plan.batch_rows_with_drafts(0), plan.batch_rows());
     }
 
     #[test]

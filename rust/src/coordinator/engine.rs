@@ -3,9 +3,11 @@
 //!
 //! Control flow is **batch-drives-model**: each [`ServeEngine::step`]
 //! turns the scheduler plan into one [`ForwardBatch`] — every planned
-//! prefill chunk plus one decode token per running sequence — and
-//! executes it with a single [`Transformer::forward_batch`] call, so
-//! the ternary kernels see the whole row stack at once. Sampling and
+//! prefill chunk plus `1..=1 + k` decode rows per running sequence
+//! (one committed token, plus up to `k` speculative draft rows when
+//! `--spec-decode on`; see `coordinator::speculator`) — and executes
+//! it with a single [`Transformer::forward_batch`] call, so the
+//! ternary kernels see the whole row stack at once. Sampling and
 //! logits storage run through engine-owned scratch buffers; the steady
 //! state performs no per-token heap allocation.
 
@@ -16,6 +18,7 @@ use super::prefix_cache::PrefixCache;
 use super::request::{
     FinishReason, Request, Response, SequenceState, ServerEvent, SubmitError,
 };
+use super::speculator::SpecDecodeOpts;
 use crate::model::{ForwardBatch, ForwardScratch, KvCache, Transformer};
 use crate::rng::Rng;
 use std::collections::VecDeque;
@@ -58,6 +61,14 @@ pub struct ServeEngine {
     logit_pool: Vec<Vec<f32>>,
     /// Sampling probability scratch.
     prob_buf: Vec<f32>,
+    /// Prompt-lookup speculative decoding (`None` = plain decode, the
+    /// exact-legacy default; see `coordinator::speculator` and
+    /// DESIGN.md §Speculative-Decoding).
+    spec: Option<SpecDecodeOpts>,
+    /// Speculator context scratch (`prompt ++ generated ++ peeked`).
+    spec_ctx: Vec<u32>,
+    /// Draft tokens proposed for the slot currently being planned.
+    spec_buf: Vec<u32>,
     /// Server-side intake gauge for this replica: accepted-but-not-
     /// finished requests. The engine decrements it as requests retire
     /// so `Server::submit`'s admission check sees live occupancy.
@@ -131,8 +142,28 @@ impl ServeEngine {
             logit_slots: Vec::new(),
             logit_pool: Vec::new(),
             prob_buf: Vec::new(),
+            spec: None,
+            spec_ctx: Vec::new(),
+            spec_buf: Vec::new(),
             intake_depth: None,
         }
+    }
+
+    /// Enable (`Some`) or disable (`None`) prompt-lookup speculative
+    /// decoding for this replica. Speculation is a scheduling
+    /// optimization, not a sampling one: greedy sequences may commit
+    /// up to `1 + k` tokens per step, but the committed stream is
+    /// token-for-token identical to plain decode (the accept rule
+    /// compares against the model's own argmax over the same rows a
+    /// plain step would have computed); temperature sequences fall
+    /// back to plain decode so the seeded RNG path is untouched.
+    pub fn set_spec_decode(&mut self, opts: Option<SpecDecodeOpts>) {
+        self.spec = opts;
+    }
+
+    /// The speculative-decoding configuration, if enabled.
+    pub fn spec_decode(&self) -> Option<SpecDecodeOpts> {
+        self.spec
     }
 
     /// Install the server's per-replica intake gauge (see
@@ -501,12 +532,14 @@ impl ServeEngine {
     }
 
     /// One engine iteration: sweep lapsed lifetimes, admit, plan, fuse
-    /// all planned prefill chunks + decode tokens into **one**
-    /// [`ForwardBatch`], execute it with a single model pass, scatter
-    /// the logits back, retire finished sequences. Events — one
-    /// `Token` per decoded token, one `Done` per finished sequence —
-    /// are appended to `out` in emission order; see [`ServerEvent`]
-    /// for the stream-equals-final-tokens guarantee.
+    /// all planned prefill chunks + decode rows (one committed token
+    /// per decoding sequence, plus its speculative draft rows when
+    /// spec-decode is on) into **one** [`ForwardBatch`], execute it
+    /// with a single model pass, verify drafts and scatter the logits
+    /// back, retire finished sequences. Events — one `Token` per
+    /// committed token, one `Done` per finished sequence — are
+    /// appended to `out` in emission order; see [`ServerEvent`] for
+    /// the stream-equals-final-tokens guarantee.
     ///
     /// Produces token-for-token the same per-sequence output as
     /// stepping each sequence alone (`max_running == 1`): the batched
@@ -533,7 +566,8 @@ impl ServeEngine {
             decode_slot[slot] = true;
         }
         self.batch.clear();
-        self.batch.reserve(plan.batch_rows());
+        self.batch
+            .reserve(plan.batch_rows_with_drafts(self.spec.map_or(0, |o| o.k)));
         self.logit_slots.clear();
         // cache index per participating slot, assigned in slot order
         let mut participates = vec![false; self.running.len()];
@@ -582,13 +616,62 @@ impl ServeEngine {
                     let c = &self.running[slot].cache;
                     c.len() + 1 >= c.max_seq
                 };
+                // --- speculative planning (greedy sequences only).
+                // Greedy sampling is a pure argmax, so this step's
+                // committed token can be *peeked* with no RNG or
+                // accounting side effects; the speculator then drafts
+                // up to k continuation tokens from prompt ++ generated
+                // ++ peeked, which ride the fused pass as extra rows
+                // for this cache and are verified in phase 3.
+                // Temperature sequences fall back to plain decode —
+                // their per-step RNG stays keyed to committed tokens
+                // only, so preemption replay is untouched.
+                self.spec_buf.clear();
+                if !cache_full {
+                    if let Some(opts) = self.spec {
+                        let seq = &self.running[slot];
+                        if seq.request.params.temperature <= 0.0 && seq.budget_left() > 1 {
+                            let logits = seq
+                                .pending_logits
+                                .as_deref()
+                                .expect("planned decode without logits");
+                            let peek = argmax(logits);
+                            if Some(peek) != seq.request.params.stop_token {
+                                // a draft at position len+1+j must fit
+                                // under max_seq, and at most
+                                // budget_left - 1 drafts can ever be
+                                // committed after the peeked token
+                                let cap = (seq.budget_left() - 1)
+                                    .min(seq.cache.max_seq - seq.cache.len() - 1);
+                                if cap > 0 {
+                                    self.spec_ctx.clear();
+                                    self.spec_ctx.extend_from_slice(&seq.request.prompt);
+                                    self.spec_ctx.extend_from_slice(&seq.generated);
+                                    self.spec_ctx.push(peek);
+                                    opts.draft(&self.spec_ctx, cap, &mut self.spec_buf);
+                                }
+                            }
+                        }
+                    }
+                }
                 // a continuation row needs one reserved position; when
                 // the position ceiling already ends the sequence there
-                // is nothing to reserve. Preempt *before* sampling: the
-                // pending logits die with the victim, and the resumed
-                // recompute regenerates them bitwise before sampling
-                // the same token (the per-step RNG is keyed by
-                // generated.len(), unchanged by preemption).
+                // is nothing to reserve. Draft rows reserve on top of
+                // it, but their exhaustion is not preemption-worthy:
+                // drop the drafts and retry the plain single row, so
+                // speculation can never preempt a sequence plain
+                // decode would have advanced (the liveness argument in
+                // mark_preempt is unchanged). Preempt *before*
+                // sampling: the pending logits die with the victim,
+                // and the resumed recompute regenerates them bitwise
+                // before sampling the same token (the per-step RNG is
+                // keyed by generated.len(), unchanged by preemption).
+                if !cache_full
+                    && !self.spec_buf.is_empty()
+                    && !self.try_reserve(slot, 1 + self.spec_buf.len())
+                {
+                    self.spec_buf.clear();
+                }
                 if !cache_full && !self.try_reserve(slot, 1) {
                     self.mark_preempt(slot);
                     continue;
@@ -620,9 +703,23 @@ impl ServeEngine {
                     n_caches += 1;
                     participates[slot] = true;
                     self.logit_slots.push(slot);
-                    self.batch.push(next, seq.cache.len(), ci, true);
+                    let base = seq.cache.len();
+                    self.batch.push(next, base, ci, true);
+                    // draft rows: same cache, consecutive positions —
+                    // exactly the row shape a prefill chunk already
+                    // has, so the model pass needs no new machinery
+                    for (j, &d) in self.spec_buf.iter().enumerate() {
+                        self.logit_slots.push(slot);
+                        self.batch.push(d, base + 1 + j, ci, true);
+                    }
+                    debug_assert!(seq.spec_drafts.is_empty(), "drafts are step-transient");
+                    seq.spec_drafts.extend_from_slice(&self.spec_buf);
+                    self.metrics.spec_drafted += self.spec_buf.len() as u64;
                 }
-                // else: finished; pending_logits stays None, retired below
+                // else: finished; pending_logits stays None, retired
+                // below. The speculative clamps (budget > 1, peek !=
+                // stop, cache not full) guarantee spec_buf is empty on
+                // this path — a terminal token never carries drafts.
             }
         }
 
@@ -640,12 +737,22 @@ impl ServeEngine {
             let n_logits = model.forward_batch(batch, &mut caches, &mut self.scratch);
             debug_assert_eq!(n_logits, self.logit_slots.len());
 
-            // --- phase 3: scatter logits back to their sequences
-            for (li, &slot) in self.logit_slots.iter().enumerate() {
-                let mut buf = self.logit_pool.pop().unwrap_or_default();
-                buf.clear();
-                buf.extend_from_slice(self.scratch.logits.row(li));
-                self.running[slot].pending_logits = Some(buf);
+            // --- phase 3: verify draft rows, then scatter logits back.
+            // A slot's logit rows are consecutive (phase 1 pushes them
+            // together): its committed token's row first, then one row
+            // per draft. Plain slots hold exactly one row.
+            let mut li = 0usize;
+            while li < self.logit_slots.len() {
+                let slot = self.logit_slots[li];
+                if self.running[slot].spec_drafts.is_empty() {
+                    let mut buf = self.logit_pool.pop().unwrap_or_default();
+                    buf.clear();
+                    buf.extend_from_slice(self.scratch.logits.row(li));
+                    self.running[slot].pending_logits = Some(buf);
+                    li += 1;
+                } else {
+                    li += self.verify_drafts(slot, li, out);
+                }
             }
         }
 
@@ -757,6 +864,94 @@ impl ServeEngine {
         self.metrics.queue_depth = self.waiting.len();
     }
 
+    /// Phase-3 speculative verify for `slot`, whose logit rows start
+    /// at `li`: row `li` belongs to the token committed in phase 1,
+    /// row `li + j` to draft `j`. Walks the deterministic greedy-accept
+    /// rule — commit the longest draft prefix where the model's own
+    /// argmax equals the draft — then truncates the KV cache back to
+    /// the last committed position, releasing rejected and over-
+    /// reserved pages to the store. Returns the logit rows consumed.
+    ///
+    /// Parity argument (DESIGN.md §Speculative-Decoding): row `li + j`
+    /// was computed from the same tokens at the same positions over
+    /// the same cache prefix a plain decode step would have used —
+    /// causal attention means later draft rows never influence earlier
+    /// ones — and `forward_batch` is bit-identical per row to
+    /// single-row decode. So `argmax(row li + j)` *is* the token plain
+    /// greedy decode would sample next, the accepted prefix is exactly
+    /// the plain token stream, and after `truncate` the cache holds
+    /// exactly what a plain step sequence would have built. The
+    /// stop/budget/position checks mirror the plain continuation rule
+    /// token-for-token, so termination matches too.
+    fn verify_drafts(&mut self, slot: usize, li: usize, out: &mut Vec<ServerEvent>) -> usize {
+        let mut drafts = std::mem::take(&mut self.running[slot].spec_drafts);
+        let n_rows = 1 + drafts.len();
+        debug_assert!(self.logit_slots[li..li + n_rows].iter().all(|&s| s == slot));
+        // committed KV length before this step's rows were appended
+        let base = self.running[slot].cache.len() - n_rows;
+        let mut accepted = 0usize;
+        let mut terminated = false;
+        loop {
+            let seq = &self.running[slot];
+            let last = *seq.generated.last().expect("phase 1 committed a token");
+            // mirror plain decode's continuation rule for `last`: a
+            // stop token, an exhausted budget, or the position ceiling
+            // each end the sequence exactly where plain decode would
+            // (phase 1 pre-checked all three for the first token)
+            if Some(last) == seq.request.params.stop_token
+                || seq.budget_left() == 0
+                || base + 1 + accepted >= seq.cache.max_seq
+            {
+                terminated = true;
+                break;
+            }
+            if accepted == drafts.len() {
+                break;
+            }
+            // the model's own next token after everything committed so
+            // far; the first mismatch rejects the rest of the draft
+            let next = argmax(self.scratch.logits.row(li + accepted));
+            if next != drafts[accepted] {
+                break;
+            }
+            let seq = &mut self.running[slot];
+            seq.generated.push(next);
+            accepted += 1;
+            self.metrics.decode_tokens += 1;
+            self.metrics.spec_accepted += 1;
+            // same wire rule as phase 1: a matched stop token is never
+            // emitted (retirement pops it from Response::tokens too)
+            if Some(next) != seq.request.params.stop_token {
+                out.push(ServerEvent::Token {
+                    id: seq.request.id,
+                    sample: seq.request.sample,
+                    token: next,
+                    index: seq.generated.len() - 1,
+                });
+            }
+        }
+        // rollback: keep the committed rows, return every page past
+        // them — rejected draft positions and over-reserved pages alike
+        let seq = &mut self.running[slot];
+        let keep = base + 1 + accepted;
+        let before = seq.cache.pages_held();
+        seq.cache.truncate(keep);
+        self.metrics.spec_rollback_pages += (before - seq.cache.pages_held()) as u64;
+        if !terminated {
+            // the last committed row's logits seed the next step's
+            // sampling, exactly as a plain step's single row would
+            let mut buf = self.logit_pool.pop().unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(self.scratch.logits.row(li + accepted));
+            self.running[slot].pending_logits = Some(buf);
+        }
+        // else: pending_logits stays None ⇒ the retirement sweep below
+        // finishes the sequence (Stop / Length), as plain decode would
+        drafts.clear();
+        self.running[slot].spec_drafts = drafts; // hand the buffer back
+        n_rows
+    }
+
     /// Drive until every submitted request completes (test/batch mode).
     pub fn run_to_completion(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
@@ -779,15 +974,7 @@ fn sample(
     probs: &mut Vec<f32>,
 ) -> u32 {
     if params.temperature <= 0.0 {
-        let mut best = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for (i, &x) in logits.iter().enumerate() {
-            if x > best_v {
-                best_v = x;
-                best = i;
-            }
-        }
-        return best as u32;
+        return argmax(logits);
     }
     let mut rng = Rng::new(params.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let inv_t = 1.0 / params.temperature;
@@ -795,6 +982,23 @@ fn sample(
     probs.extend(logits.iter().map(|&x| x * inv_t));
     crate::tensor::ops::softmax_inplace(probs);
     rng.weighted(probs) as u32
+}
+
+/// Deterministic argmax, first maximum winning — the single source of
+/// truth for greedy token choice: [`sample`]'s greedy branch, the
+/// speculative peek, and the draft-verify accept rule all call this,
+/// which is what makes speculative output bit-identical to plain
+/// greedy decode by construction.
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best as u32
 }
 
 #[cfg(test)]
@@ -1075,6 +1279,201 @@ mod tests {
         assert!(
             tight.metrics.preemptions > 0,
             "budget of 4 pages must force at least one preemption"
+        );
+        assert_eq!(tight.running(), 0);
+        assert_eq!(tight.pool.outstanding(), 0);
+    }
+
+    /// A prompt containing the bigram `[x, t]` for every `t` in
+    /// `0..vocab` (and ending in `x`), so the prompt-lookup drafter is
+    /// *guaranteed* to fire at the first decode planning no matter
+    /// which token the model peeks — whatever `t1 = argmax` turns out
+    /// to be, the suffix anchor `[x, t1]` has an earlier occurrence.
+    /// Speculation-activity asserts built on these prompts cannot
+    /// flake on model behavior.
+    fn bigram_complete_prompt(x: u32, vocab: u32) -> Vec<u32> {
+        let mut p = Vec::with_capacity(2 * vocab as usize + 1);
+        for t in 0..vocab {
+            p.push(x);
+            p.push(t);
+        }
+        p.push(x);
+        p
+    }
+
+    /// Tiny quantized (ragged-group) model over a 12-token vocab —
+    /// small enough that `bigram_complete_prompt` fits well inside
+    /// `max_seq` with decode room to spare.
+    fn spec_model(seed: u64) -> Transformer {
+        let mut cfg = ModelConfig::family("tiny").unwrap();
+        cfg.vocab_size = 12;
+        cfg.max_seq = 48;
+        let mut rng = Rng::new(seed);
+        let mut model = Transformer::random(cfg, &mut rng);
+        model.quantize_with(
+            crate::quant::by_name("ptqtp", 10).unwrap().as_ref(),
+            &crate::quant::QuantCtx::default(),
+        );
+        model
+    }
+
+    #[test]
+    fn speculative_greedy_matches_plain_decode() {
+        // tentpole parity: prompt-lookup speculation must be invisible
+        // in the output — same tokens, same finish — while actually
+        // drafting (the bigram-complete prompts make the first draft
+        // unconditional, so the activity assert is deterministic)
+        let model = spec_model(61);
+        let policy = BatchPolicy {
+            max_running: 3,
+            prefill_token_budget: 16,
+            fcfs_prefill: true,
+        };
+        let submit = |e: &mut ServeEngine| {
+            for (i, x) in [3u32, 5, 7].into_iter().enumerate() {
+                e.submit(req(i as u64, bigram_complete_prompt(x, 12), 10));
+            }
+        };
+        let mut plain = ServeEngine::with_threads(model.clone(), policy, 1);
+        submit(&mut plain);
+        let mut want = plain.run_to_completion();
+        want.sort_by_key(|r| r.id);
+        assert_eq!(plain.metrics.spec_drafted, 0, "spec off ⇒ no drafting");
+
+        for spec_k in [1usize, 4] {
+            let mut e = ServeEngine::with_threads(model.clone(), policy, 1);
+            e.set_spec_decode(Some(SpecDecodeOpts::default().with_k(spec_k)));
+            submit(&mut e);
+            let mut got = e.run_to_completion();
+            got.sort_by_key(|r| r.id);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.tokens, w.tokens, "k={spec_k} req {}", g.id);
+                assert_eq!(g.finish, w.finish, "k={spec_k} req {}", g.id);
+            }
+            assert!(e.metrics.spec_drafted > 0, "k={spec_k}: speculation never fired");
+            assert!(
+                e.metrics.spec_accepted <= e.metrics.spec_drafted,
+                "accounting: accepted {} > drafted {}",
+                e.metrics.spec_accepted,
+                e.metrics.spec_drafted
+            );
+            assert_eq!(e.running(), 0);
+        }
+    }
+
+    #[test]
+    fn speculative_temperature_falls_back_and_matches() {
+        // temperature sampling is not greedy-verifiable, so a spec
+        // engine must take the plain path for those sequences: zero
+        // drafts, identical sampled tokens
+        let mk = |spec: Option<SpecDecodeOpts>| {
+            let mut e = engine(4);
+            e.set_spec_decode(spec);
+            for i in 0..4u64 {
+                let mut r = req(i, bigram_complete_prompt(2 + i as u32, 12), 6);
+                r.params.temperature = 0.8;
+                r.params.seed = 91 + i;
+                e.submit(r);
+            }
+            let mut out = e.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            (out, e.metrics.spec_drafted)
+        };
+        let (want, _) = mk(None);
+        let (got, drafted) = mk(Some(SpecDecodeOpts::default()));
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.tokens, w.tokens, "req {}", g.id);
+        }
+        assert_eq!(drafted, 0, "temperature sequences must never draft");
+    }
+
+    #[test]
+    fn speculative_stop_token_inside_draft_burst() {
+        // the verify loop must cut a committed burst at the stop token
+        // exactly where plain decode would — probe the model's greedy
+        // continuation first, then pin a mid-stream token as the stop
+        let model = spec_model(67);
+        let policy = BatchPolicy {
+            max_running: 2,
+            prefill_token_budget: 32,
+            fcfs_prefill: true,
+        };
+        let prompt = bigram_complete_prompt(4, 12);
+        let mut probe = ServeEngine::with_threads(model.clone(), policy, 1);
+        probe.submit(req(1, prompt.clone(), 8));
+        let g = probe.run_to_completion().remove(0).tokens;
+        assert_eq!(g.len(), 8, "probe ran to its budget");
+        let stop = g[3];
+
+        let run = |spec: Option<SpecDecodeOpts>| {
+            let mut e = ServeEngine::with_threads(model.clone(), policy, 1);
+            e.set_spec_decode(spec);
+            let mut r = req(1, prompt.clone(), 8);
+            r.params.stop_token = Some(stop);
+            e.submit(r);
+            e.run_to_completion().remove(0)
+        };
+        let want = run(None);
+        let got = run(Some(SpecDecodeOpts::default()));
+        assert_eq!(want.finish, FinishReason::Stop, "stop drawn from the probe must hit");
+        assert_eq!(got.finish, want.finish);
+        assert_eq!(got.tokens, want.tokens, "stop-cut burst drifted from plain decode");
+        assert!(!got.tokens.contains(&stop), "matched stop is never emitted");
+    }
+
+    #[test]
+    fn forced_preemption_mid_speculation_identical_output() {
+        // ISSUE 9 satellite: recompute-preemption and speculation
+        // compose — a page budget too small for the batch preempts
+        // sequences between (never inside) steps, drafts are strictly
+        // step-transient, and replay re-drafts from committed tokens
+        // only, so output still matches an unconstrained plain run
+        let model = spec_model(71);
+        let policy = BatchPolicy {
+            max_running: 3,
+            prefill_token_budget: 16,
+            fcfs_prefill: true,
+        };
+        let submit = |e: &mut ServeEngine| {
+            for i in 0..6u64 {
+                // distinct first token ⇒ no prefix sharing: 25-token
+                // prompt + 8 new = 33 positions = 5 pages of 8, so a
+                // 6-page budget can only ever run one sequence at a
+                // time and must preempt the rest
+                e.submit(req(i, bigram_complete_prompt(1 + i as u32, 12), 8));
+            }
+        };
+        let mut reference = ServeEngine::with_threads(model.clone(), policy, 1);
+        submit(&mut reference);
+        let mut want = reference.run_to_completion();
+        want.sort_by_key(|r| r.id);
+
+        let kv = PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: Some(6),
+        };
+        let mut tight = ServeEngine::with_opts(model, policy, 1, kv);
+        tight.set_spec_decode(Some(SpecDecodeOpts::default()));
+        submit(&mut tight);
+        let mut got = tight.run_to_completion();
+        got.sort_by_key(|r| r.id);
+
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.tokens, w.tokens, "req {} differs under preemption + spec", g.id);
+            assert_eq!(g.finish, w.finish, "req {}", g.id);
+        }
+        assert!(
+            tight.metrics.preemptions > 0,
+            "a 6-page budget must force preemption for 5-page sequences"
+        );
+        assert!(
+            tight.metrics.spec_drafted > 0,
+            "speculation must stay active under preemption pressure"
         );
         assert_eq!(tight.running(), 0);
         assert_eq!(tight.pool.outstanding(), 0);

@@ -97,6 +97,14 @@ pub struct Metrics {
     pub prefix_evicted_pages: u64,
     /// Sequences evicted for recompute under page exhaustion.
     pub preemptions: u64,
+    /// Speculative decoding: draft tokens scored as verify rows.
+    pub spec_drafted: u64,
+    /// Speculative decoding: draft tokens whose verifier argmax
+    /// matched — committed without their own forward pass.
+    pub spec_accepted: u64,
+    /// KV pages released by speculative rollback (rejected draft
+    /// positions and over-reserved pages returned by `truncate`).
+    pub spec_rollback_pages: u64,
     /// Copy-on-write page copies (forks writing into shared pages).
     pub cow_pages: u64,
     /// Page-pool gauges, refreshed by the engine each step.
@@ -156,6 +164,16 @@ impl Metrics {
         }
     }
 
+    /// Fraction of speculative draft tokens the verifier accepted
+    /// (0 when speculation is off or never fired).
+    pub fn draft_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
     /// Sum counters / merge histograms across replica snapshots.
     /// Gauges (`pages_*`, `queue_depth*`) sum too, reading as
     /// fleet-wide totals; the percentile reservoirs concatenate up to
@@ -174,6 +192,9 @@ impl Metrics {
         self.prefix_lookups += other.prefix_lookups;
         self.prefix_evicted_pages += other.prefix_evicted_pages;
         self.preemptions += other.preemptions;
+        self.spec_drafted += other.spec_drafted;
+        self.spec_accepted += other.spec_accepted;
+        self.spec_rollback_pages += other.spec_rollback_pages;
         self.cow_pages += other.cow_pages;
         self.pages_in_use += other.pages_in_use;
         self.pages_free += other.pages_free;
@@ -216,6 +237,7 @@ impl Metrics {
             .set("decode_tokens", self.decode_tokens)
             .set("adopted_tokens", self.adopted_tokens)
             .set("preemptions", self.preemptions)
+            .set("spec", spec_json(self))
             .set("cow_pages", self.cow_pages)
             .set("pages_in_use", self.pages_in_use)
             .set("pages_peak", self.pages_peak)
@@ -233,6 +255,8 @@ impl Metrics {
              tokens:   {} prefill, {} decode ({:.1} tok/s decode)\n\
              paged-kv: {}/{} pages in use (peak {}, {} free), {} adopted tokens, \
              prefix hit rate {:.0}%, {} tree evictions, {} cow copies, preemptions: {}\n\
+             spec:     {} drafted, {} accepted ({:.0}% accept rate), \
+             {} rollback pages\n\
              ttft:     p50 {:?}  p95 {:?}\n\
              e2e:      p50 {:?}  p95 {:?}",
             self.submitted,
@@ -254,6 +278,10 @@ impl Metrics {
             self.prefix_evicted_pages,
             self.cow_pages,
             self.preemptions,
+            self.spec_drafted,
+            self.spec_accepted,
+            self.draft_accept_rate() * 100.0,
+            self.spec_rollback_pages,
             self.ttft_percentile(0.50).unwrap_or_default(),
             self.ttft_percentile(0.95).unwrap_or_default(),
             self.total_percentile(0.50).unwrap_or_default(),
@@ -300,6 +328,7 @@ pub fn serve_metrics_json(stats: &ServerStats, replicas: &[Metrics], wall: Durat
         .set("decode_tokens", agg.decode_tokens)
         .set("adopted_tokens", agg.adopted_tokens)
         .set("preemptions", agg.preemptions)
+        .set("spec", spec_json(&agg))
         .set("queue_depth_peak", agg.queue_depth_peak)
         .set("wall_ms", wall.as_secs_f64() * 1e3)
         .set("decode_tok_per_s", agg.throughput(wall))
@@ -309,6 +338,17 @@ pub fn serve_metrics_json(stats: &ServerStats, replicas: &[Metrics], wall: Durat
             "per_replica",
             Json::Arr(replicas.iter().map(|m| m.to_json(wall)).collect()),
         )
+}
+
+/// Speculative-decoding counters block (`drafted` / `accepted` here
+/// are draft tokens; the artifact's top-level `accepted` remains the
+/// admission counter).
+fn spec_json(m: &Metrics) -> Json {
+    Json::obj()
+        .set("drafted", m.spec_drafted)
+        .set("accepted", m.spec_accepted)
+        .set("draft_accept_rate", m.draft_accept_rate())
+        .set("spec_rollback_pages", m.spec_rollback_pages)
 }
 
 /// `{p50_ms, p95_ms, histogram}` for one latency dimension.
@@ -427,6 +467,36 @@ mod tests {
         h.merge(&other);
         assert_eq!(h.counts()[2], 2);
         assert_eq!(h.samples(), 5);
+    }
+
+    #[test]
+    fn spec_counters_merge_render_and_export() {
+        let mut a = Metrics::default();
+        a.spec_drafted = 8;
+        a.spec_accepted = 6;
+        a.spec_rollback_pages = 2;
+        let mut b = Metrics::default();
+        b.spec_drafted = 2;
+        b.spec_accepted = 0;
+        a.merge_from(&b);
+        assert_eq!(a.spec_drafted, 10);
+        assert!((a.draft_accept_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(Metrics::default().draft_accept_rate(), 0.0, "no drafts, no rate");
+        let s = a.render(Duration::from_secs(1));
+        assert!(s.contains("10 drafted"));
+        assert!(s.contains("6 accepted (60% accept rate)"));
+        assert!(s.contains("2 rollback pages"));
+        // the artifact carries the counters in a nested block so the
+        // top-level admission `accepted` key is undisturbed
+        let j = serve_metrics_json(&ServerStats::default(), &[a], Duration::from_secs(1));
+        let j = Json::parse(&j.pretty()).unwrap();
+        let spec = j.get("spec").expect("spec block");
+        assert_eq!(spec.req_f64("drafted").unwrap() as u64, 10);
+        assert_eq!(spec.req_f64("accepted").unwrap() as u64, 6);
+        assert!((spec.req_f64("draft_accept_rate").unwrap() - 0.6).abs() < 1e-9);
+        assert_eq!(spec.req_f64("spec_rollback_pages").unwrap() as u64, 2);
+        let replica = &j.get("per_replica").unwrap().as_arr().unwrap()[0];
+        assert!(replica.get("spec").is_some(), "per-replica spec block");
     }
 
     #[test]

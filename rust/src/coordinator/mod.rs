@@ -34,6 +34,7 @@ pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod speculator;
 
 pub use engine::ServeEngine;
 pub use kv_pool::PagedKvOpts;
@@ -43,3 +44,4 @@ pub use request::{
     ServerEvent, SubmitError,
 };
 pub use server::{DrainReport, Server, ServerBuilder, SubmitOutcome};
+pub use speculator::SpecDecodeOpts;

@@ -344,7 +344,11 @@ pub struct Response {
 ///   pops it from `Response::tokens` too);
 /// * preemption never rolls back `generated` (victims are chosen
 ///   *before* sampling), so a resumed sequence never re-emits;
-/// * cancel/deadline retirement keeps all generated tokens.
+/// * cancel/deadline retirement keeps all generated tokens;
+/// * an accepted speculative-draft burst emits one `Token` per
+///   committed token with contiguous `index`es — a step may advance a
+///   sequence by up to `1 + k` events, but the stream contents are
+///   identical to plain decode (rejected drafts emit nothing).
 #[derive(Clone, Debug)]
 pub enum ServerEvent {
     /// One decoded token, emitted the step it was sampled.
@@ -388,6 +392,14 @@ pub struct SequenceState {
     /// victim: its pages are released at the end of the step and the
     /// request re-enqueues for recompute.
     pub preempted: bool,
+    /// Draft tokens riding this step's fused pass as extra verify rows
+    /// (speculative decoding; see `coordinator::speculator`). Strictly
+    /// step-transient: set in the engine's phase 1 only after KV
+    /// reservation for every draft row succeeded, consumed and cleared
+    /// by the phase-3 verify — empty at every step boundary, so
+    /// preemption, cancellation, and resume never see a draft.
+    /// `generated` holds committed tokens only.
+    pub spec_drafts: Vec<u32>,
 }
 
 impl SequenceState {
@@ -403,6 +415,7 @@ impl SequenceState {
             first_token_at: None,
             overflowed: false,
             preempted: false,
+            spec_drafts: Vec::new(),
         }
     }
 
@@ -428,6 +441,7 @@ impl SequenceState {
             first_token_at,
             overflowed: false,
             preempted: false,
+            spec_drafts: Vec::new(),
         }
     }
 

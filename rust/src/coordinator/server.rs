@@ -116,6 +116,7 @@ pub struct ServerBuilder {
     batch: super::batcher::BatchPolicy,
     threads: usize,
     kv: super::kv_pool::PagedKvOpts,
+    spec: Option<super::speculator::SpecDecodeOpts>,
     intake_limit: usize,
     default_deadline: Option<Duration>,
 }
@@ -128,6 +129,7 @@ impl Default for ServerBuilder {
             batch: super::batcher::BatchPolicy::default(),
             threads: crate::threads::default_threads(),
             kv: super::kv_pool::PagedKvOpts::default(),
+            spec: None,
             intake_limit: DEFAULT_INTAKE_LIMIT,
             default_deadline: None,
         }
@@ -173,6 +175,16 @@ impl ServerBuilder {
         self
     }
 
+    /// Speculative decoding (`--spec-decode` / `--spec-k`): every
+    /// replica drafts with the same prompt-lookup speculator. `None`
+    /// (the default) is plain one-token-per-step decode. Purely a
+    /// scheduling optimization — output is token-for-token identical
+    /// either way (see `coordinator::speculator`).
+    pub fn spec_decode(mut self, spec: Option<super::speculator::SpecDecodeOpts>) -> ServerBuilder {
+        self.spec = spec;
+        self
+    }
+
     /// Bound on accepted-but-unfinished requests per replica; beyond
     /// it [`Server::submit`] rejects with [`SubmitError::QueueFull`].
     pub fn intake_limit(mut self, n: usize) -> ServerBuilder {
@@ -191,14 +203,19 @@ impl ServerBuilder {
     /// worker thread per replica.
     pub fn start(self, model: crate::model::Transformer) -> Server {
         let engines = (0..self.replicas)
-            .map(|_| ServeEngine::with_opts(model.clone(), self.batch, self.threads, self.kv))
+            .map(|_| {
+                let mut e =
+                    ServeEngine::with_opts(model.clone(), self.batch, self.threads, self.kv);
+                e.set_spec_decode(self.spec);
+                e
+            })
             .collect();
         self.start_engines(engines)
     }
 
     /// Start over caller-built engines (heterogeneous replicas, tests).
-    /// `replicas`/`batch`/`threads`/`paged_kv` settings are ignored —
-    /// the engines carry their own.
+    /// `replicas`/`batch`/`threads`/`paged_kv`/`spec_decode` settings
+    /// are ignored — the engines carry their own.
     pub fn start_engines(self, engines: Vec<ServeEngine>) -> Server {
         assert!(!engines.is_empty(), "need at least one engine replica");
         let n = engines.len();

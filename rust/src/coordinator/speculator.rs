@@ -1,0 +1,173 @@
+//! Model-free prompt-lookup drafting for speculative decoding.
+//!
+//! Decode at small batch is latency-bound on one full forward per
+//! token — exactly the regime PTQTP's bandwidth savings target. The
+//! speculator closes the gap from the scheduling side: propose up to
+//! `k` likely continuation tokens *without a second model*, let the
+//! engine score them as extra rows of the same fused
+//! [`Transformer::forward_batch`] pass, and keep the longest prefix
+//! the model itself would have produced (`ServeEngine::step_events`
+//! phase 3). A hit turns k+1 forward passes into one; a miss costs
+//! one extra row block in a pass that was happening anyway.
+//!
+//! Drafting is **prompt lookup** (n-gram suffix matching): find the
+//! most recent earlier occurrence of the longest n-gram that ends the
+//! sequence-so-far (`prompt ++ generated`), and propose the tokens
+//! that followed it last time. Repetitive text — code, templated
+//! prose, quoted context — makes this fire constantly; random text
+//! makes it fire rarely and costs little. There is no checkpoint to
+//! load, no RNG, and no state: [`SpecDecodeOpts::draft`] is a pure
+//! function of the token context, which is what lets preemption
+//! replay and the engine's bitwise-parity discipline extend to
+//! speculation unchanged (DESIGN.md §Speculative-Decoding).
+//!
+//! [`Transformer::forward_batch`]: crate::model::Transformer::forward_batch
+//! [`ServeEngine::step_events`]: super::engine::ServeEngine::step_events
+
+/// Default maximum draft tokens proposed per sequence per step.
+pub const DEFAULT_SPEC_K: usize = 4;
+/// Default smallest suffix n-gram that may anchor a lookup match.
+pub const DEFAULT_MIN_MATCH: usize = 2;
+/// Default largest suffix n-gram tried (longest first).
+pub const DEFAULT_MAX_NGRAM: usize = 4;
+
+/// Prompt-lookup speculative-decoding configuration. Carried by the
+/// engine when `--spec-decode on`; `None` at the engine level means
+/// plain decode (the exact-legacy escape hatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecDecodeOpts {
+    /// Maximum draft tokens per sequence per step (the verify pass
+    /// scores `1 + k` rows for the sequence instead of 1).
+    pub k: usize,
+    /// Smallest anchor n-gram worth matching. 1 fires on any repeated
+    /// token; 2+ trades fire rate for accept rate.
+    pub min_match: usize,
+    /// Largest anchor n-gram, tried first — longer anchors are more
+    /// specific, so their continuations are likelier to be accepted.
+    pub max_ngram: usize,
+}
+
+impl Default for SpecDecodeOpts {
+    fn default() -> SpecDecodeOpts {
+        SpecDecodeOpts {
+            k: DEFAULT_SPEC_K,
+            min_match: DEFAULT_MIN_MATCH,
+            max_ngram: DEFAULT_MAX_NGRAM,
+        }
+    }
+}
+
+impl SpecDecodeOpts {
+    /// Defaults with an explicit draft length `k`.
+    pub fn with_k(k: usize) -> SpecDecodeOpts {
+        SpecDecodeOpts { k, ..SpecDecodeOpts::default() }
+    }
+
+    /// Propose up to `min(cap, self.k)` draft tokens continuing `ctx`
+    /// (the sequence's `prompt ++ generated`, including the token just
+    /// committed this step). Anchors are tried longest-first from
+    /// `max_ngram` down to `min_match`; within one length the **most
+    /// recent** earlier occurrence wins — recency tracks the local
+    /// repetition structure (loops, templated spans) better than the
+    /// first occurrence does. Appends into `out` (cleared first) so
+    /// the decode hot loop reuses one buffer; leaves `out` empty when
+    /// nothing matches. O(len · max_ngram) scan — contexts here are
+    /// bounded by `max_seq`, so this is noise next to a forward pass.
+    pub fn draft(&self, ctx: &[u32], cap: usize, out: &mut Vec<u32>) {
+        out.clear();
+        let cap = cap.min(self.k);
+        if cap == 0 {
+            return;
+        }
+        let len = ctx.len();
+        let hi = self.max_ngram.max(self.min_match);
+        for n in (self.min_match.max(1)..=hi).rev() {
+            // need the anchor plus at least one earlier token to follow
+            if n + 1 > len {
+                continue;
+            }
+            let anchor = &ctx[len - n..];
+            for s in (0..len - n).rev() {
+                if &ctx[s..s + n] == anchor {
+                    let take = cap.min(len - (s + n));
+                    out.extend_from_slice(&ctx[s + n..s + n + take]);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draft(opts: &SpecDecodeOpts, ctx: &[u32], cap: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        opts.draft(ctx, cap, &mut out);
+        out
+    }
+
+    #[test]
+    fn repeated_ngram_drafts_its_continuation() {
+        let opts = SpecDecodeOpts::default();
+        // ... 7 8 9 1 | 7 8  →  anchor [7,8] matched at the front,
+        // continuation [9, 1] plus the second occurrence's own tokens
+        let ctx = [7, 8, 9, 1, 7, 8];
+        assert_eq!(draft(&opts, &ctx, 4), vec![9, 1, 7, 8]);
+    }
+
+    #[test]
+    fn cap_and_k_clamp_the_draft() {
+        let opts = SpecDecodeOpts { k: 2, ..Default::default() };
+        let ctx = [7, 8, 9, 1, 2, 3, 7, 8];
+        assert_eq!(draft(&opts, &ctx, 8), vec![9, 1], "k clamps");
+        assert_eq!(draft(&opts, &ctx, 1), vec![9], "cap clamps below k");
+        assert!(draft(&opts, &ctx, 0).is_empty());
+    }
+
+    #[test]
+    fn no_repetition_drafts_nothing() {
+        let opts = SpecDecodeOpts::default();
+        assert!(draft(&opts, &[1, 2, 3, 4, 5, 6], 4).is_empty());
+        assert!(draft(&opts, &[], 4).is_empty());
+        assert!(draft(&opts, &[5], 4).is_empty(), "anchor needs history");
+    }
+
+    #[test]
+    fn longest_anchor_wins_over_shorter() {
+        let opts = SpecDecodeOpts { min_match: 2, max_ngram: 3, k: 1 };
+        // trigram [5,1,2] says 8 follows; the more recent bigram [1,2]
+        // says 9 follows — the longer, more specific anchor wins
+        let ctx = [5, 1, 2, 8, 3, 1, 2, 9, 5, 1, 2];
+        assert_eq!(draft(&opts, &ctx, 1), vec![8]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins_within_a_length() {
+        let opts = SpecDecodeOpts { min_match: 2, max_ngram: 2, k: 1 };
+        // bigram [1,2] occurs twice earlier; the later one (→ 7) wins
+        let ctx = [1, 2, 9, 1, 2, 7, 1, 2];
+        assert_eq!(draft(&opts, &ctx, 1), vec![7]);
+    }
+
+    #[test]
+    fn min_match_gates_weak_anchors() {
+        let strict = SpecDecodeOpts { min_match: 3, max_ngram: 4, k: 4 };
+        let ctx = [1, 2, 9, 1, 2]; // only a bigram repeats
+        assert!(draft(&strict, &ctx, 4).is_empty());
+        let loose = SpecDecodeOpts { min_match: 1, max_ngram: 4, k: 4 };
+        // bigram anchor [1,2] matches at the front → drafts [9, 1, 2]
+        assert_eq!(draft(&loose, &ctx, 4), vec![9, 1, 2]);
+    }
+
+    #[test]
+    fn draft_is_a_pure_function_of_context() {
+        let opts = SpecDecodeOpts::default();
+        let ctx: Vec<u32> = (0..40).map(|i| i % 7).collect();
+        let a = draft(&opts, &ctx, 4);
+        let b = draft(&opts, &ctx, 4);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "periodic context must fire");
+    }
+}

@@ -227,6 +227,41 @@ impl CorpusGen {
             .collect()
     }
 
+    /// `n` repetitive serving prompts (`gen-corpus --repetitive`,
+    /// `ptqtp bench --speculative`): templated config/code-like lines
+    /// where a small per-prompt pool of `set key = value ;` statements
+    /// repeats several times, so the text has very high n-gram reuse.
+    /// This is the workload where prompt-lookup speculative decoding
+    /// shines — a greedy continuation keeps re-entering statement
+    /// patterns already present in the context, so the drafter's
+    /// suffix match fires on nearly every step. Deterministic for a
+    /// given generator state.
+    pub fn repetitive_prompts(&mut self, n: usize) -> Vec<String> {
+        const KEYS: &[&str] = &["alpha", "beta", "gamma", "delta", "omega", "sigma"];
+        (0..n)
+            .map(|_| {
+                // 2–3 distinct statements, repeated 3–5 times in order
+                let n_stmts = self.rng.range(2, 4);
+                let stmts: Vec<String> = (0..n_stmts)
+                    .map(|_| {
+                        let k = self.rng.choose(KEYS);
+                        let v = self.rng.range(1, 9);
+                        format!("set {k} = {v} ;")
+                    })
+                    .collect();
+                let reps = self.rng.range(3, 6);
+                let mut p = String::from("cfg:");
+                for _ in 0..reps {
+                    for s in &stmts {
+                        p.push(' ');
+                        p.push_str(s);
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
     /// The full training mixture: all three domains + facts + math +
     /// code, interleaved. This is what `python/compile/train.py`
     /// consumes.
@@ -300,6 +335,45 @@ mod tests {
         // zero-length prefix degenerates to bare questions
         let bare = CorpusGen::new(5).shared_prefix_prompts(0, 2);
         assert!(bare[0].starts_with("system: Q:"), "{}", bare[0]);
+    }
+
+    /// Fraction of word-level trigrams in `s` that already occurred
+    /// earlier in `s` — the statistic prompt-lookup drafting feeds on.
+    fn trigram_repeat_rate(s: &str) -> f64 {
+        let words: Vec<&str> = s.split_whitespace().collect();
+        if words.len() < 4 {
+            return 0.0;
+        }
+        let mut seen = std::collections::HashSet::new();
+        let (mut repeats, mut total) = (0usize, 0usize);
+        for w in words.windows(3) {
+            total += 1;
+            if !seen.insert(w.to_vec()) {
+                repeats += 1;
+            }
+        }
+        repeats as f64 / total as f64
+    }
+
+    #[test]
+    fn repetitive_prompts_have_high_ngram_reuse() {
+        let prompts = CorpusGen::new(6).repetitive_prompts(16);
+        assert_eq!(prompts.len(), 16);
+        for p in &prompts {
+            assert!(p.starts_with("cfg:"), "{p}");
+            let rate = trigram_repeat_rate(p);
+            // ≥ 3 repetitions of the statement block ⇒ at least 2/3 of
+            // trigrams are re-occurrences (minus block-boundary noise)
+            assert!(rate > 0.5, "trigram repeat rate {rate} too low for: {p}");
+        }
+        // contrast: ordinary prose has almost no within-line reuse
+        let mut g = CorpusGen::new(6);
+        let wiki = g.domain_text(CorpusDomain::WikiSyn, 40);
+        let avg: f64 = wiki.lines().map(trigram_repeat_rate).sum::<f64>()
+            / wiki.lines().count() as f64;
+        assert!(avg < 0.2, "wiki prose repeat rate {avg} unexpectedly high");
+        // deterministic across generators with the same seed
+        assert_eq!(prompts, CorpusGen::new(6).repetitive_prompts(16));
     }
 
     #[test]

@@ -18,7 +18,7 @@ use ptqtp::bench;
 use ptqtp::cli::{usage, Args, OptSpec};
 use ptqtp::coordinator::kv_pool::DEFAULT_PAGE_SIZE;
 use ptqtp::coordinator::{
-    serve_metrics_json, PagedKvOpts, SamplingParams, ServerBuilder, SubmitOutcome,
+    serve_metrics_json, PagedKvOpts, SamplingParams, ServerBuilder, SpecDecodeOpts, SubmitOutcome,
 };
 use ptqtp::data::{CorpusDomain, CorpusGen, TaskSuite, Tokenizer};
 use ptqtp::eval;
@@ -91,12 +91,12 @@ fn help() -> String {
         "ptqtp",
         "Post-Training Quantization to Trit-Planes — full-system reproduction",
         &[
-            ("gen-corpus", "generate synthetic corpora + tokenizer into --out [--shared-prefix W: also write prompts_shared.txt]"),
+            ("gen-corpus", "generate synthetic corpora + tokenizer into --out [--shared-prefix W: also write prompts_shared.txt] [--repetitive: also write prompts_repetitive.txt]"),
             ("gen-ckpt", "gen-ckpt --out X.ptw [--family tiny] [--data DIR|--vocab N]  (random FP32 checkpoint)"),
             ("quantize", "quantize --model X.ptw --method ptqtp --out Q.ptw  (Q.ptw = packed PTW2 artifact + manifest)"),
             ("eval", "eval --model X.ptw [--method ptqtp] [--data DIR]  (packed checkpoints skip quantization)"),
             ("serve", "serve --model X.ptw [--method ptqtp] --requests N [--replicas R]  (packed checkpoints skip quantization)"),
-            ("bench", "bench --table N | --fig N | --batched | --kernels | --attention | --prefix  (paper exhibits + perf benches)"),
+            ("bench", "bench --table N | --fig N | --batched | --kernels | --attention | --prefix | --speculative  (paper exhibits + perf benches)"),
             ("runtime", "runtime --artifacts DIR  (PJRT smoke test)"),
         ],
         &[
@@ -112,6 +112,9 @@ fn help() -> String {
             OptSpec { name: "page-size", help: "serve: KV positions per page, ≥ 8 (0 = one max_seq page, i.e. contiguous; env PTQTP_PAGE_SIZE)", default: Some("64") },
             OptSpec { name: "prefix-cache", help: "serve: radix prefix cache on|off (off = exact legacy layout: contiguous, nothing shared)", default: Some("on") },
             OptSpec { name: "kv-pages", help: "serve: per-replica KV page budget; exhaustion preempts + recomputes", default: Some("capacity×⌈max_seq/page⌉") },
+            OptSpec { name: "spec-decode", help: "serve: prompt-lookup speculative decoding on|off (output token-for-token identical; env PTQTP_SPEC_DECODE)", default: Some("off") },
+            OptSpec { name: "spec-k", help: "serve: max speculative draft tokens per step (≥ 1; needs --spec-decode on)", default: Some("4") },
+            OptSpec { name: "print-tokens", help: "serve: print each response's token ids (sorted by request id) for cross-config parity diffs", default: None },
             OptSpec { name: "prompts", help: "serve: prompt file (one per line, cycled to --requests; e.g. prompts_shared.txt)", default: None },
             OptSpec { name: "intake-limit", help: "serve: max accepted-but-unfinished requests per replica; beyond it submit rejects (QueueFull)", default: Some("1024") },
             OptSpec { name: "deadline-ms", help: "serve: per-request deadline in ms; queued or running requests past it finish DeadlineExceeded", default: None },
@@ -153,6 +156,19 @@ fn cmd_gen_corpus(args: &Args) -> anyhow::Result<()> {
         std::fs::write(format!("{out}/prompts_shared.txt"), &joined)?;
         all_text.push_str(&joined);
         println!("wrote {n} shared-prefix prompts ({prefix_words} prefix words) to {out}/prompts_shared.txt");
+    }
+    // repetitive prompts (the speculative-decoding workload: templated
+    // code-like lines with heavy n-gram reuse, so prompt-lookup
+    // drafting fires) — also pre-tokenizer so their vocabulary is
+    // covered
+    if args.flag("repetitive") {
+        let n = args.usize_or("repetitive-prompts", 16);
+        let mut rep_gen = CorpusGen::new(seed ^ 0x7EC1);
+        let prompts = rep_gen.repetitive_prompts(n);
+        let joined = prompts.join("\n");
+        std::fs::write(format!("{out}/prompts_repetitive.txt"), &joined)?;
+        all_text.push_str(&joined);
+        println!("wrote {n} repetitive prompts to {out}/prompts_repetitive.txt");
     }
     let tok = Tokenizer::from_text(&all_text);
     tok.save(format!("{out}/tokenizer.json"))?;
@@ -377,10 +393,30 @@ fn resolve_kv_opts(args: &Args, max_seq: usize) -> anyhow::Result<PagedKvOpts> {
     })
 }
 
+/// Resolve the speculative-decoding knobs: `--spec-decode on|off` >
+/// `PTQTP_SPEC_DECODE` env > default off. `--spec-k N` sets the max
+/// draft length (default 4, must be ≥ 1 — `k = 0` is just `off`
+/// spelled confusingly, so it's rejected). Speculation is a pure
+/// scheduling optimization: output is token-for-token identical to
+/// plain decode (see `coordinator::speculator`).
+fn resolve_spec_opts(args: &Args) -> anyhow::Result<Option<SpecDecodeOpts>> {
+    let on = args.on_off_env("spec-decode", "PTQTP_SPEC_DECODE")?.unwrap_or(false);
+    let k = args.usize_opt("spec-k")?;
+    if !on {
+        return Ok(None);
+    }
+    match k {
+        Some(0) => anyhow::bail!("--spec-k must be ≥ 1 (use --spec-decode off to disable)"),
+        Some(k) => Ok(Some(SpecDecodeOpts::default().with_k(k))),
+        None => Ok(Some(SpecDecodeOpts::default())),
+    }
+}
+
 /// `serve --model X.ptw [--method M] [--requests N] [--data data/]
 /// [--threads T] [--replicas R] [--page-size N] [--prefix-cache on|off]
-/// [--kv-pages N] [--prompts FILE] [--intake-limit N] [--deadline-ms MS]
-/// [--metrics-json [PATH]]`
+/// [--kv-pages N] [--spec-decode on|off] [--spec-k N] [--prompts FILE]
+/// [--intake-limit N] [--deadline-ms MS] [--metrics-json [PATH]]
+/// [--print-tokens]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let lm = load_and_quantize(args)?;
     let (model, method) = (lm.model, lm.method);
@@ -418,6 +454,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             None => "default".to_string(),
         }
     );
+    let spec = resolve_spec_opts(args)?;
+    match spec {
+        Some(s) => eprintln!(
+            "spec-decode: on (prompt-lookup, k={}, min-match {})",
+            s.k, s.min_match
+        ),
+        None => eprintln!("spec-decode: off"),
+    }
 
     // workload: prompts from --prompts FILE (cycled to --requests, the
     // shared-prefix serving path) or generated math tasks (realistic
@@ -457,7 +501,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .replicas(replicas)
         .route(ptqtp::coordinator::router::RoutePolicy::LeastLoaded)
         .threads(threads)
-        .paged_kv(kv);
+        .paged_kv(kv)
+        .spec_decode(spec);
     if let Some(limit) = intake_limit {
         builder = builder.intake_limit(limit);
     }
@@ -488,6 +533,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if rejected > 0 {
         println!("rejected {rejected} of {} submissions at admission", prompts.len());
     }
+    // `--print-tokens`: one deterministic line per response, sorted by
+    // (request id, sample) — CI diffs this across serve configurations
+    // (e.g. --spec-decode on vs off) to pin token-for-token parity
+    if args.flag("print-tokens") {
+        let mut responses = report.responses();
+        responses.sort_by_key(|r| (r.id, r.sample));
+        for r in &responses {
+            let toks: Vec<String> = r.tokens.iter().map(u32::to_string).collect();
+            println!("tokens {}/{}: {}", r.id, r.sample, toks.join(" "));
+        }
+    }
     for (i, m) in report.metrics.iter().enumerate() {
         println!("replica {i}:\n{}", m.render(wall));
     }
@@ -500,7 +556,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `bench --table N | --fig N | --batched | --kernels | --attention |
-/// --prefix [--quick]`
+/// --prefix | --speculative [--quick]`
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let quick = args.flag("quick");
     if args.flag("batched") {
@@ -514,6 +570,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("prefix") {
         return bench::prefix::run(quick, args);
+    }
+    if args.flag("speculative") {
+        return bench::speculative::run(quick, args);
     }
     if let Some(t) = args.get("table") {
         return bench::run_table(t, quick, args);
@@ -531,7 +590,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     anyhow::bail!(
-        "bench requires --table N, --fig N, --batched, --kernels, --attention, --prefix, or --all"
+        "bench requires --table N, --fig N, --batched, --kernels, --attention, --prefix, \
+         --speculative, or --all"
     )
 }
 

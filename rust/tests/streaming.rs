@@ -118,6 +118,104 @@ fn stream_matches_final_across_threads_simd_kv() {
     }
 }
 
+/// ISSUE 9 satellite: speculative decoding must be invisible on the
+/// wire. With `--spec-decode on`, an accepted draft burst emits one
+/// `Token` event per committed token with contiguous `index`es
+/// (checked inside [`drain_events`]), the concatenated stream equals
+/// the final response, and every cell of the execution matrix —
+/// threads {1, 2} × SIMD {off, on} × KV {contiguous, paged} — produces
+/// token streams bit-identical to the spec-off scalar baseline, for
+/// greedy and temperature sequences alike.
+#[test]
+fn speculative_stream_matches_plain_across_matrix() {
+    use ptqtp::coordinator::SpecDecodeOpts;
+    // 12-token vocab so a bigram-complete prompt (every `[x, t]` pair,
+    // 25 tokens) fits max_seq with decode room: the drafter provably
+    // fires at the first decode planning of each greedy request, so
+    // the speculation-activity assert below cannot flake
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = 12;
+    cfg.max_seq = 48;
+    let mut rng = Rng::new(64);
+    let mut model = Transformer::random(cfg, &mut rng);
+    model.quantize_with(
+        quant::by_name("ptqtp", 10).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    let bigram_complete = |x: u32| -> Vec<u32> {
+        let mut p = Vec::new();
+        for t in 0..12u32 {
+            p.push(x);
+            p.push(t);
+        }
+        p.push(x);
+        p
+    };
+    let contiguous = PagedKvOpts {
+        page_size: 48,
+        prefix_cache: false,
+        page_budget: None,
+    };
+    let paged = PagedKvOpts {
+        page_size: 8,
+        prefix_cache: true,
+        page_budget: None,
+    };
+
+    let run = |threads: usize, simd: bool, kv: PagedKvOpts, spec: Option<SpecDecodeOpts>| {
+        let mut e = ServeEngine::with_opts(model.clone(), BatchPolicy::default(), threads, kv);
+        e.set_simd(simd);
+        e.set_spec_decode(spec);
+        for i in 0..4u64 {
+            let (prompt, mut params) = if i % 2 == 0 {
+                (bigram_complete(3 + i as u32), SamplingParams::greedy(5).with_stop(None))
+            } else {
+                let p: Vec<u32> = (0..4).map(|j| (j * 5 + i as u32) % 12).collect();
+                (p, SamplingParams::greedy(5).with_stop(None))
+            };
+            if i == 3 {
+                params = params.with_temperature(0.7, 33 + i);
+            }
+            e.submit(Request::new(i, prompt, params));
+        }
+        let (streams, mut done) = drain_events(&mut e);
+        assert_eq!(done.len(), 4, "threads={threads} simd={simd}: lost responses");
+        for r in &done {
+            assert_eq!(
+                streams.get(&(r.id, r.sample)).map(Vec::as_slice),
+                Some(r.tokens.as_slice()),
+                "threads={threads} simd={simd} spec={}: stream for req {} diverged from final",
+                spec.is_some(),
+                r.id
+            );
+        }
+        if spec.is_some() {
+            assert!(
+                e.metrics.spec_drafted > 0,
+                "threads={threads} simd={simd}: speculation never fired"
+            );
+        } else {
+            assert_eq!(e.metrics.spec_drafted, 0);
+        }
+        done.sort_by_key(|r| r.id);
+        done.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+
+    let base = run(1, false, contiguous, None);
+    let spec = Some(SpecDecodeOpts::default());
+    for &threads in &[1usize, 2] {
+        for &simd in &[false, true] {
+            for (kv_name, kv) in [("contiguous", contiguous), ("paged", paged)] {
+                assert_eq!(
+                    run(threads, simd, kv, spec),
+                    base,
+                    "spec-on threads={threads} simd={simd} kv={kv_name} diverged from plain baseline"
+                );
+            }
+        }
+    }
+}
+
 /// `n > 1` fork streams: one request fans out into `n` interleaved
 /// token streams distinguished by the `sample` tag; each stream must
 /// equal its own final response, and at temperature > 0 the per-sample
