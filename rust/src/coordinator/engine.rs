@@ -12,6 +12,7 @@
 //! state performs no per-token heap allocation.
 
 use super::batcher::{plan_step, BatchPolicy};
+use super::faults::{FaultInjector, FaultKind};
 use super::kv_pool::{KvPool, PagedKvOpts};
 use super::metrics::Metrics;
 use super::prefix_cache::PrefixCache;
@@ -74,6 +75,17 @@ pub struct ServeEngine {
     /// so `Server::submit`'s admission check sees live occupancy.
     /// `None` when the engine is driven directly (no admission front).
     intake_depth: Option<Arc<AtomicUsize>>,
+    /// Deterministic fault injection (chaos testing): polled once per
+    /// step. `None` — the production default — costs one branch.
+    faults: Option<FaultInjector>,
+    /// Steps executed by this engine *generation* (a respawned replica
+    /// starts over at 0); the fault plan is keyed by this.
+    steps: u64,
+    /// One-step flag set by an injected `PagesExhausted` fault: every
+    /// reserve this step reports exhaustion, forcing the preemption
+    /// path even though real capacity exists (see
+    /// [`ServeEngine::mark_preempt`]'s `forced` parameter).
+    force_exhaust: bool,
 }
 
 impl ServeEngine {
@@ -146,7 +158,17 @@ impl ServeEngine {
             spec_ctx: Vec::new(),
             spec_buf: Vec::new(),
             intake_depth: None,
+            faults: None,
+            steps: 0,
+            force_exhaust: false,
         }
+    }
+
+    /// Install a deterministic fault injector for this replica (chaos
+    /// testing; see `coordinator::faults`). `None` — the default — is
+    /// completely inert.
+    pub fn set_fault_injector(&mut self, inj: Option<FaultInjector>) {
+        self.faults = inj;
     }
 
     /// Enable (`Some`) or disable (`None`) prompt-lookup speculative
@@ -396,6 +418,9 @@ impl ServeEngine {
             FinishReason::Cancelled => self.metrics.cancelled += 1,
             FinishReason::DeadlineExceeded => self.metrics.deadline_expired += 1,
             FinishReason::PromptTooLong => {}
+            // synthesized by the supervisor, never by an engine — it is
+            // accounted server-side in `ServerStats::replica_lost`
+            FinishReason::ReplicaLost => {}
             FinishReason::Stop | FinishReason::Length | FinishReason::CacheOverflow => {
                 self.metrics.requests_finished += 1;
             }
@@ -434,6 +459,11 @@ impl ServeEngine {
     /// evicting stale prefix-tree pages under pressure. `false` means
     /// the pool is truly exhausted — the caller preempts.
     fn try_reserve(&mut self, slot: usize, n: usize) -> bool {
+        if self.force_exhaust {
+            // injected exhaustion: report failure without evicting
+            // prefix pages — the shortage is synthetic, the tree is fine
+            return false;
+        }
         loop {
             match self.running[slot].cache.reserve(n) {
                 Ok(()) => return true,
@@ -467,13 +497,18 @@ impl ServeEngine {
     /// overflows the last holder standing — the preemption loop
     /// terminates (pinned by
     /// `lockstep_preemption_under_tight_budget_stays_live`).
-    fn mark_preempt(&mut self, slot: usize) {
+    /// `forced` marks *injected* exhaustion ([`FaultKind::PagesExhausted`]):
+    /// real capacity exists, so the lone-survivor `CacheOverflow` escape
+    /// below must not fire — the victim preempts unconditionally and its
+    /// resume succeeds next step, keeping output token-identical to a
+    /// fault-free run (the PR-6 replay argument).
+    fn mark_preempt(&mut self, slot: usize, forced: bool) {
         let others_hold_pages = self
             .running
             .iter()
             .enumerate()
             .any(|(i, s)| i != slot && !s.preempted && s.cache.pages_held() > 0);
-        if !others_hold_pages {
+        if !forced && !others_hold_pages {
             self.running[slot].overflowed = true;
             return;
         }
@@ -526,7 +561,7 @@ impl ServeEngine {
             .into_iter()
             .filter_map(|ev| match ev {
                 ServerEvent::Done(resp) => Some(resp),
-                ServerEvent::Token { .. } => None,
+                ServerEvent::Token { .. } | ServerEvent::ReplicaDown { .. } => None,
             })
             .collect()
     }
@@ -545,6 +580,20 @@ impl ServeEngine {
     /// stepping each sequence alone (`max_running == 1`): the batched
     /// model path is bit-identical per row to sequential decoding.
     pub fn step_events(&mut self, out: &mut Vec<ServerEvent>) {
+        let step = self.steps;
+        self.steps += 1;
+        if let Some(inj) = &self.faults {
+            match inj.fire_step(step) {
+                Some(FaultKind::Panic) => {
+                    panic!("injected fault: panic (step {step})")
+                }
+                Some(FaultKind::PagesExhausted) => self.force_exhaust = true,
+                Some(FaultKind::SlowStepMs(ms)) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms))
+                }
+                Some(FaultKind::CkptIoError) | None => {}
+            }
+        }
         self.sweep_lifecycle(out);
         self.admit(out);
         let slots: Vec<(bool, usize, bool)> = self
@@ -590,7 +639,7 @@ impl ServeEngine {
                 // fused pass can never fail; exhaustion here means
                 // preemption, decided before any row is built
                 if !self.try_reserve(slot, take) {
-                    self.mark_preempt(slot);
+                    self.mark_preempt(slot, self.force_exhaust);
                     continue;
                 }
                 let seq = &mut self.running[slot];
@@ -673,7 +722,7 @@ impl ServeEngine {
                     self.spec_buf.clear();
                 }
                 if !cache_full && !self.try_reserve(slot, 1) {
-                    self.mark_preempt(slot);
+                    self.mark_preempt(slot, self.force_exhaust);
                     continue;
                 }
                 let seq = &mut self.running[slot];
@@ -853,6 +902,9 @@ impl ServeEngine {
                 i += 1;
             }
         }
+
+        // an injected exhaustion lasts exactly one step
+        self.force_exhaust = false;
 
         // --- refresh pool + queue gauges for the serve-log summary
         let ps = self.pool.stats();
@@ -1839,6 +1891,9 @@ mod tests {
                     dones += 1;
                     let s = streams.remove(&(resp.id, resp.sample)).unwrap_or_default();
                     assert_eq!(s, resp.tokens, "stream == final tokens, req {}", resp.id);
+                }
+                ServerEvent::ReplicaDown { .. } => {
+                    panic!("bare engine never emits ReplicaDown")
                 }
             }
         }

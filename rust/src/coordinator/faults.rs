@@ -1,0 +1,285 @@
+//! Deterministic fault injection for the supervised serving layer.
+//!
+//! A [`FaultPlan`] is a fixed list of faults keyed by `(replica, step)`,
+//! built either from an explicit JSON file (`--fault-plan FILE`) or from
+//! a seed (`PTQTP_FAULT_SEED`) so CI chaos runs, property tests, and unit
+//! tests all share one mechanism. The plan is compiled in always but
+//! completely inert unless installed — an engine without an injector
+//! executes zero extra branches on the hot path beyond one `Option`
+//! check per step.
+//!
+//! Entries are **one-shot**: a replica that panics at step N and is
+//! respawned cold restarts its step counter at 0, so a persistent
+//! `(replica, step)` trigger would re-fire forever and the run could
+//! never converge. Each entry carries an `AtomicBool` latch instead.
+//!
+//! JSON schema (`ptqtp-fault-plan/1`):
+//!
+//! ```json
+//! {
+//!   "schema": "ptqtp-fault-plan/1",
+//!   "faults": [
+//!     {"replica": 1, "step": 4, "kind": "panic"},
+//!     {"replica": 0, "step": 6, "kind": "pages_exhausted"},
+//!     {"replica": 2, "kind": "ckpt_io"},
+//!     {"replica": 0, "step": 9, "kind": "slow_step_ms", "ms": 50}
+//!   ]
+//! }
+//! ```
+//!
+//! `ckpt_io` has no step: it fires on the replica's next checkpoint
+//! *load* (i.e. the supervisor's restart path), exercising the
+//! retry-with-backoff read hardening.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::rng::Rng;
+use crate::serialize::Json;
+
+/// What to do when an armed entry fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the engine step (exercises `catch_unwind` isolation).
+    Panic,
+    /// Force the paged-KV reserve path to report exhaustion for one
+    /// step, driving the recompute-preemption machinery.
+    PagesExhausted,
+    /// Sleep this many milliseconds inside the step (deadline testing).
+    SlowStepMs(u64),
+    /// Fail the replica's next checkpoint read during supervisor
+    /// restart (exercises the retry-once-with-backoff path).
+    CkptIoError,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultKind::Panic => write!(f, "panic"),
+            FaultKind::PagesExhausted => write!(f, "pages_exhausted"),
+            FaultKind::SlowStepMs(ms) => write!(f, "slow_step_ms({ms})"),
+            FaultKind::CkptIoError => write!(f, "ckpt_io"),
+        }
+    }
+}
+
+/// One scheduled fault. `step` counts engine steps within a replica
+/// *generation* (restart resets it to 0); `CkptIoError` ignores it.
+#[derive(Clone, Debug)]
+pub struct FaultEntry {
+    pub replica: usize,
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults shared (via `Arc`) between the
+/// supervisor and every replica's injector handle.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<FaultEntry>,
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultPlan {
+    pub fn new(entries: Vec<FaultEntry>) -> Self {
+        let fired = entries.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan { entries, fired }
+    }
+
+    /// Derive a small chaos schedule from a seed: 1–2 replica panics in
+    /// the early decode steps plus (on odd seeds) one forced page
+    /// exhaustion. Kept deliberately mild — the point is determinism,
+    /// not volume; explicit plans cover the exotic shapes.
+    pub fn from_seed(seed: u64, replicas: usize) -> Self {
+        let n = replicas.max(1);
+        let mut rng = Rng::new(seed ^ 0xFA01_7517);
+        let mut entries = Vec::new();
+        let panics = 1 + (rng.next_u64() % 2) as usize;
+        for _ in 0..panics.min(n.saturating_sub(1).max(1)) {
+            entries.push(FaultEntry {
+                replica: rng.below(n),
+                step: 2 + rng.next_u64() % 9,
+                kind: FaultKind::Panic,
+            });
+        }
+        if seed % 2 == 1 {
+            entries.push(FaultEntry {
+                replica: rng.below(n),
+                step: 3 + rng.next_u64() % 6,
+                kind: FaultKind::PagesExhausted,
+            });
+        }
+        FaultPlan::new(entries)
+    }
+
+    /// Parse the `ptqtp-fault-plan/1` JSON schema.
+    pub fn parse(src: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(src)?;
+        let schema = j.req_str("schema")?;
+        anyhow::ensure!(
+            schema == "ptqtp-fault-plan/1",
+            "unsupported fault-plan schema {schema:?}"
+        );
+        let faults = j
+            .get("faults")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("fault plan missing `faults` array"))?;
+        let mut entries = Vec::with_capacity(faults.len());
+        for f in faults {
+            let replica = f.req_usize("replica")?;
+            let kind = match f.req_str("kind")? {
+                "panic" => FaultKind::Panic,
+                "pages_exhausted" => FaultKind::PagesExhausted,
+                "ckpt_io" => FaultKind::CkptIoError,
+                "slow_step_ms" => FaultKind::SlowStepMs(f.req_f64("ms")? as u64),
+                other => anyhow::bail!("unknown fault kind {other:?}"),
+            };
+            let step = match f.get("step") {
+                Some(s) => s.as_f64().map(|v| v as u64).unwrap_or(0),
+                None => 0,
+            };
+            entries.push(FaultEntry { replica, step, kind });
+        }
+        Ok(FaultPlan::new(entries))
+    }
+
+    /// Load a plan from a `--fault-plan FILE` path.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read fault plan {path}: {e}"))?;
+        Self::parse(&src)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Fire the first unfired step-keyed entry matching `(replica,
+    /// step)`. One-shot: each entry fires at most once per process.
+    pub fn fire_step(&self, replica: usize, step: u64) -> Option<FaultKind> {
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.replica != replica || e.step != step || e.kind == FaultKind::CkptIoError {
+                continue;
+            }
+            if !self.fired[i].swap(true, Ordering::AcqRel) {
+                return Some(e.kind);
+            }
+        }
+        None
+    }
+
+    /// Fire a pending checkpoint-I/O fault for this replica, if any.
+    pub fn fire_ckpt(&self, replica: usize) -> bool {
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.replica != replica || e.kind != FaultKind::CkptIoError {
+                continue;
+            }
+            if !self.fired[i].swap(true, Ordering::AcqRel) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Per-replica handle the engine polls once per step. Cloning is cheap;
+/// the latch state lives in the shared plan.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    replica: usize,
+}
+
+impl FaultInjector {
+    pub fn new(plan: Arc<FaultPlan>, replica: usize) -> Self {
+        FaultInjector { plan, replica }
+    }
+
+    pub fn fire_step(&self, step: u64) -> Option<FaultKind> {
+        self.plan.fire_step(self.replica, step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_fire_exactly_once() {
+        let plan = FaultPlan::new(vec![FaultEntry {
+            replica: 1,
+            step: 4,
+            kind: FaultKind::Panic,
+        }]);
+        assert_eq!(plan.fire_step(0, 4), None, "wrong replica");
+        assert_eq!(plan.fire_step(1, 3), None, "wrong step");
+        assert_eq!(plan.fire_step(1, 4), Some(FaultKind::Panic));
+        assert_eq!(plan.fire_step(1, 4), None, "one-shot latch");
+    }
+
+    #[test]
+    fn ckpt_faults_are_separate_from_step_faults() {
+        let plan = FaultPlan::new(vec![
+            FaultEntry {
+                replica: 0,
+                step: 0,
+                kind: FaultKind::CkptIoError,
+            },
+            FaultEntry {
+                replica: 0,
+                step: 0,
+                kind: FaultKind::PagesExhausted,
+            },
+        ]);
+        // step firing skips ckpt entries even at the same (replica, step)
+        assert_eq!(plan.fire_step(0, 0), Some(FaultKind::PagesExhausted));
+        assert!(plan.fire_ckpt(0));
+        assert!(!plan.fire_ckpt(0), "ckpt latch is one-shot too");
+        assert!(!plan.fire_ckpt(1));
+    }
+
+    #[test]
+    fn json_roundtrip_covers_every_kind() {
+        let src = r#"{
+            "schema": "ptqtp-fault-plan/1",
+            "faults": [
+                {"replica": 1, "step": 4, "kind": "panic"},
+                {"replica": 0, "step": 6, "kind": "pages_exhausted"},
+                {"replica": 2, "kind": "ckpt_io"},
+                {"replica": 0, "step": 9, "kind": "slow_step_ms", "ms": 50}
+            ]
+        }"#;
+        let plan = FaultPlan::parse(src).unwrap();
+        assert_eq!(plan.fire_step(1, 4), Some(FaultKind::Panic));
+        assert_eq!(plan.fire_step(0, 6), Some(FaultKind::PagesExhausted));
+        assert_eq!(plan.fire_step(0, 9), Some(FaultKind::SlowStepMs(50)));
+        assert!(plan.fire_ckpt(2));
+    }
+
+    #[test]
+    fn bad_schema_and_bad_kind_are_typed_errors() {
+        assert!(FaultPlan::parse(r#"{"schema": "nope/9", "faults": []}"#).is_err());
+        let bad_kind = r#"{"schema": "ptqtp-fault-plan/1",
+                           "faults": [{"replica": 0, "kind": "meteor"}]}"#;
+        assert!(FaultPlan::parse(bad_kind).is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_nonempty() {
+        let a = FaultPlan::from_seed(7, 3);
+        let b = FaultPlan::from_seed(7, 3);
+        assert!(!a.is_empty());
+        assert_eq!(a.entries.len(), b.entries.len());
+        for (x, y) in a.entries.iter().zip(b.entries.iter()) {
+            assert_eq!(x.replica, y.replica);
+            assert_eq!(x.step, y.step);
+            assert_eq!(x.kind, y.kind);
+        }
+        assert!(a.entries.iter().any(|e| e.kind == FaultKind::Panic));
+    }
+}

@@ -301,28 +301,50 @@ pub struct ServerStats {
     pub queue_full: u64,
     pub server_stopped: u64,
     pub invalid_params: u64,
+    /// Pinned submissions bounced because their replica was mid-respawn.
+    pub replica_restarting: u64,
+    /// Degraded-mode supervision counters. A replica death bumps
+    /// `replica_restarts`; each orphaned in-flight request bumps
+    /// `requeued` when it is rescheduled and `retries` on every replay
+    /// attempt; a request whose retry budget ran out (or whose pinned
+    /// replica could not be restarted) bumps `replica_lost` and retires
+    /// with a synthetic [`FinishReason::ReplicaLost`](super::request::
+    /// FinishReason) response.
+    pub replica_restarts: u64,
+    pub requeued: u64,
+    pub retries: u64,
+    pub replica_lost: u64,
 }
 
 /// The `serve-metrics.json` artifact: server-level admission counters
 /// + the fleet aggregate + per-replica snapshots. After a
 /// `Server::drain()` (no requests in flight) the exported counters
-/// satisfy the request-granular identity
-/// `completed + rejected + cancelled + expired == submitted`.
+/// satisfy the request-granular identity — extended in schema `/2`
+/// with the degraded-mode term:
+/// `completed + rejected + cancelled + expired + replica_lost == submitted`.
 pub fn serve_metrics_json(stats: &ServerStats, replicas: &[Metrics], wall: Duration) -> Json {
     let agg = Metrics::aggregate(replicas);
-    let rejected =
-        stats.queue_full + stats.server_stopped + stats.invalid_params + agg.rejected;
+    let rejected = stats.queue_full
+        + stats.server_stopped
+        + stats.invalid_params
+        + stats.replica_restarting
+        + agg.rejected;
     Json::obj()
-        .set("schema", "ptqtp-serve-metrics/1")
+        .set("schema", "ptqtp-serve-metrics/2")
         .set("submitted", stats.submitted)
         .set("accepted", stats.accepted)
         .set("rejected", rejected)
         .set("queue_full", stats.queue_full)
         .set("server_stopped", stats.server_stopped)
         .set("invalid_params", stats.invalid_params)
+        .set("replica_restarting", stats.replica_restarting)
         .set("completed", agg.requests_finished)
         .set("cancelled", agg.cancelled)
         .set("expired", agg.deadline_expired)
+        .set("replica_restarts", stats.replica_restarts)
+        .set("requeued", stats.requeued)
+        .set("retries", stats.retries)
+        .set("replica_lost", stats.replica_lost)
         .set("responses", agg.completed)
         .set("prefill_tokens", agg.prefill_tokens)
         .set("decode_tokens", agg.decode_tokens)
@@ -513,22 +535,32 @@ mod tests {
         b.cancelled = 1;
         b.record_response(&resp(10));
         let stats = ServerStats {
-            submitted: 7,
-            accepted: 5,
+            submitted: 8,
+            accepted: 6,
             queue_full: 2,
-            server_stopped: 0,
-            invalid_params: 0,
+            replica_restarts: 1,
+            requeued: 1,
+            retries: 2,
+            replica_lost: 1,
+            ..ServerStats::default()
         };
         let j = serve_metrics_json(&stats, &[a, b], Duration::from_secs(1));
         // round-trip through the hand-rolled parser, as CI will
         let j = Json::parse(&j.pretty()).unwrap();
-        assert_eq!(j.req_str("schema").unwrap(), "ptqtp-serve-metrics/1");
+        assert_eq!(j.req_str("schema").unwrap(), "ptqtp-serve-metrics/2");
         let get = |k: &str| j.req_f64(k).unwrap() as u64;
         assert_eq!(
-            get("completed") + get("rejected") + get("cancelled") + get("expired"),
+            get("completed")
+                + get("rejected")
+                + get("cancelled")
+                + get("expired")
+                + get("replica_lost"),
             get("submitted"),
-            "request-granular identity"
+            "extended request-granular identity"
         );
+        assert_eq!(get("replica_restarts"), 1);
+        assert_eq!(get("requeued"), 1);
+        assert_eq!(get("retries"), 2);
         assert_eq!(get("responses"), 4);
         assert_eq!(j.get("per_replica").unwrap().as_arr().unwrap().len(), 2);
         let ttft = j.get("ttft_ms").unwrap();

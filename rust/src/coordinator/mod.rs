@@ -9,6 +9,13 @@
 //! per-token streaming events, cancellation/deadlines at step
 //! boundaries — matches the async original move-for-move.
 //!
+//! The front-end is *supervised* (DESIGN.md §Fault-Tolerance): worker
+//! panics are isolated per replica with `catch_unwind`, dead replicas
+//! respawn cold from the [`ModelSource`], orphaned requests replay
+//! token-identically under a bounded [`RetryPolicy`], and the whole
+//! path is exercised by the deterministic fault-injection layer in
+//! [`faults`].
+//!
 //! Data flow:
 //!
 //! ```text
@@ -28,6 +35,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod faults;
 pub mod kv_pool;
 pub mod metrics;
 pub mod prefix_cache;
@@ -35,8 +43,10 @@ pub mod request;
 pub mod router;
 pub mod server;
 pub mod speculator;
+pub mod supervisor;
 
 pub use engine::ServeEngine;
+pub use faults::{FaultEntry, FaultInjector, FaultKind, FaultPlan};
 pub use kv_pool::PagedKvOpts;
 pub use metrics::{serve_metrics_json, LatencyHistogram, Metrics, ServerStats};
 pub use request::{
@@ -45,3 +55,4 @@ pub use request::{
 };
 pub use server::{DrainReport, Server, ServerBuilder, SubmitOutcome};
 pub use speculator::SpecDecodeOpts;
+pub use supervisor::{ModelSource, RestartError, RetryPolicy};

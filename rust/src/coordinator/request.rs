@@ -127,6 +127,11 @@ pub enum SubmitError {
     /// The worker threads have exited; previously this case silently
     /// dropped the request while returning a live-looking id.
     ServerStopped,
+    /// The session-pinned replica is being respawned by the supervisor.
+    /// Unlike [`SubmitError::ServerStopped`], the rest of the server is
+    /// healthy — sessionless requests spill to another replica instead
+    /// of seeing this; pinned callers should back off and retry.
+    ReplicaRestarting { replica: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -141,6 +146,9 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "intake queue full (replica {replica})")
             }
             SubmitError::ServerStopped => write!(f, "server stopped"),
+            SubmitError::ReplicaRestarting { replica } => {
+                write!(f, "replica {replica} is restarting")
+            }
         }
     }
 }
@@ -317,6 +325,12 @@ pub enum FinishReason {
     /// Retired because [`Request::deadline`] lapsed; tokens generated
     /// so far are kept, KV pages are released eagerly.
     DeadlineExceeded,
+    /// The replica serving this request died and the retry budget
+    /// ([`RetryPolicy`](crate::coordinator::RetryPolicy)) was exhausted
+    /// — or the request was pinned to a session whose replica could not
+    /// be restarted. The synthetic terminal [`Response`] carries no
+    /// tokens.
+    ReplicaLost,
 }
 
 /// Completed request.
@@ -362,6 +376,15 @@ pub enum ServerEvent {
     },
     /// Terminal event for one sequence.
     Done(Response),
+    /// A replica's engine loop died (panic, injected fault, or
+    /// checkpoint-load failure during restart). Emitted once per death
+    /// by the supervision layer *after* every event the replica
+    /// produced before dying (the mpsc channel preserves per-sender
+    /// order), so a consumer that sees `ReplicaDown` has already seen
+    /// everything the victim completed. In-flight requests are requeued
+    /// to healthy replicas by the supervisor; this event is
+    /// informational.
+    ReplicaDown { replica: usize, cause: String },
 }
 
 /// Lifecycle of an admitted sequence inside the engine.

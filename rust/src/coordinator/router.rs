@@ -37,12 +37,20 @@ impl Router {
         self.inflight.len()
     }
 
+    /// The replica a session key pins to — the same stable hash
+    /// [`Router::route`] applies, exposed so the supervisor can replay
+    /// a pinned request to its home replica without recording a new
+    /// assignment. Only meaningful for `session != 0`.
+    pub fn session_replica(&self, session: u64) -> usize {
+        (session.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % self.inflight.len()
+    }
+
     /// Pick the replica for a request and record the assignment.
     pub fn route(&mut self, req: &Request) -> usize {
         let n = self.inflight.len();
         let pick = if req.session != 0 {
             // session affinity: stable hash → replica
-            (req.session.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % n
+            self.session_replica(req.session)
         } else {
             match self.policy {
                 RoutePolicy::RoundRobin => {
@@ -87,6 +95,16 @@ impl Router {
 
     pub fn load(&self, replica: usize) -> usize {
         self.inflight[replica]
+    }
+
+    /// Zero a replica's in-flight count after the supervisor replaces
+    /// its engine: the victim's requests were either completed (their
+    /// `Done` arrived before the death notice) or requeued through
+    /// [`Router::assign`] on a healthy replica, so the stale count
+    /// would otherwise repel load from the fresh engine forever under
+    /// `LeastLoaded`.
+    pub fn reset(&mut self, replica: usize) {
+        self.inflight[replica] = 0;
     }
 }
 
@@ -143,6 +161,19 @@ mod tests {
         let mut r = Router::new(1, RoutePolicy::RoundRobin);
         r.complete(0);
         assert_eq!(r.load(0), 0);
+    }
+
+    #[test]
+    fn reset_clears_stale_load_after_respawn() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        for _ in 0..3 {
+            r.assign(0);
+        }
+        r.assign(1);
+        r.reset(0);
+        assert_eq!(r.load(0), 0);
+        // the fresh replica immediately attracts sessionless load
+        assert_eq!(r.route(&req(9, 0)), 0);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Threaded serve front-end: admission-controlled intake → router →
-//! per-replica worker threads → event channel.
+//! supervised per-replica worker threads → event channel.
 //!
 //! tokio is unavailable offline (DESIGN.md §2), so concurrency is
 //! std::thread + mpsc: one worker thread per engine replica runs the
@@ -7,32 +7,49 @@
 //! emits; the handle submits requests and consumes the event stream
 //! without blocking workers.
 //!
-//! The API surface (DESIGN.md §Serve-Frontend):
+//! The API surface (DESIGN.md §Serve-Frontend, §Fault-Tolerance):
 //!
 //! * [`ServerBuilder`] — the one constructor; [`Server::start`]
 //!   survives as a shim.
 //! * [`Server::submit`] → [`SubmitOutcome`]: `Accepted(RequestHandle)`
-//!   or a typed rejection (queue full / invalid params / stopped) —
-//!   admission is a bounded per-replica intake window, so callers see
-//!   backpressure instead of unbounded channel growth.
+//!   or a typed rejection (queue full / invalid params / restarting /
+//!   stopped) — admission is a bounded per-replica intake window, so
+//!   callers see backpressure instead of unbounded channel growth.
 //! * [`Server::next_event`] / [`Server::poll_events`] — the streaming
 //!   consumption path; [`Server::poll`] / [`Server::wait_for`] remain
 //!   as adapters that keep only the `Done` responses.
 //! * [`Server::drain`] — stop intake, finish in-flight work, return
 //!   every leftover event + final metrics; [`Server::shutdown`] stays
 //!   abortive (workers exit at the next step boundary).
+//!
+//! **Supervision** (the fault-tolerance layer): each worker wraps its
+//! engine step in `catch_unwind`, so a panic — an engine bug or an
+//! injected [`FaultPlan`] entry — poisons only that replica. The dying
+//! worker forwards everything it completed, snapshots its metrics, and
+//! emits [`ServerEvent::ReplicaDown`] as its last word; the handle then
+//! respawns the replica cold from the [`ModelSource`] and requeues the
+//! victim's in-flight requests to healthy replicas under a bounded
+//! [`RetryPolicy`]. Replayed requests re-prefill prompt + prior output
+//! and continue with the same per-position RNG keying the engine uses
+//! for preemption recompute, so a replayed stream is token-for-token
+//! identical to a fault-free run — duplicate events from the overlap
+//! are suppressed by per-sample token watermarks here in the handle.
 
 use super::engine::ServeEngine;
+use super::faults::{FaultInjector, FaultPlan};
 use super::metrics::{Metrics, ServerStats};
 use super::request::{
-    Request, RequestHandle, Response, SamplingParams, ServerEvent, SubmitError,
+    FinishReason, Request, RequestCtl, RequestHandle, RequestId, Response, SamplingParams,
+    ServerEvent, SubmitError,
 };
 use super::router::{RoutePolicy, Router};
+use super::supervisor::{respawn_model, ModelSource, RetryPolicy};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 enum WorkerMsg {
     Submit(Request),
@@ -75,9 +92,23 @@ impl SubmitOutcome {
         }
     }
 
-    /// The accepted request id; panics on a rejection. For call sites
-    /// (mostly tests) that know admission cannot fail.
-    pub fn id(&self) -> super::request::RequestId {
+    /// The accepted request id, or the typed rejection. Prefer this
+    /// over [`SubmitOutcome::id`]: with supervision, admission can fail
+    /// transiently ([`SubmitError::ReplicaRestarting`]) even on servers
+    /// that "cannot" reject, so call sites should see the error.
+    pub fn try_id(&self) -> Result<RequestId, SubmitError> {
+        match self {
+            SubmitOutcome::Accepted(h) => Ok(h.id()),
+            SubmitOutcome::Rejected(e) => Err(*e),
+        }
+    }
+
+    /// The accepted request id; panics on a rejection.
+    #[deprecated(
+        since = "0.1.0",
+        note = "panics on rejection; use try_id() and handle the SubmitError"
+    )]
+    pub fn id(&self) -> RequestId {
         match self {
             SubmitOutcome::Accepted(h) => h.id(),
             SubmitOutcome::Rejected(e) => panic!("submit rejected: {e}"),
@@ -87,11 +118,18 @@ impl SubmitOutcome {
 
 /// Everything a graceful [`Server::drain`] hands back: the events that
 /// had not been consumed yet (in per-replica emission order) and each
-/// replica's final [`Metrics`] snapshot, sorted by replica index.
+/// replica's final [`Metrics`] snapshot, sorted by replica index. A
+/// replica that died and respawned contributes one folded snapshot:
+/// counters summed across its generations, page/queue gauges from the
+/// last generation (the only one whose pages still exist).
 #[derive(Debug)]
 pub struct DrainReport {
     pub events: Vec<ServerEvent>,
     pub metrics: Vec<Metrics>,
+    /// Final admission/supervision counters. Prefer this over a
+    /// pre-drain `server.stats.clone()`: replica deaths, requeues, and
+    /// `ReplicaLost` retirements can all happen *during* the drain.
+    pub stats: ServerStats,
 }
 
 impl DrainReport {
@@ -101,10 +139,20 @@ impl DrainReport {
             .iter()
             .filter_map(|ev| match ev {
                 ServerEvent::Done(r) => Some(r.clone()),
-                ServerEvent::Token { .. } => None,
+                ServerEvent::Token { .. } | ServerEvent::ReplicaDown { .. } => None,
             })
             .collect()
     }
+}
+
+/// Engine construction parameters, kept so the supervisor can rebuild
+/// a dead replica's engine exactly as the builder first made it.
+#[derive(Clone, Debug)]
+struct EngineCfg {
+    batch: super::batcher::BatchPolicy,
+    threads: usize,
+    kv: super::kv_pool::PagedKvOpts,
+    spec: Option<super::speculator::SpecDecodeOpts>,
 }
 
 /// Builder for a running multi-replica [`Server`] — replaces the old
@@ -119,6 +167,9 @@ pub struct ServerBuilder {
     spec: Option<super::speculator::SpecDecodeOpts>,
     intake_limit: usize,
     default_deadline: Option<Duration>,
+    retry: RetryPolicy,
+    faults: Option<Arc<FaultPlan>>,
+    checkpoint: Option<String>,
 }
 
 impl Default for ServerBuilder {
@@ -132,6 +183,9 @@ impl Default for ServerBuilder {
             spec: None,
             intake_limit: DEFAULT_INTAKE_LIMIT,
             default_deadline: None,
+            retry: RetryPolicy::default(),
+            faults: None,
+            checkpoint: None,
         }
     }
 }
@@ -199,8 +253,34 @@ impl ServerBuilder {
         self
     }
 
+    /// Bounded retry-with-backoff for requests orphaned by a replica
+    /// death (`--retry-max` / `--retry-base-ms` / `--retry-cap-ms`).
+    pub fn retry(mut self, policy: RetryPolicy) -> ServerBuilder {
+        self.retry = policy;
+        self
+    }
+
+    /// Deterministic fault-injection schedule (`--fault-plan FILE` /
+    /// `PTQTP_FAULT_SEED`). Always compiled in; a server built without
+    /// one runs a single inert `Option` check per engine step.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> ServerBuilder {
+        self.faults = Some(Arc::new(plan));
+        self
+    }
+
+    /// Packed PTW2 checkpoint path for cold respawns: a supervisor
+    /// restart reloads weights from this file instead of cloning the
+    /// in-memory model (quantize-once / serve-many — the restart never
+    /// re-runs the quantization pass).
+    pub fn checkpoint(mut self, path: impl Into<String>) -> ServerBuilder {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
     /// Spawn `replicas` engines cloned from one model and start a
-    /// worker thread per replica.
+    /// worker thread per replica. The model (or the checkpoint path,
+    /// if [`ServerBuilder::checkpoint`] was set) is retained as the
+    /// [`ModelSource`] for supervisor respawns.
     pub fn start(self, model: crate::model::Transformer) -> Server {
         let engines = (0..self.replicas)
             .map(|_| {
@@ -210,20 +290,33 @@ impl ServerBuilder {
                 e
             })
             .collect();
-        self.start_engines(engines)
+        let source = match self.checkpoint.clone() {
+            Some(path) => ModelSource::Checkpoint(path),
+            None => ModelSource::Memory(Arc::new(model)),
+        };
+        let mut server = self.start_engines(engines);
+        server.source = source;
+        server
     }
 
     /// Start over caller-built engines (heterogeneous replicas, tests).
     /// `replicas`/`batch`/`threads`/`paged_kv`/`spec_decode` settings
-    /// are ignored — the engines carry their own.
-    pub fn start_engines(self, engines: Vec<ServeEngine>) -> Server {
+    /// are ignored — the engines carry their own. There is no model to
+    /// respawn from ([`ModelSource::Unavailable`]), so a replica that
+    /// dies on this path stays dead and its pinned requests retire with
+    /// [`FinishReason::ReplicaLost`] once the retry budget is spent.
+    pub fn start_engines(self, mut engines: Vec<ServeEngine>) -> Server {
         assert!(!engines.is_empty(), "need at least one engine replica");
         let n = engines.len();
+        if let Some(plan) = &self.faults {
+            for (replica, engine) in engines.iter_mut().enumerate() {
+                engine.set_fault_injector(Some(FaultInjector::new(plan.clone(), replica)));
+            }
+        }
         let (event_tx, event_rx) = channel::<(usize, ServerEvent)>();
         let (metrics_tx, metrics_rx) = channel::<(usize, Metrics)>();
         let shutdown = Arc::new(AtomicBool::new(false));
-        let mut workers = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
+        let mut slots = Vec::with_capacity(n);
         let mut intake = Vec::with_capacity(n);
         for (replica, mut engine) in engines.into_iter().enumerate() {
             let (tx, rx) = channel::<WorkerMsg>();
@@ -232,43 +325,128 @@ impl ServerBuilder {
             let stop = shutdown.clone();
             let gauge = Arc::new(AtomicUsize::new(0));
             intake.push(gauge.clone());
-            handles.push(std::thread::spawn(move || {
-                engine.set_intake_depth(gauge);
+            engine.set_intake_depth(gauge);
+            let handle = std::thread::spawn(move || {
                 worker_loop(replica, &mut engine, rx, event_tx, metrics_tx, stop);
-            }));
-            workers.push(tx);
+            });
+            slots.push(WorkerSlot {
+                tx: Some(tx),
+                handle: Some(handle),
+                dead: None,
+            });
         }
         Server {
             router: Router::new(n, self.route),
-            workers,
+            slots,
             events: event_rx,
+            event_tx,
             metrics_rx,
-            handles,
+            metrics_tx,
             next_id: AtomicU64::new(1),
             shutdown,
             intake,
             intake_limit: self.intake_limit,
             default_deadline: self.default_deadline,
+            source: ModelSource::Unavailable,
+            cfg: EngineCfg {
+                batch: self.batch,
+                threads: self.threads,
+                kv: self.kv,
+                spec: self.spec,
+            },
+            retry: self.retry,
+            faults: self.faults,
+            tracked: HashMap::new(),
+            retry_q: Vec::new(),
+            buffered: VecDeque::new(),
+            draining: false,
             stats: ServerStats::default(),
         }
     }
 }
 
-/// A running multi-replica server.
+/// One replica's worker-thread attachment. `tx`/`handle` are taken as
+/// the worker dies (or is reaped); `dead` marks a replica whose respawn
+/// failed — it never comes back.
+struct WorkerSlot {
+    tx: Option<Sender<WorkerMsg>>,
+    handle: Option<JoinHandle<()>>,
+    dead: Option<String>,
+}
+
+impl WorkerSlot {
+    fn live(&self) -> bool {
+        self.tx.is_some() && self.dead.is_none()
+    }
+}
+
+/// Everything the supervisor needs to replay a request after its
+/// replica dies: the original submission (verbatim — same id, prompt,
+/// params, deadline clock) plus per-sample dedupe watermarks for the
+/// event overlap between the dead run and its replay.
+struct Tracked {
+    prompt: Vec<u32>,
+    params: SamplingParams,
+    session: u64,
+    deadline: Option<Duration>,
+    submitted_at: Instant,
+    ctl: Arc<RequestCtl>,
+    /// Replica currently (or last) responsible for the request.
+    replica: usize,
+    /// Replays attempted so far (0 = original submission only).
+    attempts: u32,
+    /// In `retry_q`, waiting out its backoff.
+    queued_retry: bool,
+    /// Per-sample count of `Token` events already surfaced: a replayed
+    /// sequence re-emits from index 0, and everything below the
+    /// watermark is suppressed so consumers see each index once.
+    emitted: Vec<usize>,
+    /// Per-sample terminal flags: duplicate `Done`s from a replay that
+    /// overlapped a completed sample are suppressed too.
+    done: Vec<bool>,
+}
+
+struct RetryItem {
+    id: RequestId,
+    not_before: Instant,
+}
+
+/// A running multi-replica server with replica supervision.
 pub struct Server {
     router: Router,
-    workers: Vec<Sender<WorkerMsg>>,
+    slots: Vec<WorkerSlot>,
     events: Receiver<(usize, ServerEvent)>,
+    /// Prototype sender cloned into respawned workers. Keeping it here
+    /// does not mask server teardown: a worker's send fails as soon as
+    /// the receiver drops with the `Server`.
+    event_tx: Sender<(usize, ServerEvent)>,
     /// Final per-replica metrics snapshots, sent as workers exit.
     metrics_rx: Receiver<(usize, Metrics)>,
-    handles: Vec<JoinHandle<()>>,
+    metrics_tx: Sender<(usize, Metrics)>,
     next_id: AtomicU64,
     shutdown: Arc<AtomicBool>,
     /// Per-replica accepted-but-unfinished gauges, decremented by the
     /// engines as requests retire (see `ServeEngine::set_intake_depth`).
+    /// A respawn installs a fresh gauge — the dead engine's count died
+    /// with it, and requeued victims are re-admitted outside the limit
+    /// (dropping a retry at admission would break the replay guarantee
+    /// for work the server already accepted).
     intake: Vec<Arc<AtomicUsize>>,
     intake_limit: usize,
     default_deadline: Option<Duration>,
+    /// Where respawned replicas get their weights.
+    source: ModelSource,
+    cfg: EngineCfg,
+    retry: RetryPolicy,
+    faults: Option<Arc<FaultPlan>>,
+    /// In-flight requests by id — the supervisor's replay ledger.
+    tracked: HashMap<RequestId, Tracked>,
+    /// Requests waiting out a retry backoff.
+    retry_q: Vec<RetryItem>,
+    /// Events already pulled off the channel by the supervision pump
+    /// but not yet handed to the consumer.
+    buffered: VecDeque<ServerEvent>,
+    draining: bool,
     /// Admission counters for the serve-metrics artifact.
     pub stats: ServerStats,
 }
@@ -295,12 +473,13 @@ impl Server {
     /// unbounded, overriding the server default).
     ///
     /// Admission: parameters are validated first; then the routed
-    /// replica must have intake room. Sessionless requests may spill
-    /// to any replica with room before rejecting; session-pinned
-    /// requests never spill (their KV/prefix locality is the point of
-    /// the pin). A worker whose thread has exited surfaces as
-    /// [`SubmitError::ServerStopped`] — previously that request was
-    /// dropped silently while returning a live-looking id.
+    /// replica must be healthy and have intake room. Sessionless
+    /// requests may spill to any live replica with room before
+    /// rejecting; session-pinned requests never spill (their KV/prefix
+    /// locality is the point of the pin) — a pinned request whose
+    /// replica is down rejects with [`SubmitError::ReplicaRestarting`]
+    /// so the caller can distinguish "back off and retry" from a dead
+    /// server ([`SubmitError::ServerStopped`]).
     pub fn submit_with_deadline(
         &mut self,
         prompt: Vec<u32>,
@@ -308,6 +487,9 @@ impl Server {
         session: u64,
         deadline: Option<Duration>,
     ) -> SubmitOutcome {
+        // Process any queued death notices first so routing sees the
+        // current replica health, not last poll's.
+        self.pump();
         self.stats.submitted += 1;
         if let Err(e) = params.validate() {
             self.stats.invalid_params += 1;
@@ -318,13 +500,18 @@ impl Server {
         req.session = session;
         req.deadline = deadline;
         let primary = self.router.route(&req);
-        let n = self.workers.len();
+        let n = self.slots.len();
         let mut replica = None;
+        let mut saw_live = false;
         for k in 0..n {
             let candidate = (primary + k) % n;
             if k > 0 && session != 0 {
                 break; // pinned sessions don't spill
             }
+            if !self.slots[candidate].live() {
+                continue;
+            }
+            saw_live = true;
             if try_acquire(&self.intake[candidate], self.intake_limit) {
                 replica = Some(candidate);
                 break;
@@ -332,6 +519,15 @@ impl Server {
         }
         let Some(replica) = replica else {
             self.router.unroute(primary);
+            if session != 0 && !self.slots[primary].live() {
+                self.stats.replica_restarting += 1;
+                let e = SubmitError::ReplicaRestarting { replica: primary };
+                return SubmitOutcome::Rejected(e);
+            }
+            if !saw_live {
+                self.stats.server_stopped += 1;
+                return SubmitOutcome::Rejected(SubmitError::ServerStopped);
+            }
             self.stats.queue_full += 1;
             return SubmitOutcome::Rejected(SubmitError::QueueFull { replica: primary });
         };
@@ -340,35 +536,56 @@ impl Server {
             self.router.assign(replica);
         }
         let handle = req.handle(replica);
-        if self.workers[replica].send(WorkerMsg::Submit(req)).is_err() {
+        let tracked = Tracked {
+            prompt: req.prompt.clone(),
+            params: req.params,
+            session,
+            deadline,
+            submitted_at: req.submitted_at,
+            ctl: req.ctl.clone(),
+            replica,
+            attempts: 0,
+            queued_retry: false,
+            emitted: vec![0; req.params.n],
+            done: vec![false; req.params.n],
+        };
+        let tx = self.slots[replica].tx.as_ref().expect("live slot has tx");
+        if tx.send(WorkerMsg::Submit(req)).is_err() {
             release(&self.intake[replica]);
             self.router.unroute(replica);
             self.stats.server_stopped += 1;
             return SubmitOutcome::Rejected(SubmitError::ServerStopped);
         }
+        self.tracked.insert(id, tracked);
         self.stats.accepted += 1;
         SubmitOutcome::Accepted(handle)
     }
 
     /// Non-blocking: next queued event, if any.
     pub fn try_next_event(&mut self) -> Option<ServerEvent> {
-        match self.events.try_recv() {
-            Ok((replica, ev)) => {
-                self.note_event(replica, &ev);
-                Some(ev)
-            }
-            Err(_) => None,
-        }
+        self.pump();
+        self.buffered.pop_front()
     }
 
-    /// Block up to `timeout` for the next event.
+    /// Block up to `timeout` for the next event. Wakes periodically to
+    /// flush due retry backoffs even when the channel is quiet.
     pub fn next_event(&mut self, timeout: Duration) -> Option<ServerEvent> {
-        match self.events.recv_timeout(timeout) {
-            Ok((replica, ev)) => {
-                self.note_event(replica, &ev);
-                Some(ev)
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump();
+            if let Some(ev) = self.buffered.pop_front() {
+                return Some(ev);
             }
-            Err(_) => None,
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(5));
+            if let Ok((replica, ev)) = self.events.recv_timeout(wait) {
+                if let Some(ev) = self.handle_event(replica, ev) {
+                    return Some(ev);
+                }
+            }
         }
     }
 
@@ -381,22 +598,298 @@ impl Server {
         out
     }
 
-    fn note_event(&mut self, replica: usize, ev: &ServerEvent) {
-        if let ServerEvent::Done(_) = ev {
-            self.router.complete(replica);
+    /// Pull everything off the wire through the supervision layer:
+    /// surviving events land in `buffered`, death notices respawn and
+    /// requeue, and due retries replay.
+    fn pump(&mut self) {
+        while let Ok((replica, ev)) = self.events.try_recv() {
+            if let Some(ev) = self.handle_event(replica, ev) {
+                self.buffered.push_back(ev);
+            }
+        }
+        self.flush_retries();
+    }
+
+    /// Supervision filter for one wire event. Returns the event to
+    /// surface to the consumer, or `None` when it is a duplicate from
+    /// a replay overlap.
+    fn handle_event(&mut self, replica: usize, ev: ServerEvent) -> Option<ServerEvent> {
+        match ev {
+            ServerEvent::Token {
+                id,
+                sample,
+                token,
+                index,
+            } => {
+                if let Some(t) = self.tracked.get_mut(&id) {
+                    if sample < t.emitted.len() {
+                        if index < t.emitted[sample] {
+                            return None; // replay re-emitted below the watermark
+                        }
+                        t.emitted[sample] = index + 1;
+                    }
+                }
+                Some(ServerEvent::Token {
+                    id,
+                    sample,
+                    token,
+                    index,
+                })
+            }
+            ServerEvent::Done(r) => {
+                if let Some(t) = self.tracked.get_mut(&r.id) {
+                    if r.sample < t.done.len() {
+                        if t.done[r.sample] {
+                            return None; // sample already finished pre-death
+                        }
+                        t.done[r.sample] = true;
+                    }
+                    if t.done.iter().all(|&d| d) {
+                        self.tracked.remove(&r.id);
+                    }
+                }
+                self.router.complete(replica);
+                Some(ServerEvent::Done(r))
+            }
+            ServerEvent::ReplicaDown { replica: r, cause } => {
+                self.handle_replica_down(r, &cause);
+                Some(ServerEvent::ReplicaDown { replica: r, cause })
+            }
+        }
+    }
+
+    /// A replica's death notice: reap the thread, respawn it from the
+    /// model source, and put every request it was carrying on the
+    /// retry queue. Runs *after* all the victim's pre-death events
+    /// (mpsc preserves per-sender order), so requests it completed are
+    /// already out of `tracked` and are not replayed.
+    fn handle_replica_down(&mut self, replica: usize, _cause: &str) {
+        if let Some(h) = self.slots[replica].handle.take() {
+            let _ = h.join();
+        }
+        self.slots[replica].tx = None;
+        self.router.reset(replica);
+        if self.respawn(replica) {
+            self.stats.replica_restarts += 1;
+        }
+        let victims: Vec<RequestId> = self
+            .tracked
+            .iter()
+            .filter(|(_, t)| t.replica == replica && !t.queued_retry)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in victims {
+            self.schedule_retry(id, true);
+        }
+    }
+
+    /// Build a cold engine for `replica` from the model source and
+    /// spawn its worker. On failure the slot is marked permanently
+    /// dead (typed, never a panic — see `supervisor::respawn_model`).
+    fn respawn(&mut self, replica: usize) -> bool {
+        let src = &self.source;
+        let model = match respawn_model(src, replica, self.faults.as_deref(), &self.retry) {
+            Ok(m) => m,
+            Err(e) => {
+                if self.slots[replica].dead.is_none() {
+                    self.slots[replica].dead = Some(e.to_string());
+                }
+                return false;
+            }
+        };
+        let mut engine =
+            ServeEngine::with_opts(model, self.cfg.batch, self.cfg.threads, self.cfg.kv);
+        engine.set_spec_decode(self.cfg.spec);
+        if let Some(plan) = &self.faults {
+            // one-shot latches in the plan mean the fresh generation
+            // does not re-fire the fault that killed its predecessor
+            engine.set_fault_injector(Some(FaultInjector::new(plan.clone(), replica)));
+        }
+        let gauge = Arc::new(AtomicUsize::new(0));
+        self.intake[replica] = gauge.clone();
+        engine.set_intake_depth(gauge);
+        let (tx, rx) = channel::<WorkerMsg>();
+        let event_tx = self.event_tx.clone();
+        let metrics_tx = self.metrics_tx.clone();
+        let stop = self.shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            worker_loop(replica, &mut engine, rx, event_tx, metrics_tx, stop);
+        });
+        if self.draining {
+            let _ = tx.send(WorkerMsg::Drain);
+        }
+        self.slots[replica] = WorkerSlot {
+            tx: Some(tx),
+            handle: Some(handle),
+            dead: None,
+        };
+        true
+    }
+
+    /// Put a tracked request on the retry queue with its next backoff,
+    /// or retire it with [`FinishReason::ReplicaLost`] once the budget
+    /// is spent. `newly_orphaned` distinguishes a fresh replica-death
+    /// victim (counted in `stats.requeued`) from a retry of a retry.
+    fn schedule_retry(&mut self, id: RequestId, newly_orphaned: bool) {
+        let attempts = {
+            let Some(t) = self.tracked.get_mut(&id) else {
+                return;
+            };
+            if t.queued_retry {
+                return;
+            }
+            t.attempts += 1;
+            t.attempts
+        };
+        if attempts > self.retry.max_attempts {
+            self.fail_replica_lost(id);
+            return;
+        }
+        if newly_orphaned {
+            self.stats.requeued += 1;
+        }
+        let delay = self.retry.delay(id, attempts);
+        if let Some(t) = self.tracked.get_mut(&id) {
+            t.queued_retry = true;
+        }
+        self.retry_q.push(RetryItem {
+            id,
+            not_before: Instant::now() + delay,
+        });
+    }
+
+    /// Retire a request the supervisor could not save: synthetic
+    /// terminal `Done` per unfinished sample, typed `ReplicaLost`, no
+    /// tokens. Counted request-granularly in `stats.replica_lost` so
+    /// the accounting identity stays exact.
+    fn fail_replica_lost(&mut self, id: RequestId) {
+        let Some(t) = self.tracked.remove(&id) else {
+            return;
+        };
+        t.ctl.mark_finished();
+        self.stats.replica_lost += 1;
+        for (sample, done) in t.done.iter().enumerate() {
+            if !done {
+                self.buffered.push_back(ServerEvent::Done(Response {
+                    id,
+                    sample,
+                    tokens: Vec::new(),
+                    finish: FinishReason::ReplicaLost,
+                    ttft: Duration::default(),
+                    total: t.submitted_at.elapsed(),
+                    prompt_len: t.prompt.len(),
+                }));
+            }
+        }
+    }
+
+    /// Replay every retry whose backoff has elapsed.
+    fn flush_retries(&mut self) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.retry_q.len() {
+            if self.retry_q[i].not_before <= now {
+                let item = self.retry_q.swap_remove(i);
+                self.try_replay(item.id);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Resubmit a request whose backoff expired. Pinned sessions only
+    /// ever go back to their own replica (waiting for it to restart);
+    /// sessionless requests go to the least-loaded live replica. When
+    /// nothing is live — a death during drain, or every replica down
+    /// at once — the supervisor respawns the natural target on demand;
+    /// if that also fails the request re-enters the backoff queue
+    /// until its budget is spent.
+    fn try_replay(&mut self, id: RequestId) {
+        let (session, prompt, params, deadline, submitted_at, ctl) = {
+            let Some(t) = self.tracked.get_mut(&id) else {
+                return;
+            };
+            t.queued_retry = false;
+            (
+                t.session,
+                t.prompt.clone(),
+                t.params,
+                t.deadline,
+                t.submitted_at,
+                t.ctl.clone(),
+            )
+        };
+        let pinned = session != 0;
+        let n = self.slots.len();
+        let mut target = if pinned {
+            let pin = self.router.session_replica(session);
+            self.slots[pin].live().then_some(pin)
+        } else {
+            (0..n)
+                .filter(|&r| self.slots[r].live())
+                .min_by_key(|&r| self.router.load(r))
+        };
+        if target.is_none() {
+            let fallback = if pinned {
+                self.router.session_replica(session)
+            } else {
+                self.tracked.get(&id).map(|t| t.replica).unwrap_or(0)
+            };
+            if self.slots[fallback].dead.is_none()
+                && self.slots[fallback].tx.is_none()
+                && self.respawn(fallback)
+            {
+                self.stats.replica_restarts += 1;
+                self.router.reset(fallback);
+            }
+            if self.slots[fallback].live() {
+                target = Some(fallback);
+            }
+        }
+        let Some(target) = target else {
+            self.schedule_retry(id, false);
+            return;
+        };
+        // Verbatim resubmission: same id, prompt, params (seed!), and
+        // submitted_at — the deadline clock keeps running across the
+        // death, and the engine's replay path (prefill prompt + prior
+        // output, RNG keyed by generated.len()) makes the new stream
+        // token-identical to the fault-free one.
+        let req = Request {
+            id,
+            prompt,
+            params,
+            session,
+            sample: 0,
+            submitted_at,
+            deadline,
+            ctl,
+        };
+        let tx = self.slots[target].tx.as_ref().expect("live slot has tx");
+        if tx.send(WorkerMsg::Submit(req)).is_ok() {
+            if let Some(t) = self.tracked.get_mut(&id) {
+                t.replica = target;
+            }
+            // re-admitted outside the intake limit: the server already
+            // accepted this work once, so admission cannot drop it now
+            self.intake[target].fetch_add(1, Ordering::Relaxed);
+            self.router.assign(target);
+            self.stats.retries += 1;
+        } else {
+            self.schedule_retry(id, false);
         }
     }
 
     /// Non-blocking poll for finished responses — the pre-streaming
-    /// API, now an adapter that keeps only `Done` events. Token events
-    /// drained here are dropped; streaming consumers use
-    /// [`Server::poll_events`] / [`Server::next_event`] instead.
+    /// API, now an adapter that keeps only `Done` events. Token and
+    /// replica-death events drained here are dropped; streaming
+    /// consumers use [`Server::poll_events`] / [`Server::next_event`].
     pub fn poll(&mut self) -> Vec<Response> {
         self.poll_events()
             .into_iter()
             .filter_map(|ev| match ev {
                 ServerEvent::Done(r) => Some(r),
-                ServerEvent::Token { .. } => None,
+                ServerEvent::Token { .. } | ServerEvent::ReplicaDown { .. } => None,
             })
             .collect()
     }
@@ -404,9 +897,9 @@ impl Server {
     /// Block until `n` responses arrive or `timeout` elapses (adapter
     /// over the event stream, like [`Server::poll`]).
     pub fn wait_for(&mut self, n: usize, timeout: Duration) -> Vec<Response> {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         let mut out = Vec::new();
-        while out.len() < n && std::time::Instant::now() < deadline {
+        while out.len() < n && Instant::now() < deadline {
             if let Some(ServerEvent::Done(r)) = self.next_event(Duration::from_millis(10)) {
                 out.push(r);
             }
@@ -415,46 +908,118 @@ impl Server {
     }
 
     /// Graceful drain: stop intake, let every replica finish its
-    /// in-flight and queued work, then hand back all unconsumed events
-    /// plus final per-replica metrics. The event channel is unbounded,
-    /// so joining the workers before collecting cannot deadlock —
-    /// everything they emitted is still buffered.
+    /// in-flight and queued work — *including* requests that have to
+    /// be replayed because a replica dies mid-drain — then hand back
+    /// all unconsumed events plus final per-replica metrics. The event
+    /// channel is unbounded, so joining the workers before collecting
+    /// cannot deadlock — everything they emitted is still buffered.
     pub fn drain(mut self) -> DrainReport {
-        for w in &self.workers {
-            let _ = w.send(WorkerMsg::Drain);
+        self.draining = true;
+        for s in &self.slots {
+            if let Some(tx) = &s.tx {
+                let _ = tx.send(WorkerMsg::Drain);
+            }
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let hard_deadline = Instant::now() + Duration::from_secs(300);
+        loop {
+            self.pump();
+            self.reap_exited();
+            let workers_done = self.slots.iter().all(|s| s.handle.is_none());
+            if workers_done && self.retry_q.is_empty() {
+                if self.tracked.is_empty() {
+                    break;
+                }
+                // every worker is gone and nothing is waiting on a
+                // backoff, yet requests remain: no one can serve them
+                let ids: Vec<RequestId> = self.tracked.keys().copied().collect();
+                for id in ids {
+                    self.fail_replica_lost(id);
+                }
+                continue;
+            }
+            if Instant::now() >= hard_deadline {
+                self.shutdown.store(true, Ordering::SeqCst);
+                for s in &self.slots {
+                    if let Some(tx) = &s.tx {
+                        let _ = tx.send(WorkerMsg::Shutdown);
+                    }
+                }
+                for s in &mut self.slots {
+                    if let Some(h) = s.handle.take() {
+                        let _ = h.join();
+                    }
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
         }
-        let mut events = Vec::new();
+        self.pump();
+        let mut events: Vec<ServerEvent> = self.buffered.drain(..).collect();
         while let Ok((replica, ev)) = self.events.try_recv() {
-            self.note_event(replica, &ev);
-            events.push(ev);
+            if let Some(ev) = self.handle_event(replica, ev) {
+                events.push(ev);
+            }
         }
-        let mut metrics: Vec<(usize, Metrics)> = self.metrics_rx.try_iter().collect();
-        metrics.sort_by_key(|(replica, _)| *replica);
+        events.extend(self.buffered.drain(..));
+        let metrics = fold_metrics(self.slots.len(), &self.metrics_rx);
         DrainReport {
             events,
-            metrics: metrics.into_iter().map(|(_, m)| m).collect(),
+            metrics,
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Sweep worker threads that exited on their own during a drain.
+    /// A panic exit's `ReplicaDown` is processed here (respawn +
+    /// requeue); a clean exit can still strand a `Submit` that raced
+    /// its final intake sweep, so any request still tracked against
+    /// the exited replica is requeued explicitly.
+    fn reap_exited(&mut self) {
+        for replica in 0..self.slots.len() {
+            let finished = self.slots[replica]
+                .handle
+                .as_ref()
+                .is_some_and(|h| h.is_finished());
+            if !finished {
+                continue;
+            }
+            if let Some(h) = self.slots[replica].handle.take() {
+                let _ = h.join();
+            }
+            self.slots[replica].tx = None;
+            // process the exit's event tail (possibly a ReplicaDown,
+            // which respawns the slot) before sweeping stragglers
+            self.pump();
+            let stragglers: Vec<RequestId> = self
+                .tracked
+                .iter()
+                .filter(|(_, t)| t.replica == replica && !t.queued_retry)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in stragglers {
+                self.schedule_retry(id, true);
+            }
         }
     }
 
     /// Abortive shutdown: workers exit at their next loop iteration,
     /// abandoning queued work (contrast [`Server::drain`]). Returns
     /// each replica's final [`Metrics`] snapshot (sorted by replica
-    /// index) so multi-replica serves can report the same stats as a
-    /// single engine.
+    /// index, folded across restart generations) so multi-replica
+    /// serves can report the same stats as a single engine.
     pub fn shutdown(mut self) -> Vec<Metrics> {
         self.shutdown.store(true, Ordering::SeqCst);
-        for w in &self.workers {
-            let _ = w.send(WorkerMsg::Shutdown);
+        for s in &self.slots {
+            if let Some(tx) = &s.tx {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for s in &mut self.slots {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
         }
-        let mut out: Vec<(usize, Metrics)> = self.metrics_rx.try_iter().collect();
-        out.sort_by_key(|(replica, _)| *replica);
-        out.into_iter().map(|(_, m)| m).collect()
+        fold_metrics(self.slots.len(), &self.metrics_rx)
     }
 
     /// Kill the worker threads while keeping the front-end alive, to
@@ -462,13 +1027,40 @@ impl Server {
     #[cfg(test)]
     fn abandon_workers(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        for w in &self.workers {
-            let _ = w.send(WorkerMsg::Shutdown);
+        for s in &self.slots {
+            if let Some(tx) = &s.tx {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for s in &mut self.slots {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
         }
     }
+}
+
+/// Fold per-replica snapshots across restart generations: counters
+/// sum ([`Metrics::merge_from`]); point-in-time gauges keep the last
+/// generation's value — a dead generation's pages no longer exist, so
+/// summing them would fake a leak. Generation order is guaranteed by
+/// the channel: generation g's exit snapshot is sent before g+1 is
+/// spawned.
+fn fold_metrics(n: usize, rx: &Receiver<(usize, Metrics)>) -> Vec<Metrics> {
+    let mut acc: Vec<Option<Metrics>> = (0..n).map(|_| None).collect();
+    for (replica, m) in rx.try_iter() {
+        match &mut acc[replica] {
+            slot @ None => *slot = Some(m),
+            Some(prev) => {
+                prev.merge_from(&m);
+                prev.pages_in_use = m.pages_in_use;
+                prev.pages_free = m.pages_free;
+                prev.page_budget = m.page_budget;
+                prev.queue_depth = m.queue_depth;
+            }
+        }
+    }
+    acc.into_iter().flatten().collect()
 }
 
 /// Increment `gauge` unless it is already at `limit`.
@@ -484,6 +1076,17 @@ fn try_acquire(gauge: &AtomicUsize, limit: usize) -> bool {
 /// the request never reached the engine).
 fn release(gauge: &AtomicUsize) {
     let _ = gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+}
+
+/// Human-readable panic payload for the `ReplicaDown` cause string.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
 }
 
 fn worker_loop(
@@ -525,11 +1128,27 @@ fn worker_loop(
                 Err(_) => continue,
             }
         }
-        engine.step_events(&mut events);
+        // Panic isolation: a panicking step (engine bug or injected
+        // fault) poisons only this replica. Events pushed before the
+        // panic are forwarded — the handle's dedupe watermarks make
+        // the replay overlap safe — then a final metrics snapshot and
+        // the death notice, in that order, so per-sender mpsc FIFO
+        // guarantees the supervisor has seen everything this replica
+        // completed before it requeues the rest. Dropping the engine
+        // on return frees its KV pages with it.
+        let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.step_events(&mut events)
+        }));
+        let died = step.err().map(panic_message);
         for ev in events.drain(..) {
             if event_tx.send((replica, ev)).is_err() {
                 break 'serve;
             }
+        }
+        if let Some(cause) = died {
+            let _ = metrics_tx.send((replica, engine.metrics.clone()));
+            let _ = event_tx.send((replica, ServerEvent::ReplicaDown { replica, cause }));
+            return;
         }
     }
     // final snapshot for the drain/shutdown aggregate report
@@ -540,6 +1159,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::faults::{FaultEntry, FaultKind};
     use crate::coordinator::request::{FinishReason, RequestStatus};
     use crate::model::{ModelConfig, Transformer};
     use crate::rng::Rng;
@@ -563,7 +1183,7 @@ mod tests {
     #[test]
     fn single_replica_end_to_end() {
         let mut server = Server::start(vec![mk_engine(1)], RoutePolicy::LeastLoaded);
-        let id = server.submit(vec![1, 2, 3], params(4), 0).id();
+        let id = server.submit(vec![1, 2, 3], params(4), 0).try_id().unwrap();
         let out = server.wait_for(1, Duration::from_secs(10));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].id, id);
@@ -577,7 +1197,12 @@ mod tests {
         let mut server = Server::start(engines, RoutePolicy::LeastLoaded);
         let mut ids = Vec::new();
         for i in 0..8 {
-            ids.push(server.submit(vec![1 + i % 5, 2], params(3), 0).id());
+            ids.push(
+                server
+                    .submit(vec![1 + i % 5, 2], params(3), 0)
+                    .try_id()
+                    .unwrap(),
+            );
         }
         let out = server.wait_for(8, Duration::from_secs(20));
         assert_eq!(out.len(), 8);
@@ -602,7 +1227,8 @@ mod tests {
             for i in 0..6u64 {
                 let _ = server
                     .submit(vec![1 + (i % 5) as u32, 2, 3], params(4), 0)
-                    .id();
+                    .try_id()
+                    .unwrap();
             }
             let mut out = server.wait_for(6, Duration::from_secs(30));
             let metrics = server.shutdown();
@@ -637,7 +1263,7 @@ mod tests {
             for i in 0..6u64 {
                 let mut prompt = shared.clone();
                 prompt.push(10 + (i % 4) as u32); // distinct suffixes
-                let _ = server.submit(prompt, params(4), 0).id();
+                let _ = server.submit(prompt, params(4), 0).try_id().unwrap();
             }
             let mut out = server.wait_for(6, Duration::from_secs(30));
             server.shutdown();
@@ -706,7 +1332,10 @@ mod tests {
             .threads(1)
             .start(mk_model(7));
         for i in 0..6u64 {
-            let _ = server.submit(vec![1 + (i % 5) as u32, 2], params(3), 0).id();
+            let _ = server
+                .submit(vec![1 + (i % 5) as u32, 2], params(3), 0)
+                .try_id()
+                .unwrap();
         }
         // drain without waiting: every response must still arrive
         let report = server.drain();
@@ -765,7 +1394,7 @@ mod tests {
             .threads(1)
             .batch(BatchPolicy::default().with_max_running(1))
             .start(mk_model(10));
-        let blocker = server.submit(vec![9, 8], params(20), 0).id();
+        let blocker = server.submit(vec![9, 8], params(20), 0).try_id().unwrap();
         let handle = server
             .submit(vec![1, 2, 3], params(20), 0)
             .handle()
@@ -789,7 +1418,7 @@ mod tests {
     #[test]
     fn streamed_tokens_match_final_response() {
         let mut server = ServerBuilder::new().threads(1).start(mk_model(12));
-        let id = server.submit(vec![1, 2, 3], params(5), 0).id();
+        let id = server.submit(vec![1, 2, 3], params(5), 0).try_id().unwrap();
         let mut stream = Vec::new();
         let mut finished = None;
         let t0 = std::time::Instant::now();
@@ -801,11 +1430,126 @@ mod tests {
                     stream.push(token);
                 }
                 Some(ServerEvent::Done(r)) => finished = Some(r),
-                None => {}
+                _ => {}
             }
         }
         let resp = finished.expect("request finished");
         assert_eq!(stream, resp.tokens, "stream == final tokens");
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_replica_is_isolated_and_requests_replay() {
+        // the tentpole end-to-end: an injected panic kills replica 0
+        // mid-run; the supervisor respawns it from the in-memory model
+        // and replays its victims, and the final responses are
+        // token-for-token identical to a fault-free run
+        let model = mk_model(21);
+        let run = |faulty: bool| {
+            let mut builder = ServerBuilder::new()
+                .replicas(2)
+                .route(RoutePolicy::RoundRobin)
+                .threads(1)
+                .retry(RetryPolicy {
+                    max_attempts: 4,
+                    base: Duration::from_millis(1),
+                    cap: Duration::from_millis(20),
+                });
+            if faulty {
+                builder = builder.fault_plan(FaultPlan::new(vec![FaultEntry {
+                    replica: 0,
+                    step: 2,
+                    kind: FaultKind::Panic,
+                }]));
+            }
+            let mut server = builder.start(model.clone());
+            for i in 0..6u64 {
+                assert!(server
+                    .submit(vec![1 + (i % 5) as u32, 2, 3], params(4), 0)
+                    .is_accepted());
+            }
+            let mut out = server.wait_for(6, Duration::from_secs(60));
+            let restarts = server.stats.replica_restarts;
+            let requeued = server.stats.requeued;
+            let report = server.drain();
+            out.sort_by_key(|r| r.id);
+            (out, restarts, requeued, report.metrics)
+        };
+        let (clean, restarts0, _, _) = run(false);
+        let (chaos, restarts1, requeued, metrics) = run(true);
+        assert_eq!(restarts0, 0, "no fault, no restart");
+        assert!(restarts1 >= 1, "the injected panic restarts replica 0");
+        assert!(requeued >= 1, "the victim's requests were requeued");
+        assert_eq!(clean.len(), 6);
+        assert_eq!(chaos.len(), 6);
+        for (a, b) in chaos.iter().zip(&clean) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish, FinishReason::Length);
+            assert_eq!(a.tokens, b.tokens, "req {} replays token-identical", a.id);
+        }
+        // both generations of replica 0 fold into one snapshot
+        assert_eq!(metrics.len(), 2);
+        assert!(Metrics::aggregate(&metrics).requests_finished >= 6);
+    }
+
+    #[test]
+    fn replica_restarting_rejection_for_pinned_sessions() {
+        // start_engines has no model source, so the respawn after the
+        // injected panic fails and replica 0 stays dead: its pinned
+        // victim exhausts the retry budget into a typed ReplicaLost,
+        // new pinned submits see ReplicaRestarting (not ServerStopped),
+        // and sessionless traffic keeps flowing via the survivor
+        let probe = Router::new(2, RoutePolicy::LeastLoaded);
+        let session = (1..64u64)
+            .find(|&s| probe.session_replica(s) == 0)
+            .expect("some session pins to replica 0");
+        let engines = vec![mk_engine(3), mk_engine(3)];
+        let mut server = ServerBuilder::new()
+            .retry(RetryPolicy {
+                max_attempts: 2,
+                base: Duration::from_millis(1),
+                cap: Duration::from_millis(4),
+            })
+            .fault_plan(FaultPlan::new(vec![FaultEntry {
+                replica: 0,
+                step: 0,
+                kind: FaultKind::Panic,
+            }]))
+            .start_engines(engines);
+        let victim = server
+            .submit(vec![1, 2], params(4), session)
+            .try_id()
+            .unwrap();
+        let mut lost = None;
+        let mut saw_down = false;
+        let t0 = std::time::Instant::now();
+        while (lost.is_none() || !saw_down) && t0.elapsed() < Duration::from_secs(30) {
+            match server.next_event(Duration::from_millis(10)) {
+                Some(ServerEvent::ReplicaDown { replica, cause }) => {
+                    assert_eq!(replica, 0);
+                    assert!(cause.contains("injected fault"), "cause surfaced: {cause}");
+                    saw_down = true;
+                }
+                Some(ServerEvent::Done(r)) => lost = Some(r),
+                _ => {}
+            }
+        }
+        assert!(saw_down, "death notice surfaced to the event stream");
+        let lost = lost.expect("retry budget exhausts into a typed response");
+        assert_eq!(lost.id, victim);
+        assert_eq!(lost.finish, FinishReason::ReplicaLost);
+        assert!(lost.tokens.is_empty(), "synthetic terminal has no tokens");
+        assert_eq!(server.stats.replica_lost, 1);
+        assert_eq!(server.stats.requeued, 1);
+        // pinned sessions get the typed restarting rejection
+        let out = server.submit(vec![1, 2], params(2), session);
+        assert_eq!(out.err(), Some(SubmitError::ReplicaRestarting { replica: 0 }));
+        assert_eq!(server.stats.replica_restarting, 1);
+        // sessionless traffic spills to the healthy replica
+        assert!(server.submit(vec![3, 4], params(2), 0).is_accepted());
+        let done = server.wait_for(1, Duration::from_secs(10));
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Length);
         server.shutdown();
     }
 }

@@ -18,7 +18,8 @@ use ptqtp::bench;
 use ptqtp::cli::{usage, Args, OptSpec};
 use ptqtp::coordinator::kv_pool::DEFAULT_PAGE_SIZE;
 use ptqtp::coordinator::{
-    serve_metrics_json, PagedKvOpts, SamplingParams, ServerBuilder, SpecDecodeOpts, SubmitOutcome,
+    serve_metrics_json, FaultPlan, PagedKvOpts, RetryPolicy, SamplingParams, ServerBuilder,
+    ServerEvent, SpecDecodeOpts, SubmitOutcome,
 };
 use ptqtp::data::{CorpusDomain, CorpusGen, TaskSuite, Tokenizer};
 use ptqtp::eval;
@@ -119,6 +120,10 @@ fn help() -> String {
             OptSpec { name: "intake-limit", help: "serve: max accepted-but-unfinished requests per replica; beyond it submit rejects (QueueFull)", default: Some("1024") },
             OptSpec { name: "deadline-ms", help: "serve: per-request deadline in ms; queued or running requests past it finish DeadlineExceeded", default: None },
             OptSpec { name: "metrics-json", help: "serve: write the serve-metrics artifact (admission counters + per-replica metrics + latency histograms) to PATH", default: Some("serve-metrics.json when bare") },
+            OptSpec { name: "fault-plan", help: "serve: JSON fault-injection schedule (ptqtp-fault-plan/1: panics, page exhaustion, ckpt I/O errors, slow steps); overrides PTQTP_FAULT_SEED", default: None },
+            OptSpec { name: "retry-max", help: "serve: replays allowed per request orphaned by a replica death before it fails ReplicaLost", default: Some("4") },
+            OptSpec { name: "retry-base-ms", help: "serve: first retry backoff in ms (doubles each attempt, deterministic jitter < base)", default: Some("10") },
+            OptSpec { name: "retry-cap-ms", help: "serve: ceiling on the exponential retry backoff in ms", default: Some("500") },
         ],
     )
 }
@@ -412,11 +417,30 @@ fn resolve_spec_opts(args: &Args) -> anyhow::Result<Option<SpecDecodeOpts>> {
     }
 }
 
+/// Resolve the deterministic fault-injection schedule: `--fault-plan
+/// FILE` (a `ptqtp-fault-plan/1` JSON document) > `PTQTP_FAULT_SEED`
+/// env (a seed-derived schedule, see `FaultPlan::from_seed`) > none.
+/// The layer is always compiled in; without a plan it is inert.
+fn resolve_fault_plan(args: &Args, replicas: usize) -> anyhow::Result<Option<FaultPlan>> {
+    if let Some(path) = args.get("fault-plan") {
+        return Ok(Some(FaultPlan::load(path)?));
+    }
+    if let Ok(seed) = std::env::var("PTQTP_FAULT_SEED") {
+        let seed: u64 = seed
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("PTQTP_FAULT_SEED must be an integer, got {seed:?}"))?;
+        return Ok(Some(FaultPlan::from_seed(seed, replicas)));
+    }
+    Ok(None)
+}
+
 /// `serve --model X.ptw [--method M] [--requests N] [--data data/]
 /// [--threads T] [--replicas R] [--page-size N] [--prefix-cache on|off]
 /// [--kv-pages N] [--spec-decode on|off] [--spec-k N] [--prompts FILE]
 /// [--intake-limit N] [--deadline-ms MS] [--metrics-json [PATH]]
-/// [--print-tokens]`
+/// [--print-tokens] [--fault-plan FILE] [--retry-max N]
+/// [--retry-base-ms MS] [--retry-cap-ms MS]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let lm = load_and_quantize(args)?;
     let (model, method) = (lm.model, lm.method);
@@ -502,12 +526,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .route(ptqtp::coordinator::router::RoutePolicy::LeastLoaded)
         .threads(threads)
         .paged_kv(kv)
-        .spec_decode(spec);
+        .spec_decode(spec)
+        .retry(RetryPolicy {
+            max_attempts: args.usize_or("retry-max", 4) as u32,
+            base: std::time::Duration::from_millis(args.u64_or("retry-base-ms", 10)),
+            cap: std::time::Duration::from_millis(args.u64_or("retry-cap-ms", 500)),
+        });
     if let Some(limit) = intake_limit {
         builder = builder.intake_limit(limit);
     }
     if let Some(d) = deadline {
         builder = builder.default_deadline(d);
+    }
+    if let Some(plan) = resolve_fault_plan(args, replicas)? {
+        eprintln!("fault-plan: {} deterministic fault(s) armed", plan.len());
+        builder = builder.fault_plan(plan);
+    }
+    if lm.from_packed {
+        // supervisor restarts reload the packed PTW2 file cold instead
+        // of cloning the in-memory model (quantize-once / serve-many)
+        builder = builder.checkpoint(args.require("model")?);
     }
     let mut server = builder.start(model);
     let t0 = std::time::Instant::now();
@@ -522,8 +560,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     // graceful drain is the completion barrier: stop intake, finish (or
-    // deadline-expire) everything in flight, join the workers
-    let stats = server.stats.clone();
+    // deadline-expire) everything in flight — replaying past any replica
+    // deaths — then join the workers
     let report = server.drain();
     let wall = t0.elapsed();
     println!(
@@ -532,6 +570,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     if rejected > 0 {
         println!("rejected {rejected} of {} submissions at admission", prompts.len());
+    }
+    // supervision log: one line per death notice, one summary line the
+    // chaos-smoke CI job greps for ("replica restarted")
+    for ev in &report.events {
+        if let ServerEvent::ReplicaDown { replica, cause } = ev {
+            println!("replica {replica} went down: {cause}");
+        }
+    }
+    if report.stats.replica_restarts > 0 {
+        println!(
+            "replica restarted {} time(s): {} request(s) requeued, {} replay submission(s), {} lost",
+            report.stats.replica_restarts,
+            report.stats.requeued,
+            report.stats.retries,
+            report.stats.replica_lost
+        );
     }
     // `--print-tokens`: one deterministic line per response, sorted by
     // (request id, sample) — CI diffs this across serve configurations
@@ -548,7 +602,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         println!("replica {i}:\n{}", m.render(wall));
     }
     if let Some(path) = metrics_path {
-        let artifact = serve_metrics_json(&stats, &report.metrics, wall);
+        let artifact = serve_metrics_json(&report.stats, &report.metrics, wall);
         std::fs::write(&path, artifact.pretty())?;
         println!("wrote serve metrics to {path}");
     }

@@ -1,0 +1,209 @@
+//! Chaos tests for the supervised serving layer: seeded fault plans
+//! kill replicas mid-stream across the execution matrix — threads
+//! {1, 2} × KV {contiguous, paged+prefix} × spec-decode {off, on} —
+//! and the run must be indistinguishable from a fault-free one at the
+//! token level: same responses, contiguous per-sequence streams, the
+//! extended accounting identity intact, and no KV pages leaked.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use ptqtp::coordinator::router::RoutePolicy;
+use ptqtp::coordinator::{
+    DrainReport, FaultPlan, FinishReason, Metrics, PagedKvOpts, Response, RetryPolicy,
+    ServerBuilder, ServerEvent, SpecDecodeOpts,
+};
+use ptqtp::model::{ModelConfig, Transformer};
+use ptqtp::quant::{self, QuantCtx};
+use ptqtp::rng::Rng;
+
+const REPLICAS: usize = 3;
+const REQUESTS: u64 = 12;
+const NEW_TOKENS: usize = 8;
+
+fn quantized_model(seed: u64) -> Transformer {
+    let mut cfg = ModelConfig::family("tiny").unwrap();
+    cfg.vocab_size = 32;
+    cfg.max_seq = 48;
+    let mut rng = Rng::new(seed);
+    let mut model = Transformer::random(cfg, &mut rng);
+    // ragged group keeps the packed kernel tier in play
+    model.quantize_with(
+        quant::by_name("ptqtp", 10).unwrap().as_ref(),
+        &QuantCtx::default(),
+    );
+    model
+}
+
+/// One serve run: submit the standard workload, consume the event
+/// stream (checking per-sequence index contiguity — the dedupe layer
+/// must hide every replay seam), then drain. Returns the sorted
+/// responses and the drain report.
+fn run_serve(
+    model: &Transformer,
+    threads: usize,
+    kv: PagedKvOpts,
+    spec: Option<SpecDecodeOpts>,
+    faults: Option<FaultPlan>,
+) -> (Vec<Response>, DrainReport) {
+    let mut builder = ServerBuilder::new()
+        .replicas(REPLICAS)
+        .route(RoutePolicy::RoundRobin)
+        .threads(threads)
+        .paged_kv(kv)
+        .spec_decode(spec)
+        .retry(RetryPolicy {
+            max_attempts: 6,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(20),
+        });
+    if let Some(plan) = faults {
+        builder = builder.fault_plan(plan);
+    }
+    let mut server = builder.start(model.clone());
+    for i in 0..REQUESTS {
+        let prompt: Vec<u32> = (0..10).map(|j| 1 + ((i + j) % 7) as u32).collect();
+        let params = ptqtp::coordinator::SamplingParams::greedy(NEW_TOKENS).with_stop(None);
+        assert!(
+            server.submit(prompt, params, 0).is_accepted(),
+            "workload fits the default intake window"
+        );
+    }
+    let mut streams: HashMap<(u64, usize), Vec<u32>> = HashMap::new();
+    let mut done: Vec<Response> = Vec::new();
+    let t0 = std::time::Instant::now();
+    while done.len() < REQUESTS as usize && t0.elapsed() < Duration::from_secs(120) {
+        match server.next_event(Duration::from_millis(10)) {
+            Some(ServerEvent::Token { id, sample, token, index }) => {
+                let s = streams.entry((id, sample)).or_default();
+                assert_eq!(index, s.len(), "req {id}/{sample}: replay seam visible");
+                s.push(token);
+            }
+            Some(ServerEvent::Done(r)) => done.push(r),
+            Some(ServerEvent::ReplicaDown { .. }) | None => {}
+        }
+    }
+    assert_eq!(done.len(), REQUESTS as usize, "every request completes");
+    for r in &done {
+        assert_eq!(r.finish, FinishReason::Length, "req {}: no request is lost", r.id);
+        let stream = streams.remove(&(r.id, r.sample)).unwrap_or_default();
+        assert_eq!(stream, r.tokens, "req {}: stream == final tokens", r.id);
+    }
+    let report = server.drain();
+    done.sort_by_key(|r| (r.id, r.sample));
+    (done, report)
+}
+
+/// The extended accounting identity over a finished run:
+/// `completed + rejected + cancelled + expired + replica_lost ==
+/// submitted`, request-granular (replays retire exactly once, on the
+/// engine that finishes them).
+fn assert_identity(report: &DrainReport) {
+    let st = &report.stats;
+    let agg = Metrics::aggregate(&report.metrics);
+    let rejected = st.queue_full
+        + st.invalid_params
+        + st.server_stopped
+        + st.replica_restarting
+        + agg.rejected;
+    let accounted =
+        agg.requests_finished + rejected + agg.cancelled + agg.deadline_expired + st.replica_lost;
+    assert_eq!(
+        accounted, st.submitted,
+        "accounting identity: completed + rejected + cancelled + expired + replica_lost \
+         == submitted (stats {st:?})"
+    );
+}
+
+#[test]
+fn supervised_serve_under_injected_panics_matches_fault_free() {
+    let model = quantized_model(77);
+    let kv_legs = [
+        // one max_seq page, no sharing = the legacy contiguous layout
+        PagedKvOpts {
+            page_size: 48,
+            prefix_cache: false,
+            page_budget: None,
+        },
+        PagedKvOpts {
+            page_size: 8,
+            prefix_cache: true,
+            page_budget: None,
+        },
+    ];
+    let mut cell = 0u64;
+    for threads in [1usize, 2] {
+        for kv in kv_legs {
+            for spec in [None, Some(SpecDecodeOpts::default())] {
+                // alternating seed parity: odd seeds add a forced
+                // page-exhaustion fault on top of the 1–2 panics
+                let seed = 0xC4A0_5000 + cell;
+                cell += 1;
+                let plan = FaultPlan::from_seed(seed, REPLICAS);
+                assert!(!plan.is_empty(), "seeded plan always schedules faults");
+
+                let (clean, clean_report) = run_serve(&model, threads, kv, spec, None);
+                let (chaos, chaos_report) = run_serve(&model, threads, kv, spec, Some(plan));
+
+                assert_eq!(clean_report.stats.replica_restarts, 0, "fault-free run never restarts");
+                assert!(
+                    chaos_report.stats.replica_restarts >= 1,
+                    "threads={threads} kv={kv:?} spec={} seed={seed:#x}: \
+                     the seeded panic must fire and restart a replica",
+                    spec.is_some()
+                );
+                assert_eq!(chaos.len(), clean.len());
+                for (a, b) in chaos.iter().zip(&clean) {
+                    assert_eq!(
+                        (a.id, a.sample, &a.tokens),
+                        (b.id, b.sample, &b.tokens),
+                        "threads={threads} kv={kv:?} spec={} seed={seed:#x}: \
+                         replayed responses must be token-identical",
+                        spec.is_some()
+                    );
+                }
+                assert_identity(&clean_report);
+                assert_identity(&chaos_report);
+                if !kv.prefix_cache {
+                    // with the prefix tree off, a drained server holds
+                    // zero live pages — replica deaths included (a dead
+                    // generation's pages die with its engine, and the
+                    // folded snapshot keeps the live generation's gauge)
+                    let live: usize = chaos_report.metrics.iter().map(|m| m.pages_in_use).sum();
+                    assert_eq!(
+                        live, 0,
+                        "threads={threads} seed={seed:#x}: KV pages leaked across restarts"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_plan_file_roundtrips_through_serve_schema() {
+    // the exact JSON shape the CI chaos-smoke job writes
+    let src = r#"{
+        "schema": "ptqtp-fault-plan/1",
+        "faults": [
+            {"replica": 0, "step": 3, "kind": "panic"},
+            {"replica": 1, "kind": "ckpt_io"}
+        ]
+    }"#;
+    let plan = FaultPlan::parse(src).expect("CI plan shape parses");
+    assert_eq!(plan.len(), 2);
+    let model = quantized_model(78);
+    let kv = PagedKvOpts {
+        page_size: 8,
+        prefix_cache: true,
+        page_budget: None,
+    };
+    let (responses, report) = run_serve(&model, 1, kv, None, Some(plan));
+    let (clean, _) = run_serve(&model, 1, kv, None, None);
+    assert!(report.stats.replica_restarts >= 1);
+    assert_eq!(responses.len(), clean.len());
+    for (a, b) in responses.iter().zip(&clean) {
+        assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+    }
+    assert_identity(&report);
+}

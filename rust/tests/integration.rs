@@ -685,7 +685,12 @@ fn quantize_once_serve_many_bit_identical() {
             .start(m.clone());
         let mut ids = Vec::new();
         for (prompt, temp, seed) in reqs.iter() {
-            ids.push(server.submit(prompt.clone(), params(*temp, *seed), 0).id());
+            ids.push(
+                server
+                    .submit(prompt.clone(), params(*temp, *seed), 0)
+                    .try_id()
+                    .unwrap(),
+            );
         }
         let mut out = server.wait_for(ids.len(), std::time::Duration::from_secs(60));
         server.shutdown();

@@ -53,6 +53,9 @@ fn drain_events(e: &mut ServeEngine) -> (Streams, Vec<Response>) {
                     s.push(token);
                 }
                 ServerEvent::Done(r) => done.push(r),
+                ServerEvent::ReplicaDown { .. } => {
+                    panic!("bare engine never emits ReplicaDown")
+                }
             }
         }
         guard += 1;
@@ -282,7 +285,7 @@ fn serve_metrics_artifact_identity_through_server() {
 
     let artifact = serve_metrics_json(&stats, &report.metrics, wall);
     let parsed = Json::parse(&artifact.pretty()).expect("artifact parses back");
-    assert_eq!(parsed.req_str("schema").unwrap(), "ptqtp-serve-metrics/1");
+    assert_eq!(parsed.req_str("schema").unwrap(), "ptqtp-serve-metrics/2");
     let f = |k: &str| parsed.req_f64(k).unwrap();
     assert_eq!(
         f("completed") + f("rejected") + f("cancelled") + f("expired"),
